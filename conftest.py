@@ -1,0 +1,9 @@
+"""Repo-root pytest shim: the compile-path packages live under python/
+(never installed — they only run at build time), so running
+`pytest python/tests/` from the repo root needs python/ on sys.path.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

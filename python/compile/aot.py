@@ -1,0 +1,154 @@
+"""AOT compile path: lower the L2 gradient graphs to HLO **text** under
+``artifacts/`` for the Rust PJRT runtime.
+
+Run once by ``make artifacts`` (no-op when outputs are newer than inputs);
+Python never runs at fit time.
+
+HLO text — not ``lowered.compile()`` or serialized protos — is the
+interchange format: the image's xla_extension 0.5.1 rejects jax ≥ 0.5
+serialized ``HloModuleProto``s (64-bit instruction ids), while the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and aot_recipe.md).
+
+Artifact naming is the runtime contract
+(``rust/src/runtime/mod.rs::gradient_stem``)::
+
+    grad_sq_{n}x{p}.hlo.txt    (X[n,p], beta[p], y[n]) -> (grad[p],)
+    grad_log_{n}x{p}.hlo.txt   same, logistic residual
+
+The default shape set covers the experiment configurations the examples and
+benches use; extend with ``--shape NxP`` (repeatable).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Shapes compiled by default: (n, p) pairs used by the examples/benches.
+# The e2e example uses the Table A1 default (200, 1000); smoke shapes keep
+# tests fast.
+DEFAULT_SHAPES = [
+    (32, 64),  # integration-test smoke shape
+    (200, 1000),  # Table A1 default synthetic design
+    (80, 400),  # Table 1 interaction base design
+]
+
+LOSSES = ("sq", "log")
+
+# Bucketed FISTA-chunk artifacts: (n, p_bucket) pairs. The coordinator
+# gathers the screened optimization set into the next power-of-two bucket
+# (DESIGN.md §6.1); one 50-iteration executable per shape.
+FISTA_ITERS = 50
+FISTA_BUCKETS = [
+    (32, 32),
+    (32, 64),
+    (200, 32),
+    (200, 64),
+    (200, 128),
+    (200, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gradient(loss: str, n: int, p: int, use_pallas: bool = True) -> str:
+    x = jax.ShapeDtypeStruct((n, p), jnp.float64)
+    beta = jax.ShapeDtypeStruct((p,), jnp.float64)
+    y = jax.ShapeDtypeStruct((n,), jnp.float64)
+    fn = model.grad_squared if loss == "sq" else model.grad_logistic
+    jitted = jax.jit(lambda X, b, Y: fn(X, b, Y, use_pallas=use_pallas, interpret=True))
+    return to_hlo_text(jitted.lower(x, beta, y))
+
+
+def lower_fista_chunk(n: int, pb: int, n_iters: int = FISTA_ITERS) -> str:
+    """Lower a fixed-step FISTA chunk on an (n, pb) bucket (squared loss).
+
+    Parameter order is the runtime contract
+    (`rust/src/runtime/mod.rs::solve_reduced`): x, y, beta, z, t, step,
+    l1_thresh, group_onehot, group_thresh → (beta', z', t', delta).
+    """
+    f64 = jnp.float64
+    args = (
+        jax.ShapeDtypeStruct((n, pb), f64),  # x
+        jax.ShapeDtypeStruct((n,), f64),  # y
+        jax.ShapeDtypeStruct((pb,), f64),  # beta
+        jax.ShapeDtypeStruct((pb,), f64),  # z
+        jax.ShapeDtypeStruct((), f64),  # t
+        jax.ShapeDtypeStruct((), f64),  # step
+        jax.ShapeDtypeStruct((pb,), f64),  # l1_thresh
+        jax.ShapeDtypeStruct((pb, pb), f64),  # group_onehot (m_b = p_b)
+        jax.ShapeDtypeStruct((pb,), f64),  # group_thresh
+    )
+    jitted = jax.jit(
+        lambda x, y, b, z, t, s, l1, oh, gt: model.fista_chunk(
+            x, y, b, z, t, s, l1, oh, gt, n_iters=n_iters
+        )
+    )
+    return to_hlo_text(jitted.lower(*args))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shape",
+        action="append",
+        default=[],
+        help="extra NxP gradient shapes (e.g. --shape 120x1898)",
+    )
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower plain-jnp graphs instead of the Pallas kernels (ablation)",
+    )
+    args = ap.parse_args()
+
+    shapes = list(DEFAULT_SHAPES)
+    for s in args.shape:
+        n, p = s.lower().split("x")
+        shapes.append((int(n), int(p)))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    written = 0
+    for n, p in shapes:
+        for loss in LOSSES:
+            name = f"grad_{loss}_{n}x{p}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower_gradient(loss, n, p, use_pallas=not args.no_pallas)
+            with open(path, "w") as f:
+                f.write(text)
+            written += 1
+            print(f"[aot] {path} ({len(text)} chars)")
+    for n, pb in FISTA_BUCKETS:
+        name = f"fista_sq_{n}x{pb}_t{FISTA_ITERS}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_fista_chunk(n, pb)
+        with open(path, "w") as f:
+            f.write(text)
+        written += 1
+        print(f"[aot] {path} ({len(text)} chars)")
+    # Stamp file lets `make` skip rebuilds when inputs are unchanged.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"[aot] wrote {written} artifacts to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

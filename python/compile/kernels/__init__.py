@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the DFR compute hot path.
+
+All kernels run in ``interpret=True`` mode: the PJRT CPU plugin cannot
+execute real-TPU Mosaic custom-calls, so interpret mode lowers them to plain
+HLO that both pytest (build time) and the Rust runtime (fit time) can run.
+Correctness is pinned against the pure-jnp oracles in :mod:`ref`.
+"""
+
+from .matvec import x_beta, xt_r  # noqa: F401
+from .prox import sgl_prox  # noqa: F401

@@ -1,0 +1,107 @@
+"""Tiled mat-vec Pallas kernels — the two O(np) operations under every
+screening gradient.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a mat-vec is VPU/bandwidth
+bound, so the win is the HBM↔VMEM schedule, expressed with BlockSpec tiles:
+
+* ``xt_r`` tiles the *p* axis: each grid step keeps one ``(n, TILE_P)``
+  block of ``X`` plus the full residual ``r`` resident in VMEM and emits a
+  ``TILE_P`` slice of the output. For the paper-scale designs
+  (n ≈ 200–10 000), a 128-column f32 tile is ≤ 5 MB — comfortably within
+  the ~16 MB VMEM budget, leaving room for double buffering.
+* ``x_beta`` tiles the *n* axis symmetrically.
+
+Grid sizes must divide the array, so callers pad to the tile multiple; the
+wrappers here handle the padding (zero rows/columns contribute zeros).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes chosen for the VMEM budget discussed above. Kept small enough
+# that even the surrogate real datasets (p ≈ 18k) get >100 grid steps of
+# pipelining.
+TILE_P = 128
+TILE_N = 128
+
+
+def _xt_r_kernel(x_ref, r_ref, o_ref):
+    """One output tile: o[tile] = X[:, tile]^T @ r."""
+    x_blk = x_ref[...]  # (n, TILE_P)
+    r = r_ref[...]  # (n,)
+    o_ref[...] = x_blk.T @ r
+
+
+def _x_beta_kernel(x_ref, b_ref, o_ref):
+    """One output tile: o[tile] = X[tile, :] @ beta."""
+    x_blk = x_ref[...]  # (TILE_N, p)
+    b = b_ref[...]  # (p,)
+    o_ref[...] = x_blk @ b
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x, size
+    pad = multiple - rem
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def xt_r(x, r, interpret=True):
+    """``X^T r`` via the tiled Pallas kernel.
+
+    Args:
+        x: ``(n, p)`` design block.
+        r: ``(n,)`` residual.
+    Returns:
+        ``(p,)`` correlation vector.
+    """
+    n, p = x.shape
+    x_pad, p0 = _pad_to(x, 1, TILE_P)
+    grid = (x_pad.shape[1] // TILE_P,)
+    out = pl.pallas_call(
+        _xt_r_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, TILE_P), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_P,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x_pad.shape[1],), x.dtype),
+        interpret=interpret,
+    )(x_pad, r)
+    return out[:p0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def x_beta(x, beta, interpret=True):
+    """``X @ beta`` via the tiled Pallas kernel.
+
+    Args:
+        x: ``(n, p)`` design block.
+        beta: ``(p,)`` coefficients.
+    Returns:
+        ``(n,)`` linear predictor.
+    """
+    n, p = x.shape
+    x_pad, n0 = _pad_to(x, 0, TILE_N)
+    grid = (x_pad.shape[0] // TILE_N,)
+    out = pl.pallas_call(
+        _x_beta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, p), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x_pad.shape[0],), x.dtype),
+        interpret=interpret,
+    )(x_pad, beta)
+    return out[:n0]

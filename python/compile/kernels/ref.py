@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+ground truth (pytest asserts kernel == oracle before any artifact ships).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def xt_r_ref(x, r):
+    """``X^T r`` reference."""
+    return x.T @ r
+
+
+def x_beta_ref(x, beta):
+    """``X @ beta`` reference."""
+    return x @ beta
+
+
+def sgl_prox_ref(z_pad, l1_thresh, group_thresh):
+    """Exact SGL prox on the segment-padded layout, straight jnp."""
+    u = jnp.sign(z_pad) * jnp.maximum(jnp.abs(z_pad) - l1_thresh, 0.0)
+    norms = jnp.sqrt(jnp.sum(u * u, axis=1))
+    scale = jnp.where(
+        norms > group_thresh, 1.0 - group_thresh / jnp.maximum(norms, 1e-300), 0.0
+    )
+    return u * scale[:, None]
+
+
+def grad_squared_ref(x, beta, y):
+    """``∇ (1/2n)‖y − Xβ‖²  =  Xᵀ(Xβ − y)/n``."""
+    n = x.shape[0]
+    return x.T @ (x @ beta - y) / n
+
+
+def grad_logistic_ref(x, beta, y):
+    """``∇ mean logistic deviance = Xᵀ(σ(Xβ) − y)/n``."""
+    n = x.shape[0]
+    eta = x @ beta
+    return x.T @ (jax.nn.sigmoid(eta) - y) / n

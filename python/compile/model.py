@@ -1,0 +1,117 @@
+"""Layer-2 JAX model: the gradient graphs the Rust coordinator executes.
+
+The pathwise screening loop needs the *full* gradient ``∇f(β̂)`` at every
+path point (screening rules Eq. 5–8 and the KKT checks Eq. 17/26 all read
+it) — an O(np) computation and the dominant per-point cost. These functions
+express it in JAX, with the inner mat-vecs delegated to the Layer-1 Pallas
+kernels, and are lowered once by :mod:`aot` to HLO text for the PJRT
+runtime. Everything is f64 (``jax_enable_x64``) so Rust-side screening
+decisions keep full precision.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import matvec  # noqa: E402
+
+
+def grad_squared(x, beta, y, *, use_pallas=True, interpret=True):
+    """``Xᵀ(Xβ − y)/n`` — gradient of ``(1/2n)‖y − Xβ‖²``.
+
+    Returns a 1-tuple so the lowered computation has a tuple root (the Rust
+    loader unwraps with ``to_tuple1``).
+    """
+    n = x.shape[0]
+    if use_pallas:
+        xb = matvec.x_beta(x, beta, interpret=interpret)
+        g = matvec.xt_r(x, xb - y, interpret=interpret)
+    else:
+        xb = x @ beta
+        g = x.T @ (xb - y)
+    return (g / n,)
+
+
+def grad_logistic(x, beta, y, *, use_pallas=True, interpret=True):
+    """``Xᵀ(σ(Xβ) − y)/n`` — gradient of the mean logistic deviance."""
+    n = x.shape[0]
+    if use_pallas:
+        eta = matvec.x_beta(x, beta, interpret=interpret)
+        r = jax.nn.sigmoid(eta) - y
+        g = matvec.xt_r(x, r, interpret=interpret)
+    else:
+        eta = x @ beta
+        g = x.T @ (jax.nn.sigmoid(eta) - y)
+    return (g / n,)
+
+
+def fista_chunk(x, y, beta, z, t, step, l1_thresh, group_onehot, group_thresh,
+                n_iters=50):
+    """A fixed-step FISTA chunk on a *bucketed* reduced design — the AOT
+    inner-solver of DESIGN.md §6.1.
+
+    Screening makes the optimization set shrink per path point while XLA
+    artifacts are fixed-shape; the Rust coordinator gathers the active
+    columns into the next power-of-two bucket and runs chunks of
+    ``n_iters`` iterations between convergence checks. Padding is safe by
+    construction: pad columns of ``x`` are zero (gradient 0), their
+    ``l1_thresh`` ≥ 0 keeps them at 0 through the soft-threshold, and pad
+    groups have zero one-hot rows (norm 0 → scale 0).
+
+    Group structure arrives as a dense one-hot matrix ``(m_b, p_b)`` so the
+    prox is pure matmul/elementwise — no scatters, which XLA-CPU handles
+    poorly.
+
+    Args:
+        x: ``(n, p_b)`` padded reduced design.
+        y: ``(n,)`` response.
+        beta, z: ``(p_b,)`` FISTA state (iterate and extrapolation point).
+        t: scalar momentum state.
+        step: scalar step size (≤ 1/L, supplied by the coordinator from its
+            power-iteration Lipschitz bound).
+        l1_thresh: ``(p_b,)`` per-variable ℓ1 prox thresholds ``λαvᵢ``
+            (NOT yet multiplied by the step).
+        group_onehot: ``(m_b, p_b)`` group membership.
+        group_thresh: ``(m_b,)`` group ℓ2 thresholds ``λ(1−α)w_g√p_g``.
+    Returns:
+        ``(beta', z', t', delta)`` — updated state plus the last
+        iteration's ‖β_{k+1} − β_k‖₂ for the coordinator's convergence
+        check.
+    """
+    n = x.shape[0]
+
+    def body(_, state):
+        beta, z, t, _ = state
+        grad = x.T @ (x @ z - y) / n
+        u = z - step * grad
+        u = jnp.sign(u) * jnp.maximum(jnp.abs(u) - step * l1_thresh, 0.0)
+        gnorm = jnp.sqrt(group_onehot @ (u * u))
+        gthr = step * group_thresh
+        scale_g = jnp.where(gnorm > gthr, 1.0 - gthr / jnp.maximum(gnorm, 1e-300), 0.0)
+        beta_new = u * (group_onehot.T @ scale_g)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta)
+        delta = jnp.sqrt(jnp.sum((beta_new - beta) ** 2))
+        return (beta_new, z_new, t_new, delta)
+
+    init = (beta, z, t, jnp.asarray(0.0, x.dtype))
+    return jax.lax.fori_loop(0, n_iters, body, init)
+
+
+def objective_squared(x, beta, y, lam_l1, lam_group, gid_onehot, sqrt_pg):
+    """Primal SGL objective on a padded group layout — exported for
+    diagnostics/ablations (not on the fit hot path).
+
+    ``gid_onehot``: (m, p) one-hot rows mapping variables to groups;
+    ``sqrt_pg``: (m,) group weights. Dense one-hot keeps the graph free of
+    scatters, which XLA-CPU handles poorly.
+    """
+    n = x.shape[0]
+    resid = y - x @ beta
+    f = 0.5 * jnp.sum(resid * resid) / n
+    l1 = lam_l1 * jnp.sum(jnp.abs(beta))
+    gnorms = jnp.sqrt(gid_onehot @ (beta * beta))
+    gl = lam_group * jnp.sum(sqrt_pg * gnorms)
+    return (f + l1 + gl,)

@@ -1,0 +1,126 @@
+"""L2 fista_chunk correctness: the AOT inner solver must (a) decrease the
+SGL objective, (b) converge to a point satisfying the SGL KKT conditions,
+and (c) be padding-invariant (pad columns stay exactly zero)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+
+
+def make_problem(seed, n, p, m):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, p))
+    x -= x.mean(axis=0)
+    x /= np.linalg.norm(x, axis=0)
+    beta_true = np.zeros(p)
+    beta_true[:: max(p // 5, 1)] = rng.standard_normal(len(beta_true[:: max(p // 5, 1)]))
+    y = x @ beta_true + 0.05 * rng.standard_normal(n)
+    y -= y.mean()
+    gid = np.arange(p) % m
+    onehot = np.zeros((m, p))
+    onehot[gid, np.arange(p)] = 1.0
+    sizes = onehot.sum(axis=1)
+    return x, y, onehot, sizes
+
+
+def sgl_objective(x, y, beta, lam, alpha, onehot, sizes):
+    n = x.shape[0]
+    resid = y - x @ beta
+    f = 0.5 * np.sum(resid**2) / n
+    gnorms = np.sqrt(onehot @ (beta**2))
+    return f + lam * alpha * np.abs(beta).sum() + lam * (1 - alpha) * (
+        np.sqrt(sizes) * gnorms
+    ).sum()
+
+
+def run_chunks(x, y, onehot, sizes, lam, alpha, chunks=40, iters=50):
+    n, p = x.shape
+    m = onehot.shape[0]
+    lip = np.linalg.norm(x, 2) ** 2 / n
+    step = 1.0 / (1.05 * lip)
+    l1 = np.full(p, lam * alpha)
+    gthr = lam * (1 - alpha) * np.sqrt(sizes)
+    beta = jnp.zeros(p)
+    z = jnp.zeros(p)
+    t = jnp.asarray(1.0)
+    for _ in range(chunks):
+        beta, z, t, delta = model.fista_chunk(
+            jnp.asarray(x), jnp.asarray(y), beta, z, t, jnp.asarray(step),
+            jnp.asarray(l1), jnp.asarray(onehot), jnp.asarray(gthr), n_iters=iters,
+        )
+        if float(delta) < 1e-12:
+            break
+    return np.asarray(beta)
+
+
+def test_objective_decreases_and_kkt_holds():
+    x, y, onehot, sizes = make_problem(0, 40, 24, 6)
+    lam, alpha = 0.05, 0.9
+    beta = run_chunks(x, y, onehot, sizes, lam, alpha)
+    obj0 = sgl_objective(x, y, np.zeros(24), lam, alpha, onehot, sizes)
+    obj = sgl_objective(x, y, beta, lam, alpha, onehot, sizes)
+    assert obj < obj0
+    # KKT: inactive variables in inactive groups satisfy the soft-threshold
+    # bound; active variables satisfy stationarity.
+    n = x.shape[0]
+    grad = x.T @ (x @ beta - y) / n
+    gid = np.argmax(onehot, axis=0)
+    gnorms = np.sqrt(onehot @ (beta**2))
+    for i in range(24):
+        g = gid[i]
+        if gnorms[g] == 0.0:
+            s = np.sign(grad[i]) * max(
+                abs(grad[i]) - lam * (1 - alpha) * np.sqrt(sizes[g]), 0.0
+            )
+            assert abs(s) <= lam * alpha + 1e-6, f"KKT violated at {i}"
+        elif beta[i] != 0.0:
+            sub = (
+                grad[i]
+                + lam * alpha * np.sign(beta[i])
+                + lam * (1 - alpha) * np.sqrt(sizes[g]) * beta[i] / gnorms[g]
+            )
+            assert abs(sub) < 1e-5, f"stationarity violated at {i}: {sub}"
+
+
+def test_padding_invariance():
+    x, y, onehot, sizes = make_problem(1, 30, 16, 4)
+    lam, alpha = 0.08, 0.95
+    beta_ref = run_chunks(x, y, onehot, sizes, lam, alpha)
+    # Pad to p_b = 32, m_b = 32 with zero columns / zero one-hot rows.
+    pb = 32
+    x_pad = np.zeros((30, pb))
+    x_pad[:, :16] = x
+    oh_pad = np.zeros((pb, pb))
+    oh_pad[:4, :16] = onehot
+    l1 = np.full(pb, lam * alpha)
+    gthr = np.zeros(pb)
+    gthr[:4] = lam * (1 - alpha) * np.sqrt(sizes)
+    n = 30
+    lip = np.linalg.norm(x, 2) ** 2 / n
+    step = 1.0 / (1.05 * lip)
+    beta = jnp.zeros(pb)
+    z = jnp.zeros(pb)
+    t = jnp.asarray(1.0)
+    for _ in range(40):
+        beta, z, t, delta = model.fista_chunk(
+            jnp.asarray(x_pad), jnp.asarray(y), beta, z, t, jnp.asarray(step),
+            jnp.asarray(l1), jnp.asarray(oh_pad), jnp.asarray(gthr),
+        )
+        if float(delta) < 1e-12:
+            break
+    beta = np.asarray(beta)
+    assert np.all(beta[16:] == 0.0), "pad columns moved off zero"
+    assert_allclose(beta[:16], beta_ref, atol=1e-8)
+
+
+def test_fista_artifact_lowering_shapes():
+    text = aot.lower_fista_chunk(8, 16, n_iters=3)
+    assert "HloModule" in text
+    assert "f64[8,16]" in text
+    assert "f64[16,16]" in text  # one-hot

@@ -1,0 +1,105 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; fixed cases pin edge geometry
+(tile-exact, sub-tile, off-by-one) and value edge cases (zeros, negatives,
+huge thresholds).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import matvec, prox, ref
+
+SHAPES = st.tuples(st.integers(1, 70), st.integers(1, 300))
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16), dtype=st.sampled_from(["float32", "float64"]))
+def test_xt_r_matches_reference(shape, seed, dtype):
+    n, p = shape
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (n, p), dtype)
+    r = rand(rng, (n,), dtype)
+    got = matvec.xt_r(x, r)
+    want = ref.xt_r_ref(x, r)
+    tol = 1e-5 if dtype == "float32" else 1e-12
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16), dtype=st.sampled_from(["float32", "float64"]))
+def test_x_beta_matches_reference(shape, seed, dtype):
+    n, p = shape
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (n, p), dtype)
+    b = rand(rng, (p,), dtype)
+    got = matvec.x_beta(x, b)
+    want = ref.x_beta_ref(x, b)
+    tol = 1e-5 if dtype == "float32" else 1e-12
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,p", [(128, 128), (128, 256), (1, 1), (129, 127), (5, 128)])
+def test_matvec_tile_boundaries(n, p):
+    rng = np.random.default_rng(7)
+    x = rand(rng, (n, p), "float64")
+    r = rand(rng, (n,), "float64")
+    b = rand(rng, (p,), "float64")
+    assert_allclose(np.asarray(matvec.xt_r(x, r)), np.asarray(ref.xt_r_ref(x, r)), rtol=1e-12)
+    assert_allclose(
+        np.asarray(matvec.x_beta(x, b)), np.asarray(ref.x_beta_ref(x, b)), rtol=1e-12
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 20),
+    gmax=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.0, 3.0),
+)
+def test_sgl_prox_matches_reference(m, gmax, seed, scale):
+    rng = np.random.default_rng(seed)
+    z = rand(rng, (m, gmax), "float64")
+    l1 = jnp.asarray(scale * np.abs(rng.standard_normal((m, gmax))))
+    gthr = jnp.asarray(scale * np.abs(rng.standard_normal((m,))))
+    got = prox.sgl_prox(z, l1, gthr)
+    want = ref.sgl_prox_ref(z, l1, gthr)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_sgl_prox_kills_group_below_threshold():
+    z = jnp.asarray([[0.1, -0.05, 0.0, 0.0]])
+    l1 = jnp.zeros((1, 4))
+    gthr = jnp.asarray([10.0])
+    out = prox.sgl_prox(z, l1, gthr)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_sgl_prox_zero_threshold_is_identity():
+    rng = np.random.default_rng(3)
+    z = rand(rng, (4, 6), "float64")
+    out = prox.sgl_prox(z, jnp.zeros((4, 6)), jnp.zeros((4,)))
+    assert_allclose(np.asarray(out), np.asarray(z), rtol=1e-12)
+
+
+def test_prox_is_nonexpansive():
+    rng = np.random.default_rng(11)
+    z1 = rand(rng, (6, 9), "float64")
+    z2 = rand(rng, (6, 9), "float64")
+    l1 = jnp.full((6, 9), 0.3)
+    gthr = jnp.full((6,), 0.5)
+    p1 = np.asarray(prox.sgl_prox(z1, l1, gthr))
+    p2 = np.asarray(prox.sgl_prox(z2, l1, gthr))
+    assert np.linalg.norm(p1 - p2) <= np.linalg.norm(np.asarray(z1 - z2)) + 1e-12

@@ -1,0 +1,78 @@
+"""L2 model correctness: gradient graphs (Pallas inside) vs oracles and vs
+jax.grad, plus shape/dtype contracts the Rust runtime relies on."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def problem(seed, n, p, logistic=False):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, p)))
+    beta = jnp.asarray(rng.standard_normal((p,)) * 0.3)
+    if logistic:
+        y = jnp.asarray((rng.random(n) > 0.5).astype(np.float64))
+    else:
+        y = jnp.asarray(rng.standard_normal((n,)))
+    return x, beta, y
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 60), p=st.integers(1, 200), seed=st.integers(0, 2**16))
+def test_grad_squared_matches_oracle(n, p, seed):
+    x, beta, y = problem(seed, n, p)
+    (got,) = model.grad_squared(x, beta, y)
+    want = ref.grad_squared_ref(x, beta, y)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 60), p=st.integers(1, 200), seed=st.integers(0, 2**16))
+def test_grad_logistic_matches_oracle(n, p, seed):
+    x, beta, y = problem(seed, n, p, logistic=True)
+    (got,) = model.grad_logistic(x, beta, y)
+    want = ref.grad_logistic_ref(x, beta, y)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-12)
+
+
+def test_grad_squared_matches_autodiff():
+    x, beta, y = problem(1, 25, 40)
+    (got,) = model.grad_squared(x, beta, y)
+    loss = lambda b: 0.5 * jnp.mean((y - x @ b) ** 2)
+    want = jax.grad(loss)(beta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10)
+
+
+def test_grad_logistic_matches_autodiff():
+    x, beta, y = problem(2, 30, 20, logistic=True)
+    (got,) = model.grad_logistic(x, beta, y)
+
+    def loss(b):
+        eta = x @ b
+        return jnp.mean(jnp.logaddexp(0.0, eta) - y * eta)
+
+    want = jax.grad(loss)(beta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10)
+
+
+def test_pallas_and_plain_paths_agree():
+    x, beta, y = problem(3, 33, 77)
+    (a,) = model.grad_squared(x, beta, y, use_pallas=True)
+    (b,) = model.grad_squared(x, beta, y, use_pallas=False)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)
+
+
+def test_outputs_are_f64_tuples():
+    x, beta, y = problem(4, 8, 12)
+    out = model.grad_squared(x, beta, y)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].dtype == jnp.float64
+    assert out[0].shape == (12,)

@@ -1,0 +1,83 @@
+//! **Ablation** (DESIGN.md §6.4): screening gains must be
+//! solver-independent — the paper stresses DFR "can be used with any
+//! fitting algorithm". Runs the default synthetic workload under both
+//! inner solvers (FISTA with the exact SGL prox; ATOS, the paper's
+//! algorithm) × {DFR, sparsegl, no-screen}, plus the XLA-served engine
+//! when artifacts exist.
+//!
+//! Expected: improvement factors agree across solvers within noise; the
+//! absolute times differ (FISTA's exact prox usually converges in fewer
+//! iterations); engine choice does not change solutions.
+
+mod common;
+
+use dfr::bench_harness::BenchTable;
+use dfr::data::SyntheticConfig;
+use dfr::path::{PathConfig, PathRunner};
+use dfr::runtime::XlaEngine;
+use dfr::screen::RuleKind;
+use dfr::solver::{SolverConfig, SolverKind};
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (p, n, path_len) = if full { (1000, 200, 50) } else { (300, 100, 15) };
+
+    let mut table = BenchTable::new("Ablation — inner solver (FISTA vs ATOS) × screening rule");
+    for (kind, tag) in [(SolverKind::Fista, "fista"), (SolverKind::Atos, "atos")] {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig { n, p, ..SyntheticConfig::default() }
+                .generate(11_000 + rep as u64);
+            let cfg = PathConfig {
+                path_len,
+                solver: SolverConfig { kind, ..SolverConfig::default() },
+                ..PathConfig::default()
+            };
+            common::run_cell(
+                &mut table,
+                tag,
+                &data.dataset,
+                &cfg,
+                &[RuleKind::DfrSgl, RuleKind::Sparsegl],
+            );
+        }
+    }
+
+    // Engine ablation: native vs PJRT-served (gradients + bucketed solver)
+    // on the Table A1 shape with artifacts present.
+    if let Ok(eng) = XlaEngine::new("artifacts") {
+        if eng.has_artifact("grad_sq_200x1000") {
+            for rep in 0..common::repeats() {
+                let data = SyntheticConfig { n: 200, p: 1000, ..SyntheticConfig::default() }
+                    .generate(12_000 + rep as u64);
+                let cfg = PathConfig { path_len: 20, ..PathConfig::default() };
+                let native =
+                    PathRunner::new(&data.dataset, cfg.clone()).rule(RuleKind::DfrSgl).run().unwrap();
+                let xla = PathRunner::new(&data.dataset, cfg)
+                    .rule(RuleKind::DfrSgl)
+                    .engine(&eng)
+                    .fixed_path(native.lambdas.clone())
+                    .run()
+                    .unwrap();
+                table.push(
+                    "path seconds",
+                    "engine=native",
+                    "DFR-SGL",
+                    native.metrics.total_seconds,
+                );
+                table.push("path seconds", "engine=pjrt", "DFR-SGL", xla.metrics.total_seconds);
+                table.push(
+                    "l2 distance native vs pjrt",
+                    "engine=pjrt",
+                    "DFR-SGL",
+                    xla.l2_distance_to(&native),
+                );
+            }
+            let s = eng.stats();
+            println!(
+                "[pjrt] {} gradient calls, {} solver chunks, {} fallbacks",
+                s.xla_gradient_calls, s.xla_solver_chunks, s.native_fallbacks
+            );
+        }
+    }
+    table.finish("ablation_solver");
+}

@@ -1,0 +1,120 @@
+//! Shared machinery for the paper-reproduction benches.
+//!
+//! Every bench follows the paper's §3 protocol: draw a dataset, fit the
+//! full λ path with *no screening* (the timing baseline and the λ grid),
+//! then fit each screening rule on the same path, recording the paper's
+//! metrics per (setting, method): improvement factor, input proportion,
+//! candidate/optimization/active cardinalities, KKT violations, failed
+//! convergences and ℓ₂ distance to the no-screen solution. Repeats with
+//! distinct seeds give the mean ± stderr the tables show.
+//!
+//! `cargo bench` runs a smoke scale (minutes); `DFR_BENCH_FULL=1` switches
+//! to the paper scale (Table A1 sizes, 100-length repeats).
+
+use dfr::bench_harness::BenchTable;
+use dfr::data::Dataset;
+use dfr::path::{PathConfig, PathRunner};
+use dfr::screen::RuleKind;
+
+/// Repeats per setting: paper uses 100; smoke default keeps wall-clock low.
+pub fn repeats() -> usize {
+    if dfr::bench_harness::full_scale() {
+        20
+    } else {
+        3
+    }
+}
+
+/// The strong rules compared in most tables.
+pub const STRONG_RULES: [RuleKind; 3] =
+    [RuleKind::DfrAsgl, RuleKind::DfrSgl, RuleKind::Sparsegl];
+
+/// Strong + safe rules (Fig. 1).
+pub const ALL_RULES: [RuleKind; 5] = [
+    RuleKind::DfrAsgl,
+    RuleKind::DfrSgl,
+    RuleKind::Sparsegl,
+    RuleKind::GapSafeSeq,
+    RuleKind::GapSafeDyn,
+];
+
+/// Run one (dataset, setting) cell: no-screen baseline plus every rule,
+/// pushing all §3/§D.1 metrics into the table.
+///
+/// Pairing follows the paper: each screened fit is compared against the
+/// no-screen fit of the *same model* — DFR-aSGL against an adaptive-SGL
+/// baseline (its own λ path and timings), everything else against the
+/// plain-SGL baseline.
+pub fn run_cell(
+    table: &mut BenchTable,
+    setting: &str,
+    ds: &Dataset,
+    base_cfg: &PathConfig,
+    rules: &[RuleKind],
+) {
+    let no_screen = PathRunner::new(ds, base_cfg.clone())
+        .rule(RuleKind::NoScreen)
+        .run()
+        .expect("no-screen fit failed");
+    table.push("no screen time (s)", setting, "no-screen", no_screen.metrics.total_seconds);
+
+    // Lazy aSGL baseline (only when an adaptive rule is in the set).
+    let mut asgl_baseline: Option<dfr::path::PathFit> = None;
+
+    for &rule in rules {
+        let mut cfg = base_cfg.clone();
+        let adaptive = rule == RuleKind::DfrAsgl;
+        if adaptive && cfg.adaptive.is_none() {
+            cfg.adaptive = Some((0.1, 0.1));
+        }
+        let baseline: &dfr::path::PathFit = if adaptive {
+            if asgl_baseline.is_none() {
+                let b = PathRunner::new(ds, cfg.clone())
+                    .rule(RuleKind::NoScreen)
+                    .run()
+                    .expect("aSGL no-screen fit failed");
+                table.push(
+                    "no screen time (s)",
+                    setting,
+                    "no-screen (aSGL)",
+                    b.metrics.total_seconds,
+                );
+                asgl_baseline = Some(b);
+            }
+            asgl_baseline.as_ref().unwrap()
+        } else {
+            &no_screen
+        };
+        let t_base = baseline.metrics.total_seconds;
+        let fit = PathRunner::new(ds, cfg)
+            .rule(rule)
+            .fixed_path(baseline.lambdas.clone())
+            .run()
+            .expect("screened fit failed");
+        let m = &fit.metrics;
+        let name = rule.name();
+        table.push("improvement factor", setting, name, t_base / m.total_seconds.max(1e-12));
+        table.push("input proportion (O_v/p)", setting, name, m.input_proportion());
+        table.push("group input proportion (O_g/m)", setting, name, m.group_input_proportion());
+        table.push("screen time (s)", setting, name, m.total_seconds);
+        table.push("KKT violations", setting, name, m.total_kkt_violations() as f64);
+        table.push("failed convergences", setting, name, m.failed_convergences() as f64);
+        table.push("l2 distance to no screen", setting, name, fit.l2_distance_to(baseline));
+        table.push("O_v / A_v", setting, name, m.ov_over_av());
+        // Cardinality means (Tables A2/A3-style rows).
+        let mean = |f: &dyn Fn(&dfr::metrics::PointMetrics) -> f64| {
+            m.points.iter().map(|pt| f(pt)).sum::<f64>() / m.points.len() as f64
+        };
+        table.push("card A_v", setting, name, mean(&|pt| pt.a_v as f64));
+        table.push("card C_v", setting, name, mean(&|pt| pt.c_v as f64));
+        table.push("card O_v", setting, name, mean(&|pt| pt.o_v as f64));
+        table.push("card A_g", setting, name, mean(&|pt| pt.a_g as f64));
+        table.push("card C_g", setting, name, mean(&|pt| pt.c_g as f64));
+        table.push("card O_g", setting, name, mean(&|pt| pt.o_g as f64));
+    }
+}
+
+/// Default solver config for benches (paper Table A1 algorithm block).
+pub fn bench_path_config(path_len: usize) -> PathConfig {
+    PathConfig { path_len, ..PathConfig::default() }
+}

@@ -1,0 +1,60 @@
+//! **Figure 2 + Figure A3 + Tables A5–A10**: improvement factor and input
+//! proportion as functions of (left) the data sparsity proportion and
+//! (right) the signal strength, linear model.
+//!
+//! Paper shape: screening pays most under very sparse signals and
+//! converges across methods as the signal saturates; DFR is roughly flat
+//! in signal strength and always above sparsegl.
+
+mod common;
+
+use dfr::bench_harness::BenchTable;
+use dfr::data::SyntheticConfig;
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (p, n, path_len) = if full { (1000, 200, 50) } else { (300, 100, 15) };
+
+    // Left panel: sparsity proportion sweep (active proportion of groups
+    // and of variables within active groups).
+    let mut t1 = BenchTable::new("Fig. 2 (left) / Tables A5-A7 — sparsity proportion sweep");
+    let sparsities: &[f64] = if full { &[0.05, 0.1, 0.2, 0.4, 0.6, 0.8] } else { &[0.1, 0.3, 0.7] };
+    for &s in sparsities {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig {
+                n,
+                p,
+                group_sparsity: s,
+                var_sparsity: s,
+                ..SyntheticConfig::default()
+            }
+            .generate(2000 + rep as u64);
+            common::run_cell(
+                &mut t1,
+                &format!("sparsity={s}"),
+                &data.dataset,
+                &common::bench_path_config(path_len),
+                &common::STRONG_RULES,
+            );
+        }
+    }
+    t1.finish("fig2_sparsity");
+
+    // Right panel: signal strength sweep (β ∼ N(0, signal²)).
+    let mut t2 = BenchTable::new("Fig. 2 (right) / Tables A8-A10 — signal strength sweep");
+    let signals: &[f64] = if full { &[0.5, 1.0, 2.0, 4.0, 8.0] } else { &[0.5, 2.0, 6.0] };
+    for &s in signals {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig { n, p, signal: s, ..SyntheticConfig::default() }
+                .generate(3000 + rep as u64);
+            common::run_cell(
+                &mut t2,
+                &format!("signal={s}"),
+                &data.dataset,
+                &common::bench_path_config(path_len),
+                &common::STRONG_RULES,
+            );
+        }
+    }
+    t2.finish("fig2_signal");
+}

@@ -1,0 +1,59 @@
+//! **Figure 4 + Figure 5 + Figures A12–A13 + Tables A38–A40**: the six
+//! real-data studies — improvement factor, input proportion, and the
+//! input-proportion-along-the-path series, on the Table A37 surrogate
+//! datasets (see DESIGN.md §5 for the substitution).
+//!
+//! Paper shape: DFR beats sparsegl on every dataset; DFR-aSGL reaches
+//! triple-digit factors on celiac/trust-experts; input proportion stays
+//! low along the whole path for DFR while sparsegl's jumps whenever a big
+//! pathway enters (Fig. 5).
+//!
+//! Default scale fits the bench budget; `DFR_BENCH_FULL=1` raises the
+//! surrogate scale (full Table A37 sizes are hours of no-screen baseline —
+//! exactly the paper's point).
+
+mod common;
+
+use dfr::bench_harness::BenchTable;
+use dfr::data::real::{RealDatasetKind, SurrogateConfig};
+use dfr::path::PathConfig;
+use dfr::report;
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let scale = if full { 0.25 } else { 0.04 };
+    let path_len = if full { 100 } else { 15 };
+
+    let mut table = BenchTable::new("Fig. 4 / A12 / Tables A38-A40 — six real-data surrogates");
+    for kind in RealDatasetKind::ALL {
+        for rep in 0..common::repeats().min(3) {
+            let ds = SurrogateConfig { kind, scale, seed: 500 + rep as u64 }.generate();
+            let cfg = PathConfig {
+                path_len,
+                path_end_ratio: 0.2, // real-data setting (Table A1)
+                ..PathConfig::default()
+            };
+            common::run_cell(&mut table, kind.name(), &ds, &cfg, &common::STRONG_RULES);
+
+            // Fig. 5 / A13 series: per-path-point input proportion CSV.
+            if rep == 0 {
+                for rule in common::STRONG_RULES {
+                    let mut c = cfg.clone();
+                    if rule == dfr::screen::RuleKind::DfrAsgl {
+                        c.adaptive = Some((0.1, 0.1));
+                    }
+                    let fit = dfr::path::PathRunner::new(&ds, c).rule(rule).run().unwrap();
+                    let csv = report::path_metrics_csv(&fit.metrics);
+                    let path = format!(
+                        "target/bench_results/fig5_path_{}_{}.csv",
+                        kind.name(),
+                        rule.name()
+                    );
+                    report::write_file(&path, &csv).ok();
+                }
+            }
+        }
+    }
+    table.finish("fig4_realdata");
+    println!("[series] per-path input-proportion CSVs under target/bench_results/fig5_path_*.csv");
+}

@@ -1,0 +1,109 @@
+//! **Figures A8–A11 + Tables A24–A35**: the synthetic sweeps of Figs. 2–3
+//! repeated under the logistic model — sparsity proportion, signal
+//! strength, correlation, and α.
+//!
+//! Paper shape: same ordering as the linear model (DFR > sparsegl) with
+//! smaller absolute improvement factors (logistic fits are iteration-
+//! bound, not purely matvec-bound).
+
+mod common;
+
+use dfr::bench_harness::BenchTable;
+use dfr::data::{Response, SyntheticConfig};
+use dfr::path::PathConfig;
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (p, n, path_len) = if full { (1000, 200, 50) } else { (250, 120, 12) };
+
+    let mut table = BenchTable::new(
+        "Figs. A8-A11 / Tables A24-A35 — logistic-model sweeps \
+         (sparsity, signal, correlation, alpha)",
+    );
+
+    let sparsities: &[f64] = if full { &[0.05, 0.2, 0.4, 0.8] } else { &[0.1, 0.5] };
+    for &s in sparsities {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig {
+                n,
+                p,
+                group_sparsity: s,
+                var_sparsity: s,
+                response: Response::Logistic,
+                ..SyntheticConfig::default()
+            }
+            .generate(8000 + rep as u64);
+            common::run_cell(
+                &mut table,
+                &format!("sparsity={s}"),
+                &data.dataset,
+                &common::bench_path_config(path_len),
+                &common::STRONG_RULES,
+            );
+        }
+    }
+
+    let signals: &[f64] = if full { &[0.5, 1.0, 2.0, 4.0] } else { &[0.5, 3.0] };
+    for &s in signals {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig {
+                n,
+                p,
+                signal: s,
+                response: Response::Logistic,
+                ..SyntheticConfig::default()
+            }
+            .generate(8100 + rep as u64);
+            common::run_cell(
+                &mut table,
+                &format!("signal={s}"),
+                &data.dataset,
+                &common::bench_path_config(path_len),
+                &common::STRONG_RULES,
+            );
+        }
+    }
+
+    let rhos: &[f64] = if full { &[0.0, 0.3, 0.6, 0.9] } else { &[0.0, 0.6] };
+    for &rho in rhos {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig {
+                n,
+                p,
+                rho,
+                response: Response::Logistic,
+                ..SyntheticConfig::default()
+            }
+            .generate(8200 + rep as u64);
+            common::run_cell(
+                &mut table,
+                &format!("rho={rho}"),
+                &data.dataset,
+                &common::bench_path_config(path_len),
+                &common::STRONG_RULES,
+            );
+        }
+    }
+
+    let alphas: &[f64] = if full { &[0.1, 0.4, 0.7, 0.95] } else { &[0.3, 0.95] };
+    for &alpha in alphas {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig {
+                n,
+                p,
+                response: Response::Logistic,
+                ..SyntheticConfig::default()
+            }
+            .generate(8300 + rep as u64);
+            let cfg = PathConfig { alpha, ..common::bench_path_config(path_len) };
+            common::run_cell(
+                &mut table,
+                &format!("alpha={alpha}"),
+                &data.dataset,
+                &cfg,
+                &common::STRONG_RULES,
+            );
+        }
+    }
+    table.finish("figA8_logistic");
+}

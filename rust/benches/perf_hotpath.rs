@@ -1,0 +1,129 @@
+//! **§Perf microbenches** (EXPERIMENTS.md §Perf): the per-layer hot paths
+//! behind every pathwise fit.
+//!
+//! * L3 native gradient `Xᵀr/n` — serial vs threaded (the dominant cost of
+//!   screening + KKT checks when PJRT is not used),
+//! * L1/L2 PJRT gradient via the Pallas artifacts (and, when present, the
+//!   `--no-pallas` plain-dot artifacts for the lowering ablation),
+//! * ε-norm solver, SGL prox, one full screening pass, one FISTA step —
+//!   the L3 coordinator costs that must stay below the matvec.
+
+mod common;
+
+use dfr::bench_harness::{time_stat, BenchTable};
+use dfr::data::SyntheticConfig;
+use dfr::loss::{Loss, LossKind};
+use dfr::norms::epsilon_norm;
+use dfr::penalty::Penalty;
+use dfr::rng::Rng;
+use dfr::runtime::XlaEngine;
+use dfr::screen::{screen, RuleKind, ScreenContext};
+
+fn main() {
+    let mut table = BenchTable::new("§Perf — hot-path microbenches (seconds per call)");
+    let (n, p) = (200usize, 1000usize);
+    let data = SyntheticConfig { n, p, ..SyntheticConfig::default() }.generate(77);
+    let ds = &data.dataset;
+    let loss = Loss::new(LossKind::Squared, &ds.x, &ds.y);
+    let mut rng = Rng::new(1);
+    let beta: Vec<f64> = rng.gauss_vec(p).iter().map(|v| v * 0.1).collect();
+    let setting = format!("{n}x{p}");
+    let (warm, reps) = (3, 30);
+
+    // --- L3 native gradient ---
+    let acc = time_stat(warm, reps, || {
+        std::hint::black_box(loss.x.t_matvec(&loss.x.matvec(&beta)));
+    });
+    table.push("gradient (native, 1 thread)", &setting, "native", acc.mean());
+    for threads in [2usize, 4, 8] {
+        let acc = time_stat(warm, reps, || {
+            let xb = loss.x.matvec(&beta);
+            std::hint::black_box(loss.x.t_matvec_par(&xb, threads));
+        });
+        table.push(
+            &format!("gradient (native, {threads} threads)"),
+            &setting,
+            "native",
+            acc.mean(),
+        );
+    }
+
+    // --- PJRT gradient (Pallas artifacts) ---
+    if let Ok(eng) = XlaEngine::new("artifacts") {
+        if eng.has_artifact(&format!("grad_sq_{n}x{p}")) {
+            // Warm the executable + device design buffer first.
+            let _ = eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta);
+            let acc = time_stat(warm, reps, || {
+                std::hint::black_box(
+                    eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta).unwrap(),
+                );
+            });
+            table.push("gradient (pjrt, pallas artifact)", &setting, "xla", acc.mean());
+        } else {
+            println!("[perf] artifacts missing — run `make artifacts` for the PJRT rows");
+        }
+    }
+    if let Ok(eng) = XlaEngine::new("artifacts-plain") {
+        if eng.has_artifact(&format!("grad_sq_{n}x{p}")) {
+            let _ = eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta);
+            let acc = time_stat(warm, reps, || {
+                std::hint::black_box(
+                    eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta).unwrap(),
+                );
+            });
+            table.push("gradient (pjrt, plain-dot artifact)", &setting, "xla", acc.mean());
+        }
+    }
+
+    // --- L3 coordinator pieces ---
+    let grad = loss.gradient(&vec![0.0; p]);
+    let pen = Penalty::sgl(ds.groups.clone(), 0.95);
+    let lam1 = dfr::path::lambda_max(&pen, &grad);
+    let acc = time_stat(warm, 200, || {
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: lam1,
+            lambda_next: 0.9 * lam1,
+            x: &ds.x,
+            y: &ds.y,
+            response: ds.response,
+        };
+        std::hint::black_box(screen(RuleKind::DfrSgl, &ctx));
+    });
+    table.push("one DFR screening pass", &setting, "dfr", acc.mean());
+
+    let block: Vec<f64> = rng.gauss_vec(100);
+    let acc = time_stat(warm, 2000, || {
+        std::hint::black_box(epsilon_norm(&block, 0.37));
+    });
+    table.push("epsilon-norm (p_g=100)", &setting, "norms", acc.mean());
+
+    let z: Vec<f64> = rng.gauss_vec(p);
+    let mut out = vec![0.0; p];
+    let acc = time_stat(warm, 2000, || {
+        pen.prox_into(&z, 0.01, &mut out);
+        std::hint::black_box(&out);
+    });
+    table.push("SGL prox (full p)", &setting, "penalty", acc.mean());
+
+    // One warm FISTA solve on a screened-size problem (|O_v| ≈ 60).
+    let keep: Vec<usize> = (0..60).map(|i| i * (p / 60)).collect();
+    let x_red = ds.x.gather_columns(&keep);
+    let rpen = pen.restrict(&keep);
+    let red_loss = Loss::new(LossKind::Squared, &x_red, &ds.y);
+    let cfg = dfr::solver::SolverConfig::default();
+    let acc = time_stat(warm, 20, || {
+        std::hint::black_box(dfr::solver::solve(
+            &red_loss,
+            &rpen,
+            0.3 * lam1,
+            &vec![0.0; keep.len()],
+            &cfg,
+        ));
+    });
+    table.push("reduced FISTA solve (k=60)", &setting, "solver", acc.mean());
+
+    table.finish("perf_hotpath");
+}

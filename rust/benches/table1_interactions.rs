@@ -1,0 +1,59 @@
+//! **Table 1 + Figure A5 + Tables A17–A19** (and with `--logistic`,
+//! **Table A20 + Figure A7 + Tables A21–A23**): improvement factor for the
+//! strong rules on within-group interaction expansions of order 2 and 3.
+//!
+//! Paper design: p=400, n=80, m=52 groups of sizes in [3,15] →
+//! p_O2 ≈ 2111, p_O3 ≈ 7338, interaction active proportion 0.3 with the
+//! marginal effects' signal, no hierarchy. Paper shape: DFR-aSGL > DFR-SGL
+//! ≫ sparsegl, with sparsegl nearly useless at order 3 (it must pull in
+//! entire, now-enormous, groups).
+
+mod common;
+
+use dfr::bench_harness::{BenchArgs, BenchTable};
+use dfr::data::interactions::{expand_generated, InteractionOrder};
+use dfr::data::synthetic::GroupSpec;
+use dfr::data::{Response, SyntheticConfig};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let logistic = args.has("--logistic");
+    let full = dfr::bench_harness::full_scale();
+    let (p, n, lo, hi, path_len) = if full { (400, 80, 3, 15, 50) } else { (150, 60, 3, 8, 12) };
+
+    let title = if logistic {
+        "Table A20 / Fig. A7 / Tables A21-A23 — interactions, logistic model"
+    } else {
+        "Table 1 / Fig. A5 / Tables A17-A19 — interactions, linear model"
+    };
+    let mut table = BenchTable::new(title);
+
+    for order in [InteractionOrder::Order2, InteractionOrder::Order3] {
+        for rep in 0..common::repeats() {
+            let base = SyntheticConfig {
+                n,
+                p,
+                groups: GroupSpec::Uneven { lo, hi },
+                group_sparsity: 0.3,
+                var_sparsity: 0.3,
+                response: if logistic { Response::Logistic } else { Response::Linear },
+                ..SyntheticConfig::default()
+            }
+            .generate(6000 + rep as u64);
+            let expanded = expand_generated(&base, order, 0.3, 2.0, 60 + rep as u64);
+            let setting = format!(
+                "order {} (p={})",
+                if order == InteractionOrder::Order3 { 3 } else { 2 },
+                expanded.p()
+            );
+            common::run_cell(
+                &mut table,
+                &setting,
+                &expanded,
+                &common::bench_path_config(path_len),
+                &common::STRONG_RULES,
+            );
+        }
+    }
+    table.finish(if logistic { "tableA20_interactions_logistic" } else { "table1_interactions" });
+}

@@ -1,0 +1,60 @@
+//! **Table A36**: improvement factor of screening under 10-fold
+//! cross-validation, linear and logistic models — the "expanded tuning
+//! regimes" argument of §1.2 / Appendix D.7.
+//!
+//! Paper shape: screened CV is 2–4× faster end-to-end (smaller than the
+//! single-path factors because fold fits share the λ path and the folds
+//! amortize fixed costs), with DFR ahead of sparsegl.
+
+mod common;
+
+use dfr::bench_harness::BenchTable;
+use dfr::cv::{cross_validate, CvConfig};
+use dfr::data::{Response, SyntheticConfig};
+use dfr::screen::RuleKind;
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (p, n, path_len, folds) = if full { (1000, 200, 50, 10) } else { (250, 120, 10, 5) };
+
+    let mut table = BenchTable::new("Table A36 — cross-validation improvement factor");
+    for (resp, tag) in [(Response::Linear, "linear"), (Response::Logistic, "logistic")] {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig { n, p, response: resp, ..SyntheticConfig::default() }
+                .generate(9000 + rep as u64);
+            let base = CvConfig {
+                folds,
+                path: common::bench_path_config(path_len),
+                seed: 100 + rep as u64,
+                ..CvConfig::default()
+            };
+            let no_screen = cross_validate(
+                &data.dataset,
+                &CvConfig { rule: RuleKind::NoScreen, ..base.clone() },
+            )
+            .expect("no-screen cv failed");
+            for rule in [RuleKind::DfrAsgl, RuleKind::DfrSgl, RuleKind::Sparsegl] {
+                let mut cfg = CvConfig { rule, ..base.clone() };
+                if rule == RuleKind::DfrAsgl {
+                    cfg.path.adaptive = Some((0.1, 0.1));
+                }
+                let cell = cross_validate(&data.dataset, &cfg).expect("cv failed");
+                table.push(
+                    "improvement factor",
+                    tag,
+                    rule.name(),
+                    no_screen.seconds / cell.seconds.max(1e-12),
+                );
+                table.push("cv seconds", tag, rule.name(), cell.seconds);
+                // CV must pick (nearly) the same λ regardless of screening.
+                table.push(
+                    "best-λ index drift vs no-screen",
+                    tag,
+                    rule.name(),
+                    (cell.best_idx as f64 - no_screen.best_idx as f64).abs(),
+                );
+            }
+        }
+    }
+    table.finish("tableA36_cv");
+}

@@ -1,0 +1,220 @@
+//! Benchmark harness (no `criterion` offline).
+//!
+//! Paper-style experiment benches need *paired repeated* measurements
+//! (screen vs no-screen on the same data draw) with mean ± stderr rows, not
+//! criterion's statistical micro-timing, so the harness provides:
+//!
+//! * [`time_once`] / [`time_stat`] — wall-clock timing with warmup,
+//! * [`BenchTable`] — accumulates rows keyed by (method, setting) and
+//!   renders the paper-style table plus a CSV under
+//!   `target/bench_results/`.
+
+use crate::metrics::Accumulator;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Time a closure once, returning (seconds, result).
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (f64, R) {
+    let t = Instant::now();
+    let r = f();
+    (t.elapsed().as_secs_f64(), r)
+}
+
+/// Time a closure `reps` times after `warmup` runs; returns an accumulator
+/// of the per-run seconds.
+pub fn time_stat(warmup: usize, reps: usize, mut f: impl FnMut()) -> Accumulator {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut acc = Accumulator::new();
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        acc.push(t.elapsed().as_secs_f64());
+    }
+    acc
+}
+
+/// A (metric × method × setting) results table.
+#[derive(Default)]
+pub struct BenchTable {
+    title: String,
+    /// (setting, method) → accumulator, per metric name.
+    metrics: BTreeMap<String, BTreeMap<(String, String), Accumulator>>,
+    settings_order: Vec<String>,
+    methods_order: Vec<String>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str) -> Self {
+        BenchTable { title: title.to_string(), ..Default::default() }
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, metric: &str, setting: &str, method: &str, value: f64) {
+        if !self.settings_order.iter().any(|s| s == setting) {
+            self.settings_order.push(setting.to_string());
+        }
+        if !self.methods_order.iter().any(|m| m == method) {
+            self.methods_order.push(method.to_string());
+        }
+        self.metrics
+            .entry(metric.to_string())
+            .or_default()
+            .entry((setting.to_string(), method.to_string()))
+            .or_default()
+            .push(value);
+    }
+
+    /// Render all metrics as markdown-ish tables (what the bench binaries
+    /// print — rows match the paper's tables/figure series).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n", self.title));
+        for (metric, cells) in &self.metrics {
+            out.push_str(&format!("\n### {metric}\n\n"));
+            out.push_str("| setting |");
+            for m in &self.methods_order {
+                out.push_str(&format!(" {m} |"));
+            }
+            out.push('\n');
+            out.push_str("|---|");
+            for _ in &self.methods_order {
+                out.push_str("---|");
+            }
+            out.push('\n');
+            for s in &self.settings_order {
+                out.push_str(&format!("| {s} |"));
+                for m in &self.methods_order {
+                    match cells.get(&(s.clone(), m.clone())) {
+                        Some(acc) => out.push_str(&format!(
+                            " {} ± {} |",
+                            fmt_sig(acc.mean()),
+                            fmt_sig(acc.stderr())
+                        )),
+                        None => out.push_str(" – |"),
+                    }
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Write a tidy CSV (metric,setting,method,mean,stderr,count).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = String::from("metric,setting,method,mean,stderr,count\n");
+        for (metric, cells) in &self.metrics {
+            for ((setting, method), acc) in cells {
+                s.push_str(&format!(
+                    "{metric},{setting},{method},{},{},{}\n",
+                    acc.mean(),
+                    acc.stderr(),
+                    acc.count()
+                ));
+            }
+        }
+        std::fs::write(path, s)
+    }
+
+    /// Print to stdout and persist the CSV under `target/bench_results/`.
+    pub fn finish(&self, csv_name: &str) {
+        println!("{}", self.render());
+        let path = format!("target/bench_results/{csv_name}.csv");
+        if let Err(e) = self.write_csv(&path) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("[csv] {path}");
+        }
+    }
+}
+
+/// Format with 4 significant digits, switching to scientific notation for
+/// very small/large magnitudes (µs-scale timings would render as 0.0000
+/// in fixed point).
+pub fn fmt_sig(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() < 1e-3 || x.abs() >= 1e5 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Parse simple `--flag value` style bench arguments (benches run with
+/// `harness = false` and receive raw argv).
+pub struct BenchArgs {
+    args: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> Self {
+        BenchArgs { args: std::env::args().collect() }
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == flag)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, flag: &str, default: usize) -> usize {
+        self.get(flag).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, flag: &str, default: f64) -> f64 {
+        self.get(flag).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.args.iter().any(|a| a == flag)
+    }
+}
+
+/// Quick-mode scaling: `cargo bench` runs every table/figure; setting
+/// `DFR_BENCH_FULL=1` switches from smoke-scale to paper-scale workloads.
+pub fn full_scale() -> bool {
+    std::env::var("DFR_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_cells() {
+        let mut t = BenchTable::new("demo");
+        t.push("improvement factor", "p=100", "DFR-SGL", 5.0);
+        t.push("improvement factor", "p=100", "DFR-SGL", 7.0);
+        t.push("improvement factor", "p=100", "sparsegl", 2.0);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("DFR-SGL"));
+        assert!(s.contains("6.0000")); // mean of 5 and 7
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut t = BenchTable::new("demo");
+        t.push("m", "s", "x", 1.0);
+        let path = "target/bench_results/_test_demo.csv";
+        t.write_csv(path).unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert!(content.starts_with("metric,setting,method"));
+        assert!(content.contains("m,s,x,1"));
+    }
+
+    #[test]
+    fn time_stat_counts_reps() {
+        let acc = time_stat(1, 5, || {
+            std::hint::black_box(0u64);
+        });
+        assert_eq!(acc.count(), 5);
+    }
+}

@@ -1,0 +1,159 @@
+//! Command-line argument parsing substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments, with typed
+//! accessors and a generated usage string. Used by the `dfr` launcher and
+//! shared by the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed argv.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub program: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Declared option for usage rendering.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+impl Args {
+    /// Parse a raw argv (including program name).
+    pub fn parse(argv: impl IntoIterator<Item = String>, specs: &[OptSpec]) -> Result<Args, String> {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        let takes_value: BTreeMap<&str, bool> =
+            specs.iter().map(|s| (s.name, s.takes_value)).collect();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                match takes_value.get(name) {
+                    Some(true) => {
+                        let v = it
+                            .next()
+                            .ok_or_else(|| format!("--{name} expects a value"))?;
+                        args.options.insert(name.to_string(), v);
+                    }
+                    Some(false) => args.flags.push(name.to_string()),
+                    None => return Err(format!("unknown option --{name}")),
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(specs: &[OptSpec]) -> Result<Args, String> {
+        Args::parse(std::env::args(), specs)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected number, got `{v}`")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Render a usage block for `--help`.
+pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE:\n    {program} [OPTIONS]\n\nOPTIONS:\n");
+    for spec in specs {
+        let val = if spec.takes_value { " <value>" } else { "" };
+        let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("    --{}{val}\n        {}{def}\n", spec.name, spec.help));
+    }
+    s
+}
+
+/// Parse a screening-rule name as used across the CLI / benches.
+pub fn parse_rule(name: &str) -> Result<crate::screen::RuleKind, String> {
+    use crate::screen::RuleKind::*;
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "none" | "no-screen" | "noscreen" => NoScreen,
+        "dfr" | "dfr-sgl" => DfrSgl,
+        "dfr-asgl" | "asgl" => DfrAsgl,
+        "sparsegl" => Sparsegl,
+        "gap" | "gap-seq" | "gap-safe" => GapSafeSeq,
+        "gap-dyn" => GapSafeDyn,
+        other => return Err(format!("unknown rule `{other}`")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "p", help: "dims", default: Some("1000"), takes_value: true },
+            OptSpec { name: "verbose", help: "talk", default: None, takes_value: false },
+        ]
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        std::iter::once("prog").chain(items.iter().copied()).map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(argv(&["fit", "--p", "200", "--verbose"]), &specs()).unwrap();
+        assert_eq!(a.positional, vec!["fit"]);
+        assert_eq!(a.usize_or("p", 0).unwrap(), 200);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::parse(argv(&["--bogus"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv(&["--p"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv(&[]), &specs()).unwrap();
+        assert_eq!(a.usize_or("p", 1000).unwrap(), 1000);
+        assert_eq!(a.f64_or("missing", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn rule_names_parse() {
+        assert_eq!(parse_rule("dfr").unwrap(), crate::screen::RuleKind::DfrSgl);
+        assert_eq!(parse_rule("DFR-aSGL").unwrap(), crate::screen::RuleKind::DfrAsgl);
+        assert!(parse_rule("wat").is_err());
+    }
+
+    #[test]
+    fn usage_lists_options() {
+        let u = usage("dfr", "about", &specs());
+        assert!(u.contains("--p"));
+        assert!(u.contains("default: 1000"));
+    }
+}

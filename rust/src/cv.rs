@@ -1,0 +1,228 @@
+//! K-fold cross-validation for SGL / aSGL (Appendix D.7).
+//!
+//! The paper's motivation for DFR includes making *joint* tuning of
+//! `(λ, α)` — and `(γ₁, γ₂)` for aSGL — computationally feasible. The
+//! driver fits the full λ path per fold (warm-started, screened), scores
+//! held-out deviance, and supports a grid over α / γ with fold-level
+//! thread parallelism.
+
+use crate::data::{Dataset, Response};
+use crate::loss::sigmoid;
+use crate::metrics::Accumulator;
+use crate::path::{PathConfig, PathRunner};
+use crate::rng::Rng;
+use crate::screen::RuleKind;
+
+/// One grid cell result.
+#[derive(Clone, Debug)]
+pub struct CvCell {
+    pub alpha: f64,
+    pub gamma: Option<(f64, f64)>,
+    /// Mean held-out loss per path point (length = path_len).
+    pub cv_loss: Vec<f64>,
+    pub lambdas: Vec<f64>,
+    /// Index of the best λ.
+    pub best_idx: usize,
+    pub seconds: f64,
+}
+
+/// Cross-validation configuration.
+#[derive(Clone, Debug)]
+pub struct CvConfig {
+    pub folds: usize,
+    pub path: PathConfig,
+    pub rule: RuleKind,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for CvConfig {
+    fn default() -> Self {
+        CvConfig {
+            folds: 10,
+            path: PathConfig::default(),
+            rule: RuleKind::DfrSgl,
+            seed: 7,
+            threads: crate::parallel::default_threads(),
+        }
+    }
+}
+
+/// Split `n` observations into `k` folds (shuffled, near-equal).
+pub fn fold_assignments(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let perm = rng.permutation(n);
+    let mut fold = vec![0usize; n];
+    for (pos, &i) in perm.iter().enumerate() {
+        fold[i] = pos % k;
+    }
+    fold
+}
+
+/// Held-out prediction loss of a coefficient vector.
+fn holdout_loss(ds: &Dataset, beta: &[f64]) -> f64 {
+    let xb = ds.x.matvec(beta);
+    let n = ds.y.len() as f64;
+    match ds.response {
+        Response::Linear => {
+            xb.iter().zip(&ds.y).map(|(p, y)| (y - p) * (y - p)).sum::<f64>() / n
+        }
+        Response::Logistic => {
+            // mean deviance
+            xb.iter()
+                .zip(&ds.y)
+                .map(|(&eta, &y)| {
+                    let p = sigmoid(eta).clamp(1e-12, 1.0 - 1e-12);
+                    -(y * p.ln() + (1.0 - y) * (1.0 - p).ln())
+                })
+                .sum::<f64>()
+                / n
+        }
+    }
+}
+
+/// Run k-fold CV at one (α, γ) setting. λ path is fixed from the full-data
+/// fit so folds are comparable.
+pub fn cross_validate(ds: &Dataset, cfg: &CvConfig) -> anyhow::Result<CvCell> {
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let folds = fold_assignments(ds.n(), cfg.folds, &mut rng);
+
+    // Reference λ path from the full data.
+    let full_fit = PathRunner::new(ds, cfg.path.clone()).rule(cfg.rule).run()?;
+    let lambdas = full_fit.lambdas.clone();
+    let l = lambdas.len();
+
+    let fold_losses: Vec<Vec<f64>> = crate::parallel::par_map(cfg.folds, cfg.threads, |f| {
+        let train_rows: Vec<usize> =
+            (0..ds.n()).filter(|&i| folds[i] != f).collect();
+        let test_rows: Vec<usize> = (0..ds.n()).filter(|&i| folds[i] == f).collect();
+        let mut train = ds.subset_rows(&train_rows);
+        train.standardize();
+        let test = ds.subset_rows(&test_rows);
+        let fit = PathRunner::new(&train, cfg.path.clone())
+            .rule(cfg.rule)
+            .fixed_path(lambdas.clone())
+            .run()
+            .expect("fold fit failed");
+        fit.betas.iter().map(|b| holdout_loss(&test, b)).collect()
+    });
+
+    let mut cv_loss = vec![0.0; l];
+    for fl in &fold_losses {
+        for (i, v) in fl.iter().enumerate() {
+            cv_loss[i] += v / cfg.folds as f64;
+        }
+    }
+    let best_idx = cv_loss
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+
+    Ok(CvCell {
+        alpha: cfg.path.alpha,
+        gamma: cfg.path.adaptive,
+        cv_loss,
+        lambdas,
+        best_idx,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Grid search over α (and γ for aSGL): returns every cell plus the winner.
+pub fn grid_search(
+    ds: &Dataset,
+    base: &CvConfig,
+    alphas: &[f64],
+    gammas: &[Option<(f64, f64)>],
+) -> anyhow::Result<(Vec<CvCell>, usize)> {
+    let mut cells = Vec::new();
+    for &alpha in alphas {
+        for &gamma in gammas {
+            let mut cfg = base.clone();
+            cfg.path.alpha = alpha;
+            cfg.path.adaptive = gamma;
+            cells.push(cross_validate(ds, &cfg)?);
+        }
+    }
+    let best = cells
+        .iter()
+        .enumerate()
+        .min_by(|a, b| {
+            a.1.cv_loss[a.1.best_idx].partial_cmp(&b.1.cv_loss[b.1.best_idx]).unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok((cells, best))
+}
+
+/// Paired CV timing: screened vs no-screen, as in Table A36.
+pub fn cv_improvement_factor(ds: &Dataset, cfg: &CvConfig) -> anyhow::Result<(f64, f64, f64)> {
+    let mut acc_if = Accumulator::new();
+    let screened = cross_validate(ds, cfg)?;
+    let mut no_cfg = cfg.clone();
+    no_cfg.rule = RuleKind::NoScreen;
+    let unscreened = cross_validate(ds, &no_cfg)?;
+    acc_if.push(unscreened.seconds / screened.seconds.max(1e-12));
+    Ok((acc_if.mean(), screened.seconds, unscreened.seconds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+
+    fn data() -> Dataset {
+        SyntheticConfig {
+            n: 60,
+            p: 40,
+            groups: crate::data::synthetic::GroupSpec::Even(8),
+            ..SyntheticConfig::default()
+        }
+        .generate(3)
+        .dataset
+    }
+
+    #[test]
+    fn folds_are_balanced_and_cover() {
+        let mut rng = Rng::new(1);
+        let f = fold_assignments(103, 10, &mut rng);
+        assert_eq!(f.len(), 103);
+        for k in 0..10 {
+            let c = f.iter().filter(|&&x| x == k).count();
+            assert!((10..=11).contains(&c), "fold {k} has {c}");
+        }
+    }
+
+    #[test]
+    fn cv_picks_interior_lambda_on_signal_data() {
+        let ds = data();
+        let cfg = CvConfig {
+            folds: 4,
+            path: PathConfig { path_len: 10, ..PathConfig::default() },
+            threads: 2,
+            ..CvConfig::default()
+        };
+        let cell = cross_validate(&ds, &cfg).unwrap();
+        assert_eq!(cell.cv_loss.len(), 10);
+        // With real signal the best λ should not be the null model.
+        assert!(cell.best_idx > 0, "best_idx {}", cell.best_idx);
+        assert!(cell.cv_loss.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn grid_search_returns_all_cells() {
+        let ds = data();
+        let cfg = CvConfig {
+            folds: 3,
+            path: PathConfig { path_len: 6, ..PathConfig::default() },
+            threads: 2,
+            ..CvConfig::default()
+        };
+        let (cells, best) =
+            grid_search(&ds, &cfg, &[0.5, 0.95], &[None, Some((0.1, 0.1))]).unwrap();
+        assert_eq!(cells.len(), 4);
+        assert!(best < 4);
+    }
+}

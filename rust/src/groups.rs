@@ -1,0 +1,222 @@
+//! Grouping structure for grouped-penalty models.
+//!
+//! The paper's variables sit in disjoint groups `G_1, …, G_m` of sizes
+//! `p_1, …, p_m`. We store groups contiguously (variable `i` belongs to
+//! group `gid[i]`), which matches how the synthetic generator and all six
+//! real-data surrogates lay out features, and gives O(1) slicing of
+//! per-group coefficient blocks.
+
+/// Disjoint contiguous grouping of `p` variables into `m` groups.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Groups {
+    /// Start offset of each group; `starts[m] == p` sentinel included.
+    starts: Vec<usize>,
+    /// Group id of each variable.
+    gid: Vec<usize>,
+}
+
+impl Groups {
+    /// Build from group sizes.
+    pub fn from_sizes(sizes: &[usize]) -> Self {
+        assert!(!sizes.is_empty(), "at least one group required");
+        assert!(sizes.iter().all(|&s| s > 0), "empty groups are not allowed");
+        let mut starts = Vec::with_capacity(sizes.len() + 1);
+        let mut gid = Vec::new();
+        let mut off = 0;
+        for (g, &s) in sizes.iter().enumerate() {
+            starts.push(off);
+            gid.extend(std::iter::repeat(g).take(s));
+            off += s;
+        }
+        starts.push(off);
+        Groups { starts, gid }
+    }
+
+    /// `p` singleton groups (the lasso limit).
+    pub fn singletons(p: usize) -> Self {
+        Groups::from_sizes(&vec![1; p])
+    }
+
+    /// Even groups of the given size (padding the last if `p % size != 0`).
+    pub fn even(p: usize, size: usize) -> Self {
+        assert!(size > 0 && p > 0);
+        let full = p / size;
+        let rem = p % size;
+        let mut sizes = vec![size; full];
+        if rem > 0 {
+            sizes.push(rem);
+        }
+        Groups::from_sizes(&sizes)
+    }
+
+    /// Number of groups.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Total number of variables.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.gid.len()
+    }
+
+    /// Size `p_g` of group `g`.
+    #[inline]
+    pub fn size(&self, g: usize) -> usize {
+        self.starts[g + 1] - self.starts[g]
+    }
+
+    /// Index range of group `g`.
+    #[inline]
+    pub fn range(&self, g: usize) -> std::ops::Range<usize> {
+        self.starts[g]..self.starts[g + 1]
+    }
+
+    /// Group id of variable `i`.
+    #[inline]
+    pub fn group_of(&self, i: usize) -> usize {
+        self.gid[i]
+    }
+
+    /// Slice the per-variable vector `x` to group `g`'s block.
+    #[inline]
+    pub fn slice<'a>(&self, x: &'a [f64], g: usize) -> &'a [f64] {
+        &x[self.range(g)]
+    }
+
+    /// Mutable block of group `g`.
+    #[inline]
+    pub fn slice_mut<'a>(&self, x: &'a mut [f64], g: usize) -> &'a mut [f64] {
+        &mut x[self.range(g)]
+    }
+
+    /// Iterator over `(g, range)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, std::ops::Range<usize>)> + '_ {
+        (0..self.m()).map(move |g| (g, self.range(g)))
+    }
+
+    /// `√p_g` for every group — the SGL group weights.
+    pub fn sqrt_sizes(&self) -> Vec<f64> {
+        (0..self.m()).map(|g| (self.size(g) as f64).sqrt()).collect()
+    }
+
+    /// Group sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        (0..self.m()).map(|g| self.size(g)).collect()
+    }
+
+    /// Restrict the grouping to a sorted subset of variables, renumbering
+    /// groups that survive. Returns the reduced grouping plus, for each
+    /// reduced group, its original group id. Used to carry the penalty
+    /// structure onto the screening-reduced design.
+    pub fn restrict(&self, vars: &[usize]) -> (Groups, Vec<usize>) {
+        assert!(vars.windows(2).all(|w| w[0] < w[1]), "vars must be sorted unique");
+        let mut sizes: Vec<usize> = Vec::new();
+        let mut orig: Vec<usize> = Vec::new();
+        for &v in vars {
+            let g = self.gid[v];
+            if orig.last() == Some(&g) {
+                *sizes.last_mut().unwrap() += 1;
+            } else {
+                orig.push(g);
+                sizes.push(1);
+            }
+        }
+        if sizes.is_empty() {
+            // Degenerate but legal: empty optimization set. Represent as a
+            // single empty-free placeholder group of size 1 never used.
+            return (Groups::from_sizes(&[1]), vec![0]);
+        }
+        (Groups::from_sizes(&sizes), orig)
+    }
+
+    /// Generate uneven group sizes in `[lo, hi]` that sum to exactly `p`
+    /// (the paper's "m uneven groups of sizes in [3, 100]"). Sizes are drawn
+    /// uniformly and the last group is clamped to make the total exact.
+    pub fn random_sizes(p: usize, lo: usize, hi: usize, rng: &mut crate::rng::Rng) -> Vec<usize> {
+        assert!(lo >= 1 && hi >= lo && p >= lo);
+        let mut sizes = Vec::new();
+        let mut total = 0;
+        while total < p {
+            let remaining = p - total;
+            if remaining <= hi {
+                // Close out, splitting if the remainder is below `lo`.
+                if remaining >= lo || sizes.is_empty() {
+                    sizes.push(remaining);
+                } else {
+                    // Merge the remainder into the previous group.
+                    *sizes.last_mut().unwrap() += remaining;
+                }
+                total = p;
+            } else {
+                let s = lo + rng.below(hi - lo + 1);
+                sizes.push(s);
+                total += s;
+            }
+        }
+        sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_sizes_layout() {
+        let g = Groups::from_sizes(&[2, 3, 1]);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.p(), 6);
+        assert_eq!(g.range(1), 2..5);
+        assert_eq!(g.group_of(4), 1);
+        assert_eq!(g.size(2), 1);
+    }
+
+    #[test]
+    fn even_handles_remainder() {
+        let g = Groups::even(10, 4);
+        assert_eq!(g.sizes(), vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn sqrt_sizes_match() {
+        let g = Groups::from_sizes(&[4, 9]);
+        assert_eq!(g.sqrt_sizes(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn restrict_renumbers_and_tracks_origin() {
+        let g = Groups::from_sizes(&[3, 2, 4]); // vars 0-2 | 3-4 | 5-8
+        let (r, orig) = g.restrict(&[1, 2, 5, 8]);
+        assert_eq!(r.sizes(), vec![2, 2]);
+        assert_eq!(orig, vec![0, 2]);
+    }
+
+    #[test]
+    fn restrict_empty_is_safe() {
+        let g = Groups::from_sizes(&[3]);
+        let (r, _) = g.restrict(&[]);
+        assert_eq!(r.m(), 1);
+    }
+
+    #[test]
+    fn random_sizes_sum_to_p_and_bounded() {
+        let mut rng = crate::rng::Rng::new(42);
+        for _ in 0..20 {
+            let sizes = Groups::random_sizes(1000, 3, 100, &mut rng);
+            assert_eq!(sizes.iter().sum::<usize>(), 1000);
+            // All but possibly merged-last are within [3, 100+3).
+            for &s in &sizes {
+                assert!(s >= 3 && s <= 103, "size {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn singleton_groups() {
+        let g = Groups::singletons(4);
+        assert_eq!(g.m(), 4);
+        assert!((0..4).all(|i| g.size(i) == 1));
+    }
+}

@@ -1,0 +1,78 @@
+//! # DFR — Dual Feature Reduction for the Sparse-Group Lasso
+//!
+//! A production-grade reproduction of *"Dual Feature Reduction for the
+//! Sparse-group Lasso and its Adaptive Variant"* (Feser & Evangelou,
+//! ICML 2025).
+//!
+//! The crate implements the full pathwise sparse-group-lasso stack:
+//!
+//! * **Penalties** — SGL and adaptive SGL norms, their ε-norm duals, exact
+//!   proximal operators and PCA-based adaptive weights ([`penalty`],
+//!   [`norms`]).
+//! * **Solvers** — FISTA with the exact SGL prox and ATOS (adaptive
+//!   three-operator splitting, the paper's solver), both warm-started with
+//!   backtracking line search ([`solver`]).
+//! * **Screening** — the paper's contribution: DFR bi-level strong rules for
+//!   SGL (Eqs. 5–6) and aSGL (Eqs. 7–8), the `sparsegl` group-only strong
+//!   rule, GAP-safe sequential/dynamic exact rules, and a no-screen
+//!   baseline, all behind one [`screen::ScreenRule`] interface with
+//!   KKT-violation checking ([`screen`]).
+//! * **Pathwise coordinator** — Algorithm 1/A1: candidate sets →
+//!   optimization set → reduced solve → KKT loop, with full per-path-point
+//!   metrics capture ([`path`]).
+//! * **Runtime** — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) for the dense hot path; Python never runs at fit time
+//!   ([`runtime`]).
+//! * **Substrates** — dense linear algebra, RNG, synthetic + surrogate-real
+//!   data generators, k-fold CV, a bench harness and a property-testing kit
+//!   (no external crates are available offline).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dfr::prelude::*;
+//!
+//! let data = SyntheticConfig::default().generate(42);
+//! let cfg = PathConfig { path_len: 20, ..PathConfig::default() };
+//! let fit = PathRunner::new(&data.dataset, cfg)
+//!     .rule(RuleKind::DfrSgl)
+//!     .run()
+//!     .unwrap();
+//! println!("selected {} variables at end of path", fit.active_vars_last());
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod cv;
+pub mod data;
+pub mod groups;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod model_api;
+pub mod norms;
+pub mod parallel;
+pub mod path;
+pub mod penalty;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod screen;
+pub mod solver;
+pub mod testkit;
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::data::real::{RealDatasetKind, SurrogateConfig};
+    pub use crate::data::{Dataset, InteractionOrder, Response, SyntheticConfig};
+    pub use crate::groups::Groups;
+    pub use crate::linalg::Matrix;
+    pub use crate::loss::LossKind;
+    pub use crate::metrics::{PathMetrics, PointMetrics};
+    pub use crate::model_api::{FittedSgl, SglModel};
+    pub use crate::path::{PathConfig, PathFit, PathRunner};
+    pub use crate::penalty::{AdaptiveWeights, Penalty};
+    pub use crate::rng::Rng;
+    pub use crate::screen::RuleKind;
+    pub use crate::solver::{SolverConfig, SolverKind};
+}

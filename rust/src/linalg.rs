@@ -1,0 +1,388 @@
+//! Dense linear-algebra substrate.
+//!
+//! No BLAS binding is available offline, so the crate carries its own
+//! column-major dense matrix with the handful of kernels the pathwise SGL
+//! stack needs: `Xᵀr` (gradient), `Xβ` (predictions), column gathers (for
+//! screening-reduced designs), Gram products and standardization. The
+//! gradient matvec is the L3 hot path when the XLA engine is not in use, so
+//! it is written to auto-vectorize (contiguous column dot products with
+//! 4-way unrolled accumulators) and can fan out over a thread scope.
+
+use crate::parallel;
+
+/// Column-major dense matrix of `f64`.
+///
+/// Column-major is the natural layout for pathwise screening: the gradient
+/// `Xᵀr` is one contiguous dot product per column, and gathering the
+/// optimization set into a reduced design is a set of `memcpy`s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    n: usize,
+    p: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix with `n` rows and `p` columns.
+    pub fn zeros(n: usize, p: usize) -> Self {
+        Matrix { n, p, data: vec![0.0; n * p] }
+    }
+
+    /// Build from a closure `f(row, col)`.
+    pub fn from_fn(n: usize, p: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                m.data[j * n + i] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from column-major data (length must be `n * p`).
+    pub fn from_col_major(n: usize, p: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n * p, "column-major data length mismatch");
+        Matrix { n, p, data }
+    }
+
+    /// Build from a list of columns, each of length `n`.
+    pub fn from_columns(n: usize, cols: &[Vec<f64>]) -> Self {
+        let p = cols.len();
+        let mut data = Vec::with_capacity(n * p);
+        for c in cols {
+            assert_eq!(c.len(), n);
+            data.extend_from_slice(c);
+        }
+        Matrix { n, p, data }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.n + i] = v;
+    }
+
+    /// Contiguous view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    /// Raw column-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `y = X β` (length n).
+    pub fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        assert_eq!(beta.len(), self.p);
+        let mut out = vec![0.0; self.n];
+        self.matvec_into(beta, &mut out);
+        out
+    }
+
+    /// `out = X β`, reusing the output buffer (hot-loop form).
+    pub fn matvec_into(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                axpy(b, self.col(j), out);
+            }
+        }
+    }
+
+    /// `g = Xᵀ r` (length p). Single-threaded.
+    pub fn t_matvec(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.n);
+        let mut out = vec![0.0; self.p];
+        self.t_matvec_into(r, &mut out);
+        out
+    }
+
+    /// `out = Xᵀ r`, reusing the output buffer.
+    pub fn t_matvec_into(&self, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        for j in 0..self.p {
+            out[j] = dot(self.col(j), r);
+        }
+    }
+
+    /// `Xᵀ r` fanned out across a thread scope — the no-XLA gradient hot
+    /// path for large `p`.
+    pub fn t_matvec_par(&self, r: &[f64], threads: usize) -> Vec<f64> {
+        assert_eq!(r.len(), self.n);
+        let mut out = vec![0.0; self.p];
+        // Scoped-thread spawn costs ~50–100 µs per worker and the matvec
+        // is memory-bandwidth bound, so threading only breaks even once
+        // the matrix itself is far larger than L2 (measured in
+        // benches/perf_hotpath.rs — see EXPERIMENTS.md §Perf).
+        if threads <= 1 || self.n * self.p < 8_000_000 {
+            self.t_matvec_into(r, &mut out);
+            return out;
+        }
+        parallel::for_each_chunk(&mut out, threads, |start, chunk| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                *o = dot(self.col(start + k), r);
+            }
+        });
+        out
+    }
+
+    /// Gather the given columns into a new (n × idx.len()) matrix — used to
+    /// build the screening-reduced design for the inner solver.
+    pub fn gather_columns(&self, idx: &[usize]) -> Matrix {
+        let mut data = Vec::with_capacity(self.n * idx.len());
+        for &j in idx {
+            data.extend_from_slice(self.col(j));
+        }
+        Matrix { n: self.n, p: idx.len(), data }
+    }
+
+    /// ℓ₂ norm of each column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.p).map(|j| norm2(self.col(j))).collect()
+    }
+
+    /// Spectral-norm upper bound via `max_j ‖X e_j‖₂ · √p` is far too loose;
+    /// instead run a few power iterations on `XᵀX` to estimate `‖X‖₂²`,
+    /// which upper-bounds the gradient Lipschitz constant of the squared
+    /// loss (divided by n).
+    pub fn op_norm_sq_est(&self, iters: usize, seed: u64) -> f64 {
+        let mut v: Vec<f64> = {
+            let mut rng = crate::rng::Rng::new(seed);
+            (0..self.p).map(|_| rng.gauss()).collect()
+        };
+        let nv = norm2(&v).max(1e-300);
+        v.iter_mut().for_each(|x| *x /= nv);
+        let mut lam;
+        let mut xb = vec![0.0; self.n];
+        for _ in 0..iters.max(1) {
+            self.matvec_into(&v, &mut xb);
+            let w = self.t_matvec(&xb);
+            lam = norm2(&w);
+            if lam <= 0.0 {
+                return 0.0;
+            }
+            v = w.iter().map(|x| x / lam).collect();
+        }
+        // One extra Rayleigh quotient for a tighter estimate.
+        self.matvec_into(&v, &mut xb);
+        dot(&xb, &xb) / dot(&v, &v)
+    }
+
+    /// Center each column to mean zero and scale to unit ℓ₂ norm (the
+    /// paper's "ℓ₂ standardization"). Returns per-column (mean, norm) so
+    /// coefficients can be mapped back to the original scale. Constant
+    /// columns get norm 1 (they stay zero after centering).
+    pub fn standardize_l2(&mut self) -> Vec<(f64, f64)> {
+        let n = self.n;
+        (0..self.p)
+            .map(|j| {
+                let col = self.col_mut(j);
+                let mean = col.iter().sum::<f64>() / n as f64;
+                col.iter_mut().for_each(|x| *x -= mean);
+                let nrm = norm2(col);
+                let scale = if nrm > 1e-12 { nrm } else { 1.0 };
+                col.iter_mut().for_each(|x| *x /= scale);
+                (mean, scale)
+            })
+            .collect()
+    }
+
+    /// Horizontal concatenation (same row count).
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.n, other.n);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { n: self.n, p: self.p + other.p, data }
+    }
+
+    /// Select a subset of rows (used by the CV fold splitter).
+    pub fn gather_rows(&self, rows: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(rows.len(), self.p);
+        for j in 0..self.p {
+            let src = self.col(j);
+            let dst = m.col_mut(j);
+            for (k, &i) in rows.iter().enumerate() {
+                dst[k] = src[i];
+            }
+        }
+        m
+    }
+}
+
+/// Dot product with 4 independent accumulators (lets LLVM vectorize without
+/// needing `-ffast-math`-style reassociation permission).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ℓ₁ norm.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// ℓ∞ norm.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |m, v| m.max(v.abs()))
+}
+
+/// ‖a − b‖₂ — used for the paper's "ℓ₂ distance to no screen" metric.
+pub fn l2_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+/// Elementwise subtraction `a - b`.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Scale in place.
+pub fn scale(x: &mut [f64], s: f64) {
+    x.iter_mut().for_each(|v| *v *= s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Matrix {
+        // [[1, 4], [2, 5], [3, 6]]
+        Matrix::from_columns(3, &[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn matvec_matches_hand_computation() {
+        let m = small();
+        assert_eq!(m.matvec(&[1.0, -1.0]), vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn t_matvec_matches_hand_computation() {
+        let m = small();
+        assert_eq!(m.t_matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn parallel_t_matvec_matches_serial() {
+        let mut rng = crate::rng::Rng::new(1);
+        let m = Matrix::from_fn(37, 501, |_, _| rng.gauss());
+        let r = rng.gauss_vec(37);
+        let a = m.t_matvec(&r);
+        let b = m.t_matvec_par(&r, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gather_columns_picks_right_columns() {
+        let m = small();
+        let g = m.gather_columns(&[1]);
+        assert_eq!(g.ncols(), 1);
+        assert_eq!(g.col(0), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn gather_rows_picks_right_rows() {
+        let m = small();
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.get(0, 0), 3.0);
+        assert_eq!(g.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn standardize_gives_zero_mean_unit_norm() {
+        let mut rng = crate::rng::Rng::new(2);
+        let mut m = Matrix::from_fn(50, 10, |_, _| rng.normal(3.0, 2.0));
+        m.standardize_l2();
+        for j in 0..10 {
+            let c = m.col(j);
+            let mean: f64 = c.iter().sum::<f64>() / 50.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((norm2(c) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn op_norm_est_close_to_true_on_diagonal_case() {
+        // X = diag-ish: columns orthogonal with norms 1, 2, 3 → ‖X‖₂² = 9.
+        let mut m = Matrix::zeros(3, 3);
+        m.set(0, 0, 1.0);
+        m.set(1, 1, 2.0);
+        m.set(2, 2, 3.0);
+        let est = m.op_norm_sq_est(50, 7);
+        assert!((est - 9.0).abs() < 1e-6, "est {est}");
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        let a: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        assert_eq!(dot(&a, &a), 91.0);
+    }
+
+    #[test]
+    fn l2_distance_zero_iff_equal() {
+        let a = [1.0, 2.0];
+        assert_eq!(l2_distance(&a, &a), 0.0);
+        assert!((l2_distance(&a, &[1.0, 4.0]) - 2.0).abs() < 1e-15);
+    }
+}

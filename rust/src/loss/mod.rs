@@ -1,0 +1,252 @@
+//! Smooth loss functions `f(β)` for the SGL objective (Eq. 1).
+//!
+//! Two families, as in the paper's experiments: squared error
+//! `(1/2n)‖y − Xβ‖₂²` for continuous responses, and mean logistic deviance
+//! for binary responses (§D.6). Each exposes value, residual-style
+//! intermediate, full gradient `∇f`, and a Lipschitz bound on `∇f` used to
+//! seed the solvers' backtracking line search.
+
+use crate::linalg::Matrix;
+
+/// Which loss to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    Squared,
+    Logistic,
+}
+
+impl LossKind {
+    pub fn for_response(r: crate::data::Response) -> LossKind {
+        match r {
+            crate::data::Response::Linear => LossKind::Squared,
+            crate::data::Response::Logistic => LossKind::Logistic,
+        }
+    }
+}
+
+/// A smooth loss bound to a dataset.
+#[derive(Clone)]
+pub struct Loss<'a> {
+    pub kind: LossKind,
+    pub x: &'a Matrix,
+    pub y: &'a [f64],
+}
+
+impl<'a> Loss<'a> {
+    pub fn new(kind: LossKind, x: &'a Matrix, y: &'a [f64]) -> Self {
+        assert_eq!(x.nrows(), y.len());
+        Loss { kind, x, y }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Loss value at `β` given precomputed `Xβ`.
+    pub fn value_from_xb(&self, xb: &[f64]) -> f64 {
+        let n = self.n() as f64;
+        match self.kind {
+            LossKind::Squared => {
+                let mut s = 0.0;
+                for (xi, yi) in xb.iter().zip(self.y) {
+                    let r = yi - xi;
+                    s += r * r;
+                }
+                s / (2.0 * n)
+            }
+            LossKind::Logistic => {
+                // mean[ log(1 + e^η) − y·η ], computed stably.
+                let mut s = 0.0;
+                for (&eta, &yi) in xb.iter().zip(self.y) {
+                    let log1p = if eta > 0.0 {
+                        eta + (-eta).exp().ln_1p()
+                    } else {
+                        eta.exp().ln_1p()
+                    };
+                    s += log1p - yi * eta;
+                }
+                s / n
+            }
+        }
+    }
+
+    /// Loss value at `β`.
+    pub fn value(&self, beta: &[f64]) -> f64 {
+        self.value_from_xb(&self.x.matvec(beta))
+    }
+
+    /// The "residual" `r` such that `∇f(β) = Xᵀ r / n`:
+    /// squared → `Xβ − y`; logistic → `σ(Xβ) − y`.
+    pub fn residual_from_xb(&self, xb: &[f64], out: &mut [f64]) {
+        match self.kind {
+            LossKind::Squared => {
+                for i in 0..xb.len() {
+                    out[i] = xb[i] - self.y[i];
+                }
+            }
+            LossKind::Logistic => {
+                for i in 0..xb.len() {
+                    out[i] = sigmoid(xb[i]) - self.y[i];
+                }
+            }
+        }
+    }
+
+    /// Full gradient `∇f(β) = Xᵀ r(β) / n`.
+    pub fn gradient(&self, beta: &[f64]) -> Vec<f64> {
+        let xb = self.x.matvec(beta);
+        self.gradient_from_xb(&xb)
+    }
+
+    /// Gradient given precomputed `Xβ` (threaded over columns).
+    pub fn gradient_from_xb(&self, xb: &[f64]) -> Vec<f64> {
+        let mut r = vec![0.0; self.n()];
+        self.residual_from_xb(xb, &mut r);
+        let n = self.n() as f64;
+        let mut g = self.x.t_matvec_par(&r, crate::parallel::default_threads());
+        g.iter_mut().for_each(|v| *v /= n);
+        g
+    }
+
+    /// Upper bound on the Lipschitz constant of `∇f`:
+    /// squared → `‖X‖₂²/n`; logistic → `‖X‖₂²/(4n)`.
+    pub fn lipschitz_bound(&self) -> f64 {
+        let opsq = self.x.op_norm_sq_est(30, 0xC0FFEE);
+        let n = self.n() as f64;
+        match self.kind {
+            LossKind::Squared => opsq / n,
+            LossKind::Logistic => opsq / (4.0 * n),
+        }
+    }
+}
+
+/// Numerically stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Finite-difference gradient for testing.
+#[cfg(test)]
+pub fn fd_gradient(loss: &Loss, beta: &[f64], h: f64) -> Vec<f64> {
+    let mut g = vec![0.0; beta.len()];
+    let mut b = beta.to_vec();
+    for j in 0..beta.len() {
+        b[j] = beta[j] + h;
+        let up = loss.value(&b);
+        b[j] = beta[j] - h;
+        let dn = loss.value(&b);
+        b[j] = beta[j];
+        g[j] = (up - dn) / (2.0 * h);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn problem(kind: LossKind, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(25, 8, |_, _| rng.gauss());
+        let y: Vec<f64> = match kind {
+            LossKind::Squared => rng.gauss_vec(25),
+            LossKind::Logistic => {
+                (0..25).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect()
+            }
+        };
+        (x, y)
+    }
+
+    #[test]
+    fn squared_gradient_matches_finite_difference() {
+        let (x, y) = problem(LossKind::Squared, 1);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let mut rng = Rng::new(2);
+        let beta = rng.gauss_vec(8);
+        let g = loss.gradient(&beta);
+        let fd = fd_gradient(&loss, &beta, 1e-6);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn logistic_gradient_matches_finite_difference() {
+        let (x, y) = problem(LossKind::Logistic, 3);
+        let loss = Loss::new(LossKind::Logistic, &x, &y);
+        let mut rng = Rng::new(4);
+        let beta: Vec<f64> = rng.gauss_vec(8).iter().map(|v| 0.3 * v).collect();
+        let g = loss.gradient(&beta);
+        let fd = fd_gradient(&loss, &beta, 1e-6);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_stable_at_extremes() {
+        assert!(sigmoid(800.0) <= 1.0 && sigmoid(800.0) > 0.999);
+        assert!(sigmoid(-800.0) >= 0.0 && sigmoid(-800.0) < 1e-100);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn logistic_value_stable_at_large_eta() {
+        let (x, y) = problem(LossKind::Logistic, 5);
+        let loss = Loss::new(LossKind::Logistic, &x, &y);
+        let beta = vec![100.0; 8];
+        let v = loss.value(&beta);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn lipschitz_bound_dominates_gradient_variation() {
+        let (x, y) = problem(LossKind::Squared, 7);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let l = loss.lipschitz_bound();
+        let mut rng = Rng::new(8);
+        for _ in 0..20 {
+            let a = rng.gauss_vec(8);
+            let b = rng.gauss_vec(8);
+            let ga = loss.gradient(&a);
+            let gb = loss.gradient(&b);
+            let num = crate::linalg::l2_distance(&ga, &gb);
+            let den = crate::linalg::l2_distance(&a, &b);
+            assert!(num <= l * den * (1.0 + 1e-6), "{num} > {l}·{den}");
+        }
+    }
+
+    #[test]
+    fn gradient_of_zero_beta_is_minus_xty_over_n_for_squared() {
+        let (x, y) = problem(LossKind::Squared, 9);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let g = loss.gradient(&vec![0.0; 8]);
+        let direct = x.t_matvec(&y);
+        for (a, b) in g.iter().zip(&direct) {
+            assert!((a + b / 25.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn value_from_xb_consistent_with_value() {
+        let (x, y) = problem(LossKind::Logistic, 10);
+        let loss = Loss::new(LossKind::Logistic, &x, &y);
+        let beta = vec![0.1; 8];
+        let xb = x.matvec(&beta);
+        assert!((loss.value(&beta) - loss.value_from_xb(&xb)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn dot_sanity() {
+        assert_eq!(crate::linalg::dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

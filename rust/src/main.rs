@@ -1,0 +1,217 @@
+//! `dfr` — launcher for the DFR sparse-group-lasso framework.
+//!
+//! Subcommands:
+//!
+//! * `fit`      — pathwise (a)SGL fit on synthetic or surrogate-real data
+//!                with a chosen screening rule; prints paper-style metrics.
+//! * `compare`  — screened vs no-screen paired run (improvement factor).
+//! * `cv`       — k-fold cross-validation, optionally over an α grid.
+//! * `info`     — environment report (threads, artifacts, PJRT platform).
+
+use dfr::cli::{parse_rule, usage, Args, OptSpec};
+use dfr::data::real::{RealDatasetKind, SurrogateConfig};
+use dfr::data::{Dataset, Response, SyntheticConfig};
+use dfr::path::{compare_with_no_screen, PathConfig, PathRunner};
+use dfr::report;
+use dfr::runtime::XlaEngine;
+use dfr::solver::{SolverConfig, SolverKind};
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "rule", help: "screening rule: none|dfr|dfr-asgl|sparsegl|gap|gap-dyn", default: Some("dfr"), takes_value: true },
+        OptSpec { name: "dataset", help: "synthetic | brca1 | scheetz | trust-experts | adenoma | celiac | tumour", default: Some("synthetic"), takes_value: true },
+        OptSpec { name: "scale", help: "surrogate real-data scale factor (0..1]", default: Some("0.1"), takes_value: true },
+        OptSpec { name: "p", help: "synthetic: number of variables", default: Some("1000"), takes_value: true },
+        OptSpec { name: "n", help: "synthetic: number of observations", default: Some("200"), takes_value: true },
+        OptSpec { name: "alpha", help: "SGL mixing parameter", default: Some("0.95"), takes_value: true },
+        OptSpec { name: "path-len", help: "number of λ path points", default: Some("50"), takes_value: true },
+        OptSpec { name: "path-end", help: "λ_l/λ₁ ratio", default: Some("0.1"), takes_value: true },
+        OptSpec { name: "gamma", help: "aSGL adaptive weight exponent γ₁=γ₂", default: None, takes_value: true },
+        OptSpec { name: "solver", help: "fista | atos", default: Some("fista"), takes_value: true },
+        OptSpec { name: "folds", help: "cv: number of folds", default: Some("10"), takes_value: true },
+        OptSpec { name: "seed", help: "RNG seed", default: Some("42"), takes_value: true },
+        OptSpec { name: "logistic", help: "synthetic: logistic response", default: None, takes_value: false },
+        OptSpec { name: "xla", help: "serve full gradients from PJRT artifacts (artifacts/)", default: None, takes_value: false },
+        OptSpec { name: "csv", help: "write per-path-point metrics CSV to this path", default: None, takes_value: true },
+        OptSpec { name: "help", help: "print help", default: None, takes_value: false },
+    ]
+}
+
+fn main() {
+    let specs = specs();
+    let args = match Args::from_env(&specs) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", usage("dfr", ABOUT, &specs));
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{}", usage("dfr <fit|compare|cv|info>", ABOUT, &specs));
+        return;
+    }
+    let cmd = args.positional[0].clone();
+    if let Err(e) = run(&cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const ABOUT: &str = "Dual Feature Reduction for the sparse-group lasso (ICML 2025) — \
+pathwise fitting with bi-level strong screening";
+
+fn build_dataset(args: &Args) -> anyhow::Result<Dataset> {
+    let name = args.str_or("dataset", "synthetic");
+    let seed = args.usize_or("seed", 42).map_err(anyhow::Error::msg)? as u64;
+    if name == "synthetic" {
+        let cfg = SyntheticConfig {
+            p: args.usize_or("p", 1000).map_err(anyhow::Error::msg)?,
+            n: args.usize_or("n", 200).map_err(anyhow::Error::msg)?,
+            response: if args.flag("logistic") { Response::Logistic } else { Response::Linear },
+            ..SyntheticConfig::default()
+        };
+        return Ok(cfg.generate(seed).dataset);
+    }
+    let kind = RealDatasetKind::ALL
+        .into_iter()
+        .find(|k| k.name() == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset `{name}`"))?;
+    let scale = args.f64_or("scale", 0.1).map_err(anyhow::Error::msg)?;
+    Ok(SurrogateConfig { kind, scale, seed }.generate())
+}
+
+fn build_path_config(args: &Args) -> anyhow::Result<PathConfig> {
+    let solver_kind = match args.str_or("solver", "fista").as_str() {
+        "fista" => SolverKind::Fista,
+        "atos" => SolverKind::Atos,
+        s => anyhow::bail!("unknown solver `{s}`"),
+    };
+    Ok(PathConfig {
+        alpha: args.f64_or("alpha", 0.95).map_err(anyhow::Error::msg)?,
+        path_len: args.usize_or("path-len", 50).map_err(anyhow::Error::msg)?,
+        path_end_ratio: args.f64_or("path-end", 0.1).map_err(anyhow::Error::msg)?,
+        solver: SolverConfig { kind: solver_kind, ..SolverConfig::default() },
+        adaptive: args.options.get("gamma").map(|g| {
+            let g: f64 = g.parse().unwrap_or(0.1);
+            (g, g)
+        }),
+        ..PathConfig::default()
+    })
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "fit" => {
+            let ds = build_dataset(args)?;
+            let cfg = build_path_config(args)?;
+            let rule = parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?;
+            println!(
+                "fitting {} (p={}, n={}, m={}) with {} ...",
+                ds.name,
+                ds.p(),
+                ds.n(),
+                ds.m(),
+                rule.name()
+            );
+            if args.flag("xla") {
+                let xla_engine = XlaEngine::new("artifacts")?;
+                let fit = PathRunner::new(&ds, cfg).rule(rule).engine(&xla_engine).run()?;
+                report_fit(&ds, rule.name(), &fit, args)?;
+                let stats = xla_engine.stats();
+                println!(
+                    "[xla] gradient calls: {} (native fallbacks: {}, artifacts compiled: {})",
+                    stats.xla_gradient_calls, stats.native_fallbacks, stats.compiled_artifacts
+                );
+            } else {
+                let fit = PathRunner::new(&ds, cfg).rule(rule).run()?;
+                report_fit(&ds, rule.name(), &fit, args)?;
+            }
+            Ok(())
+        }
+        "compare" => {
+            let ds = build_dataset(args)?;
+            let cfg = build_path_config(args)?;
+            let rule = parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?;
+            let c = compare_with_no_screen(&ds, &cfg, rule)?;
+            println!(
+                "{}: improvement factor {:.2} (screen {:.3}s vs no-screen {:.3}s), \
+                 input proportion {:.4}, ℓ₂ distance {:.2e}",
+                rule.name(),
+                c.improvement_factor,
+                c.screened.metrics.total_seconds,
+                c.no_screen.metrics.total_seconds,
+                c.screened.metrics.input_proportion(),
+                c.l2_distance,
+            );
+            let rec = report::run_record(
+                &ds.name,
+                rule.name(),
+                &c.screened.metrics,
+                Some(c.improvement_factor),
+                Some(c.l2_distance),
+            );
+            println!("{}", rec.render());
+            Ok(())
+        }
+        "cv" => {
+            let ds = build_dataset(args)?;
+            let cfg = dfr::cv::CvConfig {
+                folds: args.usize_or("folds", 10).map_err(anyhow::Error::msg)?,
+                path: build_path_config(args)?,
+                rule: parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?,
+                seed: args.usize_or("seed", 42).map_err(anyhow::Error::msg)? as u64,
+                threads: dfr::parallel::default_threads(),
+            };
+            let cell = dfr::cv::cross_validate(&ds, &cfg)?;
+            println!(
+                "cv({} folds): best λ = {:.5} (index {}), held-out loss {:.5}, {:.2}s",
+                cfg.folds,
+                cell.lambdas[cell.best_idx],
+                cell.best_idx,
+                cell.cv_loss[cell.best_idx],
+                cell.seconds
+            );
+            Ok(())
+        }
+        "info" => {
+            println!("dfr {}", env!("CARGO_PKG_VERSION"));
+            println!("threads: {}", dfr::parallel::default_threads());
+            match XlaEngine::new("artifacts") {
+                Ok(_) => println!("pjrt: cpu client OK"),
+                Err(e) => println!("pjrt: unavailable ({e})"),
+            }
+            let artifacts = std::fs::read_dir("artifacts")
+                .map(|rd| rd.filter_map(|e| e.ok()).count())
+                .unwrap_or(0);
+            println!("artifacts: {artifacts} file(s) in artifacts/");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command `{other}` (try --help)"),
+    }
+}
+
+fn report_fit(
+    ds: &Dataset,
+    rule: &str,
+    fit: &dfr::path::PathFit,
+    args: &Args,
+) -> anyhow::Result<()> {
+    let m = &fit.metrics;
+    println!(
+        "done in {:.3}s: input proportion {:.4} (groups {:.4}), KKT violations {}, \
+         failed convergences {}, active at end {}",
+        m.total_seconds,
+        m.input_proportion(),
+        m.group_input_proportion(),
+        m.total_kkt_violations(),
+        m.failed_convergences(),
+        fit.active_vars_last(),
+    );
+    println!("{}", report::run_record(&ds.name, rule, m, None, None).render());
+    if let Some(csv) = args.options.get("csv") {
+        report::write_file(csv, &report::path_metrics_csv(m))?;
+        println!("[csv] {csv}");
+    }
+    Ok(())
+}

@@ -1,0 +1,205 @@
+//! Experiment metrics (§3 and Appendix D.1 of the paper).
+//!
+//! Per path point we record the cardinalities of the active / candidate /
+//! optimization sets at both the variable and group level, KKT violation
+//! counts, solver iterations and convergence, and timing. Aggregations
+//! reproduce the two headline metrics:
+//!
+//! * **improvement factor** = no-screen time / screen time,
+//! * **input proportion** = `|O_v| / p` (and `|O_g| / m`).
+
+/// Metrics for one λ path point.
+#[derive(Clone, Debug, Default)]
+pub struct PointMetrics {
+    pub lambda: f64,
+    /// Active variables / groups at the solution.
+    pub a_v: usize,
+    pub a_g: usize,
+    /// Candidate sets from screening.
+    pub c_v: usize,
+    pub c_g: usize,
+    /// Optimization set actually fed to the solver.
+    pub o_v: usize,
+    pub o_g: usize,
+    /// KKT violations encountered (variables added back).
+    pub kkt_violations: usize,
+    pub solver_iterations: usize,
+    pub converged: bool,
+    /// Wall-clock seconds spent fitting this path point.
+    pub fit_seconds: f64,
+}
+
+/// Metrics for a whole path fit.
+#[derive(Clone, Debug, Default)]
+pub struct PathMetrics {
+    pub points: Vec<PointMetrics>,
+    pub p: usize,
+    pub m: usize,
+    pub total_seconds: f64,
+}
+
+impl PathMetrics {
+    /// Mean `|O_v| / p` over the path.
+    pub fn input_proportion(&self) -> f64 {
+        mean(self.points.iter().map(|pt| pt.o_v as f64 / self.p as f64))
+    }
+
+    /// Mean `|O_g| / m` over the path.
+    pub fn group_input_proportion(&self) -> f64 {
+        mean(self.points.iter().map(|pt| pt.o_g as f64 / self.m as f64))
+    }
+
+    /// Mean `|O_v| / |A_v|` (screening efficiency; low is better).
+    pub fn ov_over_av(&self) -> f64 {
+        mean(
+            self.points
+                .iter()
+                .filter(|pt| pt.a_v > 0)
+                .map(|pt| pt.o_v as f64 / pt.a_v as f64),
+        )
+    }
+
+    /// Total KKT violations across the path.
+    pub fn total_kkt_violations(&self) -> usize {
+        self.points.iter().map(|pt| pt.kkt_violations).sum()
+    }
+
+    /// Number of path points that failed to converge.
+    pub fn failed_convergences(&self) -> usize {
+        self.points.iter().filter(|pt| !pt.converged).count()
+    }
+
+    /// Mean solver iterations per path point.
+    pub fn mean_iterations(&self) -> f64 {
+        mean(self.points.iter().map(|pt| pt.solver_iterations as f64))
+    }
+}
+
+/// Online mean/stderr accumulator used by the bench harness and the
+/// repeated-simulation reports ("averaged over 100 repeats, with standard
+/// errors").
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    n: usize,
+    mean: f64,
+    m2: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std_dev() / (self.n as f64).sqrt()
+        }
+    }
+
+    /// `mean ± stderr` formatted like the paper's tables.
+    pub fn fmt(&self) -> String {
+        format!("{:.3} ± {:.3}", self.mean(), self.stderr())
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let mut s = 0.0;
+    let mut n = 0usize;
+    for x in it {
+        s += x;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f64
+    }
+}
+
+/// Improvement factor between a no-screen fit and a screened fit.
+pub fn improvement_factor(no_screen_seconds: f64, screen_seconds: f64) -> f64 {
+    if screen_seconds <= 0.0 {
+        f64::INFINITY
+    } else {
+        no_screen_seconds / screen_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_mean_and_stderr() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.push(x);
+        }
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        // sample sd = sqrt(5/3); stderr = sd/2.
+        let sd = (5.0f64 / 3.0).sqrt();
+        assert!((a.std_dev() - sd).abs() < 1e-12);
+        assert!((a.stderr() - sd / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn path_metrics_aggregate() {
+        let mut pm = PathMetrics { p: 100, m: 10, ..Default::default() };
+        pm.points.push(PointMetrics {
+            o_v: 20,
+            o_g: 2,
+            a_v: 10,
+            converged: true,
+            ..Default::default()
+        });
+        pm.points.push(PointMetrics {
+            o_v: 40,
+            o_g: 4,
+            a_v: 20,
+            converged: false,
+            kkt_violations: 3,
+            ..Default::default()
+        });
+        assert!((pm.input_proportion() - 0.3).abs() < 1e-12);
+        assert!((pm.group_input_proportion() - 0.3).abs() < 1e-12);
+        assert!((pm.ov_over_av() - 2.0).abs() < 1e-12);
+        assert_eq!(pm.total_kkt_violations(), 3);
+        assert_eq!(pm.failed_convergences(), 1);
+    }
+
+    #[test]
+    fn improvement_factor_ratio() {
+        assert_eq!(improvement_factor(10.0, 2.0), 5.0);
+        assert!(improvement_factor(1.0, 0.0).is_infinite());
+    }
+}

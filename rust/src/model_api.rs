@@ -1,0 +1,348 @@
+//! High-level model API: the interface a downstream user actually calls.
+//!
+//! Wraps the pathwise machinery into scikit-style `fit → select → predict`:
+//! standardization is handled internally and coefficients are mapped back
+//! to the original feature scale (including the intercept), λ is selected
+//! by k-fold CV with an optional one-standard-error rule, and predictions
+//! support both response families.
+
+use crate::data::{Dataset, Response};
+use crate::loss::sigmoid;
+use crate::path::{PathConfig, PathFit, PathRunner};
+use crate::screen::RuleKind;
+
+/// Model specification.
+#[derive(Clone, Debug)]
+pub struct SglModel {
+    pub path: PathConfig,
+    pub rule: RuleKind,
+    /// CV folds used by [`SglModel::fit_cv`].
+    pub cv_folds: usize,
+    /// Pick the sparsest λ within one stderr of the CV optimum.
+    pub one_se_rule: bool,
+    pub seed: u64,
+}
+
+impl Default for SglModel {
+    fn default() -> Self {
+        SglModel {
+            path: PathConfig::default(),
+            rule: RuleKind::DfrSgl,
+            cv_folds: 10,
+            one_se_rule: false,
+            seed: 42,
+        }
+    }
+}
+
+/// A fitted model: selected coefficients on the ORIGINAL feature scale.
+#[derive(Clone, Debug)]
+pub struct FittedSgl {
+    /// Intercept on the original scale.
+    pub intercept: f64,
+    /// Coefficients on the original scale (length p).
+    pub coefficients: Vec<f64>,
+    /// λ selected.
+    pub lambda: f64,
+    /// Index of the selected path point.
+    pub lambda_idx: usize,
+    pub response: Response,
+    /// The underlying pathwise fit (standardized scale) for inspection.
+    pub path_fit: PathFit,
+}
+
+impl FittedSgl {
+    /// Selected (nonzero) variables, original indexing.
+    pub fn selected(&self) -> Vec<usize> {
+        self.coefficients
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != 0.0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Linear predictor `η = intercept + xβ` for one raw observation.
+    pub fn decision_function(&self, x_row: &[f64]) -> f64 {
+        assert_eq!(x_row.len(), self.coefficients.len());
+        self.intercept
+            + x_row.iter().zip(&self.coefficients).map(|(x, c)| x * c).sum::<f64>()
+    }
+
+    /// Prediction: the conditional mean (identity for linear, σ(η) for
+    /// logistic).
+    pub fn predict(&self, x_row: &[f64]) -> f64 {
+        let eta = self.decision_function(x_row);
+        match self.response {
+            Response::Linear => eta,
+            Response::Logistic => sigmoid(eta),
+        }
+    }
+
+    /// Batch prediction over raw rows.
+    pub fn predict_many(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict(r)).collect()
+    }
+}
+
+impl SglModel {
+    /// Fit the path on RAW data (x rows × p cols, row-major rows) and
+    /// select λ at a fixed index (e.g. from a previous CV).
+    pub fn fit_at(
+        &self,
+        x_rows: &[Vec<f64>],
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+        lambda_idx: usize,
+    ) -> anyhow::Result<FittedSgl> {
+        let (ds, centers) = self.prepare(x_rows, y, group_sizes, response)?;
+        let fit = PathRunner::new(&ds, self.path.clone()).rule(self.rule).run()?;
+        self.finalize(fit, &centers, y, response, lambda_idx)
+    }
+
+    /// Fit the path and select λ by k-fold cross-validation.
+    pub fn fit_cv(
+        &self,
+        x_rows: &[Vec<f64>],
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+    ) -> anyhow::Result<FittedSgl> {
+        let (ds, centers) = self.prepare(x_rows, y, group_sizes, response)?;
+        let cv = crate::cv::CvConfig {
+            folds: self.cv_folds,
+            path: self.path.clone(),
+            rule: self.rule,
+            seed: self.seed,
+            threads: crate::parallel::default_threads(),
+        };
+        let cell = crate::cv::cross_validate(&ds, &cv)?;
+        let idx = if self.one_se_rule {
+            one_se_index(&cell.cv_loss, cell.best_idx, self.cv_folds)
+        } else {
+            cell.best_idx
+        };
+        let fit = PathRunner::new(&ds, self.path.clone())
+            .rule(self.rule)
+            .fixed_path(cell.lambdas.clone())
+            .run()?;
+        self.finalize(fit, &centers, y, response, idx)
+    }
+
+    fn prepare(
+        &self,
+        x_rows: &[Vec<f64>],
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+    ) -> anyhow::Result<(Dataset, Vec<(f64, f64)>)> {
+        anyhow::ensure!(!x_rows.is_empty(), "empty design");
+        let n = x_rows.len();
+        let p = x_rows[0].len();
+        anyhow::ensure!(y.len() == n, "y length mismatch");
+        anyhow::ensure!(
+            group_sizes.iter().sum::<usize>() == p,
+            "group sizes must sum to p"
+        );
+        let mut x = crate::linalg::Matrix::zeros(n, p);
+        for (i, row) in x_rows.iter().enumerate() {
+            anyhow::ensure!(row.len() == p, "ragged design row {i}");
+            for (j, &v) in row.iter().enumerate() {
+                x.set(i, j, v);
+            }
+        }
+        let centers = x.standardize_l2();
+        let mut yv = y.to_vec();
+        if response == Response::Linear {
+            let mean = yv.iter().sum::<f64>() / n as f64;
+            yv.iter_mut().for_each(|v| *v -= mean);
+        }
+        let ds = Dataset {
+            x,
+            y: yv,
+            groups: crate::groups::Groups::from_sizes(group_sizes),
+            response,
+            name: "user".into(),
+        };
+        Ok((ds, centers))
+    }
+
+    fn finalize(
+        &self,
+        fit: PathFit,
+        centers: &[(f64, f64)],
+        y_raw: &[f64],
+        response: Response,
+        idx: usize,
+    ) -> anyhow::Result<FittedSgl> {
+        anyhow::ensure!(idx < fit.betas.len(), "lambda index out of range");
+        let beta_std = &fit.betas[idx];
+        // Unstandardize: x_std_j = (x_j − m_j)/s_j ⇒ β_j = β_std_j / s_j,
+        // intercept absorbs −Σ β_std_j m_j / s_j (+ ȳ for linear).
+        let mut coefficients = vec![0.0; beta_std.len()];
+        let mut shift = 0.0;
+        for (j, &b) in beta_std.iter().enumerate() {
+            let (m, s) = centers[j];
+            coefficients[j] = b / s;
+            shift += b * m / s;
+        }
+        let intercept = match response {
+            Response::Linear => {
+                let ymean = y_raw.iter().sum::<f64>() / y_raw.len() as f64;
+                ymean - shift
+            }
+            Response::Logistic => -shift,
+        };
+        Ok(FittedSgl {
+            intercept,
+            coefficients,
+            lambda: fit.lambdas[idx],
+            lambda_idx: idx,
+            response,
+            path_fit: fit,
+        })
+    }
+}
+
+/// One-standard-error rule: the largest λ (sparsest model) whose CV loss is
+/// within one stderr-proxy of the minimum. Without per-fold losses stored,
+/// uses the common proxy `se ≈ |loss| / √folds` of the minimum cell.
+fn one_se_index(cv_loss: &[f64], best: usize, folds: usize) -> usize {
+    let min = cv_loss[best];
+    let se = min.abs() / (folds as f64).sqrt();
+    for (i, &l) in cv_loss.iter().enumerate() {
+        if l <= min + se {
+            return i; // path is sorted λ-descending: first hit = sparsest
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn raw_problem(seed: u64, n: usize, p: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+        // Deliberately unstandardized features (offset + scale).
+        let mut rng = Rng::new(seed);
+        let beta_true: Vec<f64> =
+            (0..p).map(|j| if j % 4 == 0 { rng.normal(0.0, 2.0) } else { 0.0 }).collect();
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..p).map(|j| 5.0 + (j as f64 + 1.0) * rng.gauss()).collect())
+            .collect();
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| {
+                r.iter().zip(&beta_true).map(|(x, b)| x * b).sum::<f64>() + rng.normal(0.0, 0.5)
+            })
+            .collect();
+        (rows, y, beta_true)
+    }
+
+    #[test]
+    fn fit_predict_round_trip_linear() {
+        let (rows, y, _) = raw_problem(1, 80, 16);
+        let model = SglModel {
+            path: PathConfig { path_len: 15, ..PathConfig::default() },
+            ..Default::default()
+        };
+        let fitted = model.fit_at(&rows, &y, &[4, 4, 4, 4], Response::Linear, 14).unwrap();
+        // In-sample predictions should correlate strongly with y.
+        let preds: Vec<f64> = rows.iter().map(|r| fitted.predict(r)).collect();
+        let corr = correlation(&preds, &y);
+        assert!(corr > 0.95, "in-sample correlation {corr}");
+        assert!(!fitted.selected().is_empty());
+    }
+
+    #[test]
+    fn unstandardized_coefficients_reproduce_standardized_predictions() {
+        let (rows, y, _) = raw_problem(2, 60, 12);
+        let model = SglModel {
+            path: PathConfig { path_len: 10, ..PathConfig::default() },
+            ..Default::default()
+        };
+        let fitted = model.fit_at(&rows, &y, &[3, 3, 3, 3], Response::Linear, 9).unwrap();
+        // Rebuild the standardized dataset and compare η computed both ways.
+        let (ds, centers) = model.prepare(&rows, &y, &[3, 3, 3, 3], Response::Linear).unwrap();
+        let beta_std = &fitted.path_fit.betas[9];
+        let ymean = y.iter().sum::<f64>() / y.len() as f64;
+        for i in 0..5 {
+            let eta_std: f64 = (0..12).map(|j| ds.x.get(i, j) * beta_std[j]).sum::<f64>() + ymean;
+            let eta_raw = fitted.decision_function(&rows[i]);
+            assert!((eta_std - eta_raw).abs() < 1e-8, "row {i}: {eta_std} vs {eta_raw}");
+        }
+        let _ = centers;
+    }
+
+    #[test]
+    fn cv_fit_selects_interior_lambda() {
+        let (rows, y, _) = raw_problem(3, 100, 12);
+        let model = SglModel {
+            path: PathConfig { path_len: 10, ..PathConfig::default() },
+            cv_folds: 4,
+            ..Default::default()
+        };
+        let fitted = model.fit_cv(&rows, &y, &[4, 4, 4], Response::Linear).unwrap();
+        assert!(fitted.lambda_idx > 0);
+        assert!(fitted.lambda > 0.0);
+    }
+
+    #[test]
+    fn one_se_rule_picks_sparser_model() {
+        let (rows, y, _) = raw_problem(4, 100, 12);
+        let base = SglModel {
+            path: PathConfig { path_len: 12, ..PathConfig::default() },
+            cv_folds: 4,
+            ..Default::default()
+        };
+        let plain = base.fit_cv(&rows, &y, &[4, 4, 4], Response::Linear).unwrap();
+        let one_se = SglModel { one_se_rule: true, ..base }
+            .fit_cv(&rows, &y, &[4, 4, 4], Response::Linear)
+            .unwrap();
+        assert!(one_se.lambda_idx <= plain.lambda_idx, "1-SE must not be denser");
+        assert!(one_se.selected().len() <= plain.selected().len() + 1);
+    }
+
+    #[test]
+    fn logistic_predictions_are_probabilities() {
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f64>> =
+            (0..90).map(|_| (0..8).map(|_| rng.gauss()).collect()).collect();
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| if r[0] + r[4] + 0.3 * rng.gauss() > 0.0 { 1.0 } else { 0.0 })
+            .collect();
+        let model = SglModel {
+            path: PathConfig { path_len: 10, ..PathConfig::default() },
+            ..Default::default()
+        };
+        let fitted = model.fit_at(&rows, &y, &[4, 4], Response::Logistic, 9).unwrap();
+        let acc = rows
+            .iter()
+            .zip(&y)
+            .filter(|(r, &yy)| (fitted.predict(r) > 0.5) == (yy == 1.0))
+            .count() as f64
+            / 90.0;
+        assert!(acc > 0.8, "in-sample accuracy {acc}");
+        for r in rows.iter().take(10) {
+            let pr = fitted.predict(r);
+            assert!((0.0..=1.0).contains(&pr));
+        }
+    }
+
+    fn correlation(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len() as f64;
+        let (ma, mb) = (a.iter().sum::<f64>() / n, b.iter().sum::<f64>() / n);
+        let mut num = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for i in 0..a.len() {
+            num += (a[i] - ma) * (b[i] - mb);
+            va += (a[i] - ma).powi(2);
+            vb += (b[i] - mb).powi(2);
+        }
+        num / (va.sqrt() * vb.sqrt())
+    }
+}

@@ -1,0 +1,265 @@
+//! The ε-norm of Burdakov (1988).
+//!
+//! `‖x‖_ε` is the unique non-negative solution `q` of
+//!
+//! ```text
+//!     Σᵢ (|xᵢ| − (1−ε)q)₊²  =  (εq)² ,          ε ∈ (0, 1],
+//! ```
+//!
+//! with the limits `ε → 0 ⇒ ‖x‖∞` and `ε = 1 ⇒ ‖x‖₂`. Its dual is the
+//! interpolation `(1−ε)‖·‖₁ + ε‖·‖₂`, which is exactly how the SGL norm
+//! decomposes per group — hence the DFR group rule evaluates ε-norms of
+//! group gradients.
+//!
+//! The solver is exact: sort `|x|` descending, locate the support size `k`
+//! (the entries with `|xᵢ| > (1−ε)q`), and solve the per-interval quadratic
+//! `(k a² − ε²)q² − 2a S₁q + S₂ = 0` with `a = 1−ε` and prefix sums
+//! `S₁, S₂`. A bisection fallback guards against floating-point edge cases;
+//! property tests cross-validate the two.
+
+/// Left-hand side minus right-hand side of the defining equation:
+/// `F(q) = Σ (|xᵢ|−(1−ε)q)₊² − (εq)²`. Strictly decreasing in `q ≥ 0`
+/// (for `x ≠ 0`), from `‖x‖₂² > 0` down to `−∞`.
+fn f_eps(abs_sorted: &[f64], eps: f64, q: f64) -> f64 {
+    let a = 1.0 - eps;
+    let mut s = 0.0;
+    for &d in abs_sorted {
+        let t = d - a * q;
+        if t <= 0.0 {
+            break; // sorted descending: all further terms are clipped
+        }
+        s += t * t;
+    }
+    s - (eps * q) * (eps * q)
+}
+
+/// Exact ε-norm. `eps` outside `[0,1]` is clamped. `O(p log p)`.
+pub fn epsilon_norm(x: &[f64], eps: f64) -> f64 {
+    let eps = eps.clamp(0.0, 1.0);
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut d: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+    d.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    if d[0] == 0.0 {
+        return 0.0;
+    }
+    if eps == 0.0 {
+        return d[0]; // ℓ∞ limit
+    }
+    if eps == 1.0 {
+        return d.iter().map(|v| v * v).sum::<f64>().sqrt(); // ℓ₂
+    }
+    let a = 1.0 - eps;
+    // Prefix sums over sorted magnitudes.
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    for k in 1..=d.len() {
+        let dk = d[k - 1];
+        s1 += dk;
+        s2 += dk * dk;
+        // Solve (k a² − ε²) q² − 2 a S₁ q + S₂ = 0 on the interval where the
+        // support is exactly the top-k: a·q ∈ [d_{k+1}, d_k) (d_{p+1} = 0).
+        let lo_bound = if k == d.len() { 0.0 } else { d[k] }; // a·q ≥ this
+        let aa = (k as f64) * a * a - eps * eps;
+        let roots = if aa.abs() < 1e-14 * (k as f64) {
+            // Degenerate to linear: −2aS₁q + S₂ = 0.
+            vec![s2 / (2.0 * a * s1)]
+        } else {
+            let disc = a * a * s1 * s1 - aa * s2;
+            if disc < 0.0 {
+                continue;
+            }
+            let sq = disc.sqrt();
+            vec![(a * s1 + sq) / aa, (a * s1 - sq) / aa]
+        };
+        for q in roots {
+            if !(q.is_finite() && q > 0.0) {
+                continue;
+            }
+            let aq = a * q;
+            let tol = 1e-10 * (1.0 + d[0]);
+            if aq < dk + tol && aq >= lo_bound - tol {
+                // Polish with one bisection-safe Newton step via the global
+                // F to absorb the interval tolerance.
+                return polish(&d, eps, q);
+            }
+        }
+    }
+    // Fallback: bisection on the strictly decreasing F. Bracket:
+    // F(‖x‖∞/(1)) .. F(‖x‖₂/ε) spans the root.
+    bisect(&d, eps)
+}
+
+fn polish(d: &[f64], eps: f64, q0: f64) -> f64 {
+    // A couple of Newton steps on F; F' = −2a Σ(dᵢ−aq)₊ − 2ε² q.
+    let a = 1.0 - eps;
+    let mut q = q0;
+    for _ in 0..3 {
+        let f = f_eps(d, eps, q);
+        let mut grad = -2.0 * eps * eps * q;
+        for &di in d {
+            let t = di - a * q;
+            if t <= 0.0 {
+                break;
+            }
+            grad -= 2.0 * a * t;
+        }
+        if grad == 0.0 {
+            break;
+        }
+        let q_new = q - f / grad;
+        if !q_new.is_finite() || q_new <= 0.0 {
+            break;
+        }
+        if (q_new - q).abs() <= 1e-15 * q.abs() {
+            q = q_new;
+            break;
+        }
+        q = q_new;
+    }
+    q
+}
+
+fn bisect(d: &[f64], eps: f64) -> f64 {
+    let l2: f64 = d.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let mut lo = 0.0;
+    let mut hi = l2 / eps; // F(hi) ≤ ‖x‖₂² − ε²·hi² = 0 ⇒ root ≤ hi
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if f_eps(d, eps, mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo <= 1e-15 * hi {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn check_defining_equation(x: &[f64], eps: f64, q: f64) {
+        let a = 1.0 - eps;
+        let lhs: f64 = x.iter().map(|v| (v.abs() - a * q).max(0.0).powi(2)).sum();
+        let rhs = (eps * q).powi(2);
+        let scale = lhs.max(rhs).max(1e-12);
+        assert!(
+            ((lhs - rhs) / scale).abs() < 1e-8,
+            "defining equation violated: lhs={lhs} rhs={rhs} q={q} eps={eps}"
+        );
+    }
+
+    #[test]
+    fn limits_linf_and_l2() {
+        let x = [3.0, -1.0, 2.0];
+        assert_eq!(epsilon_norm(&x, 0.0), 3.0);
+        let l2 = (9.0f64 + 1.0 + 4.0).sqrt();
+        assert!((epsilon_norm(&x, 1.0) - l2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_vector_is_zero() {
+        assert_eq!(epsilon_norm(&[0.0, 0.0], 0.5), 0.0);
+        assert_eq!(epsilon_norm(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn singleton_any_eps_is_abs() {
+        // p=1: (|x|−(1−ε)q)₊² = ε²q² ⇒ |x|−(1−ε)q = εq ⇒ q = |x|.
+        for eps in [0.05, 0.3, 0.77, 0.999] {
+            let q = epsilon_norm(&[-2.5], eps);
+            assert!((q - 2.5).abs() < 1e-9, "eps={eps} q={q}");
+        }
+    }
+
+    #[test]
+    fn satisfies_defining_equation_random() {
+        let mut rng = Rng::new(21);
+        for trial in 0..200 {
+            let p = 1 + rng.below(40);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal(0.0, 2.0)).collect();
+            let eps = rng.uniform_range(0.01, 0.99);
+            let q = epsilon_norm(&x, eps);
+            if x.iter().all(|v| *v == 0.0) {
+                assert_eq!(q, 0.0);
+                continue;
+            }
+            assert!(q > 0.0, "trial {trial}");
+            check_defining_equation(&x, eps, q);
+        }
+    }
+
+    #[test]
+    fn matches_bisection_fallback() {
+        let mut rng = Rng::new(33);
+        for _ in 0..100 {
+            let p = 1 + rng.below(25);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal(0.0, 1.0)).collect();
+            let eps = rng.uniform_range(0.02, 0.98);
+            let mut d: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+            d.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+            let exact = epsilon_norm(&x, eps);
+            let bis = super::bisect(&d, eps);
+            assert!(
+                (exact - bis).abs() < 1e-7 * (1.0 + bis),
+                "exact {exact} vs bisect {bis} (eps {eps})"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_between_linf_and_l2() {
+        // ‖x‖∞ ≤ ‖x‖_ε ≤ ‖x‖₂ and increasing in ε.
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = rng.gauss_vec(12);
+        let linf = x.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let l2 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut prev = linf;
+        for i in 1..20 {
+            let eps = i as f64 / 20.0;
+            let q = epsilon_norm(&x, eps);
+            assert!(q >= prev - 1e-9, "not monotone at eps={eps}");
+            assert!(q >= linf - 1e-9 && q <= l2 + 1e-9);
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn homogeneous_and_triangle_inequality() {
+        let mut rng = Rng::new(6);
+        for _ in 0..50 {
+            let p = 2 + rng.below(10);
+            let x: Vec<f64> = rng.gauss_vec(p);
+            let y: Vec<f64> = rng.gauss_vec(p);
+            let eps = rng.uniform_range(0.05, 0.95);
+            let c = rng.uniform_range(0.1, 5.0);
+            let nx = epsilon_norm(&x, eps);
+            let cx: Vec<f64> = x.iter().map(|v| c * v).collect();
+            assert!((epsilon_norm(&cx, eps) - c * nx).abs() < 1e-7 * (1.0 + c * nx));
+            let xy: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+            let ny = epsilon_norm(&y, eps);
+            assert!(epsilon_norm(&xy, eps) <= nx + ny + 1e-7);
+        }
+    }
+
+    #[test]
+    fn duality_with_l1_l2_interpolation() {
+        // ⟨x, z⟩ ≤ ‖x‖_ε · ((1−ε)‖z‖₁ + ε‖z‖₂) for all z (dual pair).
+        let mut rng = Rng::new(7);
+        let x: Vec<f64> = rng.gauss_vec(8);
+        let eps = 0.35;
+        let nx = epsilon_norm(&x, eps);
+        for _ in 0..500 {
+            let z: Vec<f64> = rng.gauss_vec(8);
+            let ip: f64 = x.iter().zip(&z).map(|(a, b)| a * b).sum();
+            let dz = crate::norms::dual_epsilon_norm(&z, eps);
+            assert!(ip.abs() <= nx * dz + 1e-9);
+        }
+    }
+}

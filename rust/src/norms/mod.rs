@@ -1,0 +1,212 @@
+//! Norms used by the sparse-group lasso and its screening rules.
+//!
+//! * [`epsilon`] — the ε-norm of Burdakov (1988): the implicit norm whose
+//!   *dual* is `(1−ε)‖·‖₁ + ε‖·‖₂`. The DFR group screening rule evaluates
+//!   the ε-norm of per-group gradients (Eq. 5/7 of the paper).
+//! * SGL / aSGL norms and the SGL dual norm (Eqs. 2–4, 18–19).
+//! * Soft thresholding, used by the proximal operators and KKT checks.
+
+pub mod epsilon;
+
+pub use epsilon::epsilon_norm;
+
+/// Soft-thresholding operator `S(a, b) = sign(a)·(|a| − b)₊`.
+#[inline]
+pub fn soft_threshold(a: f64, b: f64) -> f64 {
+    if a > b {
+        a - b
+    } else if a < -b {
+        a + b
+    } else {
+        0.0
+    }
+}
+
+/// Vectorized soft threshold with per-element thresholds.
+pub fn soft_threshold_vec(x: &[f64], thresh: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), thresh.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = soft_threshold(x[i], thresh[i]);
+    }
+}
+
+/// The *dual* of the ε-norm: `‖x‖*_ε = (1−ε)‖x‖₁ + ε‖x‖₂`.
+///
+/// This is the form in which the SGL norm decomposes per group (Eq. 3 via
+/// Eq. 24): `‖β‖_sgl = Σ_g τ_g ‖β^(g)‖*_{ε_g}`.
+pub fn dual_epsilon_norm(x: &[f64], eps: f64) -> f64 {
+    let l1: f64 = x.iter().map(|v| v.abs()).sum();
+    let l2: f64 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    (1.0 - eps) * l1 + eps * l2
+}
+
+/// SGL group constant `τ_g = α + (1−α)√p_g`.
+#[inline]
+pub fn tau_g(alpha: f64, p_g: usize) -> f64 {
+    alpha + (1.0 - alpha) * (p_g as f64).sqrt()
+}
+
+/// SGL group ε `ε_g = (τ_g − α)/τ_g = (1−α)√p_g / τ_g`.
+#[inline]
+pub fn eps_g(alpha: f64, p_g: usize) -> f64 {
+    let tau = tau_g(alpha, p_g);
+    (tau - alpha) / tau
+}
+
+/// The SGL norm `α‖β‖₁ + (1−α)Σ_g √p_g ‖β^(g)‖₂` (Eq. 2).
+pub fn sgl_norm(beta: &[f64], groups: &crate::groups::Groups, alpha: f64) -> f64 {
+    let l1: f64 = beta.iter().map(|v| v.abs()).sum();
+    let mut gl = 0.0;
+    for (g, r) in groups.iter() {
+        let b = &beta[r];
+        let n2 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+        gl += (groups.size(g) as f64).sqrt() * n2;
+    }
+    alpha * l1 + (1.0 - alpha) * gl
+}
+
+/// The aSGL norm `αΣᵢ vᵢ|βᵢ| + (1−α)Σ_g w_g √p_g ‖β^(g)‖₂` (Eq. 18).
+pub fn asgl_norm(
+    beta: &[f64],
+    groups: &crate::groups::Groups,
+    alpha: f64,
+    v: &[f64],
+    w: &[f64],
+) -> f64 {
+    assert_eq!(v.len(), beta.len());
+    assert_eq!(w.len(), groups.m());
+    let l1: f64 = beta.iter().zip(v).map(|(b, vi)| vi * b.abs()).sum();
+    let mut gl = 0.0;
+    for (g, r) in groups.iter() {
+        let b = &beta[r];
+        let n2 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+        gl += w[g] * (groups.size(g) as f64).sqrt() * n2;
+    }
+    alpha * l1 + (1.0 - alpha) * gl
+}
+
+/// The SGL *dual* norm of a full-length vector (Eq. 4):
+/// `‖ξ‖*_sgl = max_g τ_g⁻¹ ‖ξ^(g)‖_{ε_g}`.
+///
+/// Used for the path start `λ₁ = ‖∇f(0)‖*_sgl` and by GAP safe's dual
+/// scaling.
+pub fn dual_sgl_norm(xi: &[f64], groups: &crate::groups::Groups, alpha: f64) -> f64 {
+    let mut best: f64 = 0.0;
+    for (g, r) in groups.iter() {
+        let p_g = groups.size(g);
+        let tau = tau_g(alpha, p_g);
+        let eps = eps_g(alpha, p_g);
+        let v = epsilon_norm(&xi[r], eps);
+        best = best.max(v / tau);
+    }
+    best
+}
+
+/// aSGL group constant `γ_g` (Eq. 19) evaluated at a coefficient block.
+///
+/// `γ_g = α‖v^(g)‖₁ − α·(Σ_{i≠j} v_j|β_i|)/‖β^(g)‖₁ + (1−α)w_g√p_g`.
+///
+/// Using `Σ_{i,j≠i} v_j|β_i| = Σ_i |β_i|(V − v_i)` with `V = Σ_j v_j`, the
+/// middle term is `V − (Σ v_i|β_i|)/‖β‖₁`. For an inactive block the
+/// β → 0 limit (Appendix B.1.1) gives `α·(p_g−1)/p_g·V`.
+pub fn gamma_g(beta_g: &[f64], v_g: &[f64], w_g: f64, alpha: f64) -> f64 {
+    let p_g = beta_g.len();
+    assert_eq!(v_g.len(), p_g);
+    let vsum: f64 = v_g.iter().sum();
+    let l1: f64 = beta_g.iter().map(|b| b.abs()).sum();
+    let group_term = (1.0 - alpha) * w_g * (p_g as f64).sqrt();
+    if l1 <= 0.0 || p_g == 1 {
+        // L'Hôpital limit: middle term → α(p_g−1)/p_g · Σv.
+        let mid = vsum * (p_g as f64 - 1.0) / p_g as f64;
+        return alpha * vsum - alpha * mid + group_term;
+    }
+    let weighted: f64 = beta_g.iter().zip(v_g).map(|(b, vi)| vi * b.abs()).sum();
+    let mid = vsum - weighted / l1;
+    alpha * vsum - alpha * mid + group_term
+}
+
+/// aSGL group ε: `ε'_g = (1−α)w_g√p_g / γ_g`, clamped into `[0, 1]`.
+pub fn eps_g_adaptive(gamma: f64, w_g: f64, alpha: f64, p_g: usize) -> f64 {
+    if gamma <= 0.0 {
+        return 1.0;
+    }
+    ((1.0 - alpha) * w_g * (p_g as f64).sqrt() / gamma).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups::Groups;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn sgl_norm_interpolates_lasso_group_lasso() {
+        let g = Groups::from_sizes(&[2, 2]);
+        let beta = [3.0, -4.0, 0.0, 1.0];
+        // α = 1 → pure ℓ1.
+        assert!((sgl_norm(&beta, &g, 1.0) - 8.0).abs() < 1e-12);
+        // α = 0 → Σ √p_g ‖β_g‖₂ = √2·5 + √2·1.
+        let expect = (2f64).sqrt() * 5.0 + (2f64).sqrt() * 1.0;
+        assert!((sgl_norm(&beta, &g, 0.0) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asgl_reduces_to_sgl_with_unit_weights() {
+        let g = Groups::from_sizes(&[3, 2]);
+        let beta = [1.0, -2.0, 0.5, 0.0, 3.0];
+        let v = vec![1.0; 5];
+        let w = vec![1.0; 2];
+        let a = asgl_norm(&beta, &g, 0.7, &v, &w);
+        let s = sgl_norm(&beta, &g, 0.7);
+        assert!((a - s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_reduces_to_tau_with_unit_weights() {
+        // Appendix B.1.1: v ≡ 1, w ≡ 1 ⇒ γ_g = τ_g for any β.
+        let alpha = 0.95;
+        for beta_g in [vec![1.0, -2.0, 0.3], vec![0.0, 0.0, 0.0]] {
+            let v_g = vec![1.0; 3];
+            let gam = gamma_g(&beta_g, &v_g, 1.0, alpha);
+            let tau = tau_g(alpha, 3);
+            assert!((gam - tau).abs() < 1e-12, "gamma {gam} tau {tau}");
+        }
+    }
+
+    #[test]
+    fn eps_adaptive_reduces_to_eps() {
+        let alpha = 0.6;
+        let p_g = 5;
+        let gam = gamma_g(&[0.0; 5], &[1.0; 5], 1.0, alpha);
+        let e = eps_g_adaptive(gam, 1.0, alpha, p_g);
+        assert!((e - eps_g(alpha, p_g)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dual_sgl_norm_is_dual_of_sgl_norm() {
+        // Empirically check ‖ξ‖* ≥ ξᵀx / ‖x‖_sgl for random x, with equality
+        // approached by maximizing over many random candidates.
+        let mut rng = crate::rng::Rng::new(8);
+        let g = Groups::from_sizes(&[3, 4, 2]);
+        let xi: Vec<f64> = rng.gauss_vec(9);
+        let dual = dual_sgl_norm(&xi, &g, 0.95);
+        let mut best = 0.0f64;
+        for _ in 0..2000 {
+            let x: Vec<f64> = rng.gauss_vec(9);
+            let num: f64 = xi.iter().zip(&x).map(|(a, b)| a * b).sum();
+            let den = sgl_norm(&x, &g, 0.95);
+            best = best.max(num.abs() / den);
+        }
+        assert!(dual >= best - 1e-9, "dual {dual} < sampled sup {best}");
+        assert!(best > 0.6 * dual, "sampled sup too far below dual: {best} vs {dual}");
+    }
+}

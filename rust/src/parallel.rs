@@ -1,0 +1,117 @@
+//! Minimal data-parallel substrate built on `std::thread::scope`.
+//!
+//! No `rayon` is available offline; the pathwise experiments only need two
+//! shapes of parallelism — chunked mutation of a slice (parallel `Xᵀr`) and
+//! a parallel map over independent work items (CV folds, simulation
+//! repeats) — so that is all we build.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: respects
+/// `DFR_THREADS` if set, otherwise `available_parallelism`, capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DFR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Split `out` into `threads` nearly-equal chunks and run `f(start, chunk)`
+/// on each from its own thread. `start` is the offset of the chunk within
+/// the original slice.
+pub fn for_each_chunk<T: Send>(
+    out: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let threads = threads.max(1).min(out.len().max(1));
+    if threads == 1 {
+        f(0, out);
+        return;
+    }
+    let len = out.len();
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fr = &f;
+            s.spawn(move || fr(start, head));
+            start += take;
+            rest = tail;
+        }
+    });
+}
+
+/// Parallel map over indices `0..n` with a bounded worker pool; results are
+/// returned in index order. Work is pulled from a shared atomic counter so
+/// uneven item costs (e.g. no-screen vs screened path fits) balance out.
+pub fn par_map<R: Send>(n: usize, threads: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results.into_inner().unwrap().into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunked_fill_covers_everything() {
+        let mut v = vec![0usize; 1003];
+        for_each_chunk(&mut v, 5, |start, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let r = par_map(100, 7, |i| i * i);
+        for (i, v) in r.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_path_works() {
+        let r = par_map(5, 1, |i| i + 1);
+        assert_eq!(r, vec![1, 2, 3, 4, 5]);
+        let mut v = vec![0; 3];
+        for_each_chunk(&mut v, 1, |s, c| c.iter_mut().for_each(|x| *x = s + 9));
+        assert_eq!(v, vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let r: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(r.is_empty());
+        let mut v: Vec<u8> = vec![];
+        for_each_chunk(&mut v, 4, |_, _| {});
+    }
+}

@@ -1,0 +1,544 @@
+//! The pathwise coordinator — Algorithm 1 (SGL) / Algorithm A1 (aSGL).
+//!
+//! For each step `λ_k → λ_{k+1}`:
+//!
+//! 1. screen: candidate groups, then candidate variables (two layers for
+//!    DFR; one for sparsegl; exact sphere tests for GAP safe),
+//! 2. form the optimization set `O_v = C_v ∪ A_v(λ_k)`,
+//! 3. solve the problem *restricted to `O_v`* (warm-started),
+//! 4. KKT-check every excluded variable at the new solution; re-enter
+//!    violators and re-solve until clean.
+//!
+//! The coordinator owns warm starts, timing, and all Appendix-D metrics.
+//! Dense compute (full gradients, reduced solves) flows through an
+//! exchangeable [`Engine`] so the PJRT/XLA runtime can serve the hot path.
+
+pub mod lambda;
+
+pub use lambda::{lambda_max, log_linear_path};
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::loss::{Loss, LossKind};
+use crate::metrics::{PathMetrics, PointMetrics};
+use crate::penalty::{AdaptiveWeights, Penalty, RestrictedPenalty};
+use crate::screen::{self, RuleKind, ScreenContext};
+use crate::solver::{SolveResult, SolverConfig};
+use std::time::Instant;
+
+/// Dense-compute backend. The default native engine runs everything on the
+/// in-crate linear algebra; the XLA engine (in [`crate::runtime`]) serves
+/// the same two operations from AOT-compiled JAX/Pallas artifacts.
+pub trait Engine {
+    /// Full gradient `∇f(β)` over all p columns (screening / KKT checks).
+    fn full_gradient(&self, loss: &Loss, beta: &[f64]) -> Vec<f64> {
+        loss.gradient(beta)
+    }
+
+    /// Solve the reduced problem (columns already gathered).
+    fn solve_reduced(
+        &self,
+        kind: LossKind,
+        x_red: &Matrix,
+        y: &[f64],
+        pen: &RestrictedPenalty,
+        lam: f64,
+        beta0: &[f64],
+        cfg: &SolverConfig,
+    ) -> SolveResult {
+        let loss = Loss::new(kind, x_red, y);
+        crate::solver::solve(&loss, pen, lam, beta0, cfg)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pure-Rust backend.
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {}
+
+/// Pathwise fit configuration (defaults = Table A1 synthetic column).
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    pub alpha: f64,
+    pub path_len: usize,
+    /// `λ_l / λ₁` (0.1 synthetic, 0.2 real data).
+    pub path_end_ratio: f64,
+    pub solver: SolverConfig,
+    /// `(γ₁, γ₂)` for aSGL adaptive weights; `None` = plain SGL.
+    pub adaptive: Option<(f64, f64)>,
+    /// Safety valve on the KKT re-entry loop.
+    pub max_kkt_rounds: usize,
+    /// For `GapSafeDyn`: re-screen after this many solver iterations.
+    pub dynamic_chunk: usize,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            alpha: 0.95,
+            path_len: 50,
+            path_end_ratio: 0.1,
+            solver: SolverConfig::default(),
+            adaptive: None,
+            max_kkt_rounds: 20,
+            dynamic_chunk: 10,
+        }
+    }
+}
+
+/// Result of a pathwise fit.
+#[derive(Clone, Debug)]
+pub struct PathFit {
+    pub rule: RuleKind,
+    pub lambdas: Vec<f64>,
+    /// One full-length coefficient vector per path point.
+    pub betas: Vec<Vec<f64>>,
+    pub metrics: PathMetrics,
+}
+
+impl PathFit {
+    /// Number of active variables at the final path point.
+    pub fn active_vars_last(&self) -> usize {
+        self.betas.last().map(|b| b.iter().filter(|&&x| x != 0.0).count()).unwrap_or(0)
+    }
+
+    /// Mean ℓ₂ distance of coefficients to another fit (per path point) —
+    /// the paper's "ℓ₂ distance to no screen" solution-quality metric.
+    pub fn l2_distance_to(&self, other: &PathFit) -> f64 {
+        assert_eq!(self.betas.len(), other.betas.len());
+        let mut s = 0.0;
+        for (a, b) in self.betas.iter().zip(&other.betas) {
+            s += crate::linalg::l2_distance(a, b);
+        }
+        s / self.betas.len() as f64
+    }
+}
+
+/// Builder/driver for a pathwise fit of one rule on one dataset.
+pub struct PathRunner<'a> {
+    dataset: &'a Dataset,
+    cfg: PathConfig,
+    rule: RuleKind,
+    engine: &'a dyn Engine,
+    /// Optional externally-fixed λ path (for CV where folds share λs).
+    fixed_path: Option<Vec<f64>>,
+    /// Precomputed adaptive weights (so repeats/folds can share them).
+    weights: Option<AdaptiveWeights>,
+}
+
+static NATIVE: NativeEngine = NativeEngine;
+
+impl<'a> PathRunner<'a> {
+    pub fn new(dataset: &'a Dataset, cfg: PathConfig) -> Self {
+        PathRunner {
+            dataset,
+            cfg,
+            rule: RuleKind::DfrSgl,
+            engine: &NATIVE,
+            fixed_path: None,
+            weights: None,
+        }
+    }
+
+    pub fn rule(mut self, rule: RuleKind) -> Self {
+        self.rule = rule;
+        self
+    }
+
+    pub fn engine(mut self, engine: &'a dyn Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn fixed_path(mut self, lambdas: Vec<f64>) -> Self {
+        self.fixed_path = Some(lambdas);
+        self
+    }
+
+    pub fn weights(mut self, w: AdaptiveWeights) -> Self {
+        self.weights = Some(w);
+        self
+    }
+
+    /// Build the penalty this run will use (aSGL iff the config or rule
+    /// demands it).
+    pub fn build_penalty(&self) -> Penalty {
+        let groups = self.dataset.groups.clone();
+        let adaptive = self.cfg.adaptive.is_some() || self.rule == RuleKind::DfrAsgl;
+        if adaptive {
+            let (g1, g2) = self.cfg.adaptive.unwrap_or((0.1, 0.1));
+            let aw = self
+                .weights
+                .clone()
+                .unwrap_or_else(|| AdaptiveWeights::from_design(&self.dataset.x, &groups, g1, g2));
+            Penalty::asgl(groups, self.cfg.alpha, aw.v, aw.w)
+        } else {
+            Penalty::sgl(groups, self.cfg.alpha)
+        }
+    }
+
+    /// Run the pathwise fit.
+    pub fn run(&self) -> anyhow::Result<PathFit> {
+        let ds = self.dataset;
+        let pen = self.build_penalty();
+        let kind = LossKind::for_response(ds.response);
+        let loss = Loss::new(kind, &ds.x, &ds.y);
+        let p = ds.p();
+        let m = ds.m();
+
+        let start_total = Instant::now();
+        let grad0 = self.engine.full_gradient(&loss, &vec![0.0; p]);
+        let lambdas = match &self.fixed_path {
+            Some(l) => l.clone(),
+            None => {
+                let lam1 = lambda_max(&pen, &grad0);
+                log_linear_path(lam1, self.cfg.path_len, self.cfg.path_end_ratio)
+            }
+        };
+        let l = lambdas.len();
+
+        let mut betas: Vec<Vec<f64>> = Vec::with_capacity(l);
+        let mut metrics = PathMetrics { p, m, ..Default::default() };
+
+        // β̂(λ₁): λ₁ generates the null model by construction.
+        let t0 = Instant::now();
+        betas.push(vec![0.0; p]);
+        metrics.points.push(PointMetrics {
+            lambda: lambdas[0],
+            converged: true,
+            fit_seconds: t0.elapsed().as_secs_f64(),
+            ..Default::default()
+        });
+
+        let mut grad_prev = grad0;
+        for k in 0..l - 1 {
+            let t_point = Instant::now();
+            let lam_prev = lambdas[k];
+            let lam_next = lambdas[k + 1];
+            let beta_prev = &betas[k];
+            let active_prev = screen::active_vars(beta_prev);
+
+            // --- Screening ---
+            let ctx = ScreenContext {
+                penalty: &pen,
+                grad_prev: &grad_prev,
+                beta_prev,
+                lambda_prev: lam_prev,
+                lambda_next: lam_next,
+                x: &ds.x,
+                y: &ds.y,
+                response: ds.response,
+            };
+            let cands = screen::screen(self.rule, &ctx);
+            let c_v = cands.vars.len();
+            let c_g = cands.groups.len();
+
+            // Optimization set = candidates ∪ previously active.
+            let mut o_v = screen::union_sorted(&cands.vars, &active_prev);
+            if o_v.is_empty() {
+                // Null model survives this step — nothing to solve.
+                betas.push(vec![0.0; p]);
+                grad_prev = self.engine.full_gradient(&loss, betas.last().unwrap());
+                metrics.points.push(PointMetrics {
+                    lambda: lam_next,
+                    c_v,
+                    c_g,
+                    converged: true,
+                    fit_seconds: t_point.elapsed().as_secs_f64(),
+                    ..Default::default()
+                });
+                continue;
+            }
+
+            // --- Solve + KKT loop ---
+            let mut kkt_violations = 0usize;
+            let mut solver_iterations = 0usize;
+            let mut converged;
+            let mut beta_next;
+            let mut grad_next;
+            let mut rounds = 0usize;
+            loop {
+                rounds += 1;
+                let (res, beta_full) = self.solve_on(&pen, kind, &loss, &o_v, beta_prev, lam_next);
+                solver_iterations += res.iterations;
+                converged = res.converged;
+                grad_next = self.engine.full_gradient(&loss, &beta_full);
+                beta_next = beta_full;
+
+                if !self.rule.needs_kkt() || rounds > self.cfg.max_kkt_rounds {
+                    break;
+                }
+                let viol = self.kkt_check(&pen, &grad_next, &beta_next, lam_next, &o_v);
+                if viol.is_empty() {
+                    break;
+                }
+                kkt_violations += viol.len();
+                o_v = screen::union_sorted(&o_v, &viol);
+            }
+
+            // Dynamic GAP safe: attempt a post-hoc shrink + resolve cycle
+            // emulating every-10-iteration re-screens (exactness means the
+            // final answer is unchanged; the win is solver time on smaller
+            // designs, measured in fit_seconds).
+            if self.rule == RuleKind::GapSafeDyn {
+                let dyn_c = crate::screen::gap_safe::screen_dynamic(
+                    &pen, &ds.x, &ds.y, &beta_next, lam_next,
+                );
+                let keep = screen::union_sorted(&dyn_c.vars, &screen::active_vars(&beta_next));
+                if keep.len() < o_v.len() {
+                    let (res, beta_full) =
+                        self.solve_on(&pen, kind, &loss, &keep, &beta_next, lam_next);
+                    solver_iterations += res.iterations;
+                    converged = res.converged;
+                    beta_next = beta_full;
+                    grad_next = self.engine.full_gradient(&loss, &beta_next);
+                    o_v = keep;
+                }
+            }
+
+            let a_v = screen::active_vars(&beta_next).len();
+            let a_g = screen::active_groups(&beta_next, &pen.groups).len();
+            let o_g = {
+                let mut gs: Vec<usize> =
+                    o_v.iter().map(|&i| pen.groups.group_of(i)).collect();
+                gs.dedup();
+                gs.len()
+            };
+            metrics.points.push(PointMetrics {
+                lambda: lam_next,
+                a_v,
+                a_g,
+                c_v,
+                c_g,
+                o_v: o_v.len(),
+                o_g,
+                kkt_violations,
+                solver_iterations,
+                converged,
+                fit_seconds: t_point.elapsed().as_secs_f64(),
+            });
+            betas.push(beta_next);
+            grad_prev = grad_next;
+        }
+
+        metrics.total_seconds = start_total.elapsed().as_secs_f64();
+        Ok(PathFit { rule: self.rule, lambdas, betas, metrics })
+    }
+
+    /// Solve restricted to `o_v`, scatter back to full length.
+    fn solve_on(
+        &self,
+        pen: &Penalty,
+        kind: LossKind,
+        loss: &Loss,
+        o_v: &[usize],
+        warm_full: &[f64],
+        lam: f64,
+    ) -> (SolveResult, Vec<f64>) {
+        let p = loss.x.ncols();
+        if o_v.len() == p {
+            // Full problem — skip the gather.
+            let res = crate::solver::solve(loss, pen, lam, warm_full, &self.cfg.solver);
+            let beta = res.beta.clone();
+            return (res, beta);
+        }
+        let x_red = loss.x.gather_columns(o_v);
+        let rpen = pen.restrict(o_v);
+        let warm: Vec<f64> = o_v.iter().map(|&i| warm_full[i]).collect();
+        let res = self
+            .engine
+            .solve_reduced(kind, &x_red, loss.y, &rpen, lam, &warm, &self.cfg.solver);
+        let mut beta_full = vec![0.0; p];
+        for (k, &i) in o_v.iter().enumerate() {
+            beta_full[i] = res.beta[k];
+        }
+        (res, beta_full)
+    }
+
+    /// Rule-appropriate KKT check over the complement of the optimization
+    /// set; returns violating variables (sorted).
+    fn kkt_check(
+        &self,
+        pen: &Penalty,
+        grad_new: &[f64],
+        beta_new: &[f64],
+        lam: f64,
+        o_v: &[usize],
+    ) -> Vec<usize> {
+        let p = pen.groups.p();
+        let in_ov = {
+            let mut mask = vec![false; p];
+            for &i in o_v {
+                mask[i] = true;
+            }
+            mask
+        };
+        match self.rule {
+            RuleKind::Sparsegl => {
+                // Group-level: excluded groups are those with NO variable in O_v.
+                let mut group_in = vec![false; pen.groups.m()];
+                for &i in o_v {
+                    group_in[pen.groups.group_of(i)] = true;
+                }
+                let (vars, _count) = crate::screen::kkt::group_violations(
+                    pen,
+                    grad_new,
+                    lam,
+                    (0..pen.groups.m()).filter(|&g| !group_in[g]),
+                );
+                vars
+            }
+            _ => crate::screen::kkt::variable_violations(
+                pen,
+                grad_new,
+                beta_new,
+                lam,
+                (0..p).filter(|&i| !in_ov[i]),
+            ),
+        }
+    }
+}
+
+/// Convenience: run both a screened and a no-screen fit and report the
+/// improvement factor plus the ℓ₂ distance between solutions (the paper's
+/// headline comparison for one dataset/rule pair).
+pub struct Comparison {
+    pub screened: PathFit,
+    pub no_screen: PathFit,
+    pub improvement_factor: f64,
+    pub l2_distance: f64,
+}
+
+pub fn compare_with_no_screen(
+    dataset: &Dataset,
+    cfg: &PathConfig,
+    rule: RuleKind,
+) -> anyhow::Result<Comparison> {
+    let no_screen = PathRunner::new(dataset, cfg.clone()).rule(RuleKind::NoScreen).run()?;
+    let screened = PathRunner::new(dataset, cfg.clone())
+        .rule(rule)
+        .fixed_path(no_screen.lambdas.clone())
+        .run()?;
+    let improvement_factor = crate::metrics::improvement_factor(
+        no_screen.metrics.total_seconds,
+        screened.metrics.total_seconds,
+    );
+    let l2_distance = screened.l2_distance_to(&no_screen);
+    Ok(Comparison { screened, no_screen, improvement_factor, l2_distance })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+
+    fn small_data() -> crate::data::GeneratedData {
+        SyntheticConfig {
+            n: 60,
+            p: 80,
+            groups: crate::data::synthetic::GroupSpec::Even(8),
+            ..SyntheticConfig::default()
+        }
+        .generate(5)
+    }
+
+    fn cfg() -> PathConfig {
+        // Tight solver tolerance so solution-equality checks measure
+        // screening correctness rather than optimizer noise.
+        PathConfig {
+            path_len: 12,
+            solver: crate::solver::SolverConfig {
+                tol: 1e-9,
+                max_iters: 50_000,
+                ..Default::default()
+            },
+            ..PathConfig::default()
+        }
+    }
+
+    #[test]
+    fn dfr_matches_no_screen_solutions() {
+        let gd = small_data();
+        let c = compare_with_no_screen(&gd.dataset, &cfg(), RuleKind::DfrSgl).unwrap();
+        assert!(
+            c.l2_distance < 1e-3,
+            "screened solutions drifted: ℓ₂ = {}",
+            c.l2_distance
+        );
+        // Screening must have actually reduced the input.
+        assert!(
+            c.screened.metrics.input_proportion() < 0.9,
+            "input proportion {}",
+            c.screened.metrics.input_proportion()
+        );
+    }
+
+    #[test]
+    fn sparsegl_and_gap_safe_match_no_screen() {
+        let gd = small_data();
+        for rule in [RuleKind::Sparsegl, RuleKind::GapSafeSeq, RuleKind::GapSafeDyn] {
+            let c = compare_with_no_screen(&gd.dataset, &cfg(), rule).unwrap();
+            assert!(
+                c.l2_distance < 1e-3,
+                "{}: ℓ₂ distance {}",
+                rule.name(),
+                c.l2_distance
+            );
+        }
+    }
+
+    #[test]
+    fn asgl_path_runs_and_screens() {
+        let gd = small_data();
+        let cfg = PathConfig { adaptive: Some((0.1, 0.1)), ..cfg() };
+        let c = compare_with_no_screen(&gd.dataset, &cfg, RuleKind::DfrAsgl).unwrap();
+        assert!(c.l2_distance < 1e-3, "aSGL drift {}", c.l2_distance);
+    }
+
+    #[test]
+    fn candidate_sets_nest_dfr_within_sparsegl_groups() {
+        // sparsegl keeps whole groups; DFR's optimization set should not be
+        // larger on average (Table A3's headline contrast).
+        let gd = small_data();
+        let dfr = PathRunner::new(&gd.dataset, cfg()).rule(RuleKind::DfrSgl).run().unwrap();
+        let spg = PathRunner::new(&gd.dataset, cfg())
+            .rule(RuleKind::Sparsegl)
+            .fixed_path(dfr.lambdas.clone())
+            .run()
+            .unwrap();
+        assert!(
+            dfr.metrics.input_proportion() <= spg.metrics.input_proportion() + 1e-9,
+            "DFR {} vs sparsegl {}",
+            dfr.metrics.input_proportion(),
+            spg.metrics.input_proportion()
+        );
+    }
+
+    #[test]
+    fn logistic_path_runs() {
+        let gd = SyntheticConfig {
+            n: 80,
+            p: 40,
+            groups: crate::data::synthetic::GroupSpec::Even(8),
+            response: crate::data::Response::Logistic,
+            ..SyntheticConfig::default()
+        }
+        .generate(6);
+        let fit = PathRunner::new(&gd.dataset, cfg()).rule(RuleKind::DfrSgl).run().unwrap();
+        assert_eq!(fit.betas.len(), 12);
+        assert_eq!(fit.metrics.failed_convergences(), 0);
+    }
+
+    #[test]
+    fn first_path_point_is_null_model() {
+        let gd = small_data();
+        let fit = PathRunner::new(&gd.dataset, cfg()).rule(RuleKind::DfrSgl).run().unwrap();
+        assert!(fit.betas[0].iter().all(|&b| b == 0.0));
+        // And something eventually activates along the path.
+        assert!(fit.active_vars_last() > 0);
+    }
+}

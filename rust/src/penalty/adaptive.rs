@@ -1,0 +1,181 @@
+//! Adaptive weights for aSGL (Appendix B.3).
+//!
+//! Following Mendez-Civieta et al. (2021), the weights are derived from the
+//! first principal component of `X`:
+//!
+//! ```text
+//!     vᵢ = 1 / |q₁ᵢ|^γ₁ ,      w_g = 1 / ‖q₁^(g)‖₂^γ₂ ,
+//! ```
+//!
+//! where `q₁` is the first PCA *loading* vector (the leading right singular
+//! vector of the column-centered design). We compute it by power iteration
+//! on `XᵀX` — no LAPACK is available offline, and the leading eigenvector
+//! is all that is needed. Weights are capped to avoid infinities on exactly
+//! zero loadings.
+
+use crate::groups::Groups;
+use crate::linalg::{norm2, Matrix};
+
+/// Cap applied to both weight families; matches the common practice of
+/// guarding adaptive lasso weights against zero pilot coefficients.
+pub const WEIGHT_CAP: f64 = 1e6;
+
+/// The adaptive weight pair (v, w) of aSGL.
+#[derive(Clone, Debug)]
+pub struct AdaptiveWeights {
+    pub v: Vec<f64>,
+    pub w: Vec<f64>,
+    pub gamma1: f64,
+    pub gamma2: f64,
+}
+
+impl AdaptiveWeights {
+    /// Compute weights from the design via its first PCA loading.
+    ///
+    /// `X` is centered internally (PCA convention) but not modified.
+    pub fn from_design(x: &Matrix, groups: &Groups, gamma1: f64, gamma2: f64) -> Self {
+        let q1 = first_pc_loading(x, 100, 0xADA97);
+        let v: Vec<f64> = q1
+            .iter()
+            .map(|&q| (1.0 / q.abs().max(1e-12).powf(gamma1)).min(WEIGHT_CAP))
+            .collect();
+        let w: Vec<f64> = (0..groups.m())
+            .map(|g| {
+                let nrm = norm2(groups.slice(&q1, g));
+                (1.0 / nrm.max(1e-12).powf(gamma2)).min(WEIGHT_CAP)
+            })
+            .collect();
+        AdaptiveWeights { v, w, gamma1, gamma2 }
+    }
+
+    /// Unit weights (reduces aSGL to SGL); useful in tests/ablations.
+    pub fn unit(p: usize, m: usize) -> Self {
+        AdaptiveWeights { v: vec![1.0; p], w: vec![1.0; m], gamma1: 0.0, gamma2: 0.0 }
+    }
+}
+
+/// Leading right singular vector of the column-centered design, by power
+/// iteration on `X_cᵀX_c`. Deterministic (seeded start), normalized, with a
+/// sign convention (largest-magnitude entry positive) so results are
+/// reproducible across runs.
+pub fn first_pc_loading(x: &Matrix, iters: usize, seed: u64) -> Vec<f64> {
+    let n = x.nrows();
+    let p = x.ncols();
+    let col_means: Vec<f64> = (0..p)
+        .map(|j| x.col(j).iter().sum::<f64>() / n as f64)
+        .collect();
+    let mut rng = crate::rng::Rng::new(seed);
+    let mut v: Vec<f64> = rng.gauss_vec(p);
+    let nv = norm2(&v).max(1e-300);
+    v.iter_mut().for_each(|a| *a /= nv);
+
+    let mut xb = vec![0.0; n];
+    for _ in 0..iters {
+        // xb = X_c v = X v − (meanᵀv)·1
+        x.matvec_into(&v, &mut xb);
+        let shift: f64 = col_means.iter().zip(&v).map(|(m, vi)| m * vi).sum();
+        xb.iter_mut().for_each(|a| *a -= shift);
+        // w = X_cᵀ xb = Xᵀ xb − mean·Σxb
+        let sum_xb: f64 = xb.iter().sum();
+        let mut w = x.t_matvec(&xb);
+        for j in 0..p {
+            w[j] -= col_means[j] * sum_xb;
+        }
+        let nw = norm2(&w);
+        if nw <= 1e-300 {
+            break;
+        }
+        w.iter_mut().for_each(|a| *a /= nw);
+        v = w;
+    }
+    // Sign convention.
+    let (mut best_i, mut best_a) = (0, 0.0f64);
+    for (i, &a) in v.iter().enumerate() {
+        if a.abs() > best_a {
+            best_a = a.abs();
+            best_i = i;
+        }
+    }
+    if v[best_i] < 0.0 {
+        v.iter_mut().for_each(|a| *a = -*a);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn pc_loading_recovers_dominant_direction() {
+        // X rows = t·u + small noise for a fixed unit u → loading ≈ u.
+        let mut rng = Rng::new(11);
+        let p = 6;
+        let u = {
+            let mut u: Vec<f64> = rng.gauss_vec(p);
+            let n = norm2(&u);
+            u.iter_mut().for_each(|a| *a /= n);
+            u
+        };
+        let x = Matrix::from_fn(300, p, |i, j| {
+            let _ = i;
+            0.0 * j as f64
+        });
+        let mut x = x;
+        for i in 0..300 {
+            let t = rng.normal(0.0, 3.0);
+            for j in 0..p {
+                x.set(i, j, t * u[j] + rng.normal(0.0, 0.05));
+            }
+        }
+        let q = first_pc_loading(&x, 200, 1);
+        let cos: f64 = q.iter().zip(&u).map(|(a, b)| a * b).sum::<f64>().abs();
+        assert!(cos > 0.99, "cosine {cos}");
+    }
+
+    #[test]
+    fn loading_is_unit_norm() {
+        let mut rng = Rng::new(12);
+        let x = Matrix::from_fn(40, 9, |_, _| rng.gauss());
+        let q = first_pc_loading(&x, 100, 2);
+        assert!((norm2(&q) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weights_positive_and_capped() {
+        let mut rng = Rng::new(13);
+        let x = Matrix::from_fn(30, 12, |_, _| rng.gauss());
+        let g = Groups::from_sizes(&[4, 4, 4]);
+        let aw = AdaptiveWeights::from_design(&x, &g, 0.1, 0.1);
+        assert_eq!(aw.v.len(), 12);
+        assert_eq!(aw.w.len(), 3);
+        assert!(aw.v.iter().all(|&v| v > 0.0 && v <= WEIGHT_CAP));
+        assert!(aw.w.iter().all(|&w| w > 0.0 && w <= WEIGHT_CAP));
+    }
+
+    #[test]
+    fn gamma_zero_gives_unit_weights() {
+        let mut rng = Rng::new(14);
+        let x = Matrix::from_fn(30, 8, |_, _| rng.gauss());
+        let g = Groups::from_sizes(&[4, 4]);
+        let aw = AdaptiveWeights::from_design(&x, &g, 0.0, 0.0);
+        assert!(aw.v.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+        assert!(aw.w.iter().all(|&w| (w - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn larger_gamma_spreads_weights() {
+        let mut rng = Rng::new(15);
+        let x = Matrix::from_fn(50, 10, |_, _| rng.gauss());
+        let g = Groups::from_sizes(&[5, 5]);
+        let a_small = AdaptiveWeights::from_design(&x, &g, 0.1, 0.1);
+        let a_big = AdaptiveWeights::from_design(&x, &g, 2.0, 2.0);
+        let spread = |v: &[f64]| {
+            let mx = v.iter().cloned().fold(f64::MIN, f64::max);
+            let mn = v.iter().cloned().fold(f64::MAX, f64::min);
+            mx / mn
+        };
+        assert!(spread(&a_big.v) > spread(&a_small.v));
+    }
+}

@@ -1,0 +1,337 @@
+//! SGL / aSGL penalties, their exact proximal operator, and the PCA-based
+//! adaptive weights of Mendez-Civieta et al. (Appendix B.3).
+//!
+//! Both penalties are represented in one weighted form
+//!
+//! ```text
+//!     Ω(β) = α Σᵢ vᵢ|βᵢ| + (1−α) Σ_g w_g √p_g ‖β^(g)‖₂ ,
+//! ```
+//!
+//! with `v ≡ 1, w ≡ 1` recovering plain SGL. The prox of `t·λ·Ω` is exact
+//! and separable per group: soft-threshold each coordinate at `tλαvᵢ`, then
+//! group-shrink by `(1 − tλ(1−α)w_g√p_g/‖u_g‖₂)₊` (Simon et al. 2013).
+
+pub mod adaptive;
+
+pub use adaptive::AdaptiveWeights;
+
+use crate::groups::Groups;
+use crate::norms::soft_threshold;
+
+/// A sparse-group penalty bound to a grouping structure.
+#[derive(Clone, Debug)]
+pub struct Penalty {
+    pub alpha: f64,
+    /// Per-variable ℓ1 weights `vᵢ` (all 1 for SGL).
+    pub v: Vec<f64>,
+    /// Per-group ℓ2 weights `w_g` (all 1 for SGL).
+    pub w: Vec<f64>,
+    pub groups: Groups,
+}
+
+impl Penalty {
+    /// Plain SGL with mixing parameter `alpha`.
+    pub fn sgl(groups: Groups, alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        let p = groups.p();
+        let m = groups.m();
+        Penalty { alpha, v: vec![1.0; p], w: vec![1.0; m], groups }
+    }
+
+    /// Adaptive SGL with explicit weights.
+    pub fn asgl(groups: Groups, alpha: f64, v: Vec<f64>, w: Vec<f64>) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        assert_eq!(v.len(), groups.p());
+        assert_eq!(w.len(), groups.m());
+        Penalty { alpha, v, w, groups }
+    }
+
+    /// Is this the adaptive variant (non-unit weights)?
+    pub fn is_adaptive(&self) -> bool {
+        self.v.iter().any(|&x| x != 1.0) || self.w.iter().any(|&x| x != 1.0)
+    }
+
+    /// Penalty value `Ω(β)` (without λ).
+    pub fn value(&self, beta: &[f64]) -> f64 {
+        crate::norms::asgl_norm(beta, &self.groups, self.alpha, &self.v, &self.w)
+    }
+
+    /// Exact prox: `argmin_b ½‖b − z‖² + t·λ·Ω(b)`, written into `out`.
+    pub fn prox_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        debug_assert_eq!(z.len(), self.groups.p());
+        debug_assert_eq!(out.len(), z.len());
+        let a = self.alpha;
+        for (g, r) in self.groups.iter() {
+            let p_g = (self.groups.size(g) as f64).sqrt();
+            let gthresh = t_lambda * (1.0 - a) * self.w[g] * p_g;
+            let range = r.clone();
+            // Stage 1: soft threshold.
+            let mut norm_sq = 0.0;
+            for i in range.clone() {
+                let u = soft_threshold(z[i], t_lambda * a * self.v[i]);
+                out[i] = u;
+                norm_sq += u * u;
+            }
+            // Stage 2: group shrinkage.
+            let nrm = norm_sq.sqrt();
+            if nrm <= gthresh {
+                for i in range {
+                    out[i] = 0.0;
+                }
+            } else {
+                let scale = 1.0 - gthresh / nrm;
+                for i in range {
+                    out[i] *= scale;
+                }
+            }
+        }
+    }
+
+    /// Allocating prox wrapper.
+    pub fn prox(&self, z: &[f64], t_lambda: f64) -> Vec<f64> {
+        let mut out = vec![0.0; z.len()];
+        self.prox_into(z, t_lambda, &mut out);
+        out
+    }
+
+    /// Prox of only the ℓ1 part (`t·λ·α Σ vᵢ|·|`) — one of the two simple
+    /// operators that ATOS splits the penalty into.
+    pub fn prox_l1_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        for i in 0..z.len() {
+            out[i] = soft_threshold(z[i], t_lambda * self.alpha * self.v[i]);
+        }
+    }
+
+    /// Prox of only the group-ℓ2 part (`t·λ·(1−α) Σ w_g√p_g‖·‖₂`).
+    pub fn prox_group_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        for (g, r) in self.groups.iter() {
+            let p_g = (self.groups.size(g) as f64).sqrt();
+            let gthresh = t_lambda * (1.0 - self.alpha) * self.w[g] * p_g;
+            let zb = &z[r.clone()];
+            let nrm = zb.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if nrm <= gthresh {
+                for i in r {
+                    out[i] = 0.0;
+                }
+            } else {
+                let scale = 1.0 - gthresh / nrm;
+                for i in r {
+                    out[i] = z[i] * scale;
+                }
+            }
+        }
+    }
+
+    /// Restrict the penalty to a sorted variable subset (the optimization
+    /// set), keeping each variable's weight and its *original* group weight
+    /// and √p_g (the penalty does not change because screening removed
+    /// variables — group thresholds must stay those of the full problem).
+    pub fn restrict(&self, vars: &[usize]) -> RestrictedPenalty {
+        let (rgroups, orig) = self.groups.restrict(vars);
+        let v: Vec<f64> = vars.iter().map(|&i| self.v[i]).collect();
+        let w: Vec<f64> = orig.iter().map(|&g| self.w[g]).collect();
+        let sqrt_pg: Vec<f64> = orig.iter().map(|&g| (self.groups.size(g) as f64).sqrt()).collect();
+        RestrictedPenalty { alpha: self.alpha, v, w, sqrt_pg, groups: rgroups }
+    }
+}
+
+/// A penalty restricted to the optimization set: group ℓ2 thresholds use
+/// the ORIGINAL `√p_g` (the norm of the discarded coordinates is zero, so
+/// the objective restricted to the candidate set keeps the original group
+/// constants — this is what makes screening solve the same problem).
+#[derive(Clone, Debug)]
+pub struct RestrictedPenalty {
+    pub alpha: f64,
+    pub v: Vec<f64>,
+    pub w: Vec<f64>,
+    /// Original √p_g per restricted group.
+    pub sqrt_pg: Vec<f64>,
+    pub groups: Groups,
+}
+
+impl RestrictedPenalty {
+    /// Penalty value on the reduced coordinates.
+    pub fn value(&self, beta: &[f64]) -> f64 {
+        let a = self.alpha;
+        let l1: f64 = beta.iter().zip(&self.v).map(|(b, vi)| vi * b.abs()).sum();
+        let mut gl = 0.0;
+        for (g, r) in self.groups.iter() {
+            let nrm = beta[r].iter().map(|x| x * x).sum::<f64>().sqrt();
+            gl += self.w[g] * self.sqrt_pg[g] * nrm;
+        }
+        a * l1 + (1.0 - a) * gl
+    }
+
+    /// Exact prox on the reduced coordinates.
+    pub fn prox_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        let a = self.alpha;
+        for (g, r) in self.groups.iter() {
+            let gthresh = t_lambda * (1.0 - a) * self.w[g] * self.sqrt_pg[g];
+            let mut norm_sq = 0.0;
+            for i in r.clone() {
+                let u = soft_threshold(z[i], t_lambda * a * self.v[i]);
+                out[i] = u;
+                norm_sq += u * u;
+            }
+            let nrm = norm_sq.sqrt();
+            if nrm <= gthresh {
+                for i in r {
+                    out[i] = 0.0;
+                }
+            } else {
+                let scale = 1.0 - gthresh / nrm;
+                for i in r {
+                    out[i] *= scale;
+                }
+            }
+        }
+    }
+
+    pub fn prox_l1_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        for i in 0..z.len() {
+            out[i] = soft_threshold(z[i], t_lambda * self.alpha * self.v[i]);
+        }
+    }
+
+    pub fn prox_group_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        for (g, r) in self.groups.iter() {
+            let gthresh = t_lambda * (1.0 - self.alpha) * self.w[g] * self.sqrt_pg[g];
+            let nrm = z[r.clone()].iter().map(|v| v * v).sum::<f64>().sqrt();
+            if nrm <= gthresh {
+                for i in r {
+                    out[i] = 0.0;
+                }
+            } else {
+                let scale = 1.0 - gthresh / nrm;
+                for i in r {
+                    out[i] = z[i] * scale;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn penalty() -> Penalty {
+        Penalty::sgl(Groups::from_sizes(&[3, 2, 4]), 0.95)
+    }
+
+    /// Check the prox optimality condition by sampling: the prox point must
+    /// attain a lower value of `½‖b−z‖² + tλΩ(b)` than perturbations.
+    #[test]
+    fn prox_minimizes_objective() {
+        let pen = penalty();
+        let mut rng = Rng::new(1);
+        let z: Vec<f64> = rng.gauss_vec(9);
+        let tl = 0.4;
+        let b = pen.prox(&z, tl);
+        let obj = |bb: &[f64]| {
+            0.5 * bb.iter().zip(&z).map(|(a, c)| (a - c) * (a - c)).sum::<f64>()
+                + tl * pen.value(bb)
+        };
+        let base = obj(&b);
+        for _ in 0..300 {
+            let pert: Vec<f64> = b
+                .iter()
+                .map(|v| v + 0.05 * rng.gauss())
+                .collect();
+            assert!(obj(&pert) >= base - 1e-9, "prox not a minimizer");
+        }
+    }
+
+    #[test]
+    fn prox_alpha1_is_soft_threshold() {
+        let pen = Penalty::sgl(Groups::from_sizes(&[2, 2]), 1.0);
+        let z = [2.0, -0.5, 1.5, 0.2];
+        let b = pen.prox(&z, 1.0);
+        assert_eq!(b, vec![1.0, 0.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn prox_alpha0_is_group_shrink() {
+        let pen = Penalty::sgl(Groups::from_sizes(&[2]), 0.0);
+        let z = [3.0, 4.0]; // norm 5, √p_g = √2
+        let tl = 1.0;
+        let thresh = (2.0f64).sqrt();
+        let scale = 1.0 - thresh / 5.0;
+        let b = pen.prox(&z, tl);
+        assert!((b[0] - 3.0 * scale).abs() < 1e-12);
+        assert!((b[1] - 4.0 * scale).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prox_kills_small_groups_entirely() {
+        let pen = Penalty::sgl(Groups::from_sizes(&[3]), 0.5);
+        let z = [0.1, -0.05, 0.08];
+        let b = pen.prox(&z, 1.0);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prox_is_nonexpansive() {
+        let pen = penalty();
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let z1: Vec<f64> = rng.gauss_vec(9);
+            let z2: Vec<f64> = rng.gauss_vec(9);
+            let p1 = pen.prox(&z1, 0.3);
+            let p2 = pen.prox(&z2, 0.3);
+            let dp = crate::linalg::l2_distance(&p1, &p2);
+            let dz = crate::linalg::l2_distance(&z1, &z2);
+            assert!(dp <= dz + 1e-12, "prox expanded: {dp} > {dz}");
+        }
+    }
+
+    #[test]
+    fn restricted_prox_matches_full_prox_on_zero_complement() {
+        // If z is zero outside the kept set, the full prox restricted to the
+        // kept set equals the restricted prox of the kept z.
+        let pen = penalty();
+        let keep = vec![0usize, 2, 4, 5, 8];
+        let mut rng = Rng::new(3);
+        let mut z = vec![0.0; 9];
+        for &i in &keep {
+            z[i] = rng.gauss();
+        }
+        let full = pen.prox(&z, 0.25);
+        let rpen = pen.restrict(&keep);
+        let zr: Vec<f64> = keep.iter().map(|&i| z[i]).collect();
+        let mut out = vec![0.0; keep.len()];
+        rpen.prox_into(&zr, 0.25, &mut out);
+        for (k, &i) in keep.iter().enumerate() {
+            assert!((full[i] - out[k]).abs() < 1e-12, "mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn adaptive_prox_uses_weights() {
+        let groups = Groups::from_sizes(&[2]);
+        let pen = Penalty::asgl(groups, 1.0, vec![1.0, 10.0], vec![1.0]);
+        let z = [2.0, 2.0];
+        let b = pen.prox(&z, 0.5);
+        assert!((b[0] - 1.5).abs() < 1e-12);
+        assert_eq!(b[1], 0.0); // threshold 5 kills it
+    }
+
+    #[test]
+    fn split_proxes_compose_to_full_prox() {
+        // For l1-then-group composition (valid for this penalty family):
+        // prox_full(z) == prox_group(prox_l1(z)).
+        let pen = penalty();
+        let mut rng = Rng::new(4);
+        let z: Vec<f64> = rng.gauss_vec(9);
+        let tl = 0.37;
+        let mut u = vec![0.0; 9];
+        pen.prox_l1_into(&z, tl, &mut u);
+        let mut composed = vec![0.0; 9];
+        pen.prox_group_into(&u, tl, &mut composed);
+        let full = pen.prox(&z, tl);
+        for (a, b) in composed.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

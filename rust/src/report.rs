@@ -1,0 +1,148 @@
+//! Report writers: paper-style tables, per-path CSV series (for the
+//! figure benches), and a minimal JSON emitter for machine-readable
+//! experiment records (no `serde` offline).
+
+use crate::metrics::PathMetrics;
+
+/// Render per-path-point metrics as CSV (one row per λ) — the series behind
+//  Figure 5 / A13-style plots.
+pub fn path_metrics_csv(m: &PathMetrics) -> String {
+    let mut s = String::from(
+        "lambda,a_v,a_g,c_v,c_g,o_v,o_g,kkt_violations,iterations,converged,fit_seconds,input_proportion\n",
+    );
+    for pt in &m.points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            pt.lambda,
+            pt.a_v,
+            pt.a_g,
+            pt.c_v,
+            pt.c_g,
+            pt.o_v,
+            pt.o_g,
+            pt.kkt_violations,
+            pt.solver_iterations,
+            pt.converged,
+            pt.fit_seconds,
+            pt.o_v as f64 / m.p.max(1) as f64,
+        ));
+    }
+    s
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_file(path: &str, content: &str) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, content)
+}
+
+/// Minimal JSON value builder (strings, numbers, bools, arrays, objects) —
+/// enough for experiment records without a serde dependency.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            Json::Null => "null".into(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    format!("{x}")
+                } else {
+                    "null".into()
+                }
+            }
+            Json::Str(s) => format!("\"{}\"", escape(s)),
+            Json::Arr(xs) => {
+                let inner: Vec<String> = xs.iter().map(|x| x.render()).collect();
+                format!("[{}]", inner.join(","))
+            }
+            Json::Obj(kv) => {
+                let inner: Vec<String> =
+                    kv.iter().map(|(k, v)| format!("\"{}\":{}", escape(k), v.render())).collect();
+                format!("{{{}}}", inner.join(","))
+            }
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' => vec!['\\', 'n'],
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Summary record for one (dataset, rule) run — what the CLI prints and
+/// the benches append to their JSON log.
+pub fn run_record(
+    dataset: &str,
+    rule: &str,
+    m: &PathMetrics,
+    improvement_factor: Option<f64>,
+    l2_distance: Option<f64>,
+) -> Json {
+    Json::obj(vec![
+        ("dataset", Json::Str(dataset.into())),
+        ("rule", Json::Str(rule.into())),
+        ("total_seconds", Json::Num(m.total_seconds)),
+        ("input_proportion", Json::Num(m.input_proportion())),
+        ("group_input_proportion", Json::Num(m.group_input_proportion())),
+        ("kkt_violations", Json::Num(m.total_kkt_violations() as f64)),
+        ("failed_convergences", Json::Num(m.failed_convergences() as f64)),
+        ("mean_iterations", Json::Num(m.mean_iterations())),
+        (
+            "improvement_factor",
+            improvement_factor.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("l2_distance", l2_distance.map(Json::Num).unwrap_or(Json::Null)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::PointMetrics;
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = PathMetrics { p: 10, m: 2, ..Default::default() };
+        m.points.push(PointMetrics { lambda: 0.5, o_v: 5, ..Default::default() });
+        let csv = path_metrics_csv(&m);
+        assert!(csv.starts_with("lambda,"));
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("0.5"));
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let j = Json::obj(vec![
+            ("name", Json::Str("a\"b".into())),
+            ("v", Json::Arr(vec![Json::Num(1.0), Json::Bool(true), Json::Null])),
+        ]);
+        assert_eq!(j.render(), "{\"name\":\"a\\\"b\",\"v\":[1,true,null]}");
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+}

@@ -1,0 +1,260 @@
+//! Dual Feature Reduction — the paper's bi-level strong screening rule.
+//!
+//! **Group layer** (Eq. 5 / 7): discard group g for `λ_{k+1}` if
+//!
+//! ```text
+//!     ‖∇_g f(β̂(λ_k))‖_{ε_g}  ≤  τ_g (2λ_{k+1} − λ_k)          (SGL)
+//!     ‖∇_g f(β̂(λ_k))‖_{ε'_g} ≤  γ_g (2λ_{k+1} − λ_k)          (aSGL)
+//! ```
+//!
+//! **Variable layer** (Eq. 6 / 8): within surviving groups discard i if
+//!
+//! ```text
+//!     |∇_i f(β̂(λ_k))|  ≤  α vᵢ (2λ_{k+1} − λ_k).
+//! ```
+//!
+//! Both layers derive from the ε-norm form of the (a)SGL dual norm plus a
+//! Lipschitz assumption on the gradient path (Propositions 2.2 / 2.4 and
+//! B.2 / B.4); failures of the assumption are caught by the KKT check.
+//! With unit weights the aSGL quantities reduce exactly to the SGL ones
+//! (`γ_g = τ_g`, `ε'_g = ε_g`), so one implementation serves both rules.
+//!
+//! The special cases of Appendix A.4 fall out naturally: `α = 0` skips the
+//! variable layer (group lasso strong rule), `α = 1` with singleton groups
+//! reduces to the lasso strong rule.
+
+use super::{Candidates, ScreenContext};
+use crate::norms::{epsilon_norm, eps_g_adaptive, gamma_g};
+
+/// Run the DFR screen (both SGL and aSGL, depending on the penalty's
+/// weights).
+pub fn screen(ctx: &ScreenContext) -> Candidates {
+    let pen = ctx.penalty;
+    let groups = &pen.groups;
+    let alpha = pen.alpha;
+    let thresh_scale = 2.0 * ctx.lambda_next - ctx.lambda_prev;
+
+    // ---- Layer 1: group reduction ----
+    let mut cand_groups = Vec::new();
+    for (g, r) in groups.iter() {
+        let grad_g = &ctx.grad_prev[r.clone()];
+        let beta_g = &ctx.beta_prev[r.clone()];
+        let v_g = &pen.v[r.clone()];
+        // γ_g (τ_g when v ≡ w ≡ 1) and its ε.
+        let gam = gamma_g(beta_g, v_g, pen.w[g], alpha);
+        let eps = eps_g_adaptive(gam, pen.w[g], alpha, groups.size(g));
+        let lhs = epsilon_norm(grad_g, eps);
+        if lhs > gam * thresh_scale {
+            cand_groups.push(g);
+        }
+    }
+
+    // ---- Layer 2: variable reduction within candidate groups ----
+    let mut cand_vars = Vec::new();
+    if alpha == 0.0 {
+        // Group-lasso limit: no variable screening (Appendix A.4).
+        for &g in &cand_groups {
+            cand_vars.extend(groups.range(g));
+        }
+    } else {
+        for &g in &cand_groups {
+            for i in groups.range(g) {
+                if ctx.grad_prev[i].abs() > alpha * pen.v[i] * thresh_scale {
+                    cand_vars.push(i);
+                }
+            }
+        }
+    }
+
+    Candidates { groups: cand_groups, vars: cand_vars }
+}
+
+/// The *theoretical* rules (Propositions 2.1 / 2.3 / B.1 / B.3): identify
+/// the exact support using the gradient at `λ_{k+1}` itself. Not usable in
+/// practice (the gradient at the next point is unknown); exposed for the
+/// property tests that verify the support-recovery claims.
+///
+/// Boundary note: at an exact solution, *active* groups/variables satisfy
+/// the dual constraint with **equality** (`‖∇_g‖_{ε_g} = τ_g λ`, the KKT
+/// stationarity geometry), so the propositions' strict inequality is a
+/// knife-edge in floating point. We include the boundary with a small
+/// relative slack — without it, solver noise of either sign would flip
+/// active groups out of the candidate set.
+pub fn screen_theoretical(
+    pen: &crate::penalty::Penalty,
+    grad_next: &[f64],
+    beta_next: &[f64],
+    lambda_next: f64,
+) -> Candidates {
+    const SLACK: f64 = 1.0 - 1e-6;
+    let groups = &pen.groups;
+    let alpha = pen.alpha;
+    let mut cand_groups = Vec::new();
+    for (g, r) in groups.iter() {
+        let gam = gamma_g(&beta_next[r.clone()], &pen.v[r.clone()], pen.w[g], alpha);
+        let eps = eps_g_adaptive(gam, pen.w[g], alpha, groups.size(g));
+        if epsilon_norm(&grad_next[r.clone()], eps) > gam * lambda_next * SLACK {
+            cand_groups.push(g);
+        }
+    }
+    let mut cand_vars = Vec::new();
+    if alpha == 0.0 {
+        for &g in &cand_groups {
+            cand_vars.extend(groups.range(g));
+        }
+    } else {
+        for &g in &cand_groups {
+            for i in groups.range(g) {
+                if grad_next[i].abs() > lambda_next * alpha * pen.v[i] * SLACK {
+                    cand_vars.push(i);
+                }
+            }
+        }
+    }
+    Candidates { groups: cand_groups, vars: cand_vars }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Response;
+    use crate::groups::Groups;
+    use crate::linalg::Matrix;
+    use crate::penalty::Penalty;
+    use crate::rng::Rng;
+
+    fn ctx_fixture(
+        alpha: f64,
+    ) -> (Matrix, Vec<f64>, Penalty, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(42);
+        let mut x = Matrix::from_fn(30, 12, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(30);
+        let pen = Penalty::sgl(Groups::even(12, 4), alpha);
+        let beta = vec![0.0; 12];
+        let loss = crate::loss::Loss::new(crate::loss::LossKind::Squared, &x, &y);
+        let grad = loss.gradient(&beta);
+        (x, y, pen, beta, grad)
+    }
+
+    #[test]
+    fn at_lambda_max_everything_is_screened_out() {
+        let (x, y, pen, beta, grad) = ctx_fixture(0.95);
+        let lam_max = crate::norms::dual_sgl_norm(&grad, &pen.groups, 0.95);
+        // Sequential step from λ_max to λ_max (no decrease): every group's
+        // ε-norm is ≤ τ_g·λ_max by definition of the dual norm.
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: lam_max,
+            lambda_next: lam_max,
+            x: &x,
+            y: &y,
+            response: Response::Linear,
+        };
+        let c = screen(&ctx);
+        assert!(c.groups.is_empty(), "groups {:?}", c.groups);
+        assert!(c.vars.is_empty());
+    }
+
+    #[test]
+    fn tiny_lambda_keeps_everything() {
+        let (x, y, pen, beta, grad) = ctx_fixture(0.95);
+        let lam_max = crate::norms::dual_sgl_norm(&grad, &pen.groups, 0.95);
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: lam_max,
+            lambda_next: 1e-9 * lam_max,
+            x: &x,
+            y: &y,
+            response: Response::Linear,
+        };
+        let c = screen(&ctx);
+        // 2λ' − λ < 0 ⇒ thresholds negative ⇒ nothing can be discarded.
+        assert_eq!(c.groups.len(), pen.groups.m());
+        assert_eq!(c.vars.len(), pen.groups.p());
+    }
+
+    #[test]
+    fn alpha_zero_reduces_to_group_lasso_rule() {
+        let (x, y, pen, beta, grad) = ctx_fixture(0.0);
+        let lam_max = crate::norms::dual_sgl_norm(&grad, &pen.groups, 0.0);
+        let lam_next = 0.8 * lam_max;
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: lam_max,
+            lambda_next: lam_next,
+            x: &x,
+            y: &y,
+            response: Response::Linear,
+        };
+        let c = screen(&ctx);
+        // Compare with a direct group-lasso strong rule: keep g iff
+        // ‖∇_g‖₂ > √p_g (2λ' − λ)  (ε_g = 1 at α = 0).
+        let mut expect = Vec::new();
+        for (g, r) in pen.groups.iter() {
+            let n2: f64 = grad[r].iter().map(|v| v * v).sum::<f64>().sqrt();
+            if n2 > (pen.groups.size(g) as f64).sqrt() * (2.0 * lam_next - lam_max) {
+                expect.push(g);
+            }
+        }
+        assert_eq!(c.groups, expect);
+        // All variables of candidate groups are candidates at α = 0.
+        let nvars: usize = c.groups.iter().map(|&g| pen.groups.size(g)).sum();
+        assert_eq!(c.vars.len(), nvars);
+    }
+
+    #[test]
+    fn alpha_one_singletons_reduce_to_lasso_rule() {
+        let mut rng = Rng::new(7);
+        let mut x = Matrix::from_fn(25, 10, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(25);
+        let pen = Penalty::sgl(Groups::singletons(10), 1.0);
+        let beta = vec![0.0; 10];
+        let loss = crate::loss::Loss::new(crate::loss::LossKind::Squared, &x, &y);
+        let grad = loss.gradient(&beta);
+        let lam_max = grad.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let lam_next = 0.85 * lam_max;
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: lam_max,
+            lambda_next: lam_next,
+            x: &x,
+            y: &y,
+            response: Response::Linear,
+        };
+        let c = screen(&ctx);
+        let expect: Vec<usize> = (0..10)
+            .filter(|&i| grad[i].abs() > 2.0 * lam_next - lam_max)
+            .collect();
+        assert_eq!(c.vars, expect);
+    }
+
+    #[test]
+    fn candidate_vars_subset_of_candidate_groups() {
+        let (x, y, pen, beta, grad) = ctx_fixture(0.5);
+        let lam_max = crate::norms::dual_sgl_norm(&grad, &pen.groups, 0.5);
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: lam_max,
+            lambda_next: 0.7 * lam_max,
+            x: &x,
+            y: &y,
+            response: Response::Linear,
+        };
+        let c = screen(&ctx);
+        for &v in &c.vars {
+            assert!(c.groups.contains(&pen.groups.group_of(v)));
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! GAP safe sphere screening for SGL (Ndiaye et al., NeurIPS 2016; paper
+//! Appendix C, Eqs. 30–33).
+//!
+//! An *exact* rule: using any primal point β and the dual-feasible point
+//!
+//! ```text
+//!     θ_c = (y − Xβ) / max(n, ‖Xᵀ(y − Xβ)‖*_sgl / λ) ,
+//! ```
+//!
+//! the optimal dual solution lies in the sphere `B(θ_c, r)` with
+//! `r = √(2·gap / n)` (the dual objective of the 1/(2n)-scaled squared loss
+//! is n-strongly concave). Any variable/group whose worst case over the
+//! sphere still satisfies the inactivity condition is *guaranteed*
+//! inactive:
+//!
+//! * variable: `|X_jᵀθ_c| + r‖X_j‖₂ ≤ λ α v_j`,
+//! * group:    `‖S(X_gᵀθ_c, λα)‖₂ + r‖X_g‖_F ≤ λ (1−α) √p_g` (the
+//!   Frobenius norm upper-bounds the operator norm, keeping the test safe).
+//!
+//! Defined for the linear model only, as in the paper; for logistic
+//! responses the rule degrades to no screening. The sequential variant
+//! screens once per path point from β̂(λ_k); the dynamic variant re-screens
+//! inside the solver loop every few iterations (driven by the path
+//! coordinator via [`screen_dynamic`]).
+
+use super::{Candidates, ScreenContext};
+use crate::data::Response;
+use crate::linalg::Matrix;
+use crate::norms::soft_threshold;
+use crate::penalty::Penalty;
+
+/// Sequential GAP safe: screen for `λ_{k+1}` using the previous solution.
+pub fn screen(ctx: &ScreenContext) -> Candidates {
+    if ctx.response != Response::Linear {
+        return Candidates::full(ctx.penalty);
+    }
+    screen_at(ctx.penalty, ctx.x, ctx.y, ctx.beta_prev, ctx.lambda_next)
+}
+
+/// GAP safe test at `lambda` using primal point `beta` (shared by the
+/// sequential rule and the dynamic re-screens).
+pub fn screen_at(
+    pen: &Penalty,
+    x: &Matrix,
+    y: &[f64],
+    beta: &[f64],
+    lambda: f64,
+) -> Candidates {
+    let n = y.len() as f64;
+    let groups = &pen.groups;
+    let alpha = pen.alpha;
+
+    // Residual and its correlation vector.
+    let xb = x.matvec(beta);
+    let resid: Vec<f64> = y.iter().zip(&xb).map(|(yi, xi)| yi - xi).collect();
+    let xtr = x.t_matvec_par(&resid, crate::parallel::default_threads());
+
+    // Dual-feasible point θ_c = resid / max(n, ‖Xᵀresid‖*_sgl / λ).
+    let dual_norm = dual_sgl_weighted(&xtr, pen);
+    let scale = (dual_norm / lambda).max(n);
+    let theta: Vec<f64> = resid.iter().map(|r| r / scale).collect();
+    // X_jᵀθ_c for all j.
+    let xt_theta: Vec<f64> = xtr.iter().map(|v| v / scale).collect();
+
+    // Duality gap: P(β) − D(θ) with f = 1/(2n)‖y−Xβ‖², D(θ) = θᵀy − n/2‖θ‖².
+    let primal = {
+        let f: f64 = resid.iter().map(|r| r * r).sum::<f64>() / (2.0 * n);
+        f + lambda * pen.value(beta)
+    };
+    let dual = {
+        let ty: f64 = theta.iter().zip(y).map(|(t, yi)| t * yi).sum();
+        let tt: f64 = theta.iter().map(|t| t * t).sum();
+        ty - n / 2.0 * tt
+    };
+    let gap = (primal - dual).max(0.0);
+    let r_safe = (2.0 * gap / n).sqrt();
+
+    // Column norms (‖X_j‖₂ = 1 after standardization, but compute anyway).
+    let col_norms = x.col_norms();
+
+    let mut cand_groups = Vec::new();
+    let mut cand_vars = Vec::new();
+    for (g, rr) in groups.iter() {
+        // Group test.
+        let mut s_sq = 0.0;
+        let mut frob_sq = 0.0;
+        for i in rr.clone() {
+            let s = soft_threshold(xt_theta[i], lambda * alpha * pen.v[i]);
+            s_sq += s * s;
+            frob_sq += col_norms[i] * col_norms[i];
+        }
+        let t_g = s_sq.sqrt() + r_safe * frob_sq.sqrt();
+        let group_rhs =
+            lambda * (1.0 - alpha) * pen.w[g] * (groups.size(g) as f64).sqrt();
+        let group_survives = t_g > group_rhs || (1.0 - alpha) == 0.0;
+        if !group_survives {
+            continue;
+        }
+        cand_groups.push(g);
+        // Variable test within surviving groups.
+        for i in rr {
+            let worst = xt_theta[i].abs() + r_safe * col_norms[i];
+            if worst > lambda * alpha * pen.v[i] || alpha == 0.0 {
+                cand_vars.push(i);
+            }
+        }
+    }
+    Candidates { groups: cand_groups, vars: cand_vars }
+}
+
+/// Dynamic GAP safe: given the current inner-solver iterate on the reduced
+/// problem (scattered back to full length by the caller), re-derive a safe
+/// sphere and return a (possibly smaller) candidate set.
+pub fn screen_dynamic(
+    pen: &Penalty,
+    x: &Matrix,
+    y: &[f64],
+    beta_full: &[f64],
+    lambda: f64,
+) -> Candidates {
+    screen_at(pen, x, y, beta_full, lambda)
+}
+
+/// Weighted SGL dual norm `max_g γ_g⁻¹‖ξ^(g)‖_{ε'_g}` used to scale the
+/// dual point for adaptive penalties as well (γ evaluated at β = 0 limits).
+fn dual_sgl_weighted(xi: &[f64], pen: &Penalty) -> f64 {
+    let mut best: f64 = 0.0;
+    for (g, r) in pen.groups.iter() {
+        let zeros = vec![0.0; pen.groups.size(g)];
+        let gam = crate::norms::gamma_g(&zeros, &pen.v[r.clone()], pen.w[g], pen.alpha);
+        let eps = crate::norms::eps_g_adaptive(gam, pen.w[g], pen.alpha, pen.groups.size(g));
+        let v = crate::norms::epsilon_norm(&xi[r], eps);
+        if gam > 0.0 {
+            best = best.max(v / gam);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups::Groups;
+    use crate::loss::{Loss, LossKind};
+    use crate::rng::Rng;
+    use crate::solver::{solve, SolverConfig};
+
+    /// The safety property: GAP safe must never discard a variable that is
+    /// active at the optimal solution for the λ it screens for.
+    #[test]
+    fn never_discards_active_variables() {
+        let mut rng = Rng::new(9);
+        for trial in 0..5 {
+            let p = 24;
+            let mut x = crate::linalg::Matrix::from_fn(40, p, |_, _| rng.gauss());
+            x.standardize_l2();
+            let beta_true: Vec<f64> =
+                (0..p).map(|j| if j % 5 == 0 { rng.normal(0.0, 2.0) } else { 0.0 }).collect();
+            let mut y = x.matvec(&beta_true);
+            y.iter_mut().for_each(|v| *v += rng.normal(0.0, 0.2));
+            let ymean = y.iter().sum::<f64>() / y.len() as f64;
+            y.iter_mut().for_each(|v| *v -= ymean);
+
+            let g = Groups::even(p, 6);
+            let pen = Penalty::sgl(g.clone(), 0.9);
+            let loss = Loss::new(LossKind::Squared, &x, &y);
+            let lam_max = crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), &g, 0.9);
+            let lam_prev = 0.5 * lam_max;
+            let lam_next = 0.4 * lam_max;
+            let cfg = SolverConfig { tol: 1e-10, max_iters: 50000, ..Default::default() };
+            let prev = solve(&loss, &pen, lam_prev, &vec![0.0; p], &cfg);
+            let next = solve(&loss, &pen, lam_next, &prev.beta, &cfg);
+
+            let cands = screen_at(&pen, &x, &y, &prev.beta, lam_next);
+            for (i, &b) in next.beta.iter().enumerate() {
+                if b.abs() > 1e-7 {
+                    assert!(
+                        cands.vars.contains(&i),
+                        "trial {trial}: active var {i} (β={b}) was unsafely discarded"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gap_shrinks_with_better_primal_point() {
+        // Screening from the exact solution at the same λ should keep fewer
+        // variables than screening from the null vector.
+        let mut rng = Rng::new(10);
+        let p = 30;
+        let mut x = crate::linalg::Matrix::from_fn(50, p, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(50);
+        let g = Groups::even(p, 5);
+        let pen = Penalty::sgl(g.clone(), 0.95);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let lam_max = crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), &g, 0.95);
+        let lam = 0.5 * lam_max;
+        let cfg = SolverConfig { tol: 1e-10, max_iters: 50000, ..Default::default() };
+        let sol = solve(&loss, &pen, lam, &vec![0.0; p], &cfg);
+        let from_null = screen_at(&pen, &x, &y, &vec![0.0; p], lam);
+        let from_sol = screen_at(&pen, &x, &y, &sol.beta, lam);
+        assert!(
+            from_sol.vars.len() <= from_null.vars.len(),
+            "dynamic refinement failed: {} > {}",
+            from_sol.vars.len(),
+            from_null.vars.len()
+        );
+    }
+
+    #[test]
+    fn logistic_falls_back_to_full() {
+        let mut rng = Rng::new(11);
+        let x = crate::linalg::Matrix::from_fn(20, 8, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..20).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let pen = Penalty::sgl(Groups::even(8, 4), 0.9);
+        let beta = vec![0.0; 8];
+        let grad = vec![0.0; 8];
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: 1.0,
+            lambda_next: 0.9,
+            x: &x,
+            y: &y,
+            response: Response::Logistic,
+        };
+        let c = screen(&ctx);
+        assert_eq!(c.vars.len(), 8);
+    }
+}

@@ -1,0 +1,168 @@
+//! KKT optimality checks (§2.3.3, Appendix A.2 / B.2.4, and the sparsegl
+//! group check of Appendix C).
+//!
+//! Strong rules can err when their Lipschitz assumptions fail; after the
+//! reduced solve, every *excluded* variable is checked against the KKT
+//! inactivity condition at the new solution. For DFR the variable-level
+//! check is (Eq. 17 / 26)
+//!
+//! ```text
+//!     |S(∇_i f(β̂(λ_{k+1})), λ_{k+1}(1−α) w_g √p_g)|  ≤  λ_{k+1} α vᵢ ,
+//! ```
+//!
+//! where the `√p_g` slack is the worst case of the unknown group-ℓ2
+//! subgradient (|Ψᵢ| ≤ √p_g on the ℓ2 unit ball, Appendix A.2). For
+//! sparsegl the check is at group level (Eq. 27):
+//! `‖S(∇_g f, λα)‖₂ ≤ √p_g(1−α)λ`.
+
+use crate::norms::soft_threshold;
+use crate::penalty::Penalty;
+
+/// DFR variable-level check: return the (sorted) violating variables among
+/// `excluded` given the gradient and the solution at the new λ.
+///
+/// For variables in groups that are *inactive* in `beta_new`, the group-ℓ2
+/// subgradient is unknown and bounded by `√p_g` on the ℓ2 ball, giving the
+/// paper's soft-threshold slack (Eq. 17 / Appendix A.2). For variables in
+/// *active* groups, `‖β_g‖₂ > 0` makes the group norm differentiable, the
+/// subgradient coordinate is exactly `β_i/‖β_g‖ = 0`, and the condition
+/// tightens to `|∇_i f| ≤ λαvᵢ` — using the tight form here is what keeps
+/// the screened path solutions exactly equal to the no-screen ones.
+pub fn variable_violations(
+    pen: &Penalty,
+    grad_new: &[f64],
+    beta_new: &[f64],
+    lambda: f64,
+    excluded: impl Iterator<Item = usize>,
+) -> Vec<usize> {
+    let alpha = pen.alpha;
+    let group_active: Vec<bool> = pen
+        .groups
+        .iter()
+        .map(|(_, r)| beta_new[r].iter().any(|&b| b != 0.0))
+        .collect();
+    let mut out = Vec::new();
+    for i in excluded {
+        let g = pen.groups.group_of(i);
+        let s = if group_active[g] {
+            grad_new[i]
+        } else {
+            let slack =
+                lambda * (1.0 - alpha) * pen.w[g] * (pen.groups.size(g) as f64).sqrt();
+            soft_threshold(grad_new[i], slack)
+        };
+        if s.abs() > lambda * alpha * pen.v[i] + KKT_TOL {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// sparsegl group-level check: return the variables of every *excluded
+/// group* that violates the group inactivity condition (sparsegl re-adds
+/// whole groups).
+pub fn group_violations(
+    pen: &Penalty,
+    grad_new: &[f64],
+    lambda: f64,
+    excluded_groups: impl Iterator<Item = usize>,
+) -> (Vec<usize>, usize) {
+    let alpha = pen.alpha;
+    let mut vars = Vec::new();
+    let mut count = 0;
+    for g in excluded_groups {
+        let r = pen.groups.range(g);
+        let mut nsq = 0.0;
+        for i in r.clone() {
+            let s = soft_threshold(grad_new[i], lambda * alpha * pen.v[i]);
+            nsq += s * s;
+        }
+        let rhs = (pen.groups.size(g) as f64).sqrt() * pen.w[g] * (1.0 - alpha) * lambda;
+        if nsq.sqrt() > rhs + KKT_TOL {
+            count += 1;
+            vars.extend(r);
+        }
+    }
+    (vars, count)
+}
+
+/// Numerical slack on the KKT inequalities: the inner solver is accurate to
+/// its tolerance, so exact-zero tests would flag spurious violations.
+pub const KKT_TOL: f64 = 1e-7;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups::Groups;
+    use crate::linalg::Matrix;
+    use crate::loss::{Loss, LossKind};
+    use crate::rng::Rng;
+    use crate::solver::{solve, SolverConfig};
+
+    /// At an exact solution, no excluded variable that is truly zero may be
+    /// flagged — the KKT condition holds by optimality.
+    #[test]
+    fn no_false_violations_at_exact_solution() {
+        let mut rng = Rng::new(20);
+        let p = 20;
+        let mut x = Matrix::from_fn(40, p, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(40);
+        let g = Groups::even(p, 5);
+        let pen = Penalty::sgl(g.clone(), 0.9);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let lam_max = crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), &g, 0.9);
+        let lam = 0.4 * lam_max;
+        let cfg = SolverConfig { tol: 1e-12, max_iters: 100000, ..Default::default() };
+        let sol = solve(&loss, &pen, lam, &vec![0.0; p], &cfg);
+        let grad = loss.gradient(&sol.beta);
+        let excluded: Vec<usize> =
+            (0..p).filter(|&i| sol.beta[i] == 0.0).collect();
+        // Variables in fully-inactive groups must pass the check.
+        let viol = variable_violations(
+            &pen,
+            &grad,
+            &sol.beta,
+            lam,
+            excluded.iter().copied().filter(|&i| {
+                let gg = g.group_of(i);
+                sol.beta[g.range(gg)].iter().all(|&b| b == 0.0)
+            }),
+        );
+        assert!(viol.is_empty(), "false violations: {viol:?}");
+    }
+
+    /// A variable with a large gradient must be flagged.
+    #[test]
+    fn detects_planted_violation() {
+        let g = Groups::from_sizes(&[2, 2]);
+        let pen = Penalty::sgl(g, 0.5);
+        // λ = 1: slack = (1−α)√2 ≈ 0.707, threshold λα = 0.5.
+        let mut grad = vec![0.0; 4];
+        grad[3] = 5.0; // |S(5, .707)| = 4.29 > 0.5 → violation
+        let beta = vec![0.0; 4];
+        let viol = variable_violations(&pen, &grad, &beta, 1.0, [2usize, 3].into_iter());
+        assert_eq!(viol, vec![3]);
+    }
+
+    #[test]
+    fn group_check_flags_whole_group() {
+        let g = Groups::from_sizes(&[3, 3]);
+        let pen = Penalty::sgl(g, 0.5);
+        let mut grad = vec![0.0; 6];
+        grad[4] = 10.0;
+        let (vars, count) = group_violations(&pen, &grad, 1.0, [1usize].into_iter());
+        assert_eq!(count, 1);
+        assert_eq!(vars, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn group_check_passes_quiet_groups() {
+        let g = Groups::from_sizes(&[3]);
+        let pen = Penalty::sgl(g, 0.95);
+        let grad = vec![0.01; 3];
+        let (vars, count) = group_violations(&pen, &grad, 1.0, [0usize].into_iter());
+        assert!(vars.is_empty());
+        assert_eq!(count, 0);
+    }
+}

@@ -1,0 +1,106 @@
+//! The `sparsegl` group-level strong rule (Liang et al. 2022; paper
+//! Appendix C, Eqs. 27–29).
+//!
+//! A single layer of *group* screening based on Simon et al.'s first-order
+//! inactivity condition `‖S(∇_g f, λα)‖₂ ≤ √p_g (1−α) λ` and a Lipschitz
+//! assumption on the ℓ2 (group-lasso) part of the penalty only:
+//!
+//! ```text
+//!     discard g  ⇔  ‖S(∇_g f(β̂(λ_k)), λ_{k+1} α)‖₂ ≤ √p_g (1−α)(2λ_{k+1} − λ_k).
+//! ```
+//!
+//! No variable layer: once a group survives, *all* of its variables enter
+//! the optimization set — this is exactly the gap DFR's second layer
+//! closes, and the source of the large `O_v` gaps in Tables A3/A6/A9.
+
+use super::{Candidates, ScreenContext};
+use crate::norms::soft_threshold;
+
+pub fn screen(ctx: &ScreenContext) -> Candidates {
+    let pen = ctx.penalty;
+    let groups = &pen.groups;
+    let alpha = pen.alpha;
+    let thresh_scale = 2.0 * ctx.lambda_next - ctx.lambda_prev;
+
+    let mut cand_groups = Vec::new();
+    let mut cand_vars = Vec::new();
+    for (g, r) in groups.iter() {
+        // Soft-threshold level uses the ℓ1 part at the *new* λ, following
+        // the sparsegl package (Eq. 27 evaluated at λ_{k+1}).
+        let mut nsq = 0.0;
+        for i in r.clone() {
+            let s = soft_threshold(ctx.grad_prev[i], ctx.lambda_next * alpha * pen.v[i]);
+            nsq += s * s;
+        }
+        let rhs =
+            pen.w[g] * (groups.size(g) as f64).sqrt() * (1.0 - alpha) * thresh_scale;
+        if nsq.sqrt() > rhs {
+            cand_groups.push(g);
+            cand_vars.extend(r);
+        }
+    }
+    Candidates { groups: cand_groups, vars: cand_vars }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Response;
+    use crate::groups::Groups;
+    use crate::linalg::Matrix;
+    use crate::penalty::Penalty;
+    use crate::rng::Rng;
+
+    #[test]
+    fn keeps_whole_groups() {
+        let mut rng = Rng::new(3);
+        let mut x = Matrix::from_fn(40, 20, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(40);
+        let pen = Penalty::sgl(Groups::even(20, 5), 0.95);
+        let beta = vec![0.0; 20];
+        let loss = crate::loss::Loss::new(crate::loss::LossKind::Squared, &x, &y);
+        let grad = loss.gradient(&beta);
+        let lam_max = crate::norms::dual_sgl_norm(&grad, &pen.groups, 0.95);
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: lam_max,
+            lambda_next: 0.6 * lam_max,
+            x: &x,
+            y: &y,
+            response: Response::Linear,
+        };
+        let c = screen(&ctx);
+        // Every candidate group contributes all of its variables.
+        let expect: usize = c.groups.iter().map(|&g| pen.groups.size(g)).sum();
+        assert_eq!(c.vars.len(), expect);
+    }
+
+    #[test]
+    fn no_screening_possible_when_lambda_rises() {
+        // 2λ' − λ < 0 ⇒ RHS negative ⇒ every group stays (‖S‖ ≥ 0); except
+        // ‖S‖ = 0 = RHS edge — allow full retention only.
+        let mut rng = Rng::new(4);
+        let mut x = Matrix::from_fn(30, 8, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(30);
+        let pen = Penalty::sgl(Groups::even(8, 4), 0.5);
+        let beta = vec![0.0; 8];
+        let loss = crate::loss::Loss::new(crate::loss::LossKind::Squared, &x, &y);
+        let grad = loss.gradient(&beta);
+        let ctx = ScreenContext {
+            penalty: &pen,
+            grad_prev: &grad,
+            beta_prev: &beta,
+            lambda_prev: 1.0,
+            lambda_next: 0.2, // 2·0.2 − 1 < 0
+            x: &x,
+            y: &y,
+            response: Response::Linear,
+        };
+        let c = screen(&ctx);
+        assert_eq!(c.groups.len(), 2);
+    }
+}

@@ -1,0 +1,114 @@
+//! A miniature property-testing framework (no `proptest` offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs with a
+//! deterministic seed ladder; on failure it reports the failing seed so the
+//! case can be replayed exactly. Generators are plain closures over
+//! [`crate::rng::Rng`], which keeps shrinking out of scope but makes every
+//! failure reproducible from its printed seed.
+
+use crate::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the failing
+/// seed on the first violated property.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (replay seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}: element {i} differs: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Draw a random sparse-group regression problem for property tests.
+pub struct RandomProblem {
+    pub data: crate::data::GeneratedData,
+    pub alpha: f64,
+}
+
+impl std::fmt::Debug for RandomProblem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RandomProblem(p={}, n={}, m={}, alpha={:.2})",
+            self.data.dataset.p(),
+            self.data.dataset.n(),
+            self.data.dataset.m(),
+            self.alpha
+        )
+    }
+}
+
+/// Generator for [`RandomProblem`]; bounded sizes keep property suites fast.
+pub fn random_problem(rng: &mut Rng) -> RandomProblem {
+    let p = 20 + rng.below(40);
+    let n = 30 + rng.below(40);
+    let group_size = 2 + rng.below(6);
+    let cfg = crate::data::SyntheticConfig {
+        n,
+        p,
+        groups: crate::data::synthetic::GroupSpec::Even(group_size),
+        group_sparsity: 0.2 + 0.3 * rng.uniform(),
+        var_sparsity: 0.2 + 0.4 * rng.uniform(),
+        rho: 0.5 * rng.uniform(),
+        ..crate::data::SyntheticConfig::default()
+    };
+    let data = cfg.generate(rng.next_u64());
+    let alpha = [0.0, 0.3, 0.5, 0.8, 0.95, 1.0][rng.below(6)];
+    RandomProblem { data, alpha }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("abs-nonneg", 50, |r| r.gauss(), |x| {
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn check_reports_failures() {
+        check("always-fails", 3, |r| r.gauss(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_tolerates_scale() {
+        assert_close(&[1.0, 1e6], &[1.0 + 1e-9, 1e6 + 1.0], 1e-5, "scale");
+    }
+
+    #[test]
+    fn random_problem_shapes_are_consistent() {
+        let mut rng = Rng::new(1);
+        for _ in 0..5 {
+            let rp = random_problem(&mut rng);
+            assert_eq!(rp.data.dataset.groups.p(), rp.data.dataset.p());
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! System-level tests of the pathwise coordinator: failure injection,
+//! degenerate inputs, rule-vs-rule consistency, logistic paths, CV
+//! integration, and surrogate real-data smoke runs.
+
+use dfr::data::synthetic::GroupSpec;
+use dfr::data::{Response, SyntheticConfig};
+use dfr::path::{compare_with_no_screen, PathConfig, PathRunner};
+use dfr::screen::RuleKind;
+use dfr::solver::{SolverConfig, SolverKind};
+
+fn cfg(path_len: usize) -> PathConfig {
+    PathConfig {
+        path_len,
+        solver: SolverConfig { tol: 1e-8, max_iters: 50_000, ..Default::default() },
+        ..PathConfig::default()
+    }
+}
+
+/// Pure-noise response: the model should stay (almost) empty and screening
+/// should discard nearly everything — the sparsest regime of Fig. 2.
+#[test]
+fn pure_noise_keeps_input_proportion_tiny() {
+    let gd = SyntheticConfig {
+        n: 60,
+        p: 120,
+        groups: GroupSpec::Even(10),
+        group_sparsity: 0.0, // generator clamps to ≥1 group but signal=0 kills it
+        signal: 0.0,
+        ..SyntheticConfig::default()
+    }
+    .generate(3);
+    let fit = PathRunner::new(&gd.dataset, cfg(10)).rule(RuleKind::DfrSgl).run().unwrap();
+    assert!(
+        fit.metrics.input_proportion() < 0.5,
+        "noise problem kept {}",
+        fit.metrics.input_proportion()
+    );
+    assert_eq!(fit.metrics.failed_convergences(), 0);
+}
+
+/// Saturated signal (every group active): screening can't help much but
+/// must not lose solutions — the saturation regime of Fig. 2.
+#[test]
+fn saturated_signal_still_correct() {
+    let gd = SyntheticConfig {
+        n: 80,
+        p: 60,
+        groups: GroupSpec::Even(6),
+        group_sparsity: 1.0,
+        var_sparsity: 1.0,
+        ..SyntheticConfig::default()
+    }
+    .generate(4);
+    let cmp = compare_with_no_screen(&gd.dataset, &cfg(8), RuleKind::DfrSgl).unwrap();
+    assert!(cmp.l2_distance < 1e-4, "drift {}", cmp.l2_distance);
+}
+
+/// Single observation, heavy-tailed group sizes, p ≫ n.
+#[test]
+fn extreme_aspect_ratios_run() {
+    for (n, p) in [(4usize, 60usize), (150, 10)] {
+        let gd = SyntheticConfig {
+            n,
+            p,
+            groups: GroupSpec::Even(5),
+            ..SyntheticConfig::default()
+        }
+        .generate(5);
+        let fit = PathRunner::new(&gd.dataset, cfg(6)).rule(RuleKind::DfrSgl).run().unwrap();
+        assert_eq!(fit.betas.len(), 6);
+    }
+}
+
+/// ATOS and FISTA produce the same pathwise solutions under DFR (the paper
+/// stresses solver-independence of the rule).
+#[test]
+fn solver_independence_of_screening() {
+    let gd = SyntheticConfig {
+        n: 50,
+        p: 60,
+        groups: GroupSpec::Even(6),
+        ..SyntheticConfig::default()
+    }
+    .generate(6);
+    let mut c_f = cfg(8);
+    c_f.solver.tol = 1e-10;
+    let mut c_a = c_f.clone();
+    c_a.solver.kind = SolverKind::Atos;
+    let f = PathRunner::new(&gd.dataset, c_f).rule(RuleKind::DfrSgl).run().unwrap();
+    let a = PathRunner::new(&gd.dataset, c_a)
+        .rule(RuleKind::DfrSgl)
+        .fixed_path(f.lambdas.clone())
+        .run()
+        .unwrap();
+    assert!(f.l2_distance_to(&a) < 1e-3, "solver drift {}", f.l2_distance_to(&a));
+}
+
+/// Logistic model: all strong rules preserve solutions (Appendix D.6).
+#[test]
+fn logistic_rules_preserve_solutions() {
+    let gd = SyntheticConfig {
+        n: 100,
+        p: 60,
+        groups: GroupSpec::Even(6),
+        response: Response::Logistic,
+        ..SyntheticConfig::default()
+    }
+    .generate(7);
+    for rule in [RuleKind::DfrSgl, RuleKind::Sparsegl] {
+        let cmp = compare_with_no_screen(&gd.dataset, &cfg(8), rule).unwrap();
+        assert!(
+            cmp.l2_distance < 1e-3,
+            "{} logistic drift {}",
+            rule.name(),
+            cmp.l2_distance
+        );
+        assert_eq!(cmp.screened.metrics.failed_convergences(), 0);
+    }
+}
+
+/// Surrogate real datasets smoke-run at small scale with DFR-aSGL (the
+/// Fig. 4 pipeline at reduced size).
+#[test]
+fn surrogate_real_data_smoke() {
+    use dfr::data::real::{RealDatasetKind, SurrogateConfig};
+    for kind in [RealDatasetKind::Celiac, RealDatasetKind::TrustExperts] {
+        let ds = SurrogateConfig::scaled(kind, 0.02).generate();
+        let mut c = cfg(6);
+        c.path_end_ratio = 0.2;
+        let fit = PathRunner::new(&ds, c).rule(RuleKind::DfrSgl).run().unwrap();
+        assert_eq!(fit.betas.len(), 6, "{}", kind.name());
+    }
+}
+
+/// KKT failure injection: force a broken Lipschitz assumption by taking a
+/// huge λ step (λ_{k+1} ≪ λ_k); the KKT loop must recover the correct
+/// solution anyway.
+#[test]
+fn giant_lambda_steps_are_recovered_by_kkt_loop() {
+    let gd = SyntheticConfig {
+        n: 60,
+        p: 80,
+        groups: GroupSpec::Even(8),
+        ..SyntheticConfig::default()
+    }
+    .generate(8);
+    let ds = &gd.dataset;
+    // Build a 3-point path with a brutal 100× drop — the strong-rule
+    // assumption |λ_{k+1} − λ_k| small is maximally violated.
+    let pen = dfr::penalty::Penalty::sgl(ds.groups.clone(), 0.95);
+    let loss = dfr::loss::Loss::new(dfr::loss::LossKind::Squared, &ds.x, &ds.y);
+    let lam1 = dfr::path::lambda_max(&pen, &loss.gradient(&vec![0.0; ds.p()]));
+    let path = vec![lam1, lam1 * 0.5, lam1 * 0.005];
+    let mut c = cfg(3);
+    c.solver.tol = 1e-10;
+    let screened = PathRunner::new(ds, c.clone())
+        .rule(RuleKind::DfrSgl)
+        .fixed_path(path.clone())
+        .run()
+        .unwrap();
+    let baseline = PathRunner::new(ds, c)
+        .rule(RuleKind::NoScreen)
+        .fixed_path(path)
+        .run()
+        .unwrap();
+    let drift = screened.l2_distance_to(&baseline);
+    assert!(drift < 1e-3, "KKT loop failed to recover: drift {drift}");
+}
+
+/// CV end-to-end with screening enabled on a logistic problem.
+#[test]
+fn cv_with_screening_logistic() {
+    let gd = SyntheticConfig {
+        n: 90,
+        p: 40,
+        groups: GroupSpec::Even(8),
+        response: Response::Logistic,
+        ..SyntheticConfig::default()
+    }
+    .generate(9);
+    let cv = dfr::cv::CvConfig {
+        folds: 3,
+        path: PathConfig { path_len: 6, ..PathConfig::default() },
+        rule: RuleKind::DfrSgl,
+        threads: 2,
+        ..Default::default()
+    };
+    let cell = dfr::cv::cross_validate(&gd.dataset, &cv).unwrap();
+    assert!(cell.cv_loss.iter().all(|v| v.is_finite()));
+}
+
+/// Empty-ish model at the very start of the path: O_v can be empty for
+/// several points without panicking.
+#[test]
+fn flat_path_start_handles_empty_optimization_sets() {
+    let gd = SyntheticConfig {
+        n: 40,
+        p: 30,
+        groups: GroupSpec::Even(5),
+        signal: 0.1,
+        ..SyntheticConfig::default()
+    }
+    .generate(10);
+    let mut c = cfg(20);
+    c.path_end_ratio = 0.9; // shallow path: many near-λ₁ points
+    let fit = PathRunner::new(&gd.dataset, c).rule(RuleKind::DfrSgl).run().unwrap();
+    assert_eq!(fit.betas.len(), 20);
+}

@@ -1,0 +1,219 @@
+//! Integration tests across the three layers: AOT artifacts (Pallas + JAX,
+//! built by `make artifacts`) loaded and executed through the PJRT runtime,
+//! checked against the native Rust engine.
+//!
+//! Tests self-skip (with a loud message) when `artifacts/` has not been
+//! built, so `cargo test` stays green in a fresh checkout; `make test`
+//! always builds artifacts first.
+
+use dfr::data::{Response, SyntheticConfig};
+use dfr::linalg::Matrix;
+use dfr::loss::{Loss, LossKind};
+use dfr::path::{Engine, PathConfig, PathRunner};
+use dfr::rng::Rng;
+use dfr::runtime::XlaEngine;
+use dfr::screen::RuleKind;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/.stamp").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// The smoke shape (32×64) artifact computes the same gradient as native.
+#[test]
+fn xla_gradient_matches_native_squared() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = XlaEngine::new(dir).unwrap();
+    let mut rng = Rng::new(1);
+    let x = Matrix::from_fn(32, 64, |_, _| rng.gauss());
+    let y: Vec<f64> = rng.gauss_vec(32);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    for trial in 0..5 {
+        let beta: Vec<f64> = rng.gauss_vec(64);
+        let g_xla = eng.gradient_via_xla(LossKind::Squared, &x, &y, &beta).unwrap();
+        let g_nat = loss.gradient(&beta);
+        dfr::testkit::assert_close(&g_xla, &g_nat, 1e-10, &format!("trial {trial}"));
+    }
+    let stats = eng.stats();
+    assert_eq!(stats.xla_gradient_calls, 5);
+    assert_eq!(stats.native_fallbacks, 0);
+    assert_eq!(stats.compiled_artifacts, 1, "executable should be cached");
+}
+
+#[test]
+fn xla_gradient_matches_native_logistic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = XlaEngine::new(dir).unwrap();
+    let mut rng = Rng::new(2);
+    let x = Matrix::from_fn(32, 64, |_, _| rng.gauss());
+    let y: Vec<f64> = (0..32).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+    let loss = Loss::new(LossKind::Logistic, &x, &y);
+    let beta: Vec<f64> = rng.gauss_vec(64).iter().map(|v| 0.2 * v).collect();
+    let g_xla = eng.gradient_via_xla(LossKind::Logistic, &x, &y, &beta).unwrap();
+    let g_nat = loss.gradient(&beta);
+    dfr::testkit::assert_close(&g_xla, &g_nat, 1e-10, "logistic");
+}
+
+/// Full pathwise DFR fit with the XLA engine serving every screening/KKT
+/// gradient: solutions must match the native-engine fit exactly (same λ
+/// path, same screening decisions).
+#[test]
+fn pathwise_fit_via_xla_engine_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let gd = SyntheticConfig {
+        n: 32,
+        p: 64,
+        groups: dfr::data::synthetic::GroupSpec::Even(8),
+        ..SyntheticConfig::default()
+    }
+    .generate(7);
+    let cfg = PathConfig {
+        path_len: 8,
+        solver: dfr::solver::SolverConfig { tol: 1e-9, max_iters: 50_000, ..Default::default() },
+        ..PathConfig::default()
+    };
+    let native = PathRunner::new(&gd.dataset, cfg.clone()).rule(RuleKind::DfrSgl).run().unwrap();
+    let eng = XlaEngine::new(dir).unwrap();
+    let xla = PathRunner::new(&gd.dataset, cfg)
+        .rule(RuleKind::DfrSgl)
+        .engine(&eng)
+        .run()
+        .unwrap();
+    assert!(eng.stats().xla_gradient_calls > 0, "XLA engine was never used");
+    assert_eq!(eng.stats().native_fallbacks, 0, "unexpected fallbacks");
+    let dist = xla.l2_distance_to(&native);
+    assert!(dist < 1e-5, "engines disagree: ℓ₂ = {dist}");
+}
+
+/// Logistic pathwise fit through the XLA engine.
+#[test]
+fn logistic_pathwise_fit_via_xla_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let gd = SyntheticConfig {
+        n: 32,
+        p: 64,
+        groups: dfr::data::synthetic::GroupSpec::Even(8),
+        response: Response::Logistic,
+        ..SyntheticConfig::default()
+    }
+    .generate(8);
+    let eng = XlaEngine::new(dir).unwrap();
+    let cfg = PathConfig { path_len: 6, ..PathConfig::default() };
+    let fit = PathRunner::new(&gd.dataset, cfg)
+        .rule(RuleKind::DfrSgl)
+        .engine(&eng)
+        .run()
+        .unwrap();
+    assert_eq!(fit.metrics.failed_convergences(), 0);
+    assert!(eng.stats().xla_gradient_calls > 0);
+}
+
+/// The bucketed AOT FISTA chunks reach the same solution as the native
+/// solver on a screened-size reduced problem.
+#[test]
+fn xla_fista_chunks_match_native_solver() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = XlaEngine::new(dir).unwrap();
+    let mut rng = Rng::new(4);
+    let n = 200;
+    for k in [10usize, 33, 60, 120] {
+        let mut x = Matrix::from_fn(n, k, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(n);
+        let groups = dfr::groups::Groups::even(k, 5);
+        let pen = dfr::penalty::Penalty::sgl(groups, 0.9);
+        let all: Vec<usize> = (0..k).collect();
+        let rpen = pen.restrict(&all);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let lam_max =
+            dfr::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; k]), &pen.groups, 0.9);
+        let lam = 0.3 * lam_max;
+        let cfg = dfr::solver::SolverConfig { tol: 1e-10, max_iters: 50_000, ..Default::default() };
+        let native = dfr::solver::solve(&loss, &rpen, lam, &vec![0.0; k], &cfg);
+        let via_xla = eng
+            .solve_reduced_via_xla(&x, &y, &rpen, lam, &vec![0.0; k], &cfg)
+            .unwrap();
+        assert!(via_xla.converged, "k={k}: xla solve did not converge");
+        assert!(
+            (via_xla.objective - native.objective).abs() < 1e-7 * (1.0 + native.objective),
+            "k={k}: objective {} vs native {}",
+            via_xla.objective,
+            native.objective
+        );
+        dfr::testkit::assert_close(&via_xla.beta, &native.beta, 1e-4, &format!("k={k} beta"));
+    }
+    assert!(eng.stats().xla_solver_chunks > 0);
+}
+
+/// A full pathwise DFR fit with BOTH the gradient and the inner solver
+/// served by PJRT — the complete three-layer hot path.
+#[test]
+fn full_path_with_xla_solver_and_gradient() {
+    let Some(dir) = artifacts_dir() else { return };
+    let gd = SyntheticConfig {
+        n: 200,
+        p: 1000,
+        ..SyntheticConfig::default()
+    }
+    .generate(11);
+    let cfg = PathConfig {
+        path_len: 10,
+        solver: dfr::solver::SolverConfig { tol: 1e-8, max_iters: 20_000, ..Default::default() },
+        ..PathConfig::default()
+    };
+    let native = PathRunner::new(&gd.dataset, cfg.clone()).rule(RuleKind::DfrSgl).run().unwrap();
+    let eng = XlaEngine::new(dir).unwrap();
+    let xla = PathRunner::new(&gd.dataset, cfg)
+        .rule(RuleKind::DfrSgl)
+        .engine(&eng)
+        .fixed_path(native.lambdas.clone())
+        .run()
+        .unwrap();
+    let stats = eng.stats();
+    assert!(stats.xla_gradient_calls > 0, "gradients not served by PJRT");
+    assert!(stats.xla_solver_chunks > 0, "solver not served by PJRT");
+    let dist = xla.l2_distance_to(&native);
+    assert!(dist < 1e-4, "full-XLA path drifted: ℓ₂ = {dist}");
+}
+
+/// Regression: one engine reused across two *different* datasets of the
+/// same shape must not serve a stale device buffer. (The device cache was
+/// originally keyed by host pointer + length alone; an allocator reusing a
+/// dropped dataset's memory aliased the cache — caught because a bench
+/// rep produced wholesale-wrong solutions.)
+#[test]
+fn engine_reuse_across_datasets_does_not_alias_buffers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = XlaEngine::new(dir).unwrap();
+    let beta = vec![0.25; 64];
+    for seed in 0..6 {
+        // Fresh allocation each round; drop the previous one first so the
+        // allocator is free to hand back the same address.
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(32, 64, |_, _| rng.gauss());
+        let y: Vec<f64> = rng.gauss_vec(32);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let g_xla = eng.gradient_via_xla(LossKind::Squared, &x, &y, &beta).unwrap();
+        let g_nat = loss.gradient(&beta);
+        dfr::testkit::assert_close(&g_xla, &g_nat, 1e-10, &format!("seed {seed}"));
+    }
+}
+
+/// Shape misses must fall back to native without corrupting results.
+#[test]
+fn unmatched_shape_falls_back() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = XlaEngine::new(dir).unwrap();
+    let mut rng = Rng::new(3);
+    let x = Matrix::from_fn(17, 23, |_, _| rng.gauss()); // no artifact for 17x23
+    let y: Vec<f64> = rng.gauss_vec(17);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let beta = vec![0.3; 23];
+    let g = eng.full_gradient(&loss, &beta);
+    dfr::testkit::assert_close(&g, &loss.gradient(&beta), 1e-12, "fallback");
+    assert_eq!(eng.stats().native_fallbacks, 1);
+}

@@ -1,0 +1,185 @@
+//! Property tests for the screening theory (Propositions 2.1–2.4 / B.1–B.4
+//! of the paper) over randomized problems, via the in-crate testkit.
+//!
+//! * theoretical rules recover the exact support (Props 2.1 / 2.3),
+//! * DFR + KKT loop preserves pathwise solutions (the working guarantee of
+//!   Props 2.2 / 2.4),
+//! * GAP safe never discards an active variable (exactness),
+//! * α ∈ {0, 1} reductions (Appendix A.4),
+//! * λ₁ is the exact entry point of the first predictor (Appendix A.3).
+
+use dfr::loss::{Loss, LossKind};
+use dfr::norms::{eps_g, epsilon_norm, tau_g};
+use dfr::path::lambda_max;
+use dfr::penalty::Penalty;
+use dfr::screen::dfr::screen_theoretical;
+use dfr::solver::{solve, SolverConfig};
+use dfr::testkit::{check, random_problem};
+
+fn tight() -> SolverConfig {
+    SolverConfig { tol: 1e-11, max_iters: 200_000, ..Default::default() }
+}
+
+/// Props 2.1 / 2.3: with the gradient at λ_{k+1} itself, the theoretical
+/// candidate sets contain exactly the active support (up to solver noise).
+#[test]
+fn theoretical_rules_recover_exact_support() {
+    check("theoretical-support", 12, random_problem, |rp| {
+        let ds = &rp.data.dataset;
+        if rp.alpha == 0.0 {
+            return Ok(()); // variable layer degenerate at group-lasso limit
+        }
+        let pen = Penalty::sgl(ds.groups.clone(), rp.alpha);
+        let loss = Loss::new(LossKind::Squared, &ds.x, &ds.y);
+        let p = ds.p();
+        let lam1 = lambda_max(&pen, &loss.gradient(&vec![0.0; p]));
+        let lam = 0.5 * lam1;
+        let sol = solve(&loss, &pen, lam, &vec![0.0; p], &tight());
+        let grad = loss.gradient(&sol.beta);
+        let cands = screen_theoretical(&pen, &grad, &sol.beta, lam);
+        // Every active variable must be in the theoretical candidate set...
+        for (i, &b) in sol.beta.iter().enumerate() {
+            if b.abs() > 1e-7 && !cands.vars.contains(&i) {
+                return Err(format!("active var {i} (β={b}) missing from theoretical set"));
+            }
+        }
+        // ...and flagged-but-zero variables must sit at the KKT boundary
+        // (margin within tolerance), not deep inside the active region.
+        for &i in &cands.vars {
+            if sol.beta[i] == 0.0 {
+                let margin = grad[i].abs() - lam * rp.alpha;
+                if margin > 1e-4 * lam {
+                    return Err(format!(
+                        "var {i} flagged with margin {margin:.3e} but solver kept it 0"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Working guarantee of Props 2.2 / 2.4 + KKT loop: full pathwise DFR
+/// reaches the same solutions as no screening, across random α.
+#[test]
+fn dfr_path_preserves_solutions_randomized() {
+    check("dfr-preserves-solutions", 8, random_problem, |rp| {
+        let ds = &rp.data.dataset;
+        let cfg = dfr::path::PathConfig {
+            alpha: rp.alpha,
+            path_len: 8,
+            solver: SolverConfig { tol: 1e-9, max_iters: 100_000, ..Default::default() },
+            ..Default::default()
+        };
+        let cmp = dfr::path::compare_with_no_screen(ds, &cfg, dfr::screen::RuleKind::DfrSgl)
+            .map_err(|e| e.to_string())?;
+        if cmp.l2_distance > 5e-4 {
+            return Err(format!("ℓ₂ drift {} at α={}", cmp.l2_distance, rp.alpha));
+        }
+        Ok(())
+    });
+}
+
+/// Same, adaptive variant (Props B.2 / B.4).
+#[test]
+fn dfr_asgl_path_preserves_solutions_randomized() {
+    check("dfr-asgl-preserves-solutions", 5, random_problem, |rp| {
+        let ds = &rp.data.dataset;
+        let cfg = dfr::path::PathConfig {
+            alpha: rp.alpha.clamp(0.3, 0.97),
+            path_len: 6,
+            adaptive: Some((0.1, 0.1)),
+            solver: SolverConfig { tol: 1e-9, max_iters: 100_000, ..Default::default() },
+            ..Default::default()
+        };
+        let cmp = dfr::path::compare_with_no_screen(ds, &cfg, dfr::screen::RuleKind::DfrAsgl)
+            .map_err(|e| e.to_string())?;
+        if cmp.l2_distance > 5e-4 {
+            return Err(format!("aSGL ℓ₂ drift {}", cmp.l2_distance));
+        }
+        Ok(())
+    });
+}
+
+/// GAP safe exactness: screening from ANY primal point never discards a
+/// variable active at the screened λ.
+#[test]
+fn gap_safe_is_safe_randomized() {
+    check("gap-safe-safety", 10, random_problem, |rp| {
+        let ds = &rp.data.dataset;
+        if ds.response != dfr::data::Response::Linear {
+            return Ok(());
+        }
+        let alpha = rp.alpha.clamp(0.05, 0.95);
+        let pen = Penalty::sgl(ds.groups.clone(), alpha);
+        let loss = Loss::new(LossKind::Squared, &ds.x, &ds.y);
+        let p = ds.p();
+        let lam1 = lambda_max(&pen, &loss.gradient(&vec![0.0; p]));
+        let lam = 0.45 * lam1;
+        let sol = solve(&loss, &pen, lam, &vec![0.0; p], &tight());
+        // Screen from a deliberately bad primal point (the null vector).
+        let cands = dfr::screen::gap_safe::screen_at(&pen, &ds.x, &ds.y, &vec![0.0; p], lam);
+        for (i, &b) in sol.beta.iter().enumerate() {
+            if b.abs() > 1e-7 && !cands.vars.contains(&i) {
+                return Err(format!("GAP safe unsafely discarded active var {i} (β={b})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Appendix A.4 limit identities for the ε-norm / τ_g machinery.
+#[test]
+fn epsilon_norm_alpha_limits() {
+    check(
+        "epsilon-limits",
+        40,
+        |rng| {
+            let p_g = 1 + rng.below(12);
+            (rng.gauss_vec(p_g), p_g)
+        },
+        |(xs, p_g)| {
+            // α = 1: τ_g = 1, ε_g = 0 → ε-norm = ℓ∞.
+            let e1 = epsilon_norm(xs, eps_g(1.0, *p_g));
+            let linf = xs.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            if (e1 - linf).abs() > 1e-9 * (1.0 + linf) {
+                return Err(format!("α=1 limit broken: {e1} vs ℓ∞ {linf}"));
+            }
+            // α = 0: τ_g = √p_g, ε_g = 1 → ε-norm = ℓ₂.
+            let e0 = epsilon_norm(xs, eps_g(0.0, *p_g));
+            let l2 = xs.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if (e0 - l2).abs() > 1e-9 * (1.0 + l2) {
+                return Err(format!("α=0 limit broken: {e0} vs ℓ₂ {l2}"));
+            }
+            if tau_g(0.5, *p_g) <= 0.0 {
+                return Err("τ_g must be positive".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// λ₁ = ‖∇f(0)‖*_sgl is exactly the entry point of the first predictor.
+#[test]
+fn lambda_max_is_exact_entry_point() {
+    check("lambda-max-entry", 6, random_problem, |rp| {
+        let ds = &rp.data.dataset;
+        if ds.response != dfr::data::Response::Linear {
+            return Ok(());
+        }
+        let alpha = rp.alpha.clamp(0.1, 1.0);
+        let pen = Penalty::sgl(ds.groups.clone(), alpha);
+        let loss = Loss::new(LossKind::Squared, &ds.x, &ds.y);
+        let p = ds.p();
+        let lam1 = lambda_max(&pen, &loss.gradient(&vec![0.0; p]));
+        let above = solve(&loss, &pen, lam1 * 1.001, &vec![0.0; p], &tight());
+        if above.beta.iter().any(|&b| b != 0.0) {
+            return Err("non-null model above λ₁".into());
+        }
+        let below = solve(&loss, &pen, lam1 * 0.97, &vec![0.0; p], &tight());
+        if below.beta.iter().all(|&b| b == 0.0) {
+            return Err("null model well below λ₁".into());
+        }
+        Ok(())
+    });
+}
