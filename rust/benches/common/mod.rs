@@ -11,6 +11,9 @@
 //! `cargo bench` runs a smoke scale (minutes); `DFR_BENCH_FULL=1` switches
 //! to the paper scale (Table A1 sizes, 100-length repeats).
 
+// Shared across all bench targets; each target uses a different subset.
+#![allow(dead_code)]
+
 use dfr::bench_harness::BenchTable;
 use dfr::data::Dataset;
 use dfr::path::{PathConfig, PathRunner};

@@ -6,7 +6,13 @@
 //! * L1/L2 PJRT gradient via the Pallas artifacts (and, when present, the
 //!   `--no-pallas` plain-dot artifacts for the lowering ablation),
 //! * ε-norm solver, SGL prox, one full screening pass, one FISTA step —
-//!   the L3 coordinator costs that must stay below the matvec.
+//!   the L3 coordinator costs that must stay below the matvec,
+//! * the full pathwise DFR fit — the headline number: persistent-workspace
+//!   hot loop vs the fresh-allocation reference, plus the screening
+//!   reduction stats (`C_v/p`, `O_v/p`) that explain it.
+//!
+//! `finish()` emits `target/bench_results/BENCH_perf_hotpath.json`
+//! (median seconds per row), the cross-PR perf trajectory record.
 
 mod common;
 
@@ -14,10 +20,12 @@ use dfr::bench_harness::{time_stat, BenchTable};
 use dfr::data::SyntheticConfig;
 use dfr::loss::{Loss, LossKind};
 use dfr::norms::epsilon_norm;
+use dfr::path::{PathConfig, PathRunner, PathWorkspace};
 use dfr::penalty::Penalty;
 use dfr::rng::Rng;
 use dfr::runtime::XlaEngine;
 use dfr::screen::{screen, RuleKind, ScreenContext};
+use dfr::solver::SolverWorkspace;
 
 fn main() {
     let mut table = BenchTable::new("§Perf — hot-path microbenches (seconds per call)");
@@ -124,6 +132,66 @@ fn main() {
         ));
     });
     table.push("reduced FISTA solve (k=60)", &setting, "solver", acc.mean());
+
+    // Same solve through a persistent workspace (zero allocations in the
+    // iteration loop after warm-up).
+    let mut sws = SolverWorkspace::new();
+    let warm0 = vec![0.0; keep.len()];
+    let acc = time_stat(warm, 20, || {
+        std::hint::black_box(dfr::solver::solve_ws(
+            &red_loss,
+            &rpen,
+            0.3 * lam1,
+            &warm0,
+            &cfg,
+            &mut sws,
+        ));
+    });
+    table.push("reduced FISTA solve (k=60, workspace)", &setting, "solver", acc.mean());
+
+    // --- L3 pathwise fit: the headline perf_hotpath number ---
+    // Persistent-workspace hot loop vs the fresh-allocation reference on
+    // the same dims/rule; screening-reduction stats recorded alongside so
+    // the JSON explains the speedup, not just states it.
+    let path_cfg = PathConfig { path_len: 20, ..PathConfig::default() };
+    let (path_warm, path_reps) = (1, 7);
+    let mut pws = PathWorkspace::new(n, p, ds.m());
+    let acc = time_stat(path_warm, path_reps, || {
+        let fit = PathRunner::new(ds, path_cfg.clone())
+            .rule(RuleKind::DfrSgl)
+            .run_with_workspace(&mut pws)
+            .unwrap();
+        std::hint::black_box(fit.metrics.total_seconds);
+    });
+    table.push("pathwise DFR fit (L=20)", &setting, "dfr", acc.mean());
+
+    let acc = time_stat(path_warm, path_reps, || {
+        let fit = PathRunner::new(ds, path_cfg.clone())
+            .rule(RuleKind::DfrSgl)
+            .reference_alloc(true)
+            .run()
+            .unwrap();
+        std::hint::black_box(fit.metrics.total_seconds);
+    });
+    table.push("pathwise DFR fit (L=20, fresh-alloc reference)", &setting, "dfr", acc.mean());
+
+    let fit = PathRunner::new(ds, path_cfg.clone())
+        .rule(RuleKind::DfrSgl)
+        .run_with_workspace(&mut pws)
+        .unwrap();
+    let pts = fit.metrics.points.len() as f64;
+    table.push(
+        "pathwise C_v/p (candidate reduction)",
+        &setting,
+        "dfr",
+        fit.metrics.points.iter().map(|pt| pt.c_v as f64).sum::<f64>() / (pts * p as f64),
+    );
+    table.push(
+        "pathwise O_v/p (input proportion)",
+        &setting,
+        "dfr",
+        fit.metrics.input_proportion(),
+    );
 
     table.finish("perf_hotpath");
 }

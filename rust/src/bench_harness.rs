@@ -6,8 +6,10 @@
 //!
 //! * [`time_once`] / [`time_stat`] — wall-clock timing with warmup,
 //! * [`BenchTable`] — accumulates rows keyed by (method, setting) and
-//!   renders the paper-style table plus a CSV under
-//!   `target/bench_results/`.
+//!   renders the paper-style table plus a CSV **and a machine-readable
+//!   `BENCH_<name>.json`** (metric/setting/method with mean, stderr,
+//!   median, count) under `target/bench_results/`, so the perf trajectory
+//!   across PRs is diffable.
 
 use crate::metrics::Accumulator;
 use std::collections::BTreeMap;
@@ -120,7 +122,38 @@ impl BenchTable {
         std::fs::write(path, s)
     }
 
-    /// Print to stdout and persist the CSV under `target/bench_results/`.
+    /// Write a machine-readable JSON dump: one row object per
+    /// (metric, setting, method) cell with mean, stderr, median and count.
+    /// Built on [`crate::report::Json`] — the crate's one JSON emitter
+    /// (non-finite values render as null).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::report::Json;
+        let rows: Vec<Json> = self
+            .metrics
+            .iter()
+            .flat_map(|(metric, cells)| {
+                cells.iter().map(move |((setting, method), acc)| {
+                    Json::obj(vec![
+                        ("metric", Json::Str(metric.clone())),
+                        ("setting", Json::Str(setting.clone())),
+                        ("method", Json::Str(method.clone())),
+                        ("mean", Json::Num(acc.mean())),
+                        ("stderr", Json::Num(acc.stderr())),
+                        ("median", Json::Num(acc.median())),
+                        ("count", Json::Num(acc.count() as f64)),
+                    ])
+                })
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        crate::report::write_file(path, &(doc.render() + "\n"))
+    }
+
+    /// Print to stdout and persist the CSV plus the `BENCH_<name>.json`
+    /// dump under `target/bench_results/`.
     pub fn finish(&self, csv_name: &str) {
         println!("{}", self.render());
         let path = format!("target/bench_results/{csv_name}.csv");
@@ -128,6 +161,12 @@ impl BenchTable {
             eprintln!("warning: could not write {path}: {e}");
         } else {
             println!("[csv] {path}");
+        }
+        let jpath = format!("target/bench_results/BENCH_{csv_name}.json");
+        if let Err(e) = self.write_json(&jpath) {
+            eprintln!("warning: could not write {jpath}: {e}");
+        } else {
+            println!("[json] {jpath}");
         }
     }
 }
@@ -208,6 +247,23 @@ mod tests {
         let content = std::fs::read_to_string(path).unwrap();
         assert!(content.starts_with("metric,setting,method"));
         assert!(content.contains("m,s,x,1"));
+    }
+
+    #[test]
+    fn json_dump_has_all_cells_and_median() {
+        let mut t = BenchTable::new("demo \"quoted\"");
+        t.push("seconds", "200x1000", "DFR-SGL", 1.0);
+        t.push("seconds", "200x1000", "DFR-SGL", 3.0);
+        t.push("seconds", "200x1000", "DFR-SGL", 100.0);
+        let path = "target/bench_results/BENCH__test_demo.json";
+        t.write_json(path).unwrap();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert!(content.contains("\"metric\":\"seconds\""));
+        assert!(content.contains("\"setting\":\"200x1000\""));
+        assert!(content.contains("\"method\":\"DFR-SGL\""));
+        assert!(content.contains("\"median\":3"));
+        assert!(content.contains("\"count\":3"));
+        assert!(content.contains("demo \\\"quoted\\\""));
     }
 
     #[test]

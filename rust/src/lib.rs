@@ -70,7 +70,8 @@ pub mod prelude {
     pub use crate::loss::LossKind;
     pub use crate::metrics::{PathMetrics, PointMetrics};
     pub use crate::model_api::{FittedSgl, SglModel};
-    pub use crate::path::{PathConfig, PathFit, PathRunner};
+    pub use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
+    pub use crate::solver::SolverWorkspace;
     pub use crate::penalty::{AdaptiveWeights, Penalty};
     pub use crate::rng::Rng;
     pub use crate::screen::RuleKind;

@@ -133,32 +133,61 @@ impl Matrix {
     /// `Xᵀ r` fanned out across a thread scope — the no-XLA gradient hot
     /// path for large `p`.
     pub fn t_matvec_par(&self, r: &[f64], threads: usize) -> Vec<f64> {
-        assert_eq!(r.len(), self.n);
         let mut out = vec![0.0; self.p];
+        self.t_matvec_par_into(r, threads, &mut out);
+        out
+    }
+
+    /// `out = Xᵀ r` fanned out across a thread scope, reusing the output
+    /// buffer (the allocation-free hot-loop form).
+    pub fn t_matvec_par_into(&self, r: &[f64], threads: usize, out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(out.len(), self.p);
         // Scoped-thread spawn costs ~50–100 µs per worker and the matvec
         // is memory-bandwidth bound, so threading only breaks even once
         // the matrix itself is far larger than L2 (measured in
         // benches/perf_hotpath.rs — see EXPERIMENTS.md §Perf).
         if threads <= 1 || self.n * self.p < 8_000_000 {
-            self.t_matvec_into(r, &mut out);
-            return out;
+            self.t_matvec_into(r, out);
+            return;
         }
-        parallel::for_each_chunk(&mut out, threads, |start, chunk| {
+        parallel::for_each_chunk(out, threads, |start, chunk| {
             for (k, o) in chunk.iter_mut().enumerate() {
                 *o = dot(self.col(start + k), r);
             }
         });
-        out
     }
 
     /// Gather the given columns into a new (n × idx.len()) matrix — used to
-    /// build the screening-reduced design for the inner solver.
+    /// build the screening-reduced design for the inner solver. Pathwise
+    /// callers should prefer [`ReducedDesign`], which reuses its backing
+    /// buffer and diffs consecutive index sets.
     pub fn gather_columns(&self, idx: &[usize]) -> Matrix {
         let mut data = Vec::with_capacity(self.n * idx.len());
         for &j in idx {
             data.extend_from_slice(self.col(j));
         }
         Matrix { n: self.n, p: idx.len(), data }
+    }
+
+    /// Drop all but the first `k` columns in place (capacity is retained,
+    /// so subsequent [`Matrix::push_col`] calls do not reallocate).
+    pub fn truncate_cols(&mut self, k: usize) {
+        assert!(k <= self.p, "truncate_cols past the end");
+        self.data.truncate(self.n * k);
+        self.p = k;
+    }
+
+    /// Append one column (length must be `n`).
+    pub fn push_col(&mut self, col: &[f64]) {
+        assert_eq!(col.len(), self.n);
+        self.data.extend_from_slice(col);
+        self.p += 1;
+    }
+
+    /// Reserve backing storage for `extra` additional columns.
+    pub fn reserve_cols(&mut self, extra: usize) {
+        self.data.reserve(self.n * extra);
     }
 
     /// ℓ₂ norm of each column.
@@ -232,6 +261,124 @@ impl Matrix {
         }
         m
     }
+}
+
+/// Incremental cache of a screening-reduced design `X[:, idx]`.
+///
+/// The pathwise coordinator re-gathers the optimization set every λ step
+/// and every KKT re-entry round; consecutive sets overlap heavily (the
+/// active set persists, KKT rounds only add variables). This cache keeps
+/// one grow-only backing buffer across the whole path and, on each update,
+/// keeps the longest common prefix of the sorted index lists in place —
+/// identical sets cost nothing, append-only growth copies only the new
+/// columns, and even a full rebuild reuses the allocation.
+///
+/// The source matrix is identified by pointer + length + a strided content
+/// fingerprint, so reusing one cache across datasets (CV folds, bench
+/// repeats) detects a swapped design even when the allocator hands the new
+/// matrix the old one's address. Contract: source matrices are immutable
+/// between updates (true everywhere in this crate — designs never change
+/// after construction); an *in-place* mutation of the same allocation can
+/// dodge the 64 sampled positions, so callers mutating a design must call
+/// [`ReducedDesign::invalidate`] themselves.
+#[derive(Clone, Debug)]
+pub struct ReducedDesign {
+    idx: Vec<usize>,
+    mat: Matrix,
+    key: Option<(usize, usize, u64)>,
+    /// Updates answered with zero copying (identical index set).
+    pub hits: usize,
+    /// Columns kept in place across updates (common sorted prefix).
+    pub kept_cols: usize,
+    /// Columns memcpy'd from the source matrix.
+    pub copied_cols: usize,
+}
+
+impl ReducedDesign {
+    pub fn new() -> Self {
+        ReducedDesign {
+            idx: Vec::new(),
+            mat: Matrix::zeros(0, 0),
+            key: None,
+            hits: 0,
+            kept_cols: 0,
+            copied_cols: 0,
+        }
+    }
+
+    /// Point the cache at `x[:, idx]` (sorted indices), reusing any columns
+    /// already in place, and return the reduced matrix.
+    pub fn update(&mut self, x: &Matrix, idx: &[usize]) -> &Matrix {
+        let key = (
+            x.as_slice().as_ptr() as usize,
+            x.as_slice().len(),
+            fingerprint(x.as_slice()),
+        );
+        if self.key != Some(key) {
+            self.key = Some(key);
+            self.idx.clear();
+            if self.mat.nrows() == x.nrows() {
+                self.mat.truncate_cols(0);
+            } else {
+                self.mat = Matrix::zeros(x.nrows(), 0);
+            }
+        }
+        if self.idx == idx {
+            self.hits += 1;
+            return &self.mat;
+        }
+        let keep = self.idx.iter().zip(idx.iter()).take_while(|(a, b)| a == b).count();
+        self.mat.truncate_cols(keep);
+        self.idx.truncate(keep);
+        self.mat.reserve_cols(idx.len() - keep);
+        for &j in &idx[keep..] {
+            self.mat.push_col(x.col(j));
+        }
+        self.idx.extend_from_slice(&idx[keep..]);
+        self.kept_cols += keep;
+        self.copied_cols += idx.len() - keep;
+        &self.mat
+    }
+
+    /// The cached reduced matrix (columns of the last `update`).
+    pub fn matrix(&self) -> &Matrix {
+        &self.mat
+    }
+
+    /// The column indices currently cached.
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Force the next update to rebuild from scratch (buffer retained).
+    pub fn invalidate(&mut self) {
+        self.idx.clear();
+        self.key = None;
+        self.mat.truncate_cols(0);
+    }
+}
+
+impl Default for ReducedDesign {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// FNV-style fingerprint over up to 64 strided samples — cheap identity
+/// check for "is this the same array as last time". Single source of truth
+/// for both the [`ReducedDesign`] cache and the runtime's device-buffer
+/// cache key.
+pub(crate) fn fingerprint(data: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let n = data.len();
+    let stride = (n / 64).max(1);
+    let mut i = 0;
+    while i < n {
+        h ^= data[i].to_bits();
+        h = h.wrapping_mul(0x100000001b3);
+        i += stride;
+    }
+    h
 }
 
 /// Dot product with 4 independent accumulators (lets LLVM vectorize without
@@ -339,6 +486,59 @@ mod tests {
         let g = m.gather_columns(&[1]);
         assert_eq!(g.ncols(), 1);
         assert_eq!(g.col(0), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn parallel_t_matvec_into_matches_allocating_form() {
+        let mut rng = crate::rng::Rng::new(5);
+        let m = Matrix::from_fn(23, 301, |_, _| rng.gauss());
+        let r = rng.gauss_vec(23);
+        let a = m.t_matvec_par(&r, 3);
+        let mut b = vec![1.0; 301]; // non-zero garbage: must be overwritten
+        m.t_matvec_par_into(&r, 3, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn truncate_and_push_cols_roundtrip() {
+        let mut m = small();
+        m.truncate_cols(1);
+        assert_eq!(m.ncols(), 1);
+        assert_eq!(m.col(0), &[1.0, 2.0, 3.0]);
+        m.push_col(&[7.0, 8.0, 9.0]);
+        assert_eq!(m.ncols(), 2);
+        assert_eq!(m.col(1), &[7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn reduced_design_matches_fresh_gather() {
+        let mut rng = crate::rng::Rng::new(6);
+        let x = Matrix::from_fn(11, 14, |_, _| rng.gauss());
+        let mut rd = ReducedDesign::new();
+        for idx in [
+            vec![1usize, 3, 5],
+            vec![1, 3, 6, 7],    // shares the [1, 3] prefix
+            vec![1, 3, 6, 7],    // identical → cache hit
+            vec![0, 3, 6],       // no shared prefix → rebuild
+            vec![0, 3, 6, 9, 12], // append-only growth
+        ] {
+            let got = rd.update(&x, &idx).clone();
+            assert_eq!(got, x.gather_columns(&idx), "idx {idx:?}");
+            assert_eq!(rd.indices(), idx.as_slice());
+        }
+        assert_eq!(rd.hits, 1);
+        assert!(rd.kept_cols >= 2, "prefix reuse never happened");
+    }
+
+    #[test]
+    fn reduced_design_detects_matrix_change() {
+        let mut rng = crate::rng::Rng::new(7);
+        let a = Matrix::from_fn(9, 6, |_, _| rng.gauss());
+        let b = Matrix::from_fn(9, 6, |_, _| rng.gauss());
+        let mut rd = ReducedDesign::new();
+        rd.update(&a, &[0, 2, 4]);
+        let got = rd.update(&b, &[0, 2, 4]).clone();
+        assert_eq!(got, b.gather_columns(&[0, 2, 4]), "stale columns served");
     }
 
     #[test]

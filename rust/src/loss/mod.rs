@@ -102,11 +102,19 @@ impl<'a> Loss<'a> {
     /// Gradient given precomputed `Xβ` (threaded over columns).
     pub fn gradient_from_xb(&self, xb: &[f64]) -> Vec<f64> {
         let mut r = vec![0.0; self.n()];
-        self.residual_from_xb(xb, &mut r);
-        let n = self.n() as f64;
-        let mut g = self.x.t_matvec_par(&r, crate::parallel::default_threads());
-        g.iter_mut().for_each(|v| *v /= n);
+        let mut g = vec![0.0; self.x.ncols()];
+        self.gradient_from_xb_into(xb, &mut r, &mut g);
         g
+    }
+
+    /// `out = Xᵀ·residual(xb)/n` with caller-provided buffers — the
+    /// allocation-free form the pathwise coordinator and the solvers use.
+    /// `r_scratch` (length n) receives the residual as a side effect.
+    pub fn gradient_from_xb_into(&self, xb: &[f64], r_scratch: &mut [f64], out: &mut [f64]) {
+        self.residual_from_xb(xb, r_scratch);
+        self.x.t_matvec_par_into(r_scratch, crate::parallel::default_threads(), out);
+        let inv_n = 1.0 / self.n() as f64;
+        out.iter_mut().for_each(|v| *v *= inv_n);
     }
 
     /// Upper bound on the Lipschitz constant of `∇f`:

@@ -177,9 +177,13 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "info" => {
             println!("dfr {}", env!("CARGO_PKG_VERSION"));
             println!("threads: {}", dfr::parallel::default_threads());
-            match XlaEngine::new("artifacts") {
-                Ok(_) => println!("pjrt: cpu client OK"),
-                Err(e) => println!("pjrt: unavailable ({e})"),
+            if XlaEngine::compiled_with_xla() {
+                match XlaEngine::new("artifacts") {
+                    Ok(_) => println!("pjrt: cpu client OK"),
+                    Err(e) => println!("pjrt: unavailable ({e})"),
+                }
+            } else {
+                println!("pjrt: compiled without the `xla` feature (native engine only)");
             }
             let artifacts = std::fs::read_dir("artifacts")
                 .map(|rd| rd.filter_map(|e| e.ok()).count())

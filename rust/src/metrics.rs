@@ -77,12 +77,14 @@ impl PathMetrics {
 
 /// Online mean/stderr accumulator used by the bench harness and the
 /// repeated-simulation reports ("averaged over 100 repeats, with standard
-/// errors").
+/// errors"). Raw samples are retained so order statistics (median) survive
+/// into the machine-readable bench output.
 #[derive(Clone, Debug, Default)]
 pub struct Accumulator {
     n: usize,
     mean: f64,
     m2: f64,
+    samples: Vec<f64>,
 }
 
 impl Accumulator {
@@ -95,6 +97,7 @@ impl Accumulator {
         let d = x - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (x - self.mean);
+        self.samples.push(x);
     }
 
     pub fn count(&self) -> usize {
@@ -129,6 +132,30 @@ impl Accumulator {
     /// `mean ± stderr` formatted like the paper's tables.
     pub fn fmt(&self) -> String {
         format!("{:.3} ± {:.3}", self.mean(), self.stderr())
+    }
+
+    /// Median of the pushed samples (0 when empty; midpoint of the two
+    /// central order statistics for even counts).
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        // total_cmp: NaN samples sort high instead of panicking, so a
+        // degenerate metric (e.g. a mean over zero points) cannot abort a
+        // bench run at serialization time.
+        s.sort_by(|a, b| a.total_cmp(b));
+        let k = s.len();
+        if k % 2 == 1 {
+            s[k / 2]
+        } else {
+            0.5 * (s[k / 2 - 1] + s[k / 2])
+        }
+    }
+
+    /// The raw samples, in push order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
     }
 }
 
@@ -170,6 +197,19 @@ mod tests {
         let sd = (5.0f64 / 3.0).sqrt();
         assert!((a.std_dev() - sd).abs() < 1e-12);
         assert!((a.stderr() - sd / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_median() {
+        let mut a = Accumulator::new();
+        assert_eq!(a.median(), 0.0);
+        for x in [5.0, 1.0, 3.0] {
+            a.push(x);
+        }
+        assert_eq!(a.median(), 3.0);
+        a.push(100.0); // even count → midpoint, robust to the outlier
+        assert_eq!(a.median(), 4.0);
+        assert_eq!(a.samples(), &[5.0, 1.0, 3.0, 100.0]);
     }
 
     #[test]

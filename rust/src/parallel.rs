@@ -6,7 +6,6 @@
 //! repeats) — so that is all we build.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Number of worker threads to use by default: respects
 /// `DFR_THREADS` if set, otherwise `available_parallelism`, capped at 16.
@@ -50,27 +49,40 @@ pub fn for_each_chunk<T: Send>(
 
 /// Parallel map over indices `0..n` with a bounded worker pool; results are
 /// returned in index order. Work is pulled from a shared atomic counter so
-/// uneven item costs (e.g. no-screen vs screened path fits) balance out.
+/// uneven item costs (e.g. no-screen vs screened path fits) balance out;
+/// each worker accumulates `(index, result)` pairs in its own output buffer
+/// — no shared lock on the result store — and the buffers are merged into
+/// index order after the workers join.
 pub fn par_map<R: Send>(n: usize, threads: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
     let threads = threads.max(1).min(n.max(1));
     if threads == 1 {
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(i);
-                results.lock().unwrap()[i] = Some(r);
-            });
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("par_map worker panicked") {
+                slots[i] = Some(r);
+            }
         }
     });
-    results.into_inner().unwrap().into_iter().map(|r| r.unwrap()).collect()
+    slots.into_iter().map(|r| r.expect("par_map missed an index")).collect()
 }
 
 #[cfg(test)]

@@ -12,30 +12,64 @@
 //! The coordinator owns warm starts, timing, and all Appendix-D metrics.
 //! Dense compute (full gradients, reduced solves) flows through an
 //! exchangeable [`Engine`] so the PJRT/XLA runtime can serve the hot path.
+//!
+//! ## Persistent workspaces (zero-allocation hot loop)
+//!
+//! All per-step scratch lives in a [`PathWorkspace`] that persists across λ
+//! steps and KKT re-entry rounds: solver buffers ([`SolverWorkspace`]), the
+//! incrementally-maintained reduced design ([`ReducedDesign`] — consecutive
+//! optimization sets share their sorted prefix, so re-gathers only copy new
+//! columns), gradient/residual/mask scratch, and the KKT violation lists.
+//! The residual is *carried*: each reduced solve leaves its fitted values
+//! `Xβ` in the workspace, and [`Engine::full_gradient_carried`] turns them
+//! into the screening/KKT gradient with a single `Xᵀr` pass — no redundant
+//! `Xβ` recomputation anywhere in the solve → KKT → re-solve cycle.
 
 pub mod lambda;
 
 pub use lambda::{lambda_max, log_linear_path};
 
 use crate::data::Dataset;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, ReducedDesign};
 use crate::loss::{Loss, LossKind};
 use crate::metrics::{PathMetrics, PointMetrics};
 use crate::penalty::{AdaptiveWeights, Penalty, RestrictedPenalty};
 use crate::screen::{self, RuleKind, ScreenContext};
-use crate::solver::{SolveResult, SolverConfig};
+use crate::solver::{SolveResult, SolverConfig, SolverWorkspace};
 use std::time::Instant;
 
 /// Dense-compute backend. The default native engine runs everything on the
 /// in-crate linear algebra; the XLA engine (in [`crate::runtime`]) serves
-/// the same two operations from AOT-compiled JAX/Pallas artifacts.
+/// the same operations from AOT-compiled JAX/Pallas artifacts.
 pub trait Engine {
     /// Full gradient `∇f(β)` over all p columns (screening / KKT checks).
     fn full_gradient(&self, loss: &Loss, beta: &[f64]) -> Vec<f64> {
         loss.gradient(beta)
     }
 
-    /// Solve the reduced problem (columns already gathered).
+    /// Full gradient written into `out`, given coordinator-carried fitted
+    /// values `xb = Xβ` and a residual scratch buffer (length n).
+    ///
+    /// The native engine turns this into a single `Xᵀr` pass with no
+    /// allocation and no `Xβ` recomputation; backends that compute from `β`
+    /// directly (e.g. PJRT gradient artifacts) may ignore `xb` — the
+    /// default implementation routes through [`Engine::full_gradient`].
+    fn full_gradient_carried(
+        &self,
+        loss: &Loss,
+        beta: &[f64],
+        xb: &[f64],
+        r_scratch: &mut [f64],
+        out: &mut [f64],
+    ) {
+        let _ = (xb, r_scratch);
+        let g = self.full_gradient(loss, beta);
+        out.copy_from_slice(&g);
+    }
+
+    /// Solve the reduced problem (columns already gathered) using the
+    /// caller's solver workspace.
+    #[allow(clippy::too_many_arguments)]
     fn solve_reduced(
         &self,
         kind: LossKind,
@@ -45,9 +79,10 @@ pub trait Engine {
         lam: f64,
         beta0: &[f64],
         cfg: &SolverConfig,
+        ws: &mut SolverWorkspace,
     ) -> SolveResult {
         let loss = Loss::new(kind, x_red, y);
-        crate::solver::solve(&loss, pen, lam, beta0, cfg)
+        crate::solver::solve_ws(&loss, pen, lam, beta0, cfg, ws)
     }
 
     fn name(&self) -> &'static str {
@@ -58,7 +93,87 @@ pub trait Engine {
 /// Pure-Rust backend.
 pub struct NativeEngine;
 
-impl Engine for NativeEngine {}
+impl Engine for NativeEngine {
+    fn full_gradient_carried(
+        &self,
+        loss: &Loss,
+        beta: &[f64],
+        xb: &[f64],
+        r_scratch: &mut [f64],
+        out: &mut [f64],
+    ) {
+        let _ = beta;
+        loss.gradient_from_xb_into(xb, r_scratch, out);
+    }
+}
+
+/// Reusable state for pathwise fits: pre-sized scratch carried across λ
+/// steps, KKT re-entry rounds, and (when reused via
+/// [`PathRunner::run_with_workspace`]) whole path fits. Buffers are
+/// grow-only; after the first step at full size the hot loop allocates
+/// nothing.
+#[derive(Clone, Debug, Default)]
+pub struct PathWorkspace {
+    /// Inner-solver buffers (FISTA/ATOS iteration state).
+    pub solver: SolverWorkspace,
+    /// Incrementally-maintained reduced design `X[:, O_v]`.
+    pub reduced: ReducedDesign,
+    /// Gradient produced each step (swapped with the previous step's).
+    pub(crate) grad: Vec<f64>,
+    /// Residual scratch (length n).
+    pub(crate) r: Vec<f64>,
+    /// Carried fitted values `Xβ` at the current solution.
+    pub(crate) xb: Vec<f64>,
+    /// Reduced warm start gathered from the previous full solution.
+    pub(crate) warm: Vec<f64>,
+    /// Current solution scattered to full length.
+    pub(crate) beta_full: Vec<f64>,
+    /// Warm-start copy for the dynamic GAP-safe re-solve.
+    pub(crate) beta_warm: Vec<f64>,
+    /// Membership mask of the optimization set (length p).
+    pub(crate) in_ov: Vec<bool>,
+    /// Group membership mask of the optimization set (length m).
+    pub(crate) group_mask: Vec<bool>,
+    /// Per-group activity scratch for the variable-level KKT check.
+    pub(crate) group_active: Vec<bool>,
+    /// KKT violation list (reused each round).
+    pub(crate) viol: Vec<usize>,
+    /// Index-union scratch, rotated with the live `O_v` by swap.
+    pub(crate) idx_scratch: Vec<usize>,
+}
+
+impl PathWorkspace {
+    /// Workspace pre-sized for an (n × p, m groups) problem.
+    pub fn new(n: usize, p: usize, m: usize) -> Self {
+        let mut ws = Self::default();
+        ws.ensure(n, p, m);
+        ws
+    }
+
+    /// (Re)size every buffer; retained capacity makes this free once the
+    /// workspace has seen the largest problem.
+    pub fn ensure(&mut self, n: usize, p: usize, m: usize) {
+        fn fit_f(v: &mut Vec<f64>, len: usize) {
+            v.clear();
+            v.resize(len, 0.0);
+        }
+        fn fit_b(v: &mut Vec<bool>, len: usize) {
+            v.clear();
+            v.resize(len, false);
+        }
+        fit_f(&mut self.grad, p);
+        fit_f(&mut self.r, n);
+        fit_f(&mut self.xb, n);
+        fit_f(&mut self.beta_full, p);
+        fit_f(&mut self.beta_warm, p);
+        self.warm.clear();
+        fit_b(&mut self.in_ov, p);
+        fit_b(&mut self.group_mask, m);
+        fit_b(&mut self.group_active, m);
+        self.viol.clear();
+        self.idx_scratch.clear();
+    }
+}
 
 /// Pathwise fit configuration (defaults = Table A1 synthetic column).
 #[derive(Clone, Debug)]
@@ -128,6 +243,9 @@ pub struct PathRunner<'a> {
     fixed_path: Option<Vec<f64>>,
     /// Precomputed adaptive weights (so repeats/folds can share them).
     weights: Option<AdaptiveWeights>,
+    /// Testing aid: recreate the workspace every λ step, so the fit runs
+    /// with fresh-allocation semantics (reference for equivalence tests).
+    reference_alloc: bool,
 }
 
 static NATIVE: NativeEngine = NativeEngine;
@@ -141,6 +259,7 @@ impl<'a> PathRunner<'a> {
             engine: &NATIVE,
             fixed_path: None,
             weights: None,
+            reference_alloc: false,
         }
     }
 
@@ -164,6 +283,16 @@ impl<'a> PathRunner<'a> {
         self
     }
 
+    /// Disable workspace reuse: every λ step gets freshly-allocated
+    /// coordinator buffers, and every inner solve (including KKT re-entry
+    /// rounds and the dynamic re-solve) gets fresh solver buffers and a
+    /// cold reduced-design gather. Slower by construction; exists so tests
+    /// can prove buffer reuse never changes solutions.
+    pub fn reference_alloc(mut self, on: bool) -> Self {
+        self.reference_alloc = on;
+        self
+    }
+
     /// Build the penalty this run will use (aSGL iff the config or rule
     /// demands it).
     pub fn build_penalty(&self) -> Penalty {
@@ -181,14 +310,25 @@ impl<'a> PathRunner<'a> {
         }
     }
 
-    /// Run the pathwise fit.
+    /// Run the pathwise fit with a private workspace.
     pub fn run(&self) -> anyhow::Result<PathFit> {
+        let ds = self.dataset;
+        let mut ws = PathWorkspace::new(ds.n(), ds.p(), ds.m());
+        self.run_with_workspace(&mut ws)
+    }
+
+    /// Run the pathwise fit reusing the caller's workspace (benches, CV
+    /// folds, and repeated fits amortize all buffer allocation this way;
+    /// the workspace self-heals if the dataset or its shape changed).
+    pub fn run_with_workspace(&self, ws: &mut PathWorkspace) -> anyhow::Result<PathFit> {
         let ds = self.dataset;
         let pen = self.build_penalty();
         let kind = LossKind::for_response(ds.response);
         let loss = Loss::new(kind, &ds.x, &ds.y);
         let p = ds.p();
         let m = ds.m();
+        let n = ds.n();
+        ws.ensure(n, p, m);
 
         let start_total = Instant::now();
         let grad0 = self.engine.full_gradient(&loss, &vec![0.0; p]);
@@ -215,7 +355,13 @@ impl<'a> PathRunner<'a> {
         });
 
         let mut grad_prev = grad0;
+        // The live optimization set; rotated with `ws.idx_scratch` so the
+        // KKT re-entry unions never allocate after warm-up.
+        let mut o_v: Vec<usize> = Vec::new();
         for k in 0..l - 1 {
+            if self.reference_alloc {
+                *ws = PathWorkspace::new(n, p, m);
+            }
             let t_point = Instant::now();
             let lam_prev = lambdas[k];
             let lam_next = lambdas[k + 1];
@@ -238,11 +384,20 @@ impl<'a> PathRunner<'a> {
             let c_g = cands.groups.len();
 
             // Optimization set = candidates ∪ previously active.
-            let mut o_v = screen::union_sorted(&cands.vars, &active_prev);
+            screen::union_sorted_into(&cands.vars, &active_prev, &mut o_v);
             if o_v.is_empty() {
-                // Null model survives this step — nothing to solve.
+                // Null model survives this step — nothing to solve. The
+                // carried fitted values are identically zero.
                 betas.push(vec![0.0; p]);
-                grad_prev = self.engine.full_gradient(&loss, betas.last().unwrap());
+                ws.xb.fill(0.0);
+                self.engine.full_gradient_carried(
+                    &loss,
+                    betas.last().unwrap(),
+                    &ws.xb,
+                    &mut ws.r,
+                    &mut ws.grad,
+                );
+                std::mem::swap(&mut grad_prev, &mut ws.grad);
                 metrics.points.push(PointMetrics {
                     lambda: lam_next,
                     c_v,
@@ -258,26 +413,32 @@ impl<'a> PathRunner<'a> {
             let mut kkt_violations = 0usize;
             let mut solver_iterations = 0usize;
             let mut converged;
-            let mut beta_next;
-            let mut grad_next;
             let mut rounds = 0usize;
             loop {
                 rounds += 1;
-                let (res, beta_full) = self.solve_on(&pen, kind, &loss, &o_v, beta_prev, lam_next);
+                let res = self.solve_on(&pen, kind, &loss, &o_v, beta_prev, lam_next, ws);
                 solver_iterations += res.iterations;
                 converged = res.converged;
-                grad_next = self.engine.full_gradient(&loss, &beta_full);
-                beta_next = beta_full;
+                // Residual-carried gradient: one Xᵀr pass over the fitted
+                // values the solve just produced.
+                self.engine.full_gradient_carried(
+                    &loss,
+                    &ws.beta_full,
+                    &ws.xb,
+                    &mut ws.r,
+                    &mut ws.grad,
+                );
 
                 if !self.rule.needs_kkt() || rounds > self.cfg.max_kkt_rounds {
                     break;
                 }
-                let viol = self.kkt_check(&pen, &grad_next, &beta_next, lam_next, &o_v);
-                if viol.is_empty() {
+                self.kkt_check_into(&pen, lam_next, &o_v, ws);
+                if ws.viol.is_empty() {
                     break;
                 }
-                kkt_violations += viol.len();
-                o_v = screen::union_sorted(&o_v, &viol);
+                kkt_violations += ws.viol.len();
+                screen::union_sorted_into(&o_v, &ws.viol, &mut ws.idx_scratch);
+                std::mem::swap(&mut o_v, &mut ws.idx_scratch);
             }
 
             // Dynamic GAP safe: attempt a post-hoc shrink + resolve cycle
@@ -286,22 +447,31 @@ impl<'a> PathRunner<'a> {
             // designs, measured in fit_seconds).
             if self.rule == RuleKind::GapSafeDyn {
                 let dyn_c = crate::screen::gap_safe::screen_dynamic(
-                    &pen, &ds.x, &ds.y, &beta_next, lam_next,
+                    &pen, &ds.x, &ds.y, &ws.beta_full, lam_next,
                 );
-                let keep = screen::union_sorted(&dyn_c.vars, &screen::active_vars(&beta_next));
+                let keep =
+                    screen::union_sorted(&dyn_c.vars, &screen::active_vars(&ws.beta_full));
                 if keep.len() < o_v.len() {
-                    let (res, beta_full) =
-                        self.solve_on(&pen, kind, &loss, &keep, &beta_next, lam_next);
+                    ws.beta_warm.copy_from_slice(&ws.beta_full);
+                    let warm = std::mem::take(&mut ws.beta_warm);
+                    let res = self.solve_on(&pen, kind, &loss, &keep, &warm, lam_next, ws);
+                    ws.beta_warm = warm;
                     solver_iterations += res.iterations;
                     converged = res.converged;
-                    beta_next = beta_full;
-                    grad_next = self.engine.full_gradient(&loss, &beta_next);
-                    o_v = keep;
+                    self.engine.full_gradient_carried(
+                        &loss,
+                        &ws.beta_full,
+                        &ws.xb,
+                        &mut ws.r,
+                        &mut ws.grad,
+                    );
+                    o_v.clear();
+                    o_v.extend_from_slice(&keep);
                 }
             }
 
-            let a_v = screen::active_vars(&beta_next).len();
-            let a_g = screen::active_groups(&beta_next, &pen.groups).len();
+            let a_v = screen::active_vars(&ws.beta_full).len();
+            let a_g = screen::active_groups(&ws.beta_full, &pen.groups).len();
             let o_g = {
                 let mut gs: Vec<usize> =
                     o_v.iter().map(|&i| pen.groups.group_of(i)).collect();
@@ -321,15 +491,17 @@ impl<'a> PathRunner<'a> {
                 converged,
                 fit_seconds: t_point.elapsed().as_secs_f64(),
             });
-            betas.push(beta_next);
-            grad_prev = grad_next;
+            betas.push(ws.beta_full.clone());
+            std::mem::swap(&mut grad_prev, &mut ws.grad);
         }
 
         metrics.total_seconds = start_total.elapsed().as_secs_f64();
         Ok(PathFit { rule: self.rule, lambdas, betas, metrics })
     }
 
-    /// Solve restricted to `o_v`, scatter back to full length.
+    /// Solve restricted to `o_v`; leaves the solution scattered to full
+    /// length in `ws.beta_full` and its fitted values `Xβ` in `ws.xb`.
+    #[allow(clippy::too_many_arguments)]
     fn solve_on(
         &self,
         pen: &Penalty,
@@ -338,66 +510,87 @@ impl<'a> PathRunner<'a> {
         o_v: &[usize],
         warm_full: &[f64],
         lam: f64,
-    ) -> (SolveResult, Vec<f64>) {
+        ws: &mut PathWorkspace,
+    ) -> SolveResult {
+        if self.reference_alloc {
+            // Reference semantics at *every* solve — including KKT re-entry
+            // rounds and the dynamic re-solve — not just per λ step: cold
+            // gather, freshly-allocated solver buffers.
+            ws.reduced.invalidate();
+            ws.solver = SolverWorkspace::new();
+        }
         let p = loss.x.ncols();
         if o_v.len() == p {
             // Full problem — skip the gather.
-            let res = crate::solver::solve(loss, pen, lam, warm_full, &self.cfg.solver);
-            let beta = res.beta.clone();
-            return (res, beta);
+            let res =
+                crate::solver::solve_ws(loss, pen, lam, warm_full, &self.cfg.solver, &mut ws.solver);
+            ws.beta_full.copy_from_slice(&res.beta);
+            // solve_ws keeps Xβ at the returned iterate in the workspace.
+            ws.xb.copy_from_slice(ws.solver.fitted());
+            return res;
         }
-        let x_red = loss.x.gather_columns(o_v);
         let rpen = pen.restrict(o_v);
-        let warm: Vec<f64> = o_v.iter().map(|&i| warm_full[i]).collect();
-        let res = self
-            .engine
-            .solve_reduced(kind, &x_red, loss.y, &rpen, lam, &warm, &self.cfg.solver);
-        let mut beta_full = vec![0.0; p];
-        for (k, &i) in o_v.iter().enumerate() {
-            beta_full[i] = res.beta[k];
+        ws.warm.clear();
+        ws.warm.extend(o_v.iter().map(|&i| warm_full[i]));
+        let x_red = ws.reduced.update(loss.x, o_v);
+        let res = self.engine.solve_reduced(
+            kind,
+            x_red,
+            loss.y,
+            &rpen,
+            lam,
+            &ws.warm,
+            &self.cfg.solver,
+            &mut ws.solver,
+        );
+        // Carried fitted values: the reduced fit IS the full-model Xβ
+        // (excluded columns contribute nothing). Recomputed from the
+        // reduced design (O(n·|O_v|)) so any Engine backend is safe.
+        x_red.matvec_into(&res.beta, &mut ws.xb);
+        ws.beta_full.fill(0.0);
+        for (t, &i) in o_v.iter().enumerate() {
+            ws.beta_full[i] = res.beta[t];
         }
-        (res, beta_full)
+        res
     }
 
     /// Rule-appropriate KKT check over the complement of the optimization
-    /// set; returns violating variables (sorted).
-    fn kkt_check(
-        &self,
-        pen: &Penalty,
-        grad_new: &[f64],
-        beta_new: &[f64],
-        lam: f64,
-        o_v: &[usize],
-    ) -> Vec<usize> {
+    /// set at the solution currently in `ws` (gradient in `ws.grad`,
+    /// coefficients in `ws.beta_full`); fills `ws.viol` (sorted).
+    fn kkt_check_into(&self, pen: &Penalty, lam: f64, o_v: &[usize], ws: &mut PathWorkspace) {
         let p = pen.groups.p();
-        let in_ov = {
-            let mut mask = vec![false; p];
-            for &i in o_v {
-                mask[i] = true;
-            }
-            mask
-        };
+        let PathWorkspace { grad, beta_full, viol, in_ov, group_mask, group_active, .. } = ws;
+        for x in in_ov.iter_mut() {
+            *x = false;
+        }
+        for &i in o_v {
+            in_ov[i] = true;
+        }
         match self.rule {
             RuleKind::Sparsegl => {
                 // Group-level: excluded groups are those with NO variable in O_v.
-                let mut group_in = vec![false; pen.groups.m()];
-                for &i in o_v {
-                    group_in[pen.groups.group_of(i)] = true;
+                for x in group_mask.iter_mut() {
+                    *x = false;
                 }
-                let (vars, _count) = crate::screen::kkt::group_violations(
+                for &i in o_v {
+                    group_mask[pen.groups.group_of(i)] = true;
+                }
+                crate::screen::kkt::group_violations_into(
                     pen,
-                    grad_new,
+                    grad,
                     lam,
-                    (0..pen.groups.m()).filter(|&g| !group_in[g]),
+                    (0..pen.groups.m()).filter(|&g| !group_mask[g]),
+                    viol,
                 );
-                vars
             }
-            _ => crate::screen::kkt::variable_violations(
+            _ => crate::screen::kkt::variable_violations_into(
                 pen,
-                grad_new,
-                beta_new,
+                grad,
+                beta_full,
                 lam,
                 (0..p).filter(|&i| !in_ov[i]),
+                group_active,
+                viol,
             ),
         }
     }
@@ -540,5 +733,36 @@ mod tests {
         assert!(fit.betas[0].iter().all(|&b| b == 0.0));
         // And something eventually activates along the path.
         assert!(fit.active_vars_last() > 0);
+    }
+
+    #[test]
+    fn reduced_design_cache_is_exercised_along_the_path() {
+        let gd = small_data();
+        let mut ws = PathWorkspace::default();
+        let fit = PathRunner::new(&gd.dataset, cfg())
+            .rule(RuleKind::DfrSgl)
+            .run_with_workspace(&mut ws)
+            .unwrap();
+        assert_eq!(fit.betas.len(), 12);
+        // The path must have routed its reduced solves through the cache.
+        assert!(
+            ws.reduced.hits + ws.reduced.kept_cols + ws.reduced.copied_cols > 0,
+            "reduced-design cache never used"
+        );
+    }
+
+    #[test]
+    fn reference_alloc_mode_matches_workspace_mode() {
+        let gd = small_data();
+        let fast = PathRunner::new(&gd.dataset, cfg()).rule(RuleKind::DfrSgl).run().unwrap();
+        let reference = PathRunner::new(&gd.dataset, cfg())
+            .rule(RuleKind::DfrSgl)
+            .reference_alloc(true)
+            .run()
+            .unwrap();
+        assert!(
+            fast.l2_distance_to(&reference) <= 1e-12,
+            "workspace reuse changed the path solutions"
+        );
     }
 }

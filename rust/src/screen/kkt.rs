@@ -35,13 +35,30 @@ pub fn variable_violations(
     lambda: f64,
     excluded: impl Iterator<Item = usize>,
 ) -> Vec<usize> {
-    let alpha = pen.alpha;
-    let group_active: Vec<bool> = pen
-        .groups
-        .iter()
-        .map(|(_, r)| beta_new[r].iter().any(|&b| b != 0.0))
-        .collect();
+    let mut group_active = Vec::new();
     let mut out = Vec::new();
+    variable_violations_into(pen, grad_new, beta_new, lambda, excluded, &mut group_active, &mut out);
+    out
+}
+
+/// [`variable_violations`] into caller-provided buffers (both cleared
+/// first) — the allocation-free form for the pathwise KKT re-entry loop.
+/// `group_active` is scratch for the per-group activity flags.
+pub fn variable_violations_into(
+    pen: &Penalty,
+    grad_new: &[f64],
+    beta_new: &[f64],
+    lambda: f64,
+    excluded: impl Iterator<Item = usize>,
+    group_active: &mut Vec<bool>,
+    out: &mut Vec<usize>,
+) {
+    let alpha = pen.alpha;
+    group_active.clear();
+    group_active.extend(
+        pen.groups.iter().map(|(_, r)| beta_new[r].iter().any(|&b| b != 0.0)),
+    );
+    out.clear();
     for i in excluded {
         let g = pen.groups.group_of(i);
         let s = if group_active[g] {
@@ -55,7 +72,6 @@ pub fn variable_violations(
             out.push(i);
         }
     }
-    out
 }
 
 /// sparsegl group-level check: return the variables of every *excluded
@@ -67,8 +83,22 @@ pub fn group_violations(
     lambda: f64,
     excluded_groups: impl Iterator<Item = usize>,
 ) -> (Vec<usize>, usize) {
-    let alpha = pen.alpha;
     let mut vars = Vec::new();
+    let count = group_violations_into(pen, grad_new, lambda, excluded_groups, &mut vars);
+    (vars, count)
+}
+
+/// [`group_violations`] into a caller-provided buffer (cleared first);
+/// returns the number of violating groups.
+pub fn group_violations_into(
+    pen: &Penalty,
+    grad_new: &[f64],
+    lambda: f64,
+    excluded_groups: impl Iterator<Item = usize>,
+    vars: &mut Vec<usize>,
+) -> usize {
+    let alpha = pen.alpha;
+    vars.clear();
     let mut count = 0;
     for g in excluded_groups {
         let r = pen.groups.range(g);
@@ -83,7 +113,7 @@ pub fn group_violations(
             vars.extend(r);
         }
     }
-    (vars, count)
+    count
 }
 
 /// Numerical slack on the KKT inequalities: the inner solver is accurate to

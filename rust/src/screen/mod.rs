@@ -116,7 +116,17 @@ pub fn screen(kind: RuleKind, ctx: &ScreenContext) -> Candidates {
 /// Union of sorted index lists (used for `O_v = C_v ∪ A_v(λ_k)` and the
 /// KKT re-entry loop).
 pub fn union_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
-    let mut out = Vec::with_capacity(a.len() + b.len());
+    let mut out = Vec::new();
+    union_sorted_into(a, b, &mut out);
+    out
+}
+
+/// Union of sorted index lists into a caller-provided buffer (cleared
+/// first) — the allocation-free form the pathwise coordinator rotates
+/// through its workspace.
+pub fn union_sorted_into(a: &[usize], b: &[usize], out: &mut Vec<usize>) {
+    out.clear();
+    out.reserve(a.len() + b.len());
     let (mut i, mut j) = (0, 0);
     while i < a.len() || j < b.len() {
         let pick_a = match (a.get(i), b.get(j)) {
@@ -140,7 +150,6 @@ pub fn union_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
             j += 1;
         }
     }
-    out
 }
 
 /// Active variables of a coefficient vector.
@@ -168,6 +177,13 @@ mod tests {
         assert_eq!(union_sorted(&[4], &[]), vec![4]);
         let e: Vec<usize> = vec![];
         assert_eq!(union_sorted(&[], &[]), e);
+    }
+
+    #[test]
+    fn union_sorted_into_clears_stale_contents() {
+        let mut out = vec![9usize, 9, 9];
+        union_sorted_into(&[1, 2], &[2, 5], &mut out);
+        assert_eq!(out, vec![1, 2, 5]);
     }
 
     #[test]

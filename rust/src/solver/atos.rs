@@ -6,11 +6,17 @@
 //! group-ℓ2 part (`h`), both with closed-form proxes. The step size adapts
 //! by backtracking on the sufficient-decrease condition
 //! `f(u_h) ≤ f(u_g) + ⟨∇f(u_g), u_h−u_g⟩ + ‖u_h−u_g‖²/(2γ)`.
+//!
+//! Like FISTA, all per-iteration state lives in the caller's
+//! [`SolverWorkspace`] (`u_g` ↦ `beta_prev`, `u_h` ↦ `beta`, the reflected
+//! argument ↦ `cand`), so the iteration and backtracking loops perform no
+//! heap allocation.
 
-use super::{ProxPenalty, SolveResult, SolverConfig};
-
+use super::{ProxPenalty, SolveResult, SolverConfig, SolverWorkspace};
+use crate::linalg::norm2;
 use crate::loss::Loss;
 
+/// One-shot entry point (allocates a private workspace).
 pub fn solve<P: ProxPenalty>(
     loss: &Loss,
     penalty: &P,
@@ -18,19 +24,32 @@ pub fn solve<P: ProxPenalty>(
     beta0: &[f64],
     cfg: &SolverConfig,
 ) -> SolveResult {
+    let mut ws = SolverWorkspace::new();
+    solve_ws(loss, penalty, lambda, beta0, cfg, &mut ws)
+}
+
+/// Workspace entry point — the pathwise hot loop.
+pub fn solve_ws<P: ProxPenalty>(
+    loss: &Loss,
+    penalty: &P,
+    lambda: f64,
+    beta0: &[f64],
+    cfg: &SolverConfig,
+    ws: &mut SolverWorkspace,
+) -> SolveResult {
     let p = beta0.len();
     let n = loss.n();
+    debug_assert_eq!(p, loss.x.ncols());
+    ws.resize(n, p);
     let lip = loss.lipschitz_bound().max(1e-12);
     let mut gamma = 1.0 / lip;
 
-    let mut z = beta0.to_vec();
-    let mut u_g = vec![0.0; p];
-    let mut u_h = vec![0.0; p];
-    let mut grad = vec![0.0; p];
-    let mut arg = vec![0.0; p];
-    let mut xb = vec![0.0; n];
-    let mut r = vec![0.0; n];
+    ws.z.copy_from_slice(beta0);
+    ws.beta.copy_from_slice(beta0); // u_h; returned as-is if max_iters == 0
+    loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
 
+    let threads = crate::parallel::default_threads();
+    let inv_n = 1.0 / n as f64;
     let mut iterations = 0;
     let mut converged = false;
 
@@ -38,31 +57,33 @@ pub fn solve<P: ProxPenalty>(
         iterations = it + 1;
         // u_g = prox_{γ·λ·h_group}(z)  (group part first; order is a free
         // choice in Davis–Yin — matching the exact-prox composition order).
-        penalty.pen_prox_group_into(&z, gamma * lambda, &mut u_g);
+        penalty.pen_prox_group_into(&ws.z, gamma * lambda, &mut ws.beta_prev);
 
         // ∇f(u_g)
-        loss.x.matvec_into(&u_g, &mut xb);
-        let f_ug = loss.value_from_xb(&xb);
-        loss.residual_from_xb(&xb, &mut r);
-        let g_full = loss.x.t_matvec_par(&r, crate::parallel::default_threads());
-        let inv_n = 1.0 / n as f64;
-        for j in 0..p {
-            grad[j] = g_full[j] * inv_n;
+        loss.x.matvec_into(&ws.beta_prev, &mut ws.xb);
+        let f_ug = loss.value_from_xb(&ws.xb);
+        loss.residual_from_xb(&ws.xb, &mut ws.r);
+        loss.x.t_matvec_par_into(&ws.r, threads, &mut ws.grad);
+        for g in ws.grad.iter_mut() {
+            *g *= inv_n;
         }
 
         // Backtracking on γ.
         let mut bt = 0;
         loop {
-            for j in 0..p {
-                arg[j] = 2.0 * u_g[j] - z[j] - gamma * grad[j];
+            for (((c, &ug), &zj), &gj) in
+                ws.cand.iter_mut().zip(&ws.beta_prev).zip(&ws.z).zip(&ws.grad)
+            {
+                *c = 2.0 * ug - zj - gamma * gj;
             }
-            penalty.pen_prox_l1_into(&arg, gamma * lambda, &mut u_h);
-            let f_uh = loss.value(&u_h);
+            penalty.pen_prox_l1_into(&ws.cand, gamma * lambda, &mut ws.beta); // u_h
+            loss.x.matvec_into(&ws.beta, &mut ws.xb_cand);
+            let f_uh = loss.value_from_xb(&ws.xb_cand);
             let mut ip = 0.0;
             let mut dsq = 0.0;
-            for j in 0..p {
-                let d = u_h[j] - u_g[j];
-                ip += grad[j] * d;
+            for ((&uh, &ug), &gj) in ws.beta.iter().zip(&ws.beta_prev).zip(&ws.grad) {
+                let d = uh - ug;
+                ip += gj * d;
                 dsq += d * d;
             }
             if f_uh <= f_ug + ip + dsq / (2.0 * gamma) + 1e-12 * f_ug.abs().max(1.0) {
@@ -74,25 +95,27 @@ pub fn solve<P: ProxPenalty>(
             }
             gamma *= cfg.backtrack;
         }
+        // The last evaluated candidate is the accepted u_h.
+        std::mem::swap(&mut ws.xb_beta, &mut ws.xb_cand);
 
         // z update and fixed-point residual.
         let mut res = 0.0;
-        for j in 0..p {
-            let d = u_h[j] - u_g[j];
-            z[j] += d;
+        for ((zj, &uh), &ug) in ws.z.iter_mut().zip(&ws.beta).zip(&ws.beta_prev) {
+            let d = uh - ug;
+            *zj += d;
             res += d * d;
         }
-        let scale = u_g.iter().map(|v| v * v).sum::<f64>().sqrt().max(1.0);
+        let scale = norm2(&ws.beta_prev).max(1.0);
         if res.sqrt() / scale <= cfg.tol {
             converged = true;
             break;
         }
     }
 
-    // The primal iterate is u_h (it has passed through both proxes).
-    let beta = u_h;
-    let objective = super::objective(loss, penalty, lambda, &beta);
-    SolveResult { beta, iterations, converged, objective }
+    // The primal iterate is u_h (it has passed through both proxes);
+    // `xb_beta` tracks it, so the objective costs no matvec.
+    let objective = loss.value_from_xb(&ws.xb_beta) + lambda * penalty.pen_value(&ws.beta);
+    SolveResult { beta: ws.beta.clone(), iterations, converged, objective }
 }
 
 #[cfg(test)]
@@ -102,7 +125,7 @@ mod tests {
     use crate::loss::{Loss, LossKind};
     use crate::penalty::Penalty;
     use crate::rng::Rng;
-    use crate::solver::{SolverConfig, SolverKind};
+    use crate::solver::{SolverConfig, SolverKind, SolverWorkspace};
 
     #[test]
     fn atos_matches_fista_on_random_problems() {
@@ -151,5 +174,22 @@ mod tests {
         let r = super::solve(&loss, &pen, 1.05 * lam_max, &vec![0.0; p], &cfg);
         let nrm: f64 = r.beta.iter().map(|v| v * v).sum::<f64>().sqrt();
         assert!(nrm < 1e-6, "norm {nrm}");
+    }
+
+    #[test]
+    fn atos_workspace_reuse_is_exact() {
+        let mut rng = Rng::new(12);
+        let p = 10;
+        let mut x = Matrix::from_fn(35, p, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(35);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let pen = Penalty::sgl(Groups::even(p, 5), 0.9);
+        let cfg = SolverConfig { kind: SolverKind::Atos, ..Default::default() };
+        let mut ws = SolverWorkspace::new();
+        let first = super::solve_ws(&loss, &pen, 0.05, &vec![0.0; p], &cfg, &mut ws);
+        let reused = super::solve_ws(&loss, &pen, 0.05, &vec![0.0; p], &cfg, &mut ws);
+        assert_eq!(first.beta, reused.beta, "dirty workspace changed ATOS result");
+        assert_eq!(first.iterations, reused.iterations);
     }
 }

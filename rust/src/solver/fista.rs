@@ -5,11 +5,18 @@
 //! momentum sequence. The step size starts at `1/L̂` from a power-iteration
 //! Lipschitz estimate (or the warm-started previous step) and backtracks by
 //! the paper's factor 0.7 whenever the quadratic upper bound is violated.
+//!
+//! All per-iteration state lives in the caller's [`SolverWorkspace`]; the
+//! iteration and backtracking loops perform **no heap allocation** — every
+//! matvec/prox writes into a pre-sized buffer, iterates advance by pointer
+//! swaps, and the candidate's fitted values `Xβ` are carried so the loss is
+//! never evaluated through a fresh `Xβ` allocation.
 
-use super::{ProxPenalty, SolveResult, SolverConfig};
+use super::{ProxPenalty, SolveResult, SolverConfig, SolverWorkspace};
 use crate::linalg::{dot, l2_distance};
 use crate::loss::Loss;
 
+/// One-shot entry point (allocates a private workspace).
 pub fn solve<P: ProxPenalty>(
     loss: &Loss,
     penalty: &P,
@@ -17,88 +24,108 @@ pub fn solve<P: ProxPenalty>(
     beta0: &[f64],
     cfg: &SolverConfig,
 ) -> SolveResult {
+    let mut ws = SolverWorkspace::new();
+    solve_ws(loss, penalty, lambda, beta0, cfg, &mut ws)
+}
+
+/// Workspace entry point — the pathwise hot loop.
+pub fn solve_ws<P: ProxPenalty>(
+    loss: &Loss,
+    penalty: &P,
+    lambda: f64,
+    beta0: &[f64],
+    cfg: &SolverConfig,
+    ws: &mut SolverWorkspace,
+) -> SolveResult {
     let p = beta0.len();
     let n = loss.n();
-    let mut beta = beta0.to_vec();
-    let mut z = beta.clone(); // extrapolated point
-    let mut beta_prev = beta.clone();
+    debug_assert_eq!(p, loss.x.ncols());
+    ws.resize(n, p);
+    ws.beta.copy_from_slice(beta0);
+    ws.beta_prev.copy_from_slice(beta0);
+    ws.z.copy_from_slice(beta0);
     let mut t = 1.0f64;
 
     // Initial step: inverse Lipschitz estimate (backtracking will correct).
     let lip = loss.lipschitz_bound().max(1e-12);
     let mut step = 1.0 / lip;
 
-    let mut xb = vec![0.0; n];
-    let mut r = vec![0.0; n];
-    let mut cand = vec![0.0; p];
-    let mut grad_point = vec![0.0; p];
+    // Fitted values at the warm start (zero coordinates are skipped, so a
+    // sparse warm start costs O(n·nnz)); kept in lock-step with `beta` so
+    // the final objective needs no fresh `Xβ`.
+    loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
 
+    let threads = crate::parallel::default_threads();
+    let inv_n = 1.0 / n as f64;
     let mut iterations = 0;
     let mut converged = false;
 
     for it in 0..cfg.max_iters {
         iterations = it + 1;
         // Gradient at the extrapolated point z.
-        loss.x.matvec_into(&z, &mut xb);
-        let fz = loss.value_from_xb(&xb);
-        loss.residual_from_xb(&xb, &mut r);
-        let threads = crate::parallel::default_threads();
-        let g = loss.x.t_matvec_par(&r, threads);
-        let inv_n = 1.0 / n as f64;
-        for j in 0..p {
-            grad_point[j] = g[j] * inv_n;
+        loss.x.matvec_into(&ws.z, &mut ws.xb);
+        let fz = loss.value_from_xb(&ws.xb);
+        loss.residual_from_xb(&ws.xb, &mut ws.r);
+        loss.x.t_matvec_par_into(&ws.r, threads, &mut ws.grad);
+        for g in ws.grad.iter_mut() {
+            *g *= inv_n;
         }
 
         // Backtracking on the composite upper bound.
         let mut bt = 0;
         loop {
-            for j in 0..p {
-                cand[j] = z[j] - step * grad_point[j];
+            for ((c, &zj), &gj) in ws.cand.iter_mut().zip(&ws.z).zip(&ws.grad) {
+                *c = zj - step * gj;
             }
-            let mut next = vec![0.0; p];
-            penalty.pen_prox_into(&cand, step * lambda, &mut next);
+            penalty.pen_prox_into(&ws.cand, step * lambda, &mut ws.next);
             // Quadratic bound check: f(next) ≤ f(z) + ⟨∇f(z), d⟩ + ‖d‖²/(2·step).
-            let fnext = loss.value(&next);
+            loss.x.matvec_into(&ws.next, &mut ws.xb_cand);
+            let fnext = loss.value_from_xb(&ws.xb_cand);
             let mut ip = 0.0;
             let mut dsq = 0.0;
-            for j in 0..p {
-                let d = next[j] - z[j];
-                ip += grad_point[j] * d;
+            for ((&nj, &zj), &gj) in ws.next.iter().zip(&ws.z).zip(&ws.grad) {
+                let d = nj - zj;
+                ip += gj * d;
                 dsq += d * d;
             }
-            if fnext <= fz + ip + dsq / (2.0 * step) + 1e-12 * fz.abs().max(1.0) {
-                beta_prev.copy_from_slice(&beta);
-                beta = next;
-                break;
+            let bound_ok =
+                fnext <= fz + ip + dsq / (2.0 * step) + 1e-12 * fz.abs().max(1.0);
+            if !bound_ok {
+                bt += 1;
+                if bt < cfg.max_backtrack {
+                    step *= cfg.backtrack;
+                    continue;
+                }
+                // Backtracking exhausted: accept the latest candidate.
             }
-            bt += 1;
-            if bt >= cfg.max_backtrack {
-                beta_prev.copy_from_slice(&beta);
-                beta = next;
-                break;
-            }
-            step *= cfg.backtrack;
+            // Accept: advance the iterate by buffer rotation (no copies of
+            // the coefficient vectors, no allocation).
+            std::mem::swap(&mut ws.beta_prev, &mut ws.beta);
+            std::mem::swap(&mut ws.beta, &mut ws.next);
+            std::mem::swap(&mut ws.xb_beta, &mut ws.xb_cand);
+            break;
         }
 
         // Momentum update.
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
         let mom = (t - 1.0) / t_next;
-        for j in 0..p {
-            z[j] = beta[j] + mom * (beta[j] - beta_prev[j]);
+        for ((zj, &bj), &pj) in ws.z.iter_mut().zip(&ws.beta).zip(&ws.beta_prev) {
+            *zj = bj + mom * (bj - pj);
         }
         t = t_next;
 
         // Convergence: relative change in iterates (paper's tol 1e-5).
-        let num = l2_distance(&beta, &beta_prev);
-        let den = dot(&beta, &beta).sqrt().max(1.0);
+        let num = l2_distance(&ws.beta, &ws.beta_prev);
+        let den = dot(&ws.beta, &ws.beta).sqrt().max(1.0);
         if num / den <= cfg.tol {
             converged = true;
             break;
         }
     }
 
-    let objective = super::objective(loss, penalty, lambda, &beta);
-    SolveResult { beta, iterations, converged, objective }
+    // `xb_beta` tracks `beta` exactly, so the objective costs no matvec.
+    let objective = loss.value_from_xb(&ws.xb_beta) + lambda * penalty.pen_value(&ws.beta);
+    SolveResult { beta: ws.beta.clone(), iterations, converged, objective }
 }
 
 #[cfg(test)]
@@ -108,7 +135,7 @@ mod tests {
     use crate::loss::{Loss, LossKind};
     use crate::penalty::Penalty;
     use crate::rng::Rng;
-    use crate::solver::{objective, SolverConfig};
+    use crate::solver::{objective, SolverConfig, SolverWorkspace};
 
     /// Unpenalized (λ=0) quadratic: FISTA must approach the least-squares
     /// solution found by normal equations (small, well-conditioned case).
@@ -140,6 +167,33 @@ mod tests {
             let b0: Vec<f64> = rng.gauss_vec(10);
             let r = super::solve(&loss, &pen, 0.1, &b0, &SolverConfig::default());
             assert!(r.objective <= objective(&loss, &pen, 0.1, &b0) + 1e-10);
+        }
+    }
+
+    /// A reused workspace must produce the exact same result as a fresh
+    /// one, and its fitted-values buffer must track the returned iterate.
+    #[test]
+    fn workspace_reuse_is_exact_and_carries_fitted_values() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(30, 12, |_, _| rng.gauss());
+        let y: Vec<f64> = rng.gauss_vec(30);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let pen = Penalty::sgl(Groups::even(12, 4), 0.9);
+        let cfg = SolverConfig::default();
+        let mut ws = SolverWorkspace::new();
+        // Dirty the workspace with a different-sized solve first.
+        let x2 = Matrix::from_fn(30, 7, |_, _| rng.gauss());
+        let loss2 = Loss::new(LossKind::Squared, &x2, &y);
+        let pen2 = Penalty::sgl(Groups::even(7, 7), 0.9);
+        super::solve_ws(&loss2, &pen2, 0.05, &vec![0.0; 7], &cfg, &mut ws);
+
+        let reused = super::solve_ws(&loss, &pen, 0.05, &vec![0.0; 12], &cfg, &mut ws);
+        let fresh = super::solve(&loss, &pen, 0.05, &vec![0.0; 12], &cfg);
+        assert_eq!(reused.beta, fresh.beta, "workspace reuse changed the solution");
+        assert_eq!(reused.iterations, fresh.iterations);
+        let xb = x.matvec(&reused.beta);
+        for (a, b) in ws.fitted().iter().zip(&xb) {
+            assert!((a - b).abs() < 1e-12, "fitted values out of sync");
         }
     }
 }

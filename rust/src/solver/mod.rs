@@ -102,7 +102,74 @@ pub struct SolveResult {
     pub objective: f64,
 }
 
-/// Solve `min f(β) + λ·Ω(β)` from the warm start `beta0`.
+/// Reusable buffers for the inner solvers.
+///
+/// Every vector FISTA/ATOS needs per iteration lives here, pre-sized by
+/// [`SolverWorkspace::resize`] at solve entry. Capacity is grow-only, so a
+/// workspace carried across λ steps (and KKT re-entry rounds) stops
+/// allocating once it has seen the largest problem on the path — the
+/// iteration and backtracking loops themselves are allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct SolverWorkspace {
+    /// `Xz` at the extrapolated/prox point driving the gradient.
+    pub(crate) xb: Vec<f64>,
+    /// `Xβ` of the candidate evaluated during backtracking.
+    pub(crate) xb_cand: Vec<f64>,
+    /// `Xβ` at the accepted iterate (exposed via [`SolverWorkspace::fitted`]).
+    pub(crate) xb_beta: Vec<f64>,
+    /// Residual scratch (length n).
+    pub(crate) r: Vec<f64>,
+    /// Gradient at the current point (length p).
+    pub(crate) grad: Vec<f64>,
+    /// Gradient-step argument (FISTA) / reflected argument (ATOS).
+    pub(crate) cand: Vec<f64>,
+    /// Prox output: FISTA's candidate iterate / ATOS's `u_h`.
+    pub(crate) next: Vec<f64>,
+    /// Current iterate.
+    pub(crate) beta: Vec<f64>,
+    /// Previous iterate (FISTA) / ATOS's `u_g`.
+    pub(crate) beta_prev: Vec<f64>,
+    /// Extrapolated / splitting state.
+    pub(crate) z: Vec<f64>,
+}
+
+impl SolverWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer for an (n × p) problem. Shrinking keeps capacity.
+    pub fn resize(&mut self, n: usize, p: usize) {
+        fn fit(v: &mut Vec<f64>, len: usize) {
+            v.clear();
+            v.resize(len, 0.0);
+        }
+        fit(&mut self.xb, n);
+        fit(&mut self.xb_cand, n);
+        fit(&mut self.xb_beta, n);
+        fit(&mut self.r, n);
+        fit(&mut self.grad, p);
+        fit(&mut self.cand, p);
+        fit(&mut self.next, p);
+        fit(&mut self.beta, p);
+        fit(&mut self.beta_prev, p);
+        fit(&mut self.z, p);
+    }
+
+    /// Final iterate of the last solve.
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Fitted values `Xβ` at the final iterate of the last solve.
+    pub fn fitted(&self) -> &[f64] {
+        &self.xb_beta
+    }
+}
+
+/// Solve `min f(β) + λ·Ω(β)` from the warm start `beta0` (allocates a
+/// one-shot workspace; hot paths should hold a [`SolverWorkspace`] and call
+/// [`solve_ws`]).
 pub fn solve<P: ProxPenalty>(
     loss: &Loss,
     penalty: &P,
@@ -110,9 +177,22 @@ pub fn solve<P: ProxPenalty>(
     beta0: &[f64],
     cfg: &SolverConfig,
 ) -> SolveResult {
+    let mut ws = SolverWorkspace::new();
+    solve_ws(loss, penalty, lambda, beta0, cfg, &mut ws)
+}
+
+/// Solve with caller-provided buffers — the zero-allocation pathwise form.
+pub fn solve_ws<P: ProxPenalty>(
+    loss: &Loss,
+    penalty: &P,
+    lambda: f64,
+    beta0: &[f64],
+    cfg: &SolverConfig,
+    ws: &mut SolverWorkspace,
+) -> SolveResult {
     match cfg.kind {
-        SolverKind::Fista => fista::solve(loss, penalty, lambda, beta0, cfg),
-        SolverKind::Atos => atos::solve(loss, penalty, lambda, beta0, cfg),
+        SolverKind::Fista => fista::solve_ws(loss, penalty, lambda, beta0, cfg, ws),
+        SolverKind::Atos => atos::solve_ws(loss, penalty, lambda, beta0, cfg, ws),
     }
 }
 

@@ -1,0 +1,130 @@
+//! Pathwise equivalence property tests for the persistent-workspace hot
+//! loop: the workspace / cached-gather / residual-carried path must produce
+//! coefficients numerically identical (ℓ₂ ≤ 1e-10) to a fresh-allocation
+//! reference fit, for every screening rule, and a workspace reused across
+//! fits and datasets must never leak state between them.
+
+use dfr::data::SyntheticConfig;
+use dfr::path::{PathConfig, PathRunner, PathWorkspace};
+use dfr::screen::RuleKind;
+use dfr::solver::SolverConfig;
+
+fn data(seed: u64) -> dfr::data::GeneratedData {
+    SyntheticConfig {
+        n: 60,
+        p: 80,
+        groups: dfr::data::synthetic::GroupSpec::Even(8),
+        ..SyntheticConfig::default()
+    }
+    .generate(seed)
+}
+
+fn cfg() -> PathConfig {
+    PathConfig {
+        path_len: 10,
+        solver: SolverConfig { tol: 1e-9, max_iters: 50_000, ..Default::default() },
+        ..PathConfig::default()
+    }
+}
+
+/// The headline property: workspace reuse and the incremental reduced-design
+/// cache change nothing about the solutions, for each rule family.
+#[test]
+fn workspace_path_matches_fresh_allocation_reference() {
+    let gd = data(5);
+    for rule in [
+        RuleKind::DfrSgl,
+        RuleKind::Sparsegl,
+        RuleKind::GapSafeSeq,
+        RuleKind::GapSafeDyn,
+    ] {
+        let reference = PathRunner::new(&gd.dataset, cfg())
+            .rule(rule)
+            .reference_alloc(true)
+            .run()
+            .unwrap();
+        let fast = PathRunner::new(&gd.dataset, cfg())
+            .rule(rule)
+            .fixed_path(reference.lambdas.clone())
+            .run()
+            .unwrap();
+        let d = fast.l2_distance_to(&reference);
+        assert!(d <= 1e-10, "{}: workspace drift ℓ₂ = {d}", rule.name());
+    }
+}
+
+/// Same property for the adaptive variant (aSGL weights flow through the
+/// restricted penalty and the workspace identically).
+#[test]
+fn asgl_workspace_matches_reference() {
+    let gd = data(6);
+    let c = PathConfig { adaptive: Some((0.1, 0.1)), ..cfg() };
+    let reference = PathRunner::new(&gd.dataset, c.clone())
+        .rule(RuleKind::DfrAsgl)
+        .reference_alloc(true)
+        .run()
+        .unwrap();
+    let fast = PathRunner::new(&gd.dataset, c)
+        .rule(RuleKind::DfrAsgl)
+        .fixed_path(reference.lambdas.clone())
+        .run()
+        .unwrap();
+    let d = fast.l2_distance_to(&reference);
+    assert!(d <= 1e-10, "aSGL workspace drift ℓ₂ = {d}");
+}
+
+/// One workspace across many fits and *different datasets*: the reduced
+/// design cache must detect the matrix change and the dirty solver buffers
+/// must not affect results.
+#[test]
+fn workspace_reuse_across_fits_and_datasets_is_clean() {
+    let gd_a = data(7);
+    let gd_b = data(8); // same shape, different draw — worst case for stale caches
+    let mut ws = PathWorkspace::default();
+
+    let a_first = PathRunner::new(&gd_a.dataset, cfg())
+        .rule(RuleKind::DfrSgl)
+        .run_with_workspace(&mut ws)
+        .unwrap();
+    let b_shared = PathRunner::new(&gd_b.dataset, cfg())
+        .rule(RuleKind::DfrSgl)
+        .run_with_workspace(&mut ws)
+        .unwrap();
+    let b_fresh = PathRunner::new(&gd_b.dataset, cfg()).rule(RuleKind::DfrSgl).run().unwrap();
+    assert!(
+        b_shared.l2_distance_to(&b_fresh) <= 1e-12,
+        "stale workspace state leaked across datasets"
+    );
+
+    // Back to the first dataset: must reproduce the original fit exactly.
+    let a_again = PathRunner::new(&gd_a.dataset, cfg())
+        .rule(RuleKind::DfrSgl)
+        .run_with_workspace(&mut ws)
+        .unwrap();
+    assert!(
+        a_again.l2_distance_to(&a_first) <= 1e-12,
+        "workspace round-trip changed solutions"
+    );
+}
+
+/// The cache actually does incremental work along a path (sanity check that
+/// the equivalence above is not vacuous).
+#[test]
+fn reduced_design_cache_reuses_columns() {
+    let gd = data(9);
+    let mut ws = PathWorkspace::default();
+    PathRunner::new(&gd.dataset, cfg())
+        .rule(RuleKind::DfrSgl)
+        .run_with_workspace(&mut ws)
+        .unwrap();
+    let total = ws.reduced.hits + ws.reduced.kept_cols + ws.reduced.copied_cols;
+    assert!(total > 0, "reduced-design cache never used");
+    // Incremental reuse (hits/kept prefix) is data-dependent at the path
+    // level; the deterministic prefix-diff mechanism itself is covered by
+    // linalg::tests::reduced_design_matches_fresh_gather. Here we just
+    // surface the counters for bench logs.
+    println!(
+        "[cache] hits {}, kept cols {}, copied cols {}",
+        ws.reduced.hits, ws.reduced.kept_cols, ws.reduced.copied_cols
+    );
+}

@@ -1,0 +1,102 @@
+//! Minimal, dependency-free stand-in for the `anyhow` error crate.
+//!
+//! The build environment has no registry access, so this vendored shim
+//! provides exactly the surface the `dfr` crate uses: [`Result`] with a
+//! defaulted error type, a string-backed [`Error`] that converts from any
+//! `std::error::Error` (enabling `?` on `io::Result` etc.), and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Messages are formatted eagerly;
+//! no backtraces, no downcasting, no context chains — none of which the
+//! crate relies on.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error value.
+///
+/// Deliberately does **not** implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` conversion below cannot overlap with the
+/// standard library's reflexive `From<T> for T` (the same trick the real
+/// `anyhow` uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn io_bubbles() -> crate::Result<()> {
+            std::fs::read("/definitely/not/a/path")?;
+            Ok(())
+        }
+        assert!(io_bubbles().is_err());
+
+        fn bails(x: i32) -> crate::Result<i32> {
+            crate::ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                crate::bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(bails(5).unwrap(), 5);
+        assert_eq!(bails(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(bails(200).unwrap_err().to_string(), "too big");
+
+        let e = crate::anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+        assert_eq!(format!("{e:?}"), "code 7");
+    }
+}
