@@ -5,11 +5,19 @@
 //! Paper shape: screened CV is 2–4× faster end-to-end (smaller than the
 //! single-path factors because fold fits share the λ path and the folds
 //! amortize fixed costs), with DFR ahead of sparsegl.
+//!
+//! A second section prices the workspace-pooled grid-search engine against
+//! the per-cell fresh-allocation reference (`grid_search_reference`): same
+//! `(α × γ)` grid, same folds, same answers — the pooled engine shares one
+//! fold plan and `threads` path workspaces across every cell while the
+//! reference re-splits, re-standardizes, and re-allocates per cell. The
+//! "path workspaces allocated" row is the no-per-fold-allocation witness:
+//! it stays at the thread count no matter how many fold fits run.
 
 mod common;
 
-use dfr::bench_harness::BenchTable;
-use dfr::cv::{cross_validate, CvConfig};
+use dfr::bench_harness::{time_once, BenchTable};
+use dfr::cv::{cross_validate, grid_search_reference, CvConfig, CvEngine};
 use dfr::data::{Response, SyntheticConfig};
 use dfr::screen::RuleKind;
 
@@ -56,5 +64,69 @@ fn main() {
             }
         }
     }
+
+    // --- Workspace-pooled vs per-cell-alloc grid search ---------------
+    let data = SyntheticConfig { n, p, ..SyntheticConfig::default() }.generate(9900);
+    let base = CvConfig {
+        folds,
+        path: common::bench_path_config(path_len),
+        seed: 177,
+        rule: RuleKind::DfrSgl,
+        ..CvConfig::default()
+    };
+    let alphas = [0.5, 0.95];
+    let gammas = [None, Some((0.1, 0.1))];
+    let cells = alphas.len() * gammas.len();
+    let setting = format!("{cells}-cell α×γ grid");
+    let engine = CvEngine::new(base.threads);
+    // Warm-up: grow the pooled workspaces to full size once, outside the
+    // timed region (the reference path re-allocates by design, so a
+    // warm-up run would not help it).
+    engine
+        .grid_search(&data.dataset, &base, &alphas, &gammas)
+        .expect("warm-up grid search failed");
+    let checkouts_before = engine.pool_checkouts();
+    for _ in 0..common::repeats() {
+        let (t_pool, pooled) = time_once(|| {
+            engine
+                .grid_search(&data.dataset, &base, &alphas, &gammas)
+                .expect("pooled grid search failed")
+        });
+        let (t_ref, reference) = time_once(|| {
+            grid_search_reference(&data.dataset, &base, &alphas, &gammas)
+                .expect("reference grid search failed")
+        });
+        assert_eq!(pooled.1, reference.1, "pooled grid picked a different winner");
+        table.push("grid-search seconds", &setting, "workspace-pooled", t_pool);
+        table.push("grid-search seconds", &setting, "reference-alloc", t_ref);
+        table.push(
+            "grid improvement factor (ref / pooled)",
+            &setting,
+            "workspace-pooled",
+            t_ref / t_pool.max(1e-12),
+        );
+    }
+    let fits_per_run =
+        (engine.pool_checkouts() - checkouts_before) as f64 / common::repeats() as f64;
+    table.push(
+        "path workspaces allocated",
+        &setting,
+        "workspace-pooled",
+        engine.pool_slots() as f64,
+    );
+    table.push(
+        "path fits served per grid search",
+        &setting,
+        "workspace-pooled",
+        fits_per_run,
+    );
+    table.push(
+        "path workspaces allocated",
+        &setting,
+        "reference-alloc",
+        // One coordinator workspace per path fit, by construction.
+        fits_per_run,
+    );
+
     table.finish("tableA36_cv");
 }

@@ -89,6 +89,40 @@ pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
     s
 }
 
+/// Parse a comma-separated list of numbers (`"0.5,0.9,0.95"`), as used by
+/// the `dfr cv --alphas` grid flag. Empty entries are skipped.
+pub fn parse_f64_list(s: &str) -> Result<Vec<f64>, String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<f64>().map_err(|_| format!("expected number, got `{t}`")))
+        .collect()
+}
+
+/// Parse a comma-separated γ grid for `dfr cv --gammas`. Each entry is
+/// `none` (plain SGL), a single number `g` (meaning `γ₁ = γ₂ = g`), or a
+/// pair `g1:g2`.
+pub fn parse_gamma_list(s: &str) -> Result<Vec<Option<(f64, f64)>>, String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            if t.eq_ignore_ascii_case("none") {
+                return Ok(None);
+            }
+            let parse =
+                |v: &str| v.trim().parse::<f64>().map_err(|_| format!("bad γ entry `{t}`"));
+            match t.split_once(':') {
+                Some((a, b)) => Ok(Some((parse(a)?, parse(b)?))),
+                None => {
+                    let g = parse(t)?;
+                    Ok(Some((g, g)))
+                }
+            }
+        })
+        .collect()
+}
+
 /// Parse a screening-rule name as used across the CLI / benches.
 pub fn parse_rule(name: &str) -> Result<crate::screen::RuleKind, String> {
     use crate::screen::RuleKind::*;
@@ -155,5 +189,24 @@ mod tests {
         let u = usage("dfr", "about", &specs());
         assert!(u.contains("--p"));
         assert!(u.contains("default: 1000"));
+    }
+
+    #[test]
+    fn f64_lists_parse() {
+        assert_eq!(parse_f64_list("0.5,0.9, 0.95").unwrap(), vec![0.5, 0.9, 0.95]);
+        assert_eq!(parse_f64_list("1").unwrap(), vec![1.0]);
+        assert_eq!(parse_f64_list("0.5,,0.9,").unwrap(), vec![0.5, 0.9]);
+        assert!(parse_f64_list("0.5,x").is_err());
+    }
+
+    #[test]
+    fn gamma_lists_parse() {
+        assert_eq!(
+            parse_gamma_list("none,0.1,0.2:0.5").unwrap(),
+            vec![None, Some((0.1, 0.1)), Some((0.2, 0.5))]
+        );
+        assert_eq!(parse_gamma_list("NONE").unwrap(), vec![None]);
+        assert!(parse_gamma_list("0.1:wat").is_err());
+        assert!(parse_gamma_list("huh").is_err());
     }
 }

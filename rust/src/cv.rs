@@ -1,38 +1,94 @@
-//! K-fold cross-validation for SGL / aSGL (Appendix D.7).
+//! Workspace-pooled K-fold cross-validation for SGL / aSGL (Appendix D.7).
 //!
 //! The paper's motivation for DFR includes making *joint* tuning of
-//! `(λ, α)` — and `(γ₁, γ₂)` for aSGL — computationally feasible. The
-//! driver fits the full λ path per fold (warm-started, screened), scores
-//! held-out deviance, and supports a grid over α / γ with fold-level
-//! thread parallelism.
+//! `(λ, α)` — and `(γ₁, γ₂)` for aSGL — computationally feasible. This
+//! module is the CV engine behind that claim, organized around three ideas:
+//!
+//! 1. **Shared fold plans.** Fold splits and the standardized per-fold
+//!    training datasets depend only on `(dataset, folds, seed)`, so a
+//!    [`FoldPlan`] is computed once and shared read-only by every `(α, γ)`
+//!    grid cell, instead of being rebuilt per cell. Adaptive weights, which
+//!    depend only on the fold design and `γ`, are likewise computed once
+//!    per `(γ, fold)` pair and shared across all α values.
+//! 2. **Workspace pooling.** All path fits — the per-cell full-data
+//!    reference fits that pin each cell's λ grid, and every fold fit — run
+//!    through a [`crate::parallel::WorkspacePool`] of persistent
+//!    [`PathWorkspace`]s, one per worker thread, reused across folds, grid
+//!    cells, and repeated [`CvEngine`] invocations. After warm-up the CV
+//!    hot loop allocates no per-fold path workspaces; the
+//!    [`crate::linalg::ReducedDesign`] gather cache inside each workspace
+//!    fingerprints its source matrix, so carrying one workspace across
+//!    different folds is safe.
+//! 3. **Grid-flattened scheduling.** The fold fits of *all* cells are
+//!    flattened into `(cell × fold)` task units and pulled from one shared
+//!    queue, so parallelism scales with the whole grid rather than capping
+//!    at the fold count, while warm-starting along each cell's λ path is
+//!    preserved (it lives inside the per-task path fit).
+//!
+//! [`grid_search_reference`] keeps the per-cell fresh-allocation semantics
+//! (re-split, re-standardize, fresh workspaces, per-fit adaptive weights)
+//! as the correctness/pricing baseline; `rust/tests/cv_equivalence.rs`
+//! proves the pooled engine matches it to ℓ₂ ≤ 1e-10.
 
 use crate::data::{Dataset, Response};
 use crate::loss::sigmoid;
 use crate::metrics::Accumulator;
-use crate::path::{PathConfig, PathRunner};
+use crate::parallel::WorkspacePool;
+use crate::path::{PathConfig, PathRunner, PathWorkspace};
+use crate::penalty::AdaptiveWeights;
 use crate::rng::Rng;
 use crate::screen::RuleKind;
 
-/// One grid cell result.
+/// One `(α, γ)` grid cell result.
 #[derive(Clone, Debug)]
 pub struct CvCell {
+    /// SGL mixing parameter of this cell.
     pub alpha: f64,
+    /// Adaptive-weight exponents `(γ₁, γ₂)` of this cell; `None` = plain SGL.
     pub gamma: Option<(f64, f64)>,
-    /// Mean held-out loss per path point (length = path_len).
+    /// Mean held-out loss per path point (length = path length).
     pub cv_loss: Vec<f64>,
+    /// Standard error of the fold losses per path point (sample standard
+    /// deviation across folds divided by √folds; zero for a single fold).
+    pub cv_se: Vec<f64>,
+    /// The cell's λ grid, fixed from its full-data reference fit so folds
+    /// are comparable.
     pub lambdas: Vec<f64>,
-    /// Index of the best λ.
+    /// Index of the CV-optimal λ.
     pub best_idx: usize,
+    /// One-standard-error rule: index of the largest λ (sparsest model)
+    /// whose CV loss is within one standard error of the minimum.
+    pub best_1se_idx: usize,
+    /// Mean screened candidate-set size `C_v / p` across fold fits — the
+    /// per-cell screening-reduction statistic.
+    pub mean_candidate_proportion: f64,
+    /// Mean optimization-set size `O_v / p` across fold fits.
+    pub mean_input_proportion: f64,
+    /// Fit seconds attributed to this cell. For a single-cell
+    /// [`cross_validate`] this is the wall-clock time of the whole CV; for
+    /// grid cells (whose fold fits interleave with other cells on the
+    /// shared task queue) it is the summed fit time of the cell's
+    /// reference fit plus its fold fits.
     pub seconds: f64,
 }
 
 /// Cross-validation configuration.
 #[derive(Clone, Debug)]
 pub struct CvConfig {
+    /// Number of folds (k).
     pub folds: usize,
+    /// Pathwise fit settings shared by the reference and fold fits. The
+    /// `alpha` / `adaptive` fields are the grid-cell coordinates; grid
+    /// searches override them per cell.
     pub path: PathConfig,
+    /// Screening rule applied to every fit.
     pub rule: RuleKind,
+    /// Seed for the fold split.
     pub seed: u64,
+    /// Worker threads used by the convenience functions
+    /// ([`cross_validate`], [`grid_search`], [`cv_improvement_factor`])
+    /// when they construct their transient [`CvEngine`]. A caller-held
+    /// engine uses its own thread count instead.
     pub threads: usize,
 }
 
@@ -58,6 +114,76 @@ pub fn fold_assignments(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
     fold
 }
 
+/// One fold's data: standardized training subset and raw held-out subset.
+///
+/// Scoring contract (inherited from the original CV driver and preserved
+/// bit-for-bit): the held-out rows stay on the **parent dataset's**
+/// scale, so callers are expected to hand CV a pre-standardized parent —
+/// which every in-crate caller does (the synthetic/surrogate generators
+/// standardize at construction; [`crate::model_api::SglModel`]
+/// standardizes in `prepare`). Re-standardizing the training subset then
+/// only applies a near-uniform `√(n_train/n)` column rescale, which
+/// shifts held-out losses by a common factor without reordering λ.
+/// Mapping fold coefficients back to the raw scale (as `model_api` does
+/// for final fits) is a candidate refinement tracked in ROADMAP.md.
+#[derive(Clone, Debug)]
+pub struct CvFold {
+    /// Training rows (all observations outside the fold), standardized.
+    pub train: Dataset,
+    /// Held-out rows, on the scale of the parent dataset.
+    pub test: Dataset,
+}
+
+/// The dataset-level part of a CV run: fold assignments plus the
+/// standardized per-fold training sets, computed **once** per
+/// `(dataset, folds, seed)` and shared read-only across every grid cell.
+#[derive(Clone, Debug)]
+pub struct FoldPlan {
+    /// `assignments[i]` = fold index of observation `i`.
+    pub assignments: Vec<usize>,
+    /// Per-fold train/test datasets.
+    pub folds: Vec<CvFold>,
+}
+
+impl FoldPlan {
+    /// Split and standardize. Matches the per-cell splits of
+    /// [`grid_search_reference`] exactly (same RNG stream, same
+    /// standardization), which is what makes shared plans a pure
+    /// de-duplication rather than a behavior change.
+    pub fn new(ds: &Dataset, folds: usize, seed: u64) -> anyhow::Result<FoldPlan> {
+        anyhow::ensure!(folds >= 2, "need at least 2 folds, got {folds}");
+        anyhow::ensure!(
+            folds <= ds.n(),
+            "more folds ({folds}) than observations ({})",
+            ds.n()
+        );
+        let mut rng = Rng::new(seed);
+        let assignments = fold_assignments(ds.n(), folds, &mut rng);
+        let folds = (0..folds)
+            .map(|f| {
+                let train_rows: Vec<usize> =
+                    (0..ds.n()).filter(|&i| assignments[i] != f).collect();
+                let test_rows: Vec<usize> =
+                    (0..ds.n()).filter(|&i| assignments[i] == f).collect();
+                let mut train = ds.subset_rows(&train_rows);
+                train.standardize();
+                let test = ds.subset_rows(&test_rows);
+                CvFold { train, test }
+            })
+            .collect();
+        Ok(FoldPlan { assignments, folds })
+    }
+}
+
+/// One `(α, γ)` coordinate of a CV grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GridPoint {
+    /// SGL mixing parameter.
+    pub alpha: f64,
+    /// Adaptive exponents; `None` = plain SGL (unless the rule forces aSGL).
+    pub gamma: Option<(f64, f64)>,
+}
+
 /// Held-out prediction loss of a coefficient vector.
 fn holdout_loss(ds: &Dataset, beta: &[f64]) -> f64 {
     let xb = ds.x.matvec(beta);
@@ -80,37 +206,47 @@ fn holdout_loss(ds: &Dataset, beta: &[f64]) -> f64 {
     }
 }
 
-/// Run k-fold CV at one (α, γ) setting. λ path is fixed from the full-data
-/// fit so folds are comparable.
-pub fn cross_validate(ds: &Dataset, cfg: &CvConfig) -> anyhow::Result<CvCell> {
-    let t0 = std::time::Instant::now();
-    let mut rng = Rng::new(cfg.seed);
-    let folds = fold_assignments(ds.n(), cfg.folds, &mut rng);
+/// Per-fold fit outcome carried from the flattened scheduler to the
+/// per-cell reduction.
+struct FoldFit {
+    /// Held-out loss at each path point.
+    losses: Vec<f64>,
+    /// Mean `C_v / p` over the fit's path points.
+    c_prop: f64,
+    /// Mean `O_v / p` over the fit's path points.
+    o_prop: f64,
+    /// Fit wall-clock seconds.
+    seconds: f64,
+}
 
-    // Reference λ path from the full data.
-    let full_fit = PathRunner::new(ds, cfg.path.clone()).rule(cfg.rule).run()?;
-    let lambdas = full_fit.lambdas.clone();
+/// Fold-order reduction of one cell; shared by the pooled engine and the
+/// reference implementation so their outputs are bit-comparable.
+fn reduce_cell(
+    point: GridPoint,
+    lambdas: Vec<f64>,
+    fold_fits: &[FoldFit],
+    seconds: f64,
+) -> CvCell {
+    let k = fold_fits.len();
     let l = lambdas.len();
-
-    let fold_losses: Vec<Vec<f64>> = crate::parallel::par_map(cfg.folds, cfg.threads, |f| {
-        let train_rows: Vec<usize> =
-            (0..ds.n()).filter(|&i| folds[i] != f).collect();
-        let test_rows: Vec<usize> = (0..ds.n()).filter(|&i| folds[i] == f).collect();
-        let mut train = ds.subset_rows(&train_rows);
-        train.standardize();
-        let test = ds.subset_rows(&test_rows);
-        let fit = PathRunner::new(&train, cfg.path.clone())
-            .rule(cfg.rule)
-            .fixed_path(lambdas.clone())
-            .run()
-            .expect("fold fit failed");
-        fit.betas.iter().map(|b| holdout_loss(&test, b)).collect()
-    });
-
     let mut cv_loss = vec![0.0; l];
-    for fl in &fold_losses {
-        for (i, v) in fl.iter().enumerate() {
-            cv_loss[i] += v / cfg.folds as f64;
+    for ff in fold_fits {
+        for (i, v) in ff.losses.iter().enumerate() {
+            cv_loss[i] += v / k as f64;
+        }
+    }
+    let mut cv_se = vec![0.0; l];
+    if k > 1 {
+        for (i, se) in cv_se.iter_mut().enumerate() {
+            let var = fold_fits
+                .iter()
+                .map(|ff| {
+                    let d = ff.losses[i] - cv_loss[i];
+                    d * d
+                })
+                .sum::<f64>()
+                / (k - 1) as f64;
+            *se = (var / k as f64).sqrt();
         }
     }
     let best_idx = cv_loss
@@ -119,51 +255,336 @@ pub fn cross_validate(ds: &Dataset, cfg: &CvConfig) -> anyhow::Result<CvCell> {
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap_or(0);
-
-    Ok(CvCell {
-        alpha: cfg.path.alpha,
-        gamma: cfg.path.adaptive,
+    // λ grid is sorted descending, so the first index within one SE of the
+    // minimum is the sparsest acceptable model.
+    let threshold = cv_loss.get(best_idx).copied().unwrap_or(0.0)
+        + cv_se.get(best_idx).copied().unwrap_or(0.0);
+    let best_1se_idx = cv_loss
+        .iter()
+        .position(|&v| v <= threshold)
+        .unwrap_or(best_idx);
+    let mean = |f: &dyn Fn(&FoldFit) -> f64| {
+        if k == 0 {
+            0.0
+        } else {
+            fold_fits.iter().map(|ff| f(ff)).sum::<f64>() / k as f64
+        }
+    };
+    CvCell {
+        alpha: point.alpha,
+        gamma: point.gamma,
         cv_loss,
+        cv_se,
         lambdas,
         best_idx,
-        seconds: t0.elapsed().as_secs_f64(),
-    })
+        best_1se_idx,
+        mean_candidate_proportion: mean(&|ff| ff.c_prop),
+        mean_input_proportion: mean(&|ff| ff.o_prop),
+        seconds,
+    }
 }
 
-/// Grid search over α (and γ for aSGL): returns every cell plus the winner.
-pub fn grid_search(
-    ds: &Dataset,
-    base: &CvConfig,
-    alphas: &[f64],
-    gammas: &[Option<(f64, f64)>],
-) -> anyhow::Result<(Vec<CvCell>, usize)> {
-    let mut cells = Vec::new();
-    for &alpha in alphas {
-        for &gamma in gammas {
-            let mut cfg = base.clone();
-            cfg.path.alpha = alpha;
-            cfg.path.adaptive = gamma;
-            cells.push(cross_validate(ds, &cfg)?);
-        }
-    }
-    let best = cells
+/// Index of the winning cell: minimal CV loss at each cell's own best λ.
+fn winner(cells: &[CvCell]) -> usize {
+    cells
         .iter()
         .enumerate()
         .min_by(|a, b| {
             a.1.cv_loss[a.1.best_idx].partial_cmp(&b.1.cv_loss[b.1.best_idx]).unwrap()
         })
         .map(|(i, _)| i)
-        .unwrap_or(0);
+        .unwrap_or(0)
+}
+
+/// The workspace-pooled CV engine.
+///
+/// Owns a [`WorkspacePool`] of [`PathWorkspace`]s (one slot per worker
+/// thread) that persists across every method call, so repeated
+/// cross-validations — a bench loop, a model-selection sweep, a grid
+/// search per dataset — pay for workspace allocation exactly once. The
+/// engine is cheap to construct but the pool only amortizes if you hold
+/// on to it; the free functions in this module build a transient engine
+/// per call (pooled within the call, not across calls).
+pub struct CvEngine {
+    threads: usize,
+    pool: WorkspacePool<PathWorkspace>,
+}
+
+impl CvEngine {
+    /// Engine with `threads` workers and as many pooled workspaces.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        CvEngine { threads, pool: WorkspacePool::new(threads) }
+    }
+
+    /// Engine sized by [`crate::parallel::default_threads`].
+    pub fn with_default_threads() -> Self {
+        Self::new(crate::parallel::default_threads())
+    }
+
+    /// Worker-thread count (= pool slots).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of path workspaces ever allocated by this engine. Stays at
+    /// [`CvEngine::threads`] no matter how many folds/cells/invocations
+    /// run — the bench acceptance signal for "no per-fold allocation".
+    pub fn pool_slots(&self) -> usize {
+        self.pool.slots()
+    }
+
+    /// Total workspace checkouts served (reference fits + fold fits).
+    pub fn pool_checkouts(&self) -> usize {
+        self.pool.checkouts()
+    }
+
+    /// Run k-fold CV at one `(α, γ)` setting (taken from `cfg.path`). The
+    /// λ path is fixed from the full-data fit so folds are comparable.
+    pub fn cross_validate(&self, ds: &Dataset, cfg: &CvConfig) -> anyhow::Result<CvCell> {
+        let t0 = std::time::Instant::now();
+        let plan = FoldPlan::new(ds, cfg.folds, cfg.seed)?;
+        let point = GridPoint { alpha: cfg.path.alpha, gamma: cfg.path.adaptive };
+        let mut cells = self.run_grid(ds, &plan, cfg, &[point])?;
+        let mut cell = cells.pop().expect("single-point grid produced no cell");
+        cell.seconds = t0.elapsed().as_secs_f64();
+        Ok(cell)
+    }
+
+    /// Grid search over α (and γ for aSGL): returns every cell plus the
+    /// index of the winner. Cells are ordered α-major (`alphas[0]` with
+    /// every γ first), matching [`grid_search_reference`].
+    pub fn grid_search(
+        &self,
+        ds: &Dataset,
+        base: &CvConfig,
+        alphas: &[f64],
+        gammas: &[Option<(f64, f64)>],
+    ) -> anyhow::Result<(Vec<CvCell>, usize)> {
+        anyhow::ensure!(!alphas.is_empty(), "empty α grid");
+        anyhow::ensure!(!gammas.is_empty(), "empty γ grid");
+        let grid: Vec<GridPoint> = alphas
+            .iter()
+            .flat_map(|&alpha| gammas.iter().map(move |&gamma| GridPoint { alpha, gamma }))
+            .collect();
+        let plan = FoldPlan::new(ds, base.folds, base.seed)?;
+        let cells = self.run_grid(ds, &plan, base, &grid)?;
+        let best = winner(&cells);
+        Ok((cells, best))
+    }
+
+    /// The scheduler: per-cell reference fits, then all `(cell × fold)`
+    /// fits flattened onto one task queue, every fit drawing a pooled
+    /// workspace.
+    fn run_grid(
+        &self,
+        ds: &Dataset,
+        plan: &FoldPlan,
+        base: &CvConfig,
+        grid: &[GridPoint],
+    ) -> anyhow::Result<Vec<CvCell>> {
+        let k = plan.folds.len();
+
+        // Adaptive weights depend only on (design, γ): compute each
+        // distinct γ once for the full data and once per fold, shared by
+        // every α cell, instead of once per (cell × fold) fit. The γ a
+        // cell actually fits with comes from PathConfig::resolve_adaptive
+        // — the same decision build_penalty makes.
+        let mut gammas: Vec<(f64, f64)> = Vec::new();
+        for gp in grid {
+            if let Some(g) = PathConfig::resolve_adaptive(gp.gamma, base.rule) {
+                if !gammas.iter().any(|&x| x == g) {
+                    gammas.push(g);
+                }
+            }
+        }
+        // Flattened (γ × {full, fold₀..fold_{k−1}}) batch so the PCA power
+        // iterations behind the weights run on the worker pool too, not
+        // serially ahead of it.
+        let per = k + 1;
+        let weight_batch = crate::parallel::par_map(gammas.len() * per, self.threads, |t| {
+            let (g1, g2) = gammas[t / per];
+            match t % per {
+                0 => AdaptiveWeights::from_design(&ds.x, &ds.groups, g1, g2),
+                j => {
+                    let f = &plan.folds[j - 1];
+                    AdaptiveWeights::from_design(&f.train.x, &f.train.groups, g1, g2)
+                }
+            }
+        });
+        let mut batch_iter = weight_batch.into_iter();
+        let shared_weights: Vec<(AdaptiveWeights, Vec<AdaptiveWeights>)> = (0..gammas.len())
+            .map(|_| {
+                let full = batch_iter.next().expect("weight batch underrun");
+                let per_fold =
+                    (0..k).map(|_| batch_iter.next().expect("weight batch underrun")).collect();
+                (full, per_fold)
+            })
+            .collect();
+        let gamma_slot = |gp: &GridPoint| {
+            PathConfig::resolve_adaptive(gp.gamma, base.rule)
+                .map(|g| gammas.iter().position(|&x| x == g).expect("γ precomputed"))
+        };
+
+        // Stage 1 — each cell's reference λ path from the full data.
+        let refs = crate::parallel::par_map(grid.len(), self.threads, |c| {
+            let gp = &grid[c];
+            let mut cfg = base.path.clone();
+            cfg.alpha = gp.alpha;
+            cfg.adaptive = gp.gamma;
+            let mut runner = PathRunner::new(ds, cfg).rule(base.rule);
+            if let Some(gi) = gamma_slot(gp) {
+                runner = runner.weights(shared_weights[gi].0.clone());
+            }
+            let mut ws = self.pool.checkout();
+            let fit = runner
+                .run_with_workspace(&mut ws)
+                .map_err(|e| anyhow::anyhow!("cell {c} reference path fit failed: {e}"))?;
+            Ok::<(Vec<f64>, f64), anyhow::Error>((fit.lambdas, fit.metrics.total_seconds))
+        });
+        let mut lambdas: Vec<Vec<f64>> = Vec::with_capacity(grid.len());
+        let mut ref_seconds: Vec<f64> = Vec::with_capacity(grid.len());
+        for r in refs {
+            let (l, s) = r?;
+            lambdas.push(l);
+            ref_seconds.push(s);
+        }
+
+        // Stage 2 — flattened (cell × fold) fits on one shared queue.
+        let fold_results = crate::parallel::par_map(grid.len() * k, self.threads, |t| {
+            let (c, f) = (t / k, t % k);
+            let gp = &grid[c];
+            let fold = &plan.folds[f];
+            let mut cfg = base.path.clone();
+            cfg.alpha = gp.alpha;
+            cfg.adaptive = gp.gamma;
+            let mut runner = PathRunner::new(&fold.train, cfg)
+                .rule(base.rule)
+                .fixed_path(lambdas[c].clone());
+            if let Some(gi) = gamma_slot(gp) {
+                runner = runner.weights(shared_weights[gi].1[f].clone());
+            }
+            let mut ws = self.pool.checkout();
+            let fit = runner
+                .run_with_workspace(&mut ws)
+                .map_err(|e| anyhow::anyhow!("cell {c} fold {f} fit failed: {e}"))?;
+            let m = &fit.metrics;
+            Ok::<FoldFit, anyhow::Error>(FoldFit {
+                losses: fit.betas.iter().map(|b| holdout_loss(&fold.test, b)).collect(),
+                c_prop: m.candidate_proportion(),
+                o_prop: m.input_proportion(),
+                seconds: m.total_seconds,
+            })
+        });
+        let mut fold_fits: Vec<FoldFit> = Vec::with_capacity(grid.len() * k);
+        for r in fold_results {
+            fold_fits.push(r?);
+        }
+
+        // Stage 3 — per-cell reduction, fold order preserved.
+        let cells = grid
+            .iter()
+            .enumerate()
+            .map(|(c, &gp)| {
+                let ffs = &fold_fits[c * k..(c + 1) * k];
+                let seconds =
+                    ref_seconds[c] + ffs.iter().map(|ff| ff.seconds).sum::<f64>();
+                reduce_cell(gp, std::mem::take(&mut lambdas[c]), ffs, seconds)
+            })
+            .collect();
+        Ok(cells)
+    }
+}
+
+/// Run k-fold CV at one `(α, γ)` setting with a transient [`CvEngine`]
+/// (`cfg.threads` workers). Hold a [`CvEngine`] instead to amortize its
+/// workspace pool across repeated calls.
+pub fn cross_validate(ds: &Dataset, cfg: &CvConfig) -> anyhow::Result<CvCell> {
+    CvEngine::new(cfg.threads).cross_validate(ds, cfg)
+}
+
+/// Grid search over α (and γ for aSGL) with a transient [`CvEngine`]:
+/// returns every cell plus the winner index.
+pub fn grid_search(
+    ds: &Dataset,
+    base: &CvConfig,
+    alphas: &[f64],
+    gammas: &[Option<(f64, f64)>],
+) -> anyhow::Result<(Vec<CvCell>, usize)> {
+    CvEngine::new(base.threads).grid_search(ds, base, alphas, gammas)
+}
+
+/// Per-cell fresh-allocation reference for the pooled grid search: every
+/// cell re-splits the folds, re-standardizes its training data, recomputes
+/// adaptive weights per fit, and every fit allocates private workspaces.
+/// Slower by construction; exists so benches can price the pooled engine
+/// and `rust/tests/cv_equivalence.rs` can prove it changes nothing.
+pub fn grid_search_reference(
+    ds: &Dataset,
+    base: &CvConfig,
+    alphas: &[f64],
+    gammas: &[Option<(f64, f64)>],
+) -> anyhow::Result<(Vec<CvCell>, usize)> {
+    anyhow::ensure!(!alphas.is_empty(), "empty α grid");
+    anyhow::ensure!(!gammas.is_empty(), "empty γ grid");
+    let mut cells = Vec::new();
+    for &alpha in alphas {
+        for &gamma in gammas {
+            let mut cfg = base.clone();
+            cfg.path.alpha = alpha;
+            cfg.path.adaptive = gamma;
+            let t0 = std::time::Instant::now();
+            // Per-cell split and standardization (the redundancy the
+            // shared FoldPlan removes — byte-identical results).
+            let plan = FoldPlan::new(ds, cfg.folds, cfg.seed)?;
+            let full_fit =
+                PathRunner::new(ds, cfg.path.clone()).rule(cfg.rule).run()?;
+            let lambdas = full_fit.lambdas.clone();
+            let results = crate::parallel::par_map(plan.folds.len(), cfg.threads, |f| {
+                let fold = &plan.folds[f];
+                let fit = PathRunner::new(&fold.train, cfg.path.clone())
+                    .rule(cfg.rule)
+                    .fixed_path(lambdas.clone())
+                    .run()
+                    .map_err(|e| anyhow::anyhow!("fold {f} fit failed: {e}"))?;
+                let m = &fit.metrics;
+                Ok::<FoldFit, anyhow::Error>(FoldFit {
+                    losses: fit.betas.iter().map(|b| holdout_loss(&fold.test, b)).collect(),
+                    c_prop: m.candidate_proportion(),
+                    o_prop: m.input_proportion(),
+                    seconds: m.total_seconds,
+                })
+            });
+            let mut fold_fits = Vec::with_capacity(plan.folds.len());
+            for r in results {
+                fold_fits.push(r?);
+            }
+            let point = GridPoint { alpha, gamma };
+            cells.push(reduce_cell(
+                point,
+                full_fit.lambdas,
+                &fold_fits,
+                t0.elapsed().as_secs_f64(),
+            ));
+        }
+    }
+    let best = winner(&cells);
     Ok((cells, best))
 }
 
-/// Paired CV timing: screened vs no-screen, as in Table A36.
+/// Paired CV timing: screened vs no-screen, as in Table A36. Both timed
+/// runs share one engine and see a warm workspace pool — the untimed
+/// warm-up runs at *no-screen* sizes, growing every buffer to its
+/// maximum (screened problems are strictly smaller) — so the comparison
+/// prices screening, not allocation order.
 pub fn cv_improvement_factor(ds: &Dataset, cfg: &CvConfig) -> anyhow::Result<(f64, f64, f64)> {
-    let mut acc_if = Accumulator::new();
-    let screened = cross_validate(ds, cfg)?;
+    let engine = CvEngine::new(cfg.threads);
     let mut no_cfg = cfg.clone();
     no_cfg.rule = RuleKind::NoScreen;
-    let unscreened = cross_validate(ds, &no_cfg)?;
+    engine.cross_validate(ds, &no_cfg)?;
+    let mut acc_if = Accumulator::new();
+    let screened = engine.cross_validate(ds, cfg)?;
+    let unscreened = engine.cross_validate(ds, &no_cfg)?;
     acc_if.push(unscreened.seconds / screened.seconds.max(1e-12));
     Ok((acc_if.mean(), screened.seconds, unscreened.seconds))
 }
@@ -196,6 +617,30 @@ mod tests {
     }
 
     #[test]
+    fn fold_plan_partitions_and_standardizes() {
+        let ds = data();
+        let plan = FoldPlan::new(&ds, 4, 5).unwrap();
+        assert_eq!(plan.folds.len(), 4);
+        let total_test: usize = plan.folds.iter().map(|f| f.test.n()).sum();
+        assert_eq!(total_test, ds.n());
+        for fold in &plan.folds {
+            assert_eq!(fold.train.n() + fold.test.n(), ds.n());
+            // Training data is standardized: unit column norms.
+            let norms = fold.train.x.col_norms();
+            for nv in norms {
+                assert!((nv - 1.0).abs() < 1e-8, "column norm {nv}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_plan_rejects_degenerate_splits() {
+        let ds = data();
+        assert!(FoldPlan::new(&ds, 1, 5).is_err());
+        assert!(FoldPlan::new(&ds, ds.n() + 1, 5).is_err());
+    }
+
+    #[test]
     fn cv_picks_interior_lambda_on_signal_data() {
         let ds = data();
         let cfg = CvConfig {
@@ -206,9 +651,16 @@ mod tests {
         };
         let cell = cross_validate(&ds, &cfg).unwrap();
         assert_eq!(cell.cv_loss.len(), 10);
+        assert_eq!(cell.cv_se.len(), 10);
         // With real signal the best λ should not be the null model.
         assert!(cell.best_idx > 0, "best_idx {}", cell.best_idx);
         assert!(cell.cv_loss.iter().all(|v| v.is_finite()));
+        assert!(cell.cv_se.iter().all(|v| v.is_finite() && *v >= 0.0));
+        // 1-SE never selects a denser (smaller-λ) model than the optimum.
+        assert!(cell.best_1se_idx <= cell.best_idx);
+        // Screening stats populated: the optimization set is non-trivial.
+        assert!(cell.mean_input_proportion > 0.0);
+        assert!(cell.mean_input_proportion <= 1.0 + 1e-12);
     }
 
     #[test]
@@ -224,5 +676,40 @@ mod tests {
             grid_search(&ds, &cfg, &[0.5, 0.95], &[None, Some((0.1, 0.1))]).unwrap();
         assert_eq!(cells.len(), 4);
         assert!(best < 4);
+        // α-major cell order, mirroring grid_search_reference.
+        assert_eq!(cells[0].alpha, 0.5);
+        assert_eq!(cells[1].alpha, 0.5);
+        assert_eq!(cells[1].gamma, Some((0.1, 0.1)));
+        assert_eq!(cells[2].alpha, 0.95);
+    }
+
+    #[test]
+    fn engine_pool_never_grows_across_invocations() {
+        let ds = data();
+        let cfg = CvConfig {
+            folds: 3,
+            path: PathConfig { path_len: 5, ..PathConfig::default() },
+            threads: 2,
+            ..CvConfig::default()
+        };
+        let engine = CvEngine::new(2);
+        let first = engine.cross_validate(&ds, &cfg).unwrap();
+        let second = engine.cross_validate(&ds, &cfg).unwrap();
+        // Deterministic: repeated invocations on a warm pool are identical.
+        assert_eq!(first.best_idx, second.best_idx);
+        for (a, b) in first.cv_loss.iter().zip(&second.cv_loss) {
+            assert_eq!(a, b, "warm-pool CV drifted");
+        }
+        assert_eq!(engine.pool_slots(), 2, "pool must not allocate per invocation");
+        // 2 invocations × (1 reference fit + 3 fold fits) = 8 checkouts.
+        assert_eq!(engine.pool_checkouts(), 8);
+    }
+
+    #[test]
+    fn empty_grids_error_instead_of_panicking() {
+        let ds = data();
+        let cfg = CvConfig { folds: 3, threads: 1, ..CvConfig::default() };
+        assert!(grid_search(&ds, &cfg, &[], &[None]).is_err());
+        assert!(grid_search(&ds, &cfg, &[0.5], &[]).is_err());
     }
 }

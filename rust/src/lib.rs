@@ -4,28 +4,20 @@
 //! Sparse-group Lasso and its Adaptive Variant"* (Feser & Evangelou,
 //! ICML 2025).
 //!
-//! The crate implements the full pathwise sparse-group-lasso stack:
+//! ## Module map (→ paper section / equation)
 //!
-//! * **Penalties** — SGL and adaptive SGL norms, their ε-norm duals, exact
-//!   proximal operators and PCA-based adaptive weights ([`penalty`],
-//!   [`norms`]).
-//! * **Solvers** — FISTA with the exact SGL prox and ATOS (adaptive
-//!   three-operator splitting, the paper's solver), both warm-started with
-//!   backtracking line search ([`solver`]).
-//! * **Screening** — the paper's contribution: DFR bi-level strong rules for
-//!   SGL (Eqs. 5–6) and aSGL (Eqs. 7–8), the `sparsegl` group-only strong
-//!   rule, GAP-safe sequential/dynamic exact rules, and a no-screen
-//!   baseline, all behind one [`screen::ScreenRule`] interface with
-//!   KKT-violation checking ([`screen`]).
-//! * **Pathwise coordinator** — Algorithm 1/A1: candidate sets →
-//!   optimization set → reduced solve → KKT loop, with full per-path-point
-//!   metrics capture ([`path`]).
-//! * **Runtime** — PJRT execution of AOT-compiled JAX/Pallas artifacts
-//!   (HLO text) for the dense hot path; Python never runs at fit time
-//!   ([`runtime`]).
-//! * **Substrates** — dense linear algebra, RNG, synthetic + surrogate-real
-//!   data generators, k-fold CV, a bench harness and a property-testing kit
-//!   (no external crates are available offline).
+//! | Module | Implements | Paper |
+//! |---|---|---|
+//! | [`penalty`], [`norms`] | SGL / aSGL norms, ε-norm duals, exact proxes, PCA adaptive weights | Eq. 1–2, §2.1, App. B.3 |
+//! | [`solver`] | FISTA (exact SGL prox) and ATOS, warm-started, backtracking | §2.3, App. A (Table A1 settings) |
+//! | [`screen`] | DFR bi-level strong rules for SGL (Eqs. 5–6) and aSGL (Eqs. 7–8), `sparsegl` group rule, GAP-safe seq/dyn, no-screen baseline, KKT checks | §2.2, §2.4, App. C |
+//! | [`path`] | Algorithm 1/A1: candidates → optimization set → reduced solve → KKT loop; persistent [`path::PathWorkspace`] hot loop | §2.4, App. D.1 metrics |
+//! | [`cv`] | Workspace-pooled k-fold CV and `(α, γ)` grid search with shared fold plans | §1.2, App. D.7, Table A36 |
+//! | [`model_api`] | scikit-style `fit → select → predict` on raw data | — |
+//! | [`data`] | Synthetic designs, interaction expansion, surrogate real datasets | §3.1, §4, Table 1, Table A37 |
+//! | [`runtime`] | PJRT execution of AOT-compiled JAX/Pallas artifacts for the dense hot path | — |
+//! | [`metrics`], [`bench_harness`], [`report`] | Improvement factor, input proportion, paper-style tables, `BENCH_*.json` | §3, App. D.1 |
+//! | [`linalg`], [`groups`], [`rng`], [`parallel`], [`cli`], [`testkit`] | Offline substrates (no external crates) | — |
 //!
 //! ## Quickstart
 //!
@@ -39,6 +31,22 @@
 //!     .run()
 //!     .unwrap();
 //! println!("selected {} variables at end of path", fit.active_vars_last());
+//! ```
+//!
+//! Joint `(λ, α)` tuning — the workload DFR is built to make cheap — goes
+//! through the pooled CV engine:
+//!
+//! ```no_run
+//! use dfr::cv::{CvConfig, CvEngine};
+//! use dfr::prelude::*;
+//!
+//! let data = SyntheticConfig::default().generate(42);
+//! let engine = CvEngine::with_default_threads();
+//! let cfg = CvConfig { folds: 5, ..CvConfig::default() };
+//! let (cells, best) = engine
+//!     .grid_search(&data.dataset, &cfg, &[0.5, 0.95], &[None])
+//!     .unwrap();
+//! println!("winner: α = {}", cells[best].alpha);
 //! ```
 
 pub mod bench_harness;
@@ -63,6 +71,7 @@ pub mod testkit;
 
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::cv::{CvCell, CvConfig, CvEngine, FoldPlan};
     pub use crate::data::real::{RealDatasetKind, SurrogateConfig};
     pub use crate::data::{Dataset, InteractionOrder, Response, SyntheticConfig};
     pub use crate::groups::Groups;
@@ -70,6 +79,7 @@ pub mod prelude {
     pub use crate::loss::LossKind;
     pub use crate::metrics::{PathMetrics, PointMetrics};
     pub use crate::model_api::{FittedSgl, SglModel};
+    pub use crate::parallel::WorkspacePool;
     pub use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
     pub use crate::solver::SolverWorkspace;
     pub use crate::penalty::{AdaptiveWeights, Penalty};

@@ -5,10 +5,12 @@
 //! * `fit`      — pathwise (a)SGL fit on synthetic or surrogate-real data
 //!                with a chosen screening rule; prints paper-style metrics.
 //! * `compare`  — screened vs no-screen paired run (improvement factor).
-//! * `cv`       — k-fold cross-validation, optionally over an α grid.
+//! * `cv`       — workspace-pooled k-fold cross-validation, optionally
+//!                over a joint `(α, γ)` grid (`--alphas` / `--gammas`),
+//!                with per-cell screening stats and the 1-SE rule.
 //! * `info`     — environment report (threads, artifacts, PJRT platform).
 
-use dfr::cli::{parse_rule, usage, Args, OptSpec};
+use dfr::cli::{parse_f64_list, parse_gamma_list, parse_rule, usage, Args, OptSpec};
 use dfr::data::real::{RealDatasetKind, SurrogateConfig};
 use dfr::data::{Dataset, Response, SyntheticConfig};
 use dfr::path::{compare_with_no_screen, PathConfig, PathRunner};
@@ -29,6 +31,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "gamma", help: "aSGL adaptive weight exponent γ₁=γ₂", default: None, takes_value: true },
         OptSpec { name: "solver", help: "fista | atos", default: Some("fista"), takes_value: true },
         OptSpec { name: "folds", help: "cv: number of folds", default: Some("10"), takes_value: true },
+        OptSpec { name: "alphas", help: "cv: comma-separated α grid (overrides --alpha)", default: None, takes_value: true },
+        OptSpec { name: "gammas", help: "cv: comma-separated γ grid; entries are `none`, `g`, or `g1:g2`", default: None, takes_value: true },
+        OptSpec { name: "one-se", help: "cv: select λ by the one-standard-error rule", default: None, takes_value: false },
         OptSpec { name: "seed", help: "RNG seed", default: Some("42"), takes_value: true },
         OptSpec { name: "logistic", help: "synthetic: logistic response", default: None, takes_value: false },
         OptSpec { name: "xla", help: "serve full gradients from PJRT artifacts (artifacts/)", default: None, takes_value: false },
@@ -163,14 +168,63 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 seed: args.usize_or("seed", 42).map_err(anyhow::Error::msg)? as u64,
                 threads: dfr::parallel::default_threads(),
             };
-            let cell = dfr::cv::cross_validate(&ds, &cfg)?;
+            let alphas = match args.options.get("alphas") {
+                Some(s) => parse_f64_list(s).map_err(anyhow::Error::msg)?,
+                None => vec![cfg.path.alpha],
+            };
+            let gammas = match args.options.get("gammas") {
+                Some(s) => parse_gamma_list(s).map_err(anyhow::Error::msg)?,
+                None => vec![cfg.path.adaptive],
+            };
+            let engine = dfr::cv::CvEngine::new(cfg.threads);
+            let (cells, best) = engine.grid_search(&ds, &cfg, &alphas, &gammas)?;
             println!(
-                "cv({} folds): best λ = {:.5} (index {}), held-out loss {:.5}, {:.2}s",
+                "cv({} folds, {} grid cell{}, {} thread{}):",
                 cfg.folds,
-                cell.lambdas[cell.best_idx],
-                cell.best_idx,
-                cell.cv_loss[cell.best_idx],
-                cell.seconds
+                cells.len(),
+                if cells.len() == 1 { "" } else { "s" },
+                engine.threads(),
+                if engine.threads() == 1 { "" } else { "s" },
+            );
+            // Report the γ each cell actually fit with (an aSGL rule
+            // forces γ=(0.1, 0.1) even when the spec says none).
+            let fmt_gamma = |spec: Option<(f64, f64)>| match dfr::path::PathConfig::resolve_adaptive(spec, cfg.rule) {
+                Some((g1, g2)) => format!("γ=({g1},{g2})"),
+                None => "γ=none".to_string(),
+            };
+            for (i, cell) in cells.iter().enumerate() {
+                let marker = if i == best { "  <-- best" } else { "" };
+                let gamma = fmt_gamma(cell.gamma);
+                println!(
+                    "  α={:.3} {gamma}: loss {:.5} ± {:.5} at λ={:.5} (idx {}), \
+                     1-SE λ={:.5} (idx {}), C_v/p {:.4}, O_v/p {:.4}, {:.2}s{marker}",
+                    cell.alpha,
+                    cell.cv_loss[cell.best_idx],
+                    cell.cv_se[cell.best_idx],
+                    cell.lambdas[cell.best_idx],
+                    cell.best_idx,
+                    cell.lambdas[cell.best_1se_idx],
+                    cell.best_1se_idx,
+                    cell.mean_candidate_proportion,
+                    cell.mean_input_proportion,
+                    cell.seconds,
+                );
+            }
+            let w = &cells[best];
+            let idx = if args.flag("one-se") { w.best_1se_idx } else { w.best_idx };
+            println!(
+                "selected: α={:.3}, {}, λ={:.5} (index {}{}), held-out loss {:.5}",
+                w.alpha,
+                fmt_gamma(w.gamma),
+                w.lambdas[idx],
+                idx,
+                if args.flag("one-se") { ", 1-SE rule" } else { "" },
+                w.cv_loss[idx],
+            );
+            println!(
+                "workspace pool: {} workspace(s) served {} path fits",
+                engine.pool_slots(),
+                engine.pool_checkouts(),
             );
             Ok(())
         }

@@ -49,6 +49,12 @@ impl PathMetrics {
         mean(self.points.iter().map(|pt| pt.o_g as f64 / self.m as f64))
     }
 
+    /// Mean `|C_v| / p` over the path (screened candidate-set size — the
+    /// per-cell reduction statistic the CV engine reports).
+    pub fn candidate_proportion(&self) -> f64 {
+        mean(self.points.iter().map(|pt| pt.c_v as f64 / self.p as f64))
+    }
+
     /// Mean `|O_v| / |A_v|` (screening efficiency; low is better).
     pub fn ov_over_av(&self) -> f64 {
         mean(
@@ -219,6 +225,7 @@ mod tests {
             o_v: 20,
             o_g: 2,
             a_v: 10,
+            c_v: 10,
             converged: true,
             ..Default::default()
         });
@@ -226,12 +233,14 @@ mod tests {
             o_v: 40,
             o_g: 4,
             a_v: 20,
+            c_v: 30,
             converged: false,
             kkt_violations: 3,
             ..Default::default()
         });
         assert!((pm.input_proportion() - 0.3).abs() < 1e-12);
         assert!((pm.group_input_proportion() - 0.3).abs() < 1e-12);
+        assert!((pm.candidate_proportion() - 0.2).abs() < 1e-12);
         assert!((pm.ov_over_av() - 2.0).abs() < 1e-12);
         assert_eq!(pm.total_kkt_violations(), 3);
         assert_eq!(pm.failed_convergences(), 1);

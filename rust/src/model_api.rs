@@ -4,8 +4,11 @@
 //! standardization is handled internally and coefficients are mapped back
 //! to the original feature scale (including the intercept), λ is selected
 //! by k-fold CV with an optional one-standard-error rule, and predictions
-//! support both response families.
+//! support both response families. CV runs through the workspace-pooled
+//! [`crate::cv::CvEngine`], including joint `(α, γ)` tuning via
+//! [`SglModel::fit_cv_grid`].
 
+use crate::cv::{CvConfig, CvEngine};
 use crate::data::{Dataset, Response};
 use crate::loss::sigmoid;
 use crate::path::{PathConfig, PathFit, PathRunner};
@@ -14,12 +17,16 @@ use crate::screen::RuleKind;
 /// Model specification.
 #[derive(Clone, Debug)]
 pub struct SglModel {
+    /// Pathwise fit settings (α, path length, solver, adaptive γ).
     pub path: PathConfig,
+    /// Screening rule used for every fit.
     pub rule: RuleKind,
-    /// CV folds used by [`SglModel::fit_cv`].
+    /// CV folds used by [`SglModel::fit_cv`] / [`SglModel::fit_cv_grid`].
     pub cv_folds: usize,
-    /// Pick the sparsest λ within one stderr of the CV optimum.
+    /// Pick the sparsest λ within one standard error of the CV optimum
+    /// (the standard error is measured across folds by the CV engine).
     pub one_se_rule: bool,
+    /// Seed for the CV fold split.
     pub seed: u64,
 }
 
@@ -110,24 +117,54 @@ impl SglModel {
         response: Response,
     ) -> anyhow::Result<FittedSgl> {
         let (ds, centers) = self.prepare(x_rows, y, group_sizes, response)?;
-        let cv = crate::cv::CvConfig {
-            folds: self.cv_folds,
-            path: self.path.clone(),
-            rule: self.rule,
-            seed: self.seed,
-            threads: crate::parallel::default_threads(),
-        };
-        let cell = crate::cv::cross_validate(&ds, &cv)?;
-        let idx = if self.one_se_rule {
-            one_se_index(&cell.cv_loss, cell.best_idx, self.cv_folds)
-        } else {
-            cell.best_idx
-        };
+        let engine = CvEngine::with_default_threads();
+        let cell = engine.cross_validate(&ds, &self.cv_config())?;
+        let idx = if self.one_se_rule { cell.best_1se_idx } else { cell.best_idx };
         let fit = PathRunner::new(&ds, self.path.clone())
             .rule(self.rule)
             .fixed_path(cell.lambdas.clone())
             .run()?;
         self.finalize(fit, &centers, y, response, idx)
+    }
+
+    /// Jointly tune `(λ, α)` — and `(γ₁, γ₂)` for aSGL — by k-fold CV over
+    /// the given grids, then refit at the winning cell's settings. The
+    /// whole grid runs through one workspace-pooled [`CvEngine`] with
+    /// shared fold splits, so the cost scales with the number of path fits
+    /// rather than the number of cells times the CV overhead.
+    pub fn fit_cv_grid(
+        &self,
+        x_rows: &[Vec<f64>],
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+        alphas: &[f64],
+        gammas: &[Option<(f64, f64)>],
+    ) -> anyhow::Result<FittedSgl> {
+        let (ds, centers) = self.prepare(x_rows, y, group_sizes, response)?;
+        let engine = CvEngine::with_default_threads();
+        let (cells, best) = engine.grid_search(&ds, &self.cv_config(), alphas, gammas)?;
+        let cell = &cells[best];
+        let idx = if self.one_se_rule { cell.best_1se_idx } else { cell.best_idx };
+        let mut path = self.path.clone();
+        path.alpha = cell.alpha;
+        path.adaptive = cell.gamma;
+        let fit = PathRunner::new(&ds, path)
+            .rule(self.rule)
+            .fixed_path(cell.lambdas.clone())
+            .run()?;
+        self.finalize(fit, &centers, y, response, idx)
+    }
+
+    /// The CV configuration this model runs with.
+    fn cv_config(&self) -> CvConfig {
+        CvConfig {
+            folds: self.cv_folds,
+            path: self.path.clone(),
+            rule: self.rule,
+            seed: self.seed,
+            threads: crate::parallel::default_threads(),
+        }
     }
 
     fn prepare(
@@ -203,20 +240,6 @@ impl SglModel {
             path_fit: fit,
         })
     }
-}
-
-/// One-standard-error rule: the largest λ (sparsest model) whose CV loss is
-/// within one stderr-proxy of the minimum. Without per-fold losses stored,
-/// uses the common proxy `se ≈ |loss| / √folds` of the minimum cell.
-fn one_se_index(cv_loss: &[f64], best: usize, folds: usize) -> usize {
-    let min = cv_loss[best];
-    let se = min.abs() / (folds as f64).sqrt();
-    for (i, &l) in cv_loss.iter().enumerate() {
-        if l <= min + se {
-            return i; // path is sorted λ-descending: first hit = sparsest
-        }
-    }
-    best
 }
 
 #[cfg(test)]
@@ -303,6 +326,25 @@ mod tests {
             .unwrap();
         assert!(one_se.lambda_idx <= plain.lambda_idx, "1-SE must not be denser");
         assert!(one_se.selected().len() <= plain.selected().len() + 1);
+    }
+
+    #[test]
+    fn cv_grid_fit_selects_a_grid_cell() {
+        let (rows, y, _) = raw_problem(6, 90, 12);
+        let model = SglModel {
+            path: PathConfig { path_len: 8, ..PathConfig::default() },
+            cv_folds: 3,
+            ..Default::default()
+        };
+        let alphas = [0.5, 0.95];
+        let fitted = model
+            .fit_cv_grid(&rows, &y, &[4, 4, 4], Response::Linear, &alphas, &[None])
+            .unwrap();
+        assert!(fitted.path_fit.lambdas.len() == 8);
+        assert!(fitted.lambda > 0.0);
+        // The in-sample fit should still track the signal.
+        let preds: Vec<f64> = rows.iter().map(|r| fitted.predict(r)).collect();
+        assert!(correlation(&preds, &y) > 0.9);
     }
 
     #[test]

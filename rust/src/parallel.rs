@@ -1,11 +1,15 @@
 //! Minimal data-parallel substrate built on `std::thread::scope`.
 //!
-//! No `rayon` is available offline; the pathwise experiments only need two
-//! shapes of parallelism — chunked mutation of a slice (parallel `Xᵀr`) and
-//! a parallel map over independent work items (CV folds, simulation
-//! repeats) — so that is all we build.
+//! No `rayon` is available offline; the pathwise experiments only need
+//! three shapes of parallelism — chunked mutation of a slice (parallel
+//! `Xᵀr`), a parallel map over independent work items (CV tasks,
+//! simulation repeats), and a pool of reusable per-worker scratch states
+//! ([`WorkspacePool`], the substrate of the workspace-pooled CV engine in
+//! [`crate::cv`]) — so that is all we build.
 
+use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, TryLockError};
 
 /// Number of worker threads to use by default: respects
 /// `DFR_THREADS` if set, otherwise `available_parallelism`, capped at 16.
@@ -85,6 +89,91 @@ pub fn par_map<R: Send>(n: usize, threads: usize, f: impl Fn(usize) -> R + Sync)
     slots.into_iter().map(|r| r.expect("par_map missed an index")).collect()
 }
 
+/// A fixed-size pool of reusable worker states (e.g.
+/// [`crate::path::PathWorkspace`]), shared across [`par_map`] tasks.
+///
+/// The pool is created with as many slots as there are worker threads;
+/// every slot is built once via `Default` and then *reused* — checked out,
+/// mutated, and returned — for the lifetime of the pool. Because the
+/// pooled states carry grow-only buffers, the allocator drops off the hot
+/// path after each slot has seen the largest problem it will be asked to
+/// hold: pooling `n_tasks ≫ n_threads` work items costs `n_threads`
+/// workspace initializations, not `n_tasks`.
+///
+/// Checkout discipline: a worker thread must hold at most **one** guard at
+/// a time. Under that discipline a pool with at least as many slots as
+/// concurrently-running workers always finds a free slot without blocking;
+/// oversubscription (more workers than slots) degrades to a brief spin
+/// while it waits for a slot to free up — never a deadlock.
+pub struct WorkspacePool<T> {
+    slots: Vec<Mutex<T>>,
+    checkouts: AtomicUsize,
+}
+
+impl<T: Default> WorkspacePool<T> {
+    /// Build a pool with `slots` default-initialized states (min 1).
+    pub fn new(slots: usize) -> Self {
+        WorkspacePool {
+            slots: (0..slots.max(1)).map(|_| Mutex::new(T::default())).collect(),
+            checkouts: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl<T> WorkspacePool<T> {
+    /// Number of pooled states — the total number of workspace
+    /// initializations this pool will ever perform.
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of checkouts served so far (across all threads). The ratio
+    /// `checkouts / slots` is the pool's reuse factor.
+    pub fn checkouts(&self) -> usize {
+        self.checkouts.load(Ordering::Relaxed)
+    }
+
+    /// Borrow a free slot, spinning until one is available. The slot's
+    /// previous contents are preserved (that is the point: grow-only
+    /// buffers keep their capacity), so callers must fully re-initialize
+    /// any state they read — `PathWorkspace::ensure` does exactly that.
+    pub fn checkout(&self) -> PoolGuard<'_, T> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        loop {
+            for slot in &self.slots {
+                match slot.try_lock() {
+                    Ok(guard) => return PoolGuard { guard },
+                    // A worker that panicked mid-task poisons its slot;
+                    // the state itself is still structurally sound (every
+                    // consumer resizes/clears before use), so recover it.
+                    Err(TryLockError::Poisoned(p)) => return PoolGuard { guard: p.into_inner() },
+                    Err(TryLockError::WouldBlock) => {}
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Exclusive borrow of one pooled state; returns the slot on drop.
+pub struct PoolGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+}
+
+impl<T> Deref for PoolGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for PoolGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +214,34 @@ mod tests {
         assert!(r.is_empty());
         let mut v: Vec<u8> = vec![];
         for_each_chunk(&mut v, 4, |_, _| {});
+    }
+
+    #[test]
+    fn pool_reuses_slots_across_many_tasks() {
+        let threads = 3;
+        let pool: WorkspacePool<Vec<f64>> = WorkspacePool::new(threads);
+        let sums = par_map(50, threads, |i| {
+            let mut ws = pool.checkout();
+            // Grow-only scratch: capacity persists, contents re-initialized.
+            ws.clear();
+            ws.resize(8, i as f64);
+            ws.iter().sum::<f64>()
+        });
+        for (i, s) in sums.iter().enumerate() {
+            assert_eq!(*s, 8.0 * i as f64);
+        }
+        assert_eq!(pool.slots(), threads, "pool must never grow");
+        assert_eq!(pool.checkouts(), 50);
+    }
+
+    #[test]
+    fn pool_serves_single_threaded_callers() {
+        let pool: WorkspacePool<usize> = WorkspacePool::new(1);
+        {
+            let mut a = pool.checkout();
+            *a += 1;
+        }
+        let b = pool.checkout();
+        assert_eq!(*b, 1, "state persists across checkouts");
     }
 }

@@ -24,6 +24,11 @@
 //! `Xβ` in the workspace, and [`Engine::full_gradient_carried`] turns them
 //! into the screening/KKT gradient with a single `Xᵀr` pass — no redundant
 //! `Xβ` recomputation anywhere in the solve → KKT → re-solve cycle.
+//!
+//! Whole workspaces are themselves pooled one level up: the CV engine
+//! ([`crate::cv::CvEngine`]) keeps one [`PathWorkspace`] per worker thread
+//! in a [`crate::parallel::WorkspacePool`] and reuses it across folds,
+//! grid cells, and invocations.
 
 pub mod lambda;
 
@@ -178,10 +183,13 @@ impl PathWorkspace {
 /// Pathwise fit configuration (defaults = Table A1 synthetic column).
 #[derive(Clone, Debug)]
 pub struct PathConfig {
+    /// SGL mixing parameter α ∈ [0, 1] (1 = lasso, 0 = group lasso).
     pub alpha: f64,
+    /// Number of λ path points.
     pub path_len: usize,
     /// `λ_l / λ₁` (0.1 synthetic, 0.2 real data).
     pub path_end_ratio: f64,
+    /// Inner-solver settings shared by every path point.
     pub solver: SolverConfig,
     /// `(γ₁, γ₂)` for aSGL adaptive weights; `None` = plain SGL.
     pub adaptive: Option<(f64, f64)>,
@@ -205,13 +213,40 @@ impl Default for PathConfig {
     }
 }
 
+impl PathConfig {
+    /// The `(γ₁, γ₂)` exponents an `(adaptive-spec, rule)` combination
+    /// actually fits with: `Some` iff the spec requests adaptive weights
+    /// or the rule is aSGL-specific, with the paper's `(0.1, 0.1)`
+    /// default. Single source of truth shared by
+    /// `PathRunner::build_penalty` and the CV engine's shared-weight
+    /// precomputation — keep them agreeing by construction.
+    pub fn resolve_adaptive(
+        adaptive: Option<(f64, f64)>,
+        rule: RuleKind,
+    ) -> Option<(f64, f64)> {
+        if adaptive.is_some() || rule == RuleKind::DfrAsgl {
+            Some(adaptive.unwrap_or((0.1, 0.1)))
+        } else {
+            None
+        }
+    }
+
+    /// [`PathConfig::resolve_adaptive`] applied to this config.
+    pub fn effective_adaptive(&self, rule: RuleKind) -> Option<(f64, f64)> {
+        Self::resolve_adaptive(self.adaptive, rule)
+    }
+}
+
 /// Result of a pathwise fit.
 #[derive(Clone, Debug)]
 pub struct PathFit {
+    /// Screening rule the fit ran with.
     pub rule: RuleKind,
+    /// The λ grid, descending from λ₁ (null model).
     pub lambdas: Vec<f64>,
     /// One full-length coefficient vector per path point.
     pub betas: Vec<Vec<f64>>,
+    /// Per-path-point screening/solver metrics (Appendix D.1).
     pub metrics: PathMetrics,
 }
 
@@ -263,21 +298,29 @@ impl<'a> PathRunner<'a> {
         }
     }
 
+    /// Select the screening rule (default: DFR for SGL).
     pub fn rule(mut self, rule: RuleKind) -> Self {
         self.rule = rule;
         self
     }
 
+    /// Route dense compute through a custom [`Engine`] (e.g. the PJRT
+    /// backend) instead of the native one.
     pub fn engine(mut self, engine: &'a dyn Engine) -> Self {
         self.engine = engine;
         self
     }
 
+    /// Fit on an externally-fixed λ grid instead of deriving one from the
+    /// data (CV folds and paired benches share paths this way).
     pub fn fixed_path(mut self, lambdas: Vec<f64>) -> Self {
         self.fixed_path = Some(lambdas);
         self
     }
 
+    /// Use precomputed adaptive weights instead of deriving them from the
+    /// design, so CV folds / repeats can share one computation per
+    /// `(design, γ)` pair.
     pub fn weights(mut self, w: AdaptiveWeights) -> Self {
         self.weights = Some(w);
         self
@@ -293,13 +336,11 @@ impl<'a> PathRunner<'a> {
         self
     }
 
-    /// Build the penalty this run will use (aSGL iff the config or rule
-    /// demands it).
+    /// Build the penalty this run will use (aSGL iff
+    /// [`PathConfig::effective_adaptive`] says so).
     pub fn build_penalty(&self) -> Penalty {
         let groups = self.dataset.groups.clone();
-        let adaptive = self.cfg.adaptive.is_some() || self.rule == RuleKind::DfrAsgl;
-        if adaptive {
-            let (g1, g2) = self.cfg.adaptive.unwrap_or((0.1, 0.1));
+        if let Some((g1, g2)) = self.cfg.effective_adaptive(self.rule) {
             let aw = self
                 .weights
                 .clone()
@@ -600,12 +641,17 @@ impl<'a> PathRunner<'a> {
 /// improvement factor plus the ℓ₂ distance between solutions (the paper's
 /// headline comparison for one dataset/rule pair).
 pub struct Comparison {
+    /// The screened fit (on the no-screen fit's λ path).
     pub screened: PathFit,
+    /// The no-screen baseline fit.
     pub no_screen: PathFit,
+    /// `no-screen seconds / screened seconds`.
     pub improvement_factor: f64,
+    /// Mean per-point ℓ₂ distance between the two solution paths.
     pub l2_distance: f64,
 }
 
+/// Run the paired screened / no-screen comparison behind [`Comparison`].
 pub fn compare_with_no_screen(
     dataset: &Dataset,
     cfg: &PathConfig,

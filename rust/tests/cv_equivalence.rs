@@ -1,0 +1,113 @@
+//! CV-engine equivalence properties: the workspace-pooled, shared-split,
+//! grid-flattened engine must return results numerically identical
+//! (ℓ₂ ≤ 1e-10) to the per-cell fresh-allocation reference — same
+//! `cv_loss` curves, same `best_idx` per cell, same winning cell — for
+//! both DFR-SGL and the adaptive variant.
+
+use dfr::cv::{grid_search_reference, CvConfig, CvEngine};
+use dfr::data::SyntheticConfig;
+use dfr::path::PathConfig;
+use dfr::screen::RuleKind;
+use dfr::solver::SolverConfig;
+
+fn data(seed: u64) -> dfr::data::Dataset {
+    SyntheticConfig {
+        n: 60,
+        p: 40,
+        groups: dfr::data::synthetic::GroupSpec::Even(8),
+        ..SyntheticConfig::default()
+    }
+    .generate(seed)
+    .dataset
+}
+
+fn cfg(rule: RuleKind) -> CvConfig {
+    CvConfig {
+        folds: 3,
+        path: PathConfig {
+            path_len: 8,
+            solver: SolverConfig { tol: 1e-8, max_iters: 20_000, ..Default::default() },
+            ..PathConfig::default()
+        },
+        rule,
+        seed: 11,
+        threads: 2,
+    }
+}
+
+fn l2(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+fn assert_grids_match(
+    ds: &dfr::data::Dataset,
+    base: &CvConfig,
+    alphas: &[f64],
+    gammas: &[Option<(f64, f64)>],
+) {
+    let engine = CvEngine::new(base.threads);
+    let (pooled, best_pooled) = engine.grid_search(ds, base, alphas, gammas).unwrap();
+    let (reference, best_ref) = grid_search_reference(ds, base, alphas, gammas).unwrap();
+    assert_eq!(pooled.len(), reference.len());
+    assert_eq!(best_pooled, best_ref, "pooled engine picked a different winner");
+    for (i, (a, b)) in pooled.iter().zip(&reference).enumerate() {
+        assert_eq!(a.alpha, b.alpha, "cell {i} α mismatch");
+        assert_eq!(a.gamma, b.gamma, "cell {i} γ mismatch");
+        assert_eq!(a.best_idx, b.best_idx, "cell {i} best_idx drifted");
+        assert_eq!(a.best_1se_idx, b.best_1se_idx, "cell {i} 1-SE index drifted");
+        let d_loss = l2(&a.cv_loss, &b.cv_loss);
+        assert!(d_loss <= 1e-10, "cell {i} cv_loss drift ℓ₂ = {d_loss}");
+        let d_se = l2(&a.cv_se, &b.cv_se);
+        assert!(d_se <= 1e-10, "cell {i} cv_se drift ℓ₂ = {d_se}");
+        let d_lam = l2(&a.lambdas, &b.lambdas);
+        assert!(d_lam <= 1e-10, "cell {i} λ grid drift ℓ₂ = {d_lam}");
+    }
+}
+
+/// Pooled grid search over α matches the reference for DFR-SGL.
+#[test]
+fn pooled_grid_matches_reference_for_dfr_sgl() {
+    let ds = data(21);
+    assert_grids_match(&ds, &cfg(RuleKind::DfrSgl), &[0.5, 0.95], &[None]);
+}
+
+/// Pooled joint (α × γ) grid matches the reference for the adaptive
+/// variant — exercising the shared per-(γ, fold) adaptive weights.
+#[test]
+fn pooled_grid_matches_reference_for_asgl() {
+    let ds = data(22);
+    assert_grids_match(
+        &ds,
+        &cfg(RuleKind::DfrAsgl),
+        &[0.95],
+        &[Some((0.1, 0.1)), Some((0.5, 0.5))],
+    );
+}
+
+/// A mixed grid (plain + adaptive cells) under a rule that only adapts
+/// when γ is given: both γ kinds coexist in one flattened schedule.
+#[test]
+fn pooled_grid_matches_reference_on_mixed_gamma_grid() {
+    let ds = data(23);
+    assert_grids_match(&ds, &cfg(RuleKind::DfrSgl), &[0.9], &[None, Some((0.2, 0.2))]);
+}
+
+/// Warm pools are not just consistent run-to-run but identical to the
+/// reference: re-running on an already-grown pool changes nothing.
+#[test]
+fn warm_pool_rerun_stays_equivalent() {
+    let ds = data(24);
+    let base = cfg(RuleKind::DfrSgl);
+    let alphas = [0.5, 0.95];
+    let engine = CvEngine::new(2);
+    let (first, _) = engine.grid_search(&ds, &base, &alphas, &[None]).unwrap();
+    let (second, _) = engine.grid_search(&ds, &base, &alphas, &[None]).unwrap();
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.best_idx, b.best_idx);
+        assert_eq!(a.cv_loss, b.cv_loss, "warm pool rerun drifted");
+    }
+    assert_eq!(engine.pool_slots(), 2, "pool grew across invocations");
+    // 2 runs × 2 cells × (1 reference fit + 3 fold fits) = 16 checkouts.
+    assert_eq!(engine.pool_checkouts(), 16);
+}
