@@ -107,5 +107,44 @@ fn main() -> anyhow::Result<()> {
         "\nexpected shape (paper Fig. 1/3, Tables A2–A4): DFR > sparsegl > GAP-safe ≈ 1; \
          DFR input proportion ≈ 0.02–0.15; zero-to-rare KKT violations."
     );
+
+    // --- Stage 3: the serving layer ---------------------------------------
+    // A persistent SglFitter handling repeated requests on one design:
+    // request 1 pays ingest + solve, every later request is served from
+    // the prepared-dataset and path caches.
+    println!("\n[stage 3] persistent serving API (SglFitter)");
+    let model = SglModel {
+        path: PathConfig { path_len: 20, ..PathConfig::default() },
+        rule: RuleKind::DfrSgl,
+        ..SglModel::default()
+    };
+    let mut fitter = model.fitter();
+    let sizes = ds.groups.sizes();
+    let design = Design::Matrix(&ds.x);
+    let t0 = std::time::Instant::now();
+    let first = fitter.fit_at(&design, &ds.y, &sizes, ds.response, 19)?;
+    let cold = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    for idx in [19usize, 10, 5, 19] {
+        let _ = fitter.fit_at(&design, &ds.y, &sizes, ds.response, idx)?;
+    }
+    let warm = t1.elapsed().as_secs_f64() / 4.0;
+    let mut preds = vec![0.0; ds.n()];
+    first.predict_into(&design, &mut preds);
+    println!(
+        "  cold request {:.4}s vs warm request {:.2e}s ({} prepared-cache hits, \
+         {} path-cache hits, {} solve(s), pool slots {})",
+        cold,
+        warm,
+        fitter.prepared_hits(),
+        fitter.path_hits(),
+        fitter.pool_checkouts(),
+        fitter.pool_slots(),
+    );
+    assert_eq!(fitter.pool_checkouts(), 1, "warm requests must not re-solve");
+    assert!(
+        first.selected_with_tol(1e-8).len() <= first.selected().len(),
+        "tolerance-aware support cannot exceed the exact-zero support"
+    );
     Ok(())
 }

@@ -66,5 +66,28 @@ fn main() -> anyhow::Result<()> {
         "\nTable-1 shape check: DFR should beat sparsegl by an order of magnitude \
          here because sparsegl must pull in entire (now-huge) groups."
     );
+
+    // Which interactions survive at the end of the path? Served through
+    // the persistent fitter; the tolerance-aware support ignores stray
+    // near-zero FISTA iterates that the exact-zero test would count.
+    let model = SglModel {
+        path: PathConfig { path_len: 20, ..PathConfig::default() },
+        rule: RuleKind::DfrSgl,
+        ..SglModel::default()
+    };
+    let mut fitter = model.fitter();
+    let sizes = expanded.groups.sizes();
+    let fitted = fitter.fit_at(
+        &Design::Matrix(&expanded.x),
+        &expanded.y,
+        &sizes,
+        expanded.response,
+        19,
+    )?;
+    let exact = fitted.selected().len();
+    let tol = fitted.selected_with_tol(1e-8).len();
+    println!(
+        "\nselected interactions at λ_l: {tol} (|β| > 1e-8; exact-zero test says {exact})"
+    );
     Ok(())
 }

@@ -1,5 +1,6 @@
 //! Quickstart: fit a sparse-group lasso path with DFR screening on a small
-//! synthetic problem and inspect what the screening did.
+//! synthetic problem through the serving API ([`dfr::model_api::SglFitter`]),
+//! inspect what the screening did, and batch-predict with one matvec.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -18,49 +19,71 @@ fn main() -> anyhow::Result<()> {
         ..SyntheticConfig::default()
     };
     let data = gen.generate(42);
+    let ds = &data.dataset;
     println!(
         "dataset: p={}, n={}, m={} groups; {} truly active variables",
-        data.dataset.p(),
-        data.dataset.n(),
-        data.dataset.m(),
+        ds.p(),
+        ds.n(),
+        ds.m(),
         data.active_vars.len()
     );
 
-    // 2. Fit a 30-point path with DFR-SGL screening.
-    let cfg = PathConfig { path_len: 30, alpha: 0.95, ..PathConfig::default() };
-    let fit = PathRunner::new(&data.dataset, cfg.clone()).rule(RuleKind::DfrSgl).run()?;
-
-    println!("\n  λ-index   λ        |C_v|  |O_v|  |A_v|  KKT  iters");
-    for (i, pt) in fit.metrics.points.iter().enumerate().step_by(3) {
+    // 2. Build a persistent fitter and fit a 30-point DFR-SGL path. The
+    //    design goes in as a borrowed `Design` — no copy on repeat fits.
+    let model = SglModel {
+        path: PathConfig { path_len: 30, alpha: 0.95, ..PathConfig::default() },
+        rule: RuleKind::DfrSgl,
+        ..SglModel::default()
+    };
+    let mut fitter = model.fitter();
+    let sizes = ds.groups.sizes();
+    let design = Design::Matrix(&ds.x);
+    // Report inside the borrow's scope so nothing needs cloning.
+    let path_points = {
+        let fit = fitter.fit_path(&design, &ds.y, &sizes, ds.response)?;
+        println!("\n  λ-index   λ        |C_v|  |O_v|  |A_v|  KKT  iters");
+        for (i, pt) in fit.metrics.points.iter().enumerate().step_by(3) {
+            println!(
+                "  {:>7}   {:<8.4} {:>5}  {:>5}  {:>5}  {:>3}  {:>5}",
+                i, pt.lambda, pt.c_v, pt.o_v, pt.a_v, pt.kkt_violations, pt.solver_iterations
+            );
+        }
         println!(
-            "  {:>7}   {:<8.4} {:>5}  {:>5}  {:>5}  {:>3}  {:>5}",
-            i, pt.lambda, pt.c_v, pt.o_v, pt.a_v, pt.kkt_violations, pt.solver_iterations
+            "\ninput proportion (mean |O_v|/p): {:.4}  — the solver only ever saw \
+             {:.1}% of the design",
+            fit.metrics.input_proportion(),
+            100.0 * fit.metrics.input_proportion()
         );
-    }
+        fit.lambdas.len()
+    };
+
+    // 3. Select the densest path point — a pure cache hit on the fitter
+    //    (no solve, no data pass) — and batch-predict with one matvec.
+    let fitted = fitter.refit(path_points - 1)?;
+    let mut preds = vec![0.0; ds.n()];
+    fitted.predict_into(&design, &mut preds);
     println!(
-        "\ninput proportion (mean |O_v|/p): {:.4}  — the solver only ever saw \
-         {:.1}% of the design",
-        fit.metrics.input_proportion(),
-        100.0 * fit.metrics.input_proportion()
+        "selected {} variables at λ_l (|β| > 1e-8: {}); {} path solves total",
+        fitted.selected().len(),
+        fitted.selected_with_tol(1e-8).len(),
+        fitter.pool_checkouts(),
     );
 
-    // 3. Verify against a no-screen fit: same solutions, less work.
-    let cmp = dfr::path::compare_with_no_screen(&data.dataset, &cfg, RuleKind::DfrSgl)?;
+    // 4. Verify against a no-screen fit: same solutions, less work.
+    let cfg = PathConfig { path_len: 30, alpha: 0.95, ..PathConfig::default() };
+    let cmp = dfr::path::compare_with_no_screen(ds, &cfg, RuleKind::DfrSgl)?;
     println!(
         "improvement factor vs no screening: {:.2}×  (ℓ₂ distance between solutions: {:.2e})",
         cmp.improvement_factor, cmp.l2_distance
     );
 
-    // 4. Support recovery sanity: how much of the truth did the model find
-    //    at the densest path point?
-    let found = fit
-        .betas
-        .last()
-        .unwrap()
+    // 5. Support recovery sanity: how much of the truth did the model find
+    //    at the densest path point? (Tolerance-aware support, so stray
+    //    near-zero FISTA iterates don't inflate the count.)
+    let found = fitted
+        .selected_with_tol(1e-8)
         .iter()
-        .enumerate()
-        .filter(|(_, &b)| b != 0.0)
-        .filter(|(i, _)| data.active_vars.contains(i))
+        .filter(|i| data.active_vars.contains(i))
         .count();
     println!(
         "support recovery at λ_l: {}/{} true actives selected",

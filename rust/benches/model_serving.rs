@@ -1,0 +1,149 @@
+//! **Model-serving bench**: the ROADMAP's "heavy traffic" scenario at the
+//! API layer — repeated fit requests against one design, fresh
+//! `SglModel::fit_at` per request (the pre-serving surface) vs a
+//! persistent `SglFitter` at three reuse depths:
+//!
+//! * `fresh model`       — copy + standardize + solve, every request;
+//! * `fitter (re-solve)` — prepared-dataset + workspace reuse, path cache
+//!   cleared per request, so every request still solves;
+//! * `fitter (warm)`     — full cache stack: requests only re-select a λ
+//!   and unstandardize.
+//!
+//! Also prices batch prediction (`predict_into` one-matvec vs per-row
+//! `predict_many`) and the sparse-CSC ingest. The speedup rows land in
+//! `target/bench_results/BENCH_model_serving.json` for the cross-PR
+//! trajectory; the "path workspaces allocated" row must stay at 1.
+#![allow(deprecated)] // the fresh-model baseline IS the deprecated shim
+
+use dfr::bench_harness::{time_stat, BenchTable};
+use dfr::linalg::CscMatrix;
+use dfr::model_api::{Design, SglModel};
+use dfr::path::PathConfig;
+use dfr::rng::Rng;
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (n, p, path_len) = if full { (200usize, 1000usize, 50usize) } else { (150, 400, 20) };
+    let groups = 20usize;
+    let setting = format!("{n}x{p}");
+    let mut table = BenchTable::new("Model serving — repeated fits through the API layer");
+
+    // Raw, unstandardized request payload (rows, as a client would send).
+    let mut rng = Rng::new(4242);
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..p).map(|j| 1.0 + (1.0 + j as f64 / 50.0) * rng.gauss()).collect())
+        .collect();
+    let y: Vec<f64> = rows
+        .iter()
+        .map(|r| r.iter().step_by(7).sum::<f64>() + 0.5 * rng.gauss())
+        .collect();
+    let sizes = vec![p / groups; groups];
+    let model = SglModel {
+        path: PathConfig { path_len, ..PathConfig::default() },
+        ..SglModel::default()
+    };
+    let sel = path_len - 1;
+    let (warmup, reps) = (1, if full { 7 } else { 10 });
+
+    // --- fresh model per request (the deprecated one-shot surface) ---
+    let acc_fresh = time_stat(warmup, reps, || {
+        let fit = model
+            .fit_at(&rows, &y, &sizes, dfr::data::Response::Linear, sel)
+            .expect("fresh fit failed");
+        std::hint::black_box(fit.lambda);
+    });
+    table.push("fit_at seconds", &setting, "fresh model", acc_fresh.mean());
+
+    // --- persistent fitter, path cache cleared (still solves) ---
+    let mut fitter = model.fitter();
+    let design = Design::rows(&rows);
+    let acc_resolve = time_stat(warmup, reps, || {
+        fitter.clear_path_cache();
+        let fit = fitter
+            .fit_at(&design, &y, &sizes, dfr::data::Response::Linear, sel)
+            .expect("fitter re-solve failed");
+        std::hint::black_box(fit.lambda);
+    });
+    table.push("fit_at seconds", &setting, "fitter (re-solve)", acc_resolve.mean());
+
+    // --- persistent fitter, fully warm (cache-hit requests) ---
+    let acc_warm = time_stat(warmup, reps, || {
+        let fit = fitter
+            .fit_at(&design, &y, &sizes, dfr::data::Response::Linear, sel)
+            .expect("warm fit failed");
+        std::hint::black_box(fit.lambda);
+    });
+    table.push("fit_at seconds", &setting, "fitter (warm)", acc_warm.mean());
+
+    table.push(
+        "serving speedup vs fresh model",
+        &setting,
+        "fitter (re-solve)",
+        acc_fresh.median() / acc_resolve.median().max(1e-12),
+    );
+    table.push(
+        "serving speedup vs fresh model",
+        &setting,
+        "fitter (warm)",
+        acc_fresh.median() / acc_warm.median().max(1e-12),
+    );
+    // The no-new-allocation witness: one pooled path workspace, ever.
+    table.push(
+        "path workspaces allocated",
+        &setting,
+        "fitter (re-solve)",
+        fitter.pool_slots() as f64,
+    );
+    assert_eq!(fitter.pool_slots(), 1, "serving pool grew past one workspace");
+    assert_eq!(fitter.prepared_misses(), 1, "prepared-dataset cache was rebuilt");
+
+    // --- batch prediction: one matvec vs per-row dots ---
+    // The one-matvec branch needs a column-layout design (the Rows layout
+    // falls back to row dots), so flatten the payload column-major once.
+    let fitted = fitter
+        .fit_at(&design, &y, &sizes, dfr::data::Response::Linear, sel)
+        .expect("final fit failed");
+    let mut cm = vec![0.0; n * p];
+    for (i, r) in rows.iter().enumerate() {
+        for (j, &v) in r.iter().enumerate() {
+            cm[j * n + i] = v;
+        }
+    }
+    let cm_design = Design::col_major(n, p, &cm);
+    let mut out = vec![0.0; n];
+    let acc_into = time_stat(2, 200, || {
+        fitted.predict_into(&cm_design, &mut out);
+        std::hint::black_box(out[0]);
+    });
+    table.push("batch predict seconds", &setting, "predict_into (one matvec)", acc_into.mean());
+    let acc_many = time_stat(2, 200, || {
+        std::hint::black_box(fitted.predict_many(&rows).len());
+    });
+    table.push("batch predict seconds", &setting, "predict_many (row dots)", acc_many.mean());
+    table.push(
+        "batch predict speedup",
+        &setting,
+        "predict_into (one matvec)",
+        acc_many.median() / acc_into.median().max(1e-12),
+    );
+
+    // --- sparse-CSC ingest: dosage-style design served without copies ---
+    let sparse_dense = dfr::linalg::Matrix::from_fn(n, p, |_, _| {
+        if rng.bernoulli(0.1) { 1.0 + rng.uniform() } else { 0.0 }
+    });
+    let csc = CscMatrix::from_dense(&sparse_dense, 0.0);
+    let y_sparse: Vec<f64> =
+        (0..n).map(|i| sparse_dense.get(i, 0) - sparse_dense.get(i, 3) + rng.gauss()).collect();
+    let mut csc_fitter = model.fitter();
+    let acc_csc = time_stat(warmup, reps, || {
+        csc_fitter.clear_path_cache();
+        let fit = csc_fitter
+            .fit_at(&Design::Csc(&csc), &y_sparse, &sizes, dfr::data::Response::Linear, sel)
+            .expect("csc fit failed");
+        std::hint::black_box(fit.lambda);
+    });
+    table.push("fit_at seconds", &setting, "fitter (csc re-solve)", acc_csc.mean());
+    table.push("csc density", &setting, "fitter (csc re-solve)", csc.density());
+
+    table.finish("model_serving");
+}

@@ -73,6 +73,15 @@ impl Args {
         }
     }
 
+    /// Typed accessor for seed-style options (avoids the lossy
+    /// `usize_or(..) as u64` dance at call sites).
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -175,6 +184,15 @@ mod tests {
         let a = Args::parse(argv(&[]), &specs()).unwrap();
         assert_eq!(a.usize_or("p", 1000).unwrap(), 1000);
         assert_eq!(a.f64_or("missing", 0.5).unwrap(), 0.5);
+        assert_eq!(a.u64_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn u64_parses_and_rejects() {
+        let a = Args::parse(argv(&["--p", "42"]), &specs()).unwrap();
+        assert_eq!(a.u64_or("p", 0).unwrap(), 42);
+        let b = Args::parse(argv(&["--p", "nope"]), &specs()).unwrap();
+        assert!(b.u64_or("p", 0).is_err());
     }
 
     #[test]

@@ -73,7 +73,7 @@ pub struct CvCell {
 }
 
 /// Cross-validation configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CvConfig {
     /// Number of folds (k).
     pub folds: usize,
@@ -114,24 +114,73 @@ pub fn fold_assignments(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
     fold
 }
 
-/// One fold's data: standardized training subset and raw held-out subset.
+/// One fold's data: standardized training subset, raw held-out subset,
+/// and the standardization parameters linking the two scales.
 ///
-/// Scoring contract (inherited from the original CV driver and preserved
-/// bit-for-bit): the held-out rows stay on the **parent dataset's**
-/// scale, so callers are expected to hand CV a pre-standardized parent —
-/// which every in-crate caller does (the synthetic/surrogate generators
-/// standardize at construction; [`crate::model_api::SglModel`]
-/// standardizes in `prepare`). Re-standardizing the training subset then
-/// only applies a near-uniform `√(n_train/n)` column rescale, which
-/// shifts held-out losses by a common factor without reordering λ.
-/// Mapping fold coefficients back to the raw scale (as `model_api` does
-/// for final fits) is a candidate refinement tracked in ROADMAP.md.
+/// Scoring contract: fold fits run on the *re-standardized* training
+/// subset, so their coefficients live on the fold-train scale. Before a
+/// held-out row (kept on the **parent dataset's** scale) is scored,
+/// [`CvFold::holdout_loss`] maps the coefficients back through this
+/// fold's `(mean, scale)` pairs and intercept — exactly the
+/// unstandardization `model_api` applies to final fits — so CV losses are
+/// genuine parent-scale prediction errors even when the parent is not
+/// itself standardized.
 #[derive(Clone, Debug)]
 pub struct CvFold {
     /// Training rows (all observations outside the fold), standardized.
     pub train: Dataset,
     /// Held-out rows, on the scale of the parent dataset.
     pub test: Dataset,
+    /// Per-column `(mean, scale)` of the training-subset standardization.
+    pub centers: Vec<(f64, f64)>,
+    /// Mean of the raw (parent-scale) training response — the intercept
+    /// base for linear models (0 for logistic, whose response is never
+    /// centered).
+    pub train_y_mean: f64,
+}
+
+impl CvFold {
+    /// Held-out loss of fold-train-standardized coefficients, scored on
+    /// the parent scale: `β_raw_j = β_j / s_j`, intercept
+    /// `ȳ_train − Σ β_j m_j / s_j` (linear) or `−Σ β_j m_j / s_j`
+    /// (logistic), then mean squared error / mean deviance over the raw
+    /// test rows.
+    pub fn holdout_loss(&self, beta_std: &[f64]) -> f64 {
+        let ds = &self.test;
+        assert_eq!(beta_std.len(), self.centers.len());
+        let mut shift = 0.0;
+        let beta_raw: Vec<f64> = beta_std
+            .iter()
+            .zip(&self.centers)
+            .map(|(&b, &(m, s))| {
+                shift += b * m / s;
+                b / s
+            })
+            .collect();
+        let intercept = match ds.response {
+            Response::Linear => self.train_y_mean - shift,
+            Response::Logistic => -shift,
+        };
+        let mut eta = ds.x.matvec(&beta_raw);
+        eta.iter_mut().for_each(|e| *e += intercept);
+        let n = ds.y.len() as f64;
+        match ds.response {
+            Response::Linear => {
+                eta.iter().zip(&ds.y).map(|(p, y)| (y - p) * (y - p)).sum::<f64>() / n
+            }
+            Response::Logistic => {
+                // mean deviance
+                eta.iter()
+                    .zip(&ds.y)
+                    .map(|(&e, &y)| {
+                        let p = sigmoid(e).clamp(1e-12, 1.0 - 1e-12);
+                        -(y * p.ln() + (1.0 - y) * (1.0 - p).ln())
+                    })
+                    .sum::<f64>()
+                    / n
+            }
+        }
+    }
 }
 
 /// The dataset-level part of a CV run: fold assignments plus the
@@ -166,9 +215,19 @@ impl FoldPlan {
                 let test_rows: Vec<usize> =
                     (0..ds.n()).filter(|&i| assignments[i] == f).collect();
                 let mut train = ds.subset_rows(&train_rows);
-                train.standardize();
+                // Standardize inline (rather than Dataset::standardize) so
+                // the (mean, scale) pairs and raw-y mean survive for the
+                // raw-scale held-out scoring in CvFold::holdout_loss.
+                let train_y_mean = if train.response == Response::Linear {
+                    let m = train.y.iter().sum::<f64>() / train.y.len() as f64;
+                    train.y.iter_mut().for_each(|v| *v -= m);
+                    m
+                } else {
+                    0.0
+                };
+                let centers = train.x.standardize_l2();
                 let test = ds.subset_rows(&test_rows);
-                CvFold { train, test }
+                CvFold { train, test, centers, train_y_mean }
             })
             .collect();
         Ok(FoldPlan { assignments, folds })
@@ -182,28 +241,6 @@ pub struct GridPoint {
     pub alpha: f64,
     /// Adaptive exponents; `None` = plain SGL (unless the rule forces aSGL).
     pub gamma: Option<(f64, f64)>,
-}
-
-/// Held-out prediction loss of a coefficient vector.
-fn holdout_loss(ds: &Dataset, beta: &[f64]) -> f64 {
-    let xb = ds.x.matvec(beta);
-    let n = ds.y.len() as f64;
-    match ds.response {
-        Response::Linear => {
-            xb.iter().zip(&ds.y).map(|(p, y)| (y - p) * (y - p)).sum::<f64>() / n
-        }
-        Response::Logistic => {
-            // mean deviance
-            xb.iter()
-                .zip(&ds.y)
-                .map(|(&eta, &y)| {
-                    let p = sigmoid(eta).clamp(1e-12, 1.0 - 1e-12);
-                    -(y * p.ln() + (1.0 - y) * (1.0 - p).ln())
-                })
-                .sum::<f64>()
-                / n
-        }
-    }
 }
 
 /// Per-fold fit outcome carried from the flattened scheduler to the
@@ -470,7 +507,7 @@ impl CvEngine {
                 .map_err(|e| anyhow::anyhow!("cell {c} fold {f} fit failed: {e}"))?;
             let m = &fit.metrics;
             Ok::<FoldFit, anyhow::Error>(FoldFit {
-                losses: fit.betas.iter().map(|b| holdout_loss(&fold.test, b)).collect(),
+                losses: fit.betas.iter().map(|b| fold.holdout_loss(b)).collect(),
                 c_prop: m.candidate_proportion(),
                 o_prop: m.input_proportion(),
                 seconds: m.total_seconds,
@@ -549,7 +586,7 @@ pub fn grid_search_reference(
                     .map_err(|e| anyhow::anyhow!("fold {f} fit failed: {e}"))?;
                 let m = &fit.metrics;
                 Ok::<FoldFit, anyhow::Error>(FoldFit {
-                    losses: fit.betas.iter().map(|b| holdout_loss(&fold.test, b)).collect(),
+                    losses: fit.betas.iter().map(|b| fold.holdout_loss(b)).collect(),
                     c_prop: m.candidate_proportion(),
                     o_prop: m.input_proportion(),
                     seconds: m.total_seconds,
@@ -631,6 +668,46 @@ mod tests {
                 assert!((nv - 1.0).abs() < 1e-8, "column norm {nv}");
             }
         }
+    }
+
+    #[test]
+    fn holdout_loss_matches_per_row_unstandardization() {
+        // Deliberately unstandardized parent: the fold scoring must map
+        // coefficients back through the fold's (mean, scale) pairs.
+        let mut rng = Rng::new(17);
+        let x = crate::linalg::Matrix::from_fn(24, 5, |_, j| {
+            3.0 * (j as f64 + 1.0) + 2.0 * rng.gauss()
+        });
+        let y: Vec<f64> = (0..24).map(|_| 5.0 + rng.gauss()).collect();
+        let ds = Dataset {
+            x,
+            y,
+            groups: crate::groups::Groups::from_sizes(&[5]),
+            response: Response::Linear,
+            name: "raw".into(),
+        };
+        let plan = FoldPlan::new(&ds, 3, 9).unwrap();
+        let fold = &plan.folds[0];
+        let beta_std = [0.4, -0.2, 0.0, 1.1, -0.7];
+        // Independent per-row computation of the raw-scale loss.
+        let mut shift = 0.0;
+        let mut beta_raw = [0.0; 5];
+        for j in 0..5 {
+            let (m, s) = fold.centers[j];
+            beta_raw[j] = beta_std[j] / s;
+            shift += beta_std[j] * m / s;
+        }
+        let intercept = fold.train_y_mean - shift;
+        let mut want = 0.0;
+        for i in 0..fold.test.n() {
+            let eta: f64 = intercept
+                + (0..5).map(|j| fold.test.x.get(i, j) * beta_raw[j]).sum::<f64>();
+            want += (fold.test.y[i] - eta) * (fold.test.y[i] - eta);
+        }
+        want /= fold.test.n() as f64;
+        let got = fold.holdout_loss(&beta_std);
+        // Matvec vs per-row summation order: tiny float slack allowed.
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
     }
 
     #[test]

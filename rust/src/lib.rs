@@ -12,8 +12,8 @@
 //! | [`solver`] | FISTA (exact SGL prox) and ATOS, warm-started, backtracking | §2.3, App. A (Table A1 settings) |
 //! | [`screen`] | DFR bi-level strong rules for SGL (Eqs. 5–6) and aSGL (Eqs. 7–8), `sparsegl` group rule, GAP-safe seq/dyn, no-screen baseline, KKT checks | §2.2, §2.4, App. C |
 //! | [`path`] | Algorithm 1/A1: candidates → optimization set → reduced solve → KKT loop; persistent [`path::PathWorkspace`] hot loop | §2.4, App. D.1 metrics |
-//! | [`cv`] | Workspace-pooled k-fold CV and `(α, γ)` grid search with shared fold plans | §1.2, App. D.7, Table A36 |
-//! | [`model_api`] | scikit-style `fit → select → predict` on raw data | — |
+//! | [`cv`] | Workspace-pooled k-fold CV and `(α, γ)` grid search with shared fold plans, raw-scale fold scoring | §1.2, App. D.7, Table A36 |
+//! | [`model_api`] | [`model_api::Design`] input abstraction (dense/row/column/CSC-sparse layouts) + persistent [`model_api::SglFitter`] serving API | — |
 //! | [`data`] | Synthetic designs, interaction expansion, surrogate real datasets | §3.1, §4, Table 1, Table A37 |
 //! | [`runtime`] | PJRT execution of AOT-compiled JAX/Pallas artifacts for the dense hot path | — |
 //! | [`metrics`], [`bench_harness`], [`report`] | Improvement factor, input proportion, paper-style tables, `BENCH_*.json` | §3, App. D.1 |
@@ -31,6 +31,27 @@
 //!     .run()
 //!     .unwrap();
 //! println!("selected {} variables at end of path", fit.active_vars_last());
+//! ```
+//!
+//! Serving raw user data — repeated fits, refits, and batch predictions on
+//! the same design — goes through a persistent [`model_api::SglFitter`],
+//! which caches the standardized dataset (keyed by a content fingerprint
+//! of the input [`model_api::Design`]), the path workspaces, and the last
+//! pathwise fit:
+//!
+//! ```no_run
+//! use dfr::prelude::*;
+//!
+//! let rows: Vec<Vec<f64>> = vec![vec![0.0; 8]; 32];
+//! let y = vec![0.0; 32];
+//! let mut fitter = SglModel::default().fitter();
+//! let fit = fitter
+//!     .fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 10)
+//!     .unwrap();
+//! let sparser = fitter.refit(5).unwrap(); // cached path: no solve at all
+//! let mut preds = vec![0.0; 32];
+//! fit.predict_into(&Design::rows(&rows), &mut preds); // one matvec
+//! # let _ = sparser;
 //! ```
 //!
 //! Joint `(λ, α)` tuning — the workload DFR is built to make cheap — goes
@@ -75,10 +96,10 @@ pub mod prelude {
     pub use crate::data::real::{RealDatasetKind, SurrogateConfig};
     pub use crate::data::{Dataset, InteractionOrder, Response, SyntheticConfig};
     pub use crate::groups::Groups;
-    pub use crate::linalg::Matrix;
+    pub use crate::linalg::{CscMatrix, Matrix};
     pub use crate::loss::LossKind;
     pub use crate::metrics::{PathMetrics, PointMetrics};
-    pub use crate::model_api::{FittedSgl, SglModel};
+    pub use crate::model_api::{Design, FittedSgl, SglFitter, SglModel};
     pub use crate::parallel::WorkspacePool;
     pub use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
     pub use crate::solver::SolverWorkspace;

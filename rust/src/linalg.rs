@@ -263,6 +263,238 @@ impl Matrix {
     }
 }
 
+/// Compressed-sparse-column matrix of `f64` — the input format for sparse
+/// designs (genotype dosage matrices, one-hot expansions) accepted by the
+/// model API's `Design::Csc` variant.
+///
+/// Storage is the classic CSC triplet: `col_ptr` (length `p + 1`) delimits
+/// each column's slice of `row_idx`/`values`. Row indices are strictly
+/// increasing within a column. The pathwise solver stack runs on the dense
+/// [`Matrix`] (ℓ₂ standardization destroys sparsity anyway — centering
+/// fills every zero), so the sparse type's job is (a) sparse-aware
+/// `matvec`/`t_matvec`/`col_norms` for prediction and screening-style
+/// passes over *raw* designs, and (b) one-pass standardization straight
+/// into a dense standardized matrix, computing the per-column (mean, norm)
+/// from the nonzeros alone — no intermediate dense unstandardized copy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    n: usize,
+    p: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from raw CSC parts. Validates shape invariants (monotone
+    /// `col_ptr`, in-range strictly-increasing row indices per column).
+    pub fn new(
+        n: usize,
+        p: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(col_ptr.len(), p + 1, "col_ptr must have p + 1 entries");
+        assert_eq!(col_ptr[0], 0, "col_ptr must start at 0");
+        assert_eq!(*col_ptr.last().unwrap(), row_idx.len(), "col_ptr end ≠ nnz");
+        assert_eq!(row_idx.len(), values.len(), "row_idx / values length mismatch");
+        for j in 0..p {
+            assert!(col_ptr[j] <= col_ptr[j + 1], "col_ptr must be monotone");
+            let rows = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+            assert!(
+                rows.windows(2).all(|w| w[0] < w[1]),
+                "row indices must be strictly increasing within column {j}"
+            );
+            if let Some(&last) = rows.last() {
+                assert!(last < n, "row index {last} out of range in column {j}");
+            }
+        }
+        CscMatrix { n, p, col_ptr, row_idx, values }
+    }
+
+    /// Compress a dense matrix, keeping entries with `|x| > drop_tol`
+    /// (use `0.0` to keep every nonzero exactly). NaN entries are always
+    /// kept, so a poisoned input poisons the sparse fit the same way it
+    /// poisons a dense one instead of silently becoming an implicit zero.
+    pub fn from_dense(x: &Matrix, drop_tol: f64) -> Self {
+        let (n, p) = (x.nrows(), x.ncols());
+        let mut col_ptr = Vec::with_capacity(p + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        col_ptr.push(0);
+        for j in 0..p {
+            for (i, &v) in x.col(j).iter().enumerate() {
+                if v.abs() > drop_tol || v.is_nan() {
+                    row_idx.push(i);
+                    values.push(v);
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { n, p, col_ptr, row_idx, values }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// Number of explicitly stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `nnz / (n · p)` — the fill fraction.
+    pub fn density(&self) -> f64 {
+        if self.n == 0 || self.p == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n * self.p) as f64
+    }
+
+    /// Column `j`'s stored `(row, value)` pairs.
+    #[inline]
+    pub fn col_entries(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let r = self.col_ptr[j]..self.col_ptr[j + 1];
+        self.row_idx[r.clone()].iter().copied().zip(self.values[r].iter().copied())
+    }
+
+    /// `out = X β` touching only stored entries (O(nnz)).
+    pub fn matvec_into(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                for (i, v) in self.col_entries(j) {
+                    out[i] += b * v;
+                }
+            }
+        }
+    }
+
+    /// `y = X β` (length n).
+    pub fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        self.matvec_into(beta, &mut out);
+        out
+    }
+
+    /// `out = Xᵀ r` touching only stored entries (O(nnz)).
+    pub fn t_matvec_into(&self, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (i, v) in self.col_entries(j) {
+                s += v * r[i];
+            }
+            *o = s;
+        }
+    }
+
+    /// `g = Xᵀ r` (length p).
+    pub fn t_matvec(&self, r: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.p];
+        self.t_matvec_into(r, &mut out);
+        out
+    }
+
+    /// ℓ₂ norm of each column from the stored entries alone.
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.p)
+            .map(|j| self.col_entries(j).map(|(_, v)| v * v).sum::<f64>().sqrt())
+            .collect()
+    }
+
+    /// Mean of each column (implicit zeros included).
+    pub fn col_means(&self) -> Vec<f64> {
+        let n = self.n as f64;
+        (0..self.p)
+            .map(|j| self.col_entries(j).map(|(_, v)| v).sum::<f64>() / n)
+            .collect()
+    }
+
+    /// Per-column `(mean, scale)` of the ℓ₂ standardization (zero mean,
+    /// unit ℓ₂ norm), computed sparse-aware in two passes over the stored
+    /// entries: mean first, then the centered norm as
+    /// `√(Σ_nz (v − mean)² + (n − nnz_j)·mean²)`. The shifted second pass
+    /// avoids the catastrophic cancellation of the textbook
+    /// `Σv² − n·mean²` form (large mean, tiny spread), so the stats track
+    /// the dense two-pass [`Matrix::standardize_l2`] (near-constant
+    /// columns get scale 1).
+    pub fn standardize_stats(&self) -> Vec<(f64, f64)> {
+        let n = self.n as f64;
+        (0..self.p)
+            .map(|j| {
+                let mut sum = 0.0;
+                let mut nnz_j = 0usize;
+                for (_, v) in self.col_entries(j) {
+                    sum += v;
+                    nnz_j += 1;
+                }
+                let mean = sum / n;
+                let mut centered_sumsq = (n - nnz_j as f64) * mean * mean;
+                for (_, v) in self.col_entries(j) {
+                    let d = v - mean;
+                    centered_sumsq += d * d;
+                }
+                let nrm = centered_sumsq.sqrt();
+                let scale = if nrm > 1e-12 { nrm } else { 1.0 };
+                (mean, scale)
+            })
+            .collect()
+    }
+
+    /// Materialize the ℓ₂-standardized design as a dense [`Matrix`] in one
+    /// pass (fill each column with `−mean/scale`, overwrite the stored
+    /// entries with `(v − mean)/scale`), returning the per-column
+    /// `(mean, scale)` used — the sparse entry point into the dense
+    /// pathwise stack.
+    pub fn to_standardized_dense(&self) -> (Matrix, Vec<(f64, f64)>) {
+        let stats = self.standardize_stats();
+        let mut m = Matrix::zeros(self.n, self.p);
+        for (j, &(mean, scale)) in stats.iter().enumerate() {
+            let dst = m.col_mut(j);
+            dst.fill(-mean / scale);
+            for (i, v) in self.col_entries(j) {
+                dst[i] = (v - mean) / scale;
+            }
+        }
+        (m, stats)
+    }
+
+    /// Densify without standardizing (tests / small problems).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.p);
+        for j in 0..self.p {
+            let dst = m.col_mut(j);
+            for (i, v) in self.col_entries(j) {
+                dst[i] = v;
+            }
+        }
+        m
+    }
+
+    /// Full content hash over values, row indices, and column pointers —
+    /// the sparse leg of the model API's prepared-design cache key. Every
+    /// stored entry participates, so any change to the matrix changes the
+    /// hash (up to 64-bit collision odds).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = content_hash(&self.values);
+        h ^= content_hash_usizes(&self.row_idx).wrapping_mul(0x9e3779b97f4a7c15);
+        h ^= content_hash_usizes(&self.col_ptr).rotate_left(17);
+        h
+    }
+}
+
 /// Incremental cache of a screening-reduced design `X[:, idx]`.
 ///
 /// The pathwise coordinator re-gathers the optimization set every λ step
@@ -377,6 +609,30 @@ pub(crate) fn fingerprint(data: &[f64]) -> u64 {
         h ^= data[i].to_bits();
         h = h.wrapping_mul(0x100000001b3);
         i += stride;
+    }
+    h
+}
+
+/// Full-content FNV hash over every entry — the sound (collision-odds
+/// only, no sampling gaps) identity key for caches that must never serve
+/// stale results for genuinely different data, e.g. the model API's
+/// prepared-design cache. O(len), which is still far cheaper than the
+/// copy + standardization a hit skips.
+pub(crate) fn content_hash(data: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in data {
+        h ^= v.to_bits();
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// [`content_hash`] over a `usize` slice (CSC structure arrays).
+pub(crate) fn content_hash_usizes(data: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &v in data {
+        h ^= v as u64;
+        h = h.wrapping_mul(0x100000001b3);
     }
     h
 }
@@ -571,6 +827,114 @@ mod tests {
         m.set(2, 2, 3.0);
         let est = m.op_norm_sq_est(50, 7);
         assert!((est - 9.0).abs() < 1e-6, "est {est}");
+    }
+
+    fn sparse_fixture() -> (Matrix, CscMatrix) {
+        // Sparse-ish matrix with exact zeros, a dense column, and an
+        // all-zero column.
+        let mut rng = crate::rng::Rng::new(11);
+        let dense = Matrix::from_fn(13, 7, |i, j| {
+            if j == 3 {
+                rng.gauss() // fully dense column
+            } else if j == 5 {
+                0.0 // empty column
+            } else if (i + j) % 3 == 0 {
+                rng.gauss()
+            } else {
+                0.0
+            }
+        });
+        let csc = CscMatrix::from_dense(&dense, 0.0);
+        (dense, csc)
+    }
+
+    #[test]
+    fn csc_round_trips_through_dense() {
+        let (dense, csc) = sparse_fixture();
+        assert_eq!(csc.to_dense(), dense);
+        assert!(csc.nnz() < 13 * 7);
+        assert!((csc.density() - csc.nnz() as f64 / 91.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn csc_matvec_and_t_matvec_match_dense() {
+        let (dense, csc) = sparse_fixture();
+        let mut rng = crate::rng::Rng::new(12);
+        let beta = rng.gauss_vec(7);
+        let r = rng.gauss_vec(13);
+        for (a, b) in csc.matvec(&beta).iter().zip(&dense.matvec(&beta)) {
+            assert!((a - b).abs() < 1e-14);
+        }
+        for (a, b) in csc.t_matvec(&r).iter().zip(&dense.t_matvec(&r)) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn csc_col_stats_match_dense() {
+        let (dense, csc) = sparse_fixture();
+        for (a, b) in csc.col_norms().iter().zip(&dense.col_norms()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for (j, m) in csc.col_means().iter().enumerate() {
+            let want = dense.col(j).iter().sum::<f64>() / 13.0;
+            assert!((m - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn csc_standardized_dense_matches_dense_standardization() {
+        let (dense, csc) = sparse_fixture();
+        let mut want = dense.clone();
+        let want_stats = want.standardize_l2();
+        let (got, got_stats) = csc.to_standardized_dense();
+        for j in 0..7 {
+            let (wm, ws) = want_stats[j];
+            let (gm, gs) = got_stats[j];
+            assert!((wm - gm).abs() < 1e-12, "col {j} mean");
+            assert!((ws - gs).abs() < 1e-12, "col {j} scale");
+            for i in 0..13 {
+                assert!(
+                    (want.get(i, j) - got.get(i, j)).abs() < 1e-12,
+                    "entry ({i}, {j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csc_fingerprint_distinguishes_content_and_structure() {
+        let (_, csc) = sparse_fixture();
+        let fp = csc.fingerprint();
+        let mut other = csc.clone();
+        // Perturb one stored value: the fingerprint must move.
+        let perturbed = CscMatrix::new(
+            other.nrows(),
+            other.ncols(),
+            other.col_ptr.clone(),
+            other.row_idx.clone(),
+            {
+                other.values[0] += 1.0;
+                other.values.clone()
+            },
+        );
+        assert_ne!(fp, perturbed.fingerprint());
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn csc_rejects_unsorted_rows() {
+        CscMatrix::new(3, 1, vec![0, 2], vec![1, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn csc_from_dense_preserves_nan() {
+        let mut m = Matrix::zeros(3, 2);
+        m.set(1, 0, f64::NAN);
+        m.set(2, 1, 5.0);
+        let csc = CscMatrix::from_dense(&m, 0.0);
+        assert_eq!(csc.nnz(), 2, "NaN entry must be stored, not dropped");
+        assert!(csc.to_dense().get(1, 0).is_nan());
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use dfr::cli::{parse_f64_list, parse_gamma_list, parse_rule, usage, Args, OptSpec};
 use dfr::data::real::{RealDatasetKind, SurrogateConfig};
 use dfr::data::{Dataset, Response, SyntheticConfig};
+use dfr::model_api::{Design, SglFitter, SglModel};
 use dfr::path::{compare_with_no_screen, PathConfig, PathRunner};
 use dfr::report;
 use dfr::runtime::XlaEngine;
@@ -68,7 +69,7 @@ pathwise fitting with bi-level strong screening";
 
 fn build_dataset(args: &Args) -> anyhow::Result<Dataset> {
     let name = args.str_or("dataset", "synthetic");
-    let seed = args.usize_or("seed", 42).map_err(anyhow::Error::msg)? as u64;
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
     if name == "synthetic" {
         let cfg = SyntheticConfig {
             p: args.usize_or("p", 1000).map_err(anyhow::Error::msg)?,
@@ -129,8 +130,19 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     stats.xla_gradient_calls, stats.native_fallbacks, stats.compiled_artifacts
                 );
             } else {
-                let fit = PathRunner::new(&ds, cfg).rule(rule).run()?;
-                report_fit(&ds, rule.name(), &fit, args)?;
+                // Native fits go through the serving API: borrowed
+                // zero-copy design straight into the fitter.
+                let model = SglModel {
+                    path: cfg,
+                    rule,
+                    seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                    ..SglModel::default()
+                };
+                let mut fitter = model.fitter();
+                let sizes = ds.groups.sizes();
+                let fit =
+                    fitter.fit_path(&Design::Matrix(&ds.x), &ds.y, &sizes, ds.response)?;
+                report_fit(&ds, rule.name(), fit, args)?;
             }
             Ok(())
         }
@@ -161,26 +173,37 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         "cv" => {
             let ds = build_dataset(args)?;
-            let cfg = dfr::cv::CvConfig {
-                folds: args.usize_or("folds", 10).map_err(anyhow::Error::msg)?,
+            let model = SglModel {
                 path: build_path_config(args)?,
                 rule: parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?,
-                seed: args.usize_or("seed", 42).map_err(anyhow::Error::msg)? as u64,
-                threads: dfr::parallel::default_threads(),
+                cv_folds: args.usize_or("folds", 10).map_err(anyhow::Error::msg)?,
+                one_se_rule: args.flag("one-se"),
+                seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
             };
             let alphas = match args.options.get("alphas") {
                 Some(s) => parse_f64_list(s).map_err(anyhow::Error::msg)?,
-                None => vec![cfg.path.alpha],
+                None => vec![model.path.alpha],
             };
             let gammas = match args.options.get("gammas") {
                 Some(s) => parse_gamma_list(s).map_err(anyhow::Error::msg)?,
-                None => vec![cfg.path.adaptive],
+                None => vec![model.path.adaptive],
             };
-            let engine = dfr::cv::CvEngine::new(cfg.threads);
-            let (cells, best) = engine.grid_search(&ds, &cfg, &alphas, &gammas)?;
+            // The serving surface: a persistent fitter holding the pooled
+            // CV engine, fed the dataset as a borrowed zero-copy design.
+            let mut fitter = SglFitter::new(model.clone());
+            let sizes = ds.groups.sizes();
+            let (cells, best) = fitter.cv_grid(
+                &Design::Matrix(&ds.x),
+                &ds.y,
+                &sizes,
+                ds.response,
+                &alphas,
+                &gammas,
+            )?;
+            let engine = fitter.cv_engine();
             println!(
                 "cv({} folds, {} grid cell{}, {} thread{}):",
-                cfg.folds,
+                model.cv_folds,
                 cells.len(),
                 if cells.len() == 1 { "" } else { "s" },
                 engine.threads(),
@@ -188,7 +211,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
             // Report the γ each cell actually fit with (an aSGL rule
             // forces γ=(0.1, 0.1) even when the spec says none).
-            let fmt_gamma = |spec: Option<(f64, f64)>| match dfr::path::PathConfig::resolve_adaptive(spec, cfg.rule) {
+            let fmt_gamma = |spec: Option<(f64, f64)>| match dfr::path::PathConfig::resolve_adaptive(spec, model.rule) {
                 Some((g1, g2)) => format!("γ=({g1},{g2})"),
                 None => "γ=none".to_string(),
             };

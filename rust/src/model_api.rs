@@ -1,18 +1,44 @@
 //! High-level model API: the interface a downstream user actually calls.
 //!
-//! Wraps the pathwise machinery into scikit-style `fit → select → predict`:
-//! standardization is handled internally and coefficients are mapped back
-//! to the original feature scale (including the intercept), λ is selected
-//! by k-fold CV with an optional one-standard-error rule, and predictions
-//! support both response families. CV runs through the workspace-pooled
-//! [`crate::cv::CvEngine`], including joint `(α, γ)` tuning via
-//! [`SglModel::fit_cv_grid`].
+//! Two layers:
+//!
+//! * [`SglModel`] — the plain configuration struct (path settings,
+//!   screening rule, CV folds, selection rule, seed). Cheap to clone,
+//!   carries no state.
+//! * [`SglFitter`] — the persistent serving object built from a model
+//!   ([`SglModel::fitter`]). It owns a [`crate::parallel::WorkspacePool`]
+//!   of [`crate::path::PathWorkspace`]s, a workspace-pooled
+//!   [`CvEngine`], and a prepared-dataset cache keyed by a content
+//!   fingerprint of the input [`Design`], so repeated fits on the same
+//!   data — the serving hot path — skip the copy, the standardization,
+//!   and (for identical fit settings) the solve itself. Results are
+//!   bit-for-bit those of a cold fit; the caches only remove redundant
+//!   work.
+//!
+//! Input designs come in through the [`Design`] enum: borrowed
+//! column-major or row-major slices (no per-cell transformation on
+//! ingest — column-major is a single `memcpy` into the standardizer),
+//! borrowed row vectors, an owned [`Matrix`], or a CSC sparse matrix
+//! ([`crate::linalg::CscMatrix`]) whose standardization is computed from
+//! the nonzeros alone. Standardization is handled internally and
+//! coefficients are mapped back to the original feature scale (including
+//! the intercept); λ is selected by k-fold CV with an optional
+//! one-standard-error rule; predictions support both response families
+//! and a batch [`FittedSgl::predict_into`] that runs one matvec over the
+//! design instead of per-row dot products.
+//!
+//! The old `SglModel::fit_*` methods remain as deprecated shims that
+//! build a throwaway fitter per call, so existing code keeps working and
+//! proves behavioural equivalence of the two surfaces.
 
-use crate::cv::{CvConfig, CvEngine};
+use crate::cv::{CvCell, CvConfig, CvEngine};
 use crate::data::{Dataset, Response};
+use crate::linalg::{self, CscMatrix, Matrix};
 use crate::loss::sigmoid;
-use crate::path::{PathConfig, PathFit, PathRunner};
+use crate::parallel::WorkspacePool;
+use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
 use crate::screen::RuleKind;
+use std::sync::Arc;
 
 /// Model specification.
 #[derive(Clone, Debug)]
@@ -21,7 +47,7 @@ pub struct SglModel {
     pub path: PathConfig,
     /// Screening rule used for every fit.
     pub rule: RuleKind,
-    /// CV folds used by [`SglModel::fit_cv`] / [`SglModel::fit_cv_grid`].
+    /// CV folds used by [`SglFitter::fit_cv`] / [`SglFitter::fit_cv_grid`].
     pub cv_folds: usize,
     /// Pick the sparsest λ within one standard error of the CV optimum
     /// (the standard error is measured across folds by the CV engine).
@@ -42,6 +68,189 @@ impl Default for SglModel {
     }
 }
 
+impl SglModel {
+    /// Build a persistent [`SglFitter`] from this configuration — the
+    /// entry point of the serving API.
+    pub fn fitter(&self) -> SglFitter {
+        SglFitter::new(self.clone())
+    }
+}
+
+/// A raw design matrix in whichever layout the caller already has.
+///
+/// All variants borrow: nothing is copied until the fitter materializes a
+/// standardized dataset, and that materialization is cached per content
+/// fingerprint, so repeated fits on the same design go straight into
+/// screening with zero copies. Layout notes:
+///
+/// * [`Design::ColMajor`] — `data[j * n + i]` is row `i`, column `j`.
+///   The cheapest ingest path: one `memcpy` into the standardizer.
+/// * [`Design::RowMajor`] — `data[i * p + j]`; transposed on ingest.
+/// * [`Design::Rows`] — one `Vec` per observation (the layout the old
+///   `SglModel::fit_*` shims accept).
+/// * [`Design::Matrix`] — an already-built dense [`Matrix`].
+/// * [`Design::Csc`] — sparse genotype-style designs; standardization
+///   stats come from the nonzeros alone
+///   ([`CscMatrix::to_standardized_dense`]).
+#[derive(Clone, Copy, Debug)]
+pub enum Design<'a> {
+    /// Borrowed column-major buffer (`data.len() == n * p`).
+    ColMajor {
+        /// Number of observations (rows).
+        n: usize,
+        /// Number of features (columns).
+        p: usize,
+        /// Column-major entries.
+        data: &'a [f64],
+    },
+    /// Borrowed row-major buffer (`data.len() == n * p`).
+    RowMajor {
+        /// Number of observations (rows).
+        n: usize,
+        /// Number of features (columns).
+        p: usize,
+        /// Row-major entries.
+        data: &'a [f64],
+    },
+    /// Borrowed row vectors (each of length `p`).
+    Rows(&'a [Vec<f64>]),
+    /// Borrowed dense matrix.
+    Matrix(&'a Matrix),
+    /// Borrowed CSC sparse matrix.
+    Csc(&'a CscMatrix),
+}
+
+impl<'a> Design<'a> {
+    /// Column-major view over a flat buffer (asserts `data.len() == n·p`).
+    pub fn col_major(n: usize, p: usize, data: &'a [f64]) -> Self {
+        assert_eq!(data.len(), n * p, "column-major design length mismatch");
+        Design::ColMajor { n, p, data }
+    }
+
+    /// Row-major view over a flat buffer (asserts `data.len() == n·p`).
+    pub fn row_major(n: usize, p: usize, data: &'a [f64]) -> Self {
+        assert_eq!(data.len(), n * p, "row-major design length mismatch");
+        Design::RowMajor { n, p, data }
+    }
+
+    /// View over per-observation row vectors.
+    pub fn rows(rows: &'a [Vec<f64>]) -> Self {
+        Design::Rows(rows)
+    }
+
+    /// Number of observations.
+    pub fn n(&self) -> usize {
+        match self {
+            Design::ColMajor { n, .. } | Design::RowMajor { n, .. } => *n,
+            Design::Rows(rows) => rows.len(),
+            Design::Matrix(m) => m.nrows(),
+            Design::Csc(s) => s.nrows(),
+        }
+    }
+
+    /// Number of features.
+    pub fn p(&self) -> usize {
+        match self {
+            Design::ColMajor { p, .. } | Design::RowMajor { p, .. } => *p,
+            Design::Rows(rows) => rows.first().map(|r| r.len()).unwrap_or(0),
+            Design::Matrix(m) => m.ncols(),
+            Design::Csc(s) => s.ncols(),
+        }
+    }
+
+    /// Short variant name (used in cache keys and reports).
+    pub fn layout_name(&self) -> &'static str {
+        match self {
+            Design::ColMajor { .. } => "col-major",
+            Design::RowMajor { .. } => "row-major",
+            Design::Rows(_) => "rows",
+            Design::Matrix(_) => "matrix",
+            Design::Csc(_) => "csc",
+        }
+    }
+
+    /// Check internal shape consistency (ragged rows are the only variant
+    /// the constructors cannot rule out).
+    fn validate(&self) -> anyhow::Result<()> {
+        if let Design::Rows(rows) = self {
+            let p = self.p();
+            for (i, r) in rows.iter().enumerate() {
+                anyhow::ensure!(r.len() == p, "ragged design row {i}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Full content hash — the design leg of the fitter's
+    /// prepared-dataset cache key. Every entry participates (O(n·p), far
+    /// cheaper than the copy + standardization a cache hit skips), so any
+    /// change to the data — including in-place edits of a previously
+    /// fitted buffer — produces a new key, up to 64-bit collision odds.
+    fn fingerprint(&self) -> u64 {
+        match self {
+            Design::ColMajor { data, .. } | Design::RowMajor { data, .. } => {
+                linalg::content_hash(data)
+            }
+            Design::Rows(rows) => {
+                let mut h: u64 = 0xcbf29ce484222325;
+                for row in rows.iter() {
+                    for v in row {
+                        h ^= v.to_bits();
+                        h = h.wrapping_mul(0x100000001b3);
+                    }
+                }
+                h
+            }
+            Design::Matrix(m) => linalg::content_hash(m.as_slice()),
+            Design::Csc(s) => s.fingerprint(),
+        }
+    }
+
+    /// Materialize the ℓ₂-standardized dense design plus the per-column
+    /// `(mean, scale)` pairs needed to map coefficients back to the raw
+    /// scale. This is the (cached) ingest step of every fit.
+    pub fn standardized(&self) -> anyhow::Result<(Matrix, Vec<(f64, f64)>)> {
+        self.validate()?;
+        let (n, p) = (self.n(), self.p());
+        anyhow::ensure!(n > 0 && p > 0, "empty design");
+        Ok(match self {
+            Design::ColMajor { data, .. } => {
+                let mut m = Matrix::from_col_major(n, p, data.to_vec());
+                let centers = m.standardize_l2();
+                (m, centers)
+            }
+            Design::RowMajor { data, .. } => {
+                let mut m = Matrix::from_fn(n, p, |i, j| data[i * p + j]);
+                let centers = m.standardize_l2();
+                (m, centers)
+            }
+            Design::Rows(rows) => {
+                let mut m = Matrix::from_fn(n, p, |i, j| rows[i][j]);
+                let centers = m.standardize_l2();
+                (m, centers)
+            }
+            Design::Matrix(src) => {
+                let mut m = (*src).clone();
+                let centers = m.standardize_l2();
+                (m, centers)
+            }
+            Design::Csc(s) => s.to_standardized_dense(),
+        })
+    }
+}
+
+impl<'a> From<&'a Matrix> for Design<'a> {
+    fn from(m: &'a Matrix) -> Self {
+        Design::Matrix(m)
+    }
+}
+
+impl<'a> From<&'a CscMatrix> for Design<'a> {
+    fn from(s: &'a CscMatrix) -> Self {
+        Design::Csc(s)
+    }
+}
+
 /// A fitted model: selected coefficients on the ORIGINAL feature scale.
 #[derive(Clone, Debug)]
 pub struct FittedSgl {
@@ -53,18 +262,30 @@ pub struct FittedSgl {
     pub lambda: f64,
     /// Index of the selected path point.
     pub lambda_idx: usize,
+    /// Response family the model was fit under.
     pub response: Response,
     /// The underlying pathwise fit (standardized scale) for inspection.
-    pub path_fit: PathFit,
+    /// Shared (`Arc`) with the fitter's path cache, so producing a
+    /// `FittedSgl` from a warm fitter never deep-copies the
+    /// `path_len × p` coefficient paths.
+    pub path_fit: Arc<PathFit>,
 }
 
 impl FittedSgl {
-    /// Selected (nonzero) variables, original indexing.
+    /// Selected (nonzero) variables, original indexing. Exact-zero test —
+    /// see [`FittedSgl::selected_with_tol`] for a tolerance-aware support.
     pub fn selected(&self) -> Vec<usize> {
+        self.selected_with_tol(0.0)
+    }
+
+    /// Variables with `|β_j| > eps`, original indexing. FISTA iterates can
+    /// carry near-zero coefficients that the exact-zero test counts as
+    /// support; pass a small `eps` (e.g. `1e-8`) to ignore them.
+    pub fn selected_with_tol(&self, eps: f64) -> Vec<usize> {
         self.coefficients
             .iter()
             .enumerate()
-            .filter(|(_, &c)| c != 0.0)
+            .filter(|(_, &c)| c.abs() > eps)
             .map(|(i, _)| i)
             .collect()
     }
@@ -86,15 +307,499 @@ impl FittedSgl {
         }
     }
 
-    /// Batch prediction over raw rows.
+    /// Batch prediction over raw rows (per-row dot products; prefer
+    /// [`FittedSgl::predict_into`] with a [`Design`] for one-matvec batch
+    /// serving).
     pub fn predict_many(&self, rows: &[Vec<f64>]) -> Vec<f64> {
         rows.iter().map(|r| self.predict(r)).collect()
     }
+
+    /// Batch linear predictor `η = intercept·1 + Xβ` over a raw design,
+    /// written into `out` (length `design.n()`). Column-layout and sparse
+    /// designs run one matvec that skips zero coefficients entirely —
+    /// O(n · |support|) instead of O(n · p) row dots.
+    pub fn decision_function_into(&self, design: &Design, out: &mut [f64]) {
+        assert_eq!(design.p(), self.coefficients.len(), "design width mismatch");
+        assert_eq!(out.len(), design.n(), "output length mismatch");
+        match design {
+            Design::ColMajor { n, data, .. } => {
+                out.fill(self.intercept);
+                for (j, &c) in self.coefficients.iter().enumerate() {
+                    if c != 0.0 {
+                        linalg::axpy(c, &data[j * n..(j + 1) * n], out);
+                    }
+                }
+            }
+            Design::Matrix(m) => {
+                out.fill(self.intercept);
+                for (j, &c) in self.coefficients.iter().enumerate() {
+                    if c != 0.0 {
+                        linalg::axpy(c, m.col(j), out);
+                    }
+                }
+            }
+            Design::Csc(s) => {
+                out.fill(self.intercept);
+                for (j, &c) in self.coefficients.iter().enumerate() {
+                    if c != 0.0 {
+                        for (i, v) in s.col_entries(j) {
+                            out[i] += c * v;
+                        }
+                    }
+                }
+            }
+            Design::RowMajor { p, data, .. } => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = self.intercept
+                        + linalg::dot(&data[i * p..(i + 1) * p], &self.coefficients);
+                }
+            }
+            Design::Rows(rows) => {
+                for (r, o) in rows.iter().zip(out.iter_mut()) {
+                    // Hard length check: `dot` only debug-asserts, and a
+                    // ragged row would otherwise yield a silently
+                    // truncated prediction in release builds.
+                    assert_eq!(r.len(), self.coefficients.len(), "ragged design row");
+                    *o = self.intercept + linalg::dot(r, &self.coefficients);
+                }
+            }
+        }
+    }
+
+    /// Batch prediction over a raw design (conditional mean), written into
+    /// `out` — [`FittedSgl::decision_function_into`] plus the response
+    /// link.
+    pub fn predict_into(&self, design: &Design, out: &mut [f64]) {
+        self.decision_function_into(design, out);
+        if self.response == Response::Logistic {
+            out.iter_mut().for_each(|v| *v = sigmoid(*v));
+        }
+    }
+}
+
+/// Cache key of a prepared dataset: layout tag, shape, strided content
+/// fingerprints of design and response, grouping, response family.
+#[derive(Clone, Debug, PartialEq)]
+struct DesignKey {
+    layout: &'static str,
+    n: usize,
+    p: usize,
+    x_fp: u64,
+    y_fp: u64,
+    group_sizes: Vec<usize>,
+    response: Response,
+}
+
+/// A pathwise fit cached with the settings that produced it.
+struct CachedPath {
+    rule: RuleKind,
+    cfg: PathConfig,
+    fixed: Option<Vec<f64>>,
+    fit: Arc<PathFit>,
+}
+
+/// A standardized dataset cached per design fingerprint.
+struct Prepared {
+    key: DesignKey,
+    ds: Dataset,
+    centers: Vec<(f64, f64)>,
+    /// Raw response mean (0 for logistic) — the intercept base.
+    y_mean: f64,
+    path: Option<CachedPath>,
+    /// Single-cell CV result cached with the exact configuration that
+    /// produced it, so repeated `fit_cv` calls skip the k·path_len fold
+    /// fits (CV is deterministic given the dataset and config).
+    cv_cell: Option<(CvConfig, CvCell)>,
+}
+
+/// Persistent fitting engine: the serving-path counterpart of the plain
+/// [`SglModel`] config.
+///
+/// Construction is cheap; the value is in *holding on to it*. Across
+/// repeated calls the fitter reuses, in order of increasing savings:
+///
+/// 1. its [`WorkspacePool`] of [`PathWorkspace`]s (solver buffers,
+///    reduced-design gather cache — allocated once, grow-only),
+/// 2. the prepared dataset: copy + ℓ₂ standardization of the input
+///    [`Design`] happen once per content fingerprint, so follow-up fits
+///    go straight into screening with zero copies,
+/// 3. the last pathwise fit: a repeated `fit_at` with unchanged settings,
+///    or a [`SglFitter::refit`] at a different λ index, re-selects from
+///    the cached path without solving anything.
+///
+/// All caches are transparent: outputs are identical to a cold fit (the
+/// equivalence is pinned by `rust/tests/serving_api.rs`). The fitter is a
+/// single-owner object (`&mut self` methods); share work across threads
+/// by giving each worker its own fitter, or lean on the internal
+/// [`CvEngine`] whose pool already spans `threads` workers.
+pub struct SglFitter {
+    model: SglModel,
+    threads: usize,
+    pool: WorkspacePool<PathWorkspace>,
+    cv: CvEngine,
+    prepared: Option<Prepared>,
+    prepared_hits: usize,
+    prepared_misses: usize,
+    path_hits: usize,
+    cv_hits: usize,
+}
+
+impl SglFitter {
+    /// Fitter with [`crate::parallel::default_threads`] CV workers.
+    pub fn new(model: SglModel) -> Self {
+        Self::with_threads(model, crate::parallel::default_threads())
+    }
+
+    /// Fitter with an explicit CV worker count (single path fits are
+    /// serial either way; `threads` sizes the CV engine's workspace
+    /// pool).
+    pub fn with_threads(model: SglModel, threads: usize) -> Self {
+        let threads = threads.max(1);
+        SglFitter {
+            model,
+            threads,
+            pool: WorkspacePool::new(1),
+            cv: CvEngine::new(threads),
+            prepared: None,
+            prepared_hits: 0,
+            prepared_misses: 0,
+            path_hits: 0,
+            cv_hits: 0,
+        }
+    }
+
+    /// The model configuration this fitter runs with.
+    pub fn model(&self) -> &SglModel {
+        &self.model
+    }
+
+    /// The internal workspace-pooled CV engine (pool statistics live
+    /// here: [`CvEngine::pool_slots`] / [`CvEngine::pool_checkouts`]).
+    pub fn cv_engine(&self) -> &CvEngine {
+        &self.cv
+    }
+
+    /// Path-workspace pool slots — stays at 1 forever; the witness that
+    /// repeated single fits allocate no new workspaces.
+    pub fn pool_slots(&self) -> usize {
+        self.pool.slots()
+    }
+
+    /// Path-workspace checkouts served (one per actual path solve).
+    pub fn pool_checkouts(&self) -> usize {
+        self.pool.checkouts()
+    }
+
+    /// Prepared-dataset cache hits (fits that skipped copy + standardize).
+    pub fn prepared_hits(&self) -> usize {
+        self.prepared_hits
+    }
+
+    /// Prepared-dataset cache misses (cold ingests).
+    pub fn prepared_misses(&self) -> usize {
+        self.prepared_misses
+    }
+
+    /// Path-cache hits (fits/refits that skipped the solve entirely).
+    pub fn path_hits(&self) -> usize {
+        self.path_hits
+    }
+
+    /// CV-cell cache hits (`fit_cv` calls that skipped the fold fits).
+    pub fn cv_hits(&self) -> usize {
+        self.cv_hits
+    }
+
+    /// Drop every cache (prepared dataset, path, CV cell). The content
+    /// hash already detects any data change — including in-place edits —
+    /// so this is an explicit escape hatch (memory release, paranoia),
+    /// not a correctness requirement.
+    pub fn invalidate(&mut self) {
+        self.prepared = None;
+    }
+
+    /// Drop only the cached pathwise fit, keeping the prepared dataset —
+    /// forces the next fit to re-solve (benchmarking aid).
+    pub fn clear_path_cache(&mut self) {
+        if let Some(prep) = &mut self.prepared {
+            prep.path = None;
+        }
+    }
+
+    /// Fit the whole λ path on a raw design and return it (standardized
+    /// scale; use [`SglFitter::fit_at`] / [`SglFitter::refit`] for
+    /// raw-scale selections).
+    pub fn fit_path(
+        &mut self,
+        design: &Design,
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+    ) -> anyhow::Result<&PathFit> {
+        self.prepare(design, y, group_sizes, response)?;
+        self.ensure_path(self.model.path.clone(), self.model.rule, None)?;
+        Ok(self.prepared.as_ref().unwrap().path.as_ref().unwrap().fit.as_ref())
+    }
+
+    /// Fit the path on a raw design and select λ at a fixed index
+    /// (e.g. from a previous CV). Repeated calls with the same design and
+    /// settings hit the path cache and only re-select.
+    pub fn fit_at(
+        &mut self,
+        design: &Design,
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+        lambda_idx: usize,
+    ) -> anyhow::Result<FittedSgl> {
+        self.prepare(design, y, group_sizes, response)?;
+        self.ensure_path(self.model.path.clone(), self.model.rule, None)?;
+        self.finalize_cached(lambda_idx)
+    }
+
+    /// Re-select a different λ index from the cached path — no solve, no
+    /// data pass; errors if nothing has been fit on this fitter yet.
+    pub fn refit(&mut self, lambda_idx: usize) -> anyhow::Result<FittedSgl> {
+        anyhow::ensure!(
+            self.prepared.as_ref().is_some_and(|p| p.path.is_some()),
+            "refit requires a previous fit on this fitter"
+        );
+        self.path_hits += 1;
+        self.finalize_cached(lambda_idx)
+    }
+
+    /// Change the SGL mixing parameter and refit on the cached prepared
+    /// dataset (warm workspace, no re-ingest; the λ grid is re-derived
+    /// since α moves λ_max). Errors if nothing has been prepared yet.
+    pub fn refit_alpha(&mut self, alpha: f64, lambda_idx: usize) -> anyhow::Result<FittedSgl> {
+        anyhow::ensure!(
+            self.prepared.is_some(),
+            "refit_alpha requires a previous fit on this fitter"
+        );
+        self.model.path.alpha = alpha;
+        self.ensure_path(self.model.path.clone(), self.model.rule, None)?;
+        self.finalize_cached(lambda_idx)
+    }
+
+    /// Fit the path and select λ by k-fold cross-validation (raw-scale
+    /// held-out scoring; see [`crate::cv::CvFold::holdout_loss`]). The CV
+    /// result is cached with its configuration, so a repeated `fit_cv` on
+    /// unchanged data skips the fold fits entirely (its `seconds` field
+    /// then reports the original run).
+    pub fn fit_cv(
+        &mut self,
+        design: &Design,
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+    ) -> anyhow::Result<FittedSgl> {
+        self.prepare(design, y, group_sizes, response)?;
+        let cfg = self.cv_config();
+        let mut cell: Option<CvCell> = None;
+        if let Some((c, cached)) = &self.prepared.as_ref().unwrap().cv_cell {
+            if *c == cfg {
+                cell = Some(cached.clone());
+                self.cv_hits += 1;
+            }
+        }
+        let cell = match cell {
+            Some(c) => c,
+            None => {
+                let fresh = {
+                    let prep = self.prepared.as_ref().unwrap();
+                    self.cv.cross_validate(&prep.ds, &cfg)?
+                };
+                self.prepared.as_mut().unwrap().cv_cell = Some((cfg, fresh.clone()));
+                fresh
+            }
+        };
+        let idx = if self.model.one_se_rule { cell.best_1se_idx } else { cell.best_idx };
+        self.ensure_path(self.model.path.clone(), self.model.rule, Some(cell.lambdas))?;
+        self.finalize_cached(idx)
+    }
+
+    /// Run the `(α, γ)` CV grid on a raw design and return every cell
+    /// plus the winner index — the inspectable half of
+    /// [`SglFitter::fit_cv_grid`].
+    pub fn cv_grid(
+        &mut self,
+        design: &Design,
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+        alphas: &[f64],
+        gammas: &[Option<(f64, f64)>],
+    ) -> anyhow::Result<(Vec<CvCell>, usize)> {
+        self.prepare(design, y, group_sizes, response)?;
+        let cfg = self.cv_config();
+        let prep = self.prepared.as_ref().unwrap();
+        self.cv.grid_search(&prep.ds, &cfg, alphas, gammas)
+    }
+
+    /// Jointly tune `(λ, α)` — and `(γ₁, γ₂)` for aSGL — by k-fold CV
+    /// over the given grids, then refit at the winning cell's settings.
+    /// The whole grid runs through the fitter's persistent [`CvEngine`]
+    /// with shared fold splits and pooled workspaces.
+    pub fn fit_cv_grid(
+        &mut self,
+        design: &Design,
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+        alphas: &[f64],
+        gammas: &[Option<(f64, f64)>],
+    ) -> anyhow::Result<FittedSgl> {
+        let (cells, best) = self.cv_grid(design, y, group_sizes, response, alphas, gammas)?;
+        let cell = &cells[best];
+        let idx = if self.model.one_se_rule { cell.best_1se_idx } else { cell.best_idx };
+        let mut path = self.model.path.clone();
+        path.alpha = cell.alpha;
+        path.adaptive = cell.gamma;
+        self.ensure_path(path, self.model.rule, Some(cell.lambdas.clone()))?;
+        self.finalize_cached(idx)
+    }
+
+    /// The CV configuration this fitter runs with.
+    fn cv_config(&self) -> CvConfig {
+        CvConfig {
+            folds: self.model.cv_folds,
+            path: self.model.path.clone(),
+            rule: self.model.rule,
+            seed: self.model.seed,
+            threads: self.threads,
+        }
+    }
+
+    /// Validate the inputs and make sure the prepared-dataset cache holds
+    /// this exact problem (fingerprint-keyed; hit = no copy, no
+    /// standardization).
+    fn prepare(
+        &mut self,
+        design: &Design,
+        y: &[f64],
+        group_sizes: &[usize],
+        response: Response,
+    ) -> anyhow::Result<()> {
+        design.validate()?;
+        let (n, p) = (design.n(), design.p());
+        anyhow::ensure!(n > 0 && p > 0, "empty design");
+        anyhow::ensure!(y.len() == n, "y length mismatch: {} vs n = {n}", y.len());
+        anyhow::ensure!(
+            group_sizes.iter().sum::<usize>() == p,
+            "group sizes must sum to p"
+        );
+        let key = DesignKey {
+            layout: design.layout_name(),
+            n,
+            p,
+            x_fp: design.fingerprint(),
+            y_fp: linalg::content_hash(y),
+            group_sizes: group_sizes.to_vec(),
+            response,
+        };
+        if self.prepared.as_ref().is_some_and(|prep| prep.key == key) {
+            self.prepared_hits += 1;
+            return Ok(());
+        }
+        self.prepared_misses += 1;
+        let (x, centers) = design.standardized()?;
+        let mut yv = y.to_vec();
+        let y_mean = if response == Response::Linear {
+            let m = yv.iter().sum::<f64>() / n as f64;
+            yv.iter_mut().for_each(|v| *v -= m);
+            m
+        } else {
+            0.0
+        };
+        let ds = Dataset {
+            x,
+            y: yv,
+            groups: crate::groups::Groups::from_sizes(group_sizes),
+            response,
+            name: "user".into(),
+        };
+        self.prepared = Some(Prepared { key, ds, centers, y_mean, path: None, cv_cell: None });
+        Ok(())
+    }
+
+    /// Make sure the path cache holds a fit with exactly these settings,
+    /// solving (with a pooled workspace) only on a miss.
+    fn ensure_path(
+        &mut self,
+        cfg: PathConfig,
+        rule: RuleKind,
+        fixed: Option<Vec<f64>>,
+    ) -> anyhow::Result<()> {
+        let Self { prepared, pool, path_hits, .. } = self;
+        let prep = prepared.as_mut().expect("prepare() must run before ensure_path()");
+        if prep
+            .path
+            .as_ref()
+            .is_some_and(|c| c.rule == rule && c.cfg == cfg && c.fixed == fixed)
+        {
+            *path_hits += 1;
+            return Ok(());
+        }
+        let mut runner = PathRunner::new(&prep.ds, cfg.clone()).rule(rule);
+        if let Some(lambdas) = fixed.clone() {
+            runner = runner.fixed_path(lambdas);
+        }
+        let mut ws = pool.checkout();
+        let fit = runner.run_with_workspace(&mut ws)?;
+        prep.path = Some(CachedPath { rule, cfg, fixed, fit: Arc::new(fit) });
+        Ok(())
+    }
+
+    /// Unstandardize the cached path's coefficients at `idx` into a
+    /// raw-scale [`FittedSgl`].
+    fn finalize_cached(&self, idx: usize) -> anyhow::Result<FittedSgl> {
+        let prep = self.prepared.as_ref().expect("no prepared dataset");
+        let cached = prep.path.as_ref().expect("no cached path fit");
+        finalize(&cached.fit, &prep.centers, prep.y_mean, prep.ds.response, idx)
+    }
+}
+
+/// Map a standardized-scale path point back to the original feature
+/// scale: `x_std_j = (x_j − m_j)/s_j ⇒ β_j = β_std_j / s_j`, intercept
+/// absorbs `−Σ β_std_j m_j / s_j` (+ ȳ for linear). The path is attached
+/// by `Arc`, never deep-copied.
+fn finalize(
+    fit: &Arc<PathFit>,
+    centers: &[(f64, f64)],
+    y_mean: f64,
+    response: Response,
+    idx: usize,
+) -> anyhow::Result<FittedSgl> {
+    anyhow::ensure!(idx < fit.betas.len(), "lambda index out of range");
+    let beta_std = &fit.betas[idx];
+    let mut coefficients = vec![0.0; beta_std.len()];
+    let mut shift = 0.0;
+    for (j, &b) in beta_std.iter().enumerate() {
+        let (m, s) = centers[j];
+        coefficients[j] = b / s;
+        shift += b * m / s;
+    }
+    let intercept = match response {
+        Response::Linear => y_mean - shift,
+        Response::Logistic => -shift,
+    };
+    Ok(FittedSgl {
+        intercept,
+        coefficients,
+        lambda: fit.lambdas[idx],
+        lambda_idx: idx,
+        response,
+        path_fit: Arc::clone(fit),
+    })
 }
 
 impl SglModel {
     /// Fit the path on RAW data (x rows × p cols, row-major rows) and
     /// select λ at a fixed index (e.g. from a previous CV).
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a persistent `SglFitter` (`SglModel::fitter`) and call `fit_at` with a `Design`; this shim constructs a throwaway fitter per call"
+    )]
     pub fn fit_at(
         &self,
         x_rows: &[Vec<f64>],
@@ -103,12 +808,14 @@ impl SglModel {
         response: Response,
         lambda_idx: usize,
     ) -> anyhow::Result<FittedSgl> {
-        let (ds, centers) = self.prepare(x_rows, y, group_sizes, response)?;
-        let fit = PathRunner::new(&ds, self.path.clone()).rule(self.rule).run()?;
-        self.finalize(fit, &centers, y, response, lambda_idx)
+        self.fitter().fit_at(&Design::rows(x_rows), y, group_sizes, response, lambda_idx)
     }
 
     /// Fit the path and select λ by k-fold cross-validation.
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a persistent `SglFitter` (`SglModel::fitter`) and call `fit_cv` with a `Design`; this shim constructs a throwaway fitter per call"
+    )]
     pub fn fit_cv(
         &self,
         x_rows: &[Vec<f64>],
@@ -116,22 +823,15 @@ impl SglModel {
         group_sizes: &[usize],
         response: Response,
     ) -> anyhow::Result<FittedSgl> {
-        let (ds, centers) = self.prepare(x_rows, y, group_sizes, response)?;
-        let engine = CvEngine::with_default_threads();
-        let cell = engine.cross_validate(&ds, &self.cv_config())?;
-        let idx = if self.one_se_rule { cell.best_1se_idx } else { cell.best_idx };
-        let fit = PathRunner::new(&ds, self.path.clone())
-            .rule(self.rule)
-            .fixed_path(cell.lambdas.clone())
-            .run()?;
-        self.finalize(fit, &centers, y, response, idx)
+        self.fitter().fit_cv(&Design::rows(x_rows), y, group_sizes, response)
     }
 
-    /// Jointly tune `(λ, α)` — and `(γ₁, γ₂)` for aSGL — by k-fold CV over
-    /// the given grids, then refit at the winning cell's settings. The
-    /// whole grid runs through one workspace-pooled [`CvEngine`] with
-    /// shared fold splits, so the cost scales with the number of path fits
-    /// rather than the number of cells times the CV overhead.
+    /// Jointly tune `(λ, α)` — and `(γ₁, γ₂)` for aSGL — by k-fold CV
+    /// over the given grids, then refit at the winning cell's settings.
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a persistent `SglFitter` (`SglModel::fitter`) and call `fit_cv_grid` with a `Design`; this shim constructs a throwaway fitter per call"
+    )]
     pub fn fit_cv_grid(
         &self,
         x_rows: &[Vec<f64>],
@@ -141,109 +841,14 @@ impl SglModel {
         alphas: &[f64],
         gammas: &[Option<(f64, f64)>],
     ) -> anyhow::Result<FittedSgl> {
-        let (ds, centers) = self.prepare(x_rows, y, group_sizes, response)?;
-        let engine = CvEngine::with_default_threads();
-        let (cells, best) = engine.grid_search(&ds, &self.cv_config(), alphas, gammas)?;
-        let cell = &cells[best];
-        let idx = if self.one_se_rule { cell.best_1se_idx } else { cell.best_idx };
-        let mut path = self.path.clone();
-        path.alpha = cell.alpha;
-        path.adaptive = cell.gamma;
-        let fit = PathRunner::new(&ds, path)
-            .rule(self.rule)
-            .fixed_path(cell.lambdas.clone())
-            .run()?;
-        self.finalize(fit, &centers, y, response, idx)
-    }
-
-    /// The CV configuration this model runs with.
-    fn cv_config(&self) -> CvConfig {
-        CvConfig {
-            folds: self.cv_folds,
-            path: self.path.clone(),
-            rule: self.rule,
-            seed: self.seed,
-            threads: crate::parallel::default_threads(),
-        }
-    }
-
-    fn prepare(
-        &self,
-        x_rows: &[Vec<f64>],
-        y: &[f64],
-        group_sizes: &[usize],
-        response: Response,
-    ) -> anyhow::Result<(Dataset, Vec<(f64, f64)>)> {
-        anyhow::ensure!(!x_rows.is_empty(), "empty design");
-        let n = x_rows.len();
-        let p = x_rows[0].len();
-        anyhow::ensure!(y.len() == n, "y length mismatch");
-        anyhow::ensure!(
-            group_sizes.iter().sum::<usize>() == p,
-            "group sizes must sum to p"
-        );
-        let mut x = crate::linalg::Matrix::zeros(n, p);
-        for (i, row) in x_rows.iter().enumerate() {
-            anyhow::ensure!(row.len() == p, "ragged design row {i}");
-            for (j, &v) in row.iter().enumerate() {
-                x.set(i, j, v);
-            }
-        }
-        let centers = x.standardize_l2();
-        let mut yv = y.to_vec();
-        if response == Response::Linear {
-            let mean = yv.iter().sum::<f64>() / n as f64;
-            yv.iter_mut().for_each(|v| *v -= mean);
-        }
-        let ds = Dataset {
-            x,
-            y: yv,
-            groups: crate::groups::Groups::from_sizes(group_sizes),
-            response,
-            name: "user".into(),
-        };
-        Ok((ds, centers))
-    }
-
-    fn finalize(
-        &self,
-        fit: PathFit,
-        centers: &[(f64, f64)],
-        y_raw: &[f64],
-        response: Response,
-        idx: usize,
-    ) -> anyhow::Result<FittedSgl> {
-        anyhow::ensure!(idx < fit.betas.len(), "lambda index out of range");
-        let beta_std = &fit.betas[idx];
-        // Unstandardize: x_std_j = (x_j − m_j)/s_j ⇒ β_j = β_std_j / s_j,
-        // intercept absorbs −Σ β_std_j m_j / s_j (+ ȳ for linear).
-        let mut coefficients = vec![0.0; beta_std.len()];
-        let mut shift = 0.0;
-        for (j, &b) in beta_std.iter().enumerate() {
-            let (m, s) = centers[j];
-            coefficients[j] = b / s;
-            shift += b * m / s;
-        }
-        let intercept = match response {
-            Response::Linear => {
-                let ymean = y_raw.iter().sum::<f64>() / y_raw.len() as f64;
-                ymean - shift
-            }
-            Response::Logistic => -shift,
-        };
-        Ok(FittedSgl {
-            intercept,
-            coefficients,
-            lambda: fit.lambdas[idx],
-            lambda_idx: idx,
-            response,
-            path_fit: fit,
-        })
+        self.fitter().fit_cv_grid(&Design::rows(x_rows), y, group_sizes, response, alphas, gammas)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims stay under test to pin parity
+
     use super::*;
     use crate::rng::Rng;
 
@@ -262,6 +867,18 @@ mod tests {
             })
             .collect();
         (rows, y, beta_true)
+    }
+
+    /// Flatten row vectors into a column-major buffer.
+    fn col_major_of(rows: &[Vec<f64>]) -> Vec<f64> {
+        let (n, p) = (rows.len(), rows[0].len());
+        let mut data = vec![0.0; n * p];
+        for (i, r) in rows.iter().enumerate() {
+            for (j, &v) in r.iter().enumerate() {
+                data[j * n + i] = v;
+            }
+        }
+        data
     }
 
     #[test]
@@ -287,16 +904,16 @@ mod tests {
             ..Default::default()
         };
         let fitted = model.fit_at(&rows, &y, &[3, 3, 3, 3], Response::Linear, 9).unwrap();
-        // Rebuild the standardized dataset and compare η computed both ways.
-        let (ds, centers) = model.prepare(&rows, &y, &[3, 3, 3, 3], Response::Linear).unwrap();
+        // Rebuild the standardized design and compare η computed both ways.
+        let (x_std, _centers) = Design::rows(&rows).standardized().unwrap();
         let beta_std = &fitted.path_fit.betas[9];
         let ymean = y.iter().sum::<f64>() / y.len() as f64;
         for i in 0..5 {
-            let eta_std: f64 = (0..12).map(|j| ds.x.get(i, j) * beta_std[j]).sum::<f64>() + ymean;
+            let eta_std: f64 =
+                (0..12).map(|j| x_std.get(i, j) * beta_std[j]).sum::<f64>() + ymean;
             let eta_raw = fitted.decision_function(&rows[i]);
             assert!((eta_std - eta_raw).abs() < 1e-8, "row {i}: {eta_std} vs {eta_raw}");
         }
-        let _ = centers;
     }
 
     #[test]
@@ -371,6 +988,136 @@ mod tests {
         for r in rows.iter().take(10) {
             let pr = fitted.predict(r);
             assert!((0.0..=1.0).contains(&pr));
+        }
+    }
+
+    #[test]
+    fn design_layouts_agree_on_standardization() {
+        let (rows, _, _) = raw_problem(7, 30, 6);
+        let cm = col_major_of(&rows);
+        let rm: Vec<f64> = rows.iter().flatten().copied().collect();
+        let dense = Matrix::from_fn(30, 6, |i, j| rows[i][j]);
+        let csc = CscMatrix::from_dense(&dense, 0.0);
+        let (want, want_centers) = Design::rows(&rows).standardized().unwrap();
+        for d in [
+            Design::col_major(30, 6, &cm),
+            Design::row_major(30, 6, &rm),
+            Design::Matrix(&dense),
+            Design::Csc(&csc),
+        ] {
+            let (got, centers) = d.standardized().unwrap();
+            for j in 0..6 {
+                let (wm, ws) = want_centers[j];
+                let (gm, gs) = centers[j];
+                assert!((wm - gm).abs() < 1e-10, "{}: col {j} mean", d.layout_name());
+                assert!((ws - gs).abs() < 1e-10, "{}: col {j} scale", d.layout_name());
+                for i in 0..30 {
+                    assert!(
+                        (want.get(i, j) - got.get(i, j)).abs() < 1e-10,
+                        "{}: entry ({i}, {j})",
+                        d.layout_name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fitter_caches_prepared_dataset_and_path() {
+        let (rows, y, _) = raw_problem(8, 50, 8);
+        let model = SglModel {
+            path: PathConfig { path_len: 8, ..PathConfig::default() },
+            ..Default::default()
+        };
+        let mut fitter = model.fitter();
+        let a = fitter.fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 7).unwrap();
+        assert_eq!(fitter.prepared_misses(), 1);
+        assert_eq!(fitter.pool_checkouts(), 1);
+        // Same design, different λ index: prepared + path cache hits.
+        let b = fitter.fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 4).unwrap();
+        assert_eq!(fitter.prepared_hits(), 1);
+        assert_eq!(fitter.path_hits(), 1);
+        assert_eq!(fitter.pool_checkouts(), 1, "path cache hit must not solve");
+        assert_eq!(b.lambda, a.path_fit.lambdas[4]);
+        // refit re-selects without touching data at all.
+        let c = fitter.refit(7).unwrap();
+        assert_eq!(c.coefficients, a.coefficients);
+        assert_eq!(c.intercept, a.intercept);
+    }
+
+    #[test]
+    fn fitter_refit_alpha_reuses_prepared_dataset() {
+        let (rows, y, _) = raw_problem(9, 50, 8);
+        let model = SglModel {
+            path: PathConfig { path_len: 8, ..PathConfig::default() },
+            ..Default::default()
+        };
+        let mut fitter = model.fitter();
+        fitter.fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 7).unwrap();
+        let refit = fitter.refit_alpha(0.5, 7).unwrap();
+        assert_eq!(fitter.prepared_misses(), 1, "refit_alpha must not re-ingest");
+        assert_eq!(fitter.pool_checkouts(), 2, "α change must re-solve");
+        // Matches a cold fit at α = 0.5.
+        let cold_model = SglModel {
+            path: PathConfig { alpha: 0.5, path_len: 8, ..PathConfig::default() },
+            ..Default::default()
+        };
+        let cold = cold_model.fit_at(&rows, &y, &[4, 4], Response::Linear, 7).unwrap();
+        let d = crate::linalg::l2_distance(&refit.coefficients, &cold.coefficients);
+        assert!(d <= 1e-10, "refit_alpha drifted from cold fit: ℓ₂ = {d}");
+    }
+
+    #[test]
+    fn refit_without_fit_errors() {
+        let mut fitter = SglModel::default().fitter();
+        assert!(fitter.refit(0).is_err());
+        assert!(fitter.refit_alpha(0.5, 0).is_err());
+    }
+
+    #[test]
+    fn selected_with_tol_filters_near_zeros() {
+        let fitted = FittedSgl {
+            intercept: 0.0,
+            coefficients: vec![0.0, 1e-12, -0.5, 3.0e-9, 2.0],
+            lambda: 0.1,
+            lambda_idx: 0,
+            response: Response::Linear,
+            path_fit: Arc::new(PathFit {
+                rule: RuleKind::DfrSgl,
+                lambdas: vec![0.1],
+                betas: vec![vec![0.0; 5]],
+                metrics: Default::default(),
+            }),
+        };
+        assert_eq!(fitted.selected(), vec![1, 2, 3, 4]);
+        assert_eq!(fitted.selected_with_tol(1e-8), vec![2, 4]);
+    }
+
+    #[test]
+    fn predict_into_matches_predict_many_across_layouts() {
+        let (rows, y, _) = raw_problem(10, 40, 8);
+        let model = SglModel {
+            path: PathConfig { path_len: 8, ..PathConfig::default() },
+            ..Default::default()
+        };
+        let fitted = model.fit_at(&rows, &y, &[4, 4], Response::Linear, 7).unwrap();
+        let want = fitted.predict_many(&rows);
+        let cm = col_major_of(&rows);
+        let rm: Vec<f64> = rows.iter().flatten().copied().collect();
+        let dense = Matrix::from_fn(40, 8, |i, j| rows[i][j]);
+        let csc = CscMatrix::from_dense(&dense, 0.0);
+        let mut out = vec![0.0; 40];
+        for d in [
+            Design::rows(&rows),
+            Design::col_major(40, 8, &cm),
+            Design::row_major(40, 8, &rm),
+            Design::Matrix(&dense),
+            Design::Csc(&csc),
+        ] {
+            fitted.predict_into(&d, &mut out);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12, "{} drifted", d.layout_name());
+            }
         }
     }
 

@@ -181,7 +181,7 @@ impl PathWorkspace {
 }
 
 /// Pathwise fit configuration (defaults = Table A1 synthetic column).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PathConfig {
     /// SGL mixing parameter α ∈ [0, 1] (1 = lasso, 0 = group lasso).
     pub alpha: f64,

@@ -70,7 +70,7 @@ pub enum SolverKind {
 /// Solver settings; defaults follow Table A1's algorithm block
 /// (max 5000 iterations, backtracking 0.7 with 100 inner steps,
 /// convergence tolerance 1e-5).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SolverConfig {
     pub kind: SolverKind,
     pub max_iters: usize,

@@ -4,9 +4,9 @@
 //! `cv_loss` curves, same `best_idx` per cell, same winning cell — for
 //! both DFR-SGL and the adaptive variant.
 
-use dfr::cv::{grid_search_reference, CvConfig, CvEngine};
+use dfr::cv::{grid_search_reference, CvConfig, CvEngine, FoldPlan};
 use dfr::data::SyntheticConfig;
-use dfr::path::PathConfig;
+use dfr::path::{PathConfig, PathRunner};
 use dfr::screen::RuleKind;
 use dfr::solver::SolverConfig;
 
@@ -91,6 +91,67 @@ fn pooled_grid_matches_reference_for_asgl() {
 fn pooled_grid_matches_reference_on_mixed_gamma_grid() {
     let ds = data(23);
     assert_grids_match(&ds, &cfg(RuleKind::DfrSgl), &[0.9], &[None, Some((0.2, 0.2))]);
+}
+
+/// The pooled engine's held-out losses equal a hand-computed raw-scale
+/// fold error: fit each fold serially, map its coefficients back through
+/// the fold's standardization (β_raw = β/s, intercept = ȳ_train − Σβm/s),
+/// and score the untouched parent-scale test rows. Pins the ROADMAP
+/// refinement that CV scoring unstandardizes per fold rather than
+/// evaluating fold-scale β against parent-scale rows.
+#[test]
+fn pooled_cv_loss_equals_hand_computed_raw_scale_fold_error() {
+    // A deliberately unstandardized parent (offset + per-column scale), so
+    // the raw-scale mapping actually has work to do.
+    let mut ds = data(25);
+    for j in 0..ds.p() {
+        let scale = 1.0 + j as f64 / 3.0;
+        for i in 0..ds.n() {
+            let v = ds.x.get(i, j);
+            ds.x.set(i, j, 4.0 + scale * v);
+        }
+    }
+    let base = cfg(RuleKind::DfrSgl);
+    let engine = CvEngine::new(base.threads);
+    let cell = engine.cross_validate(&ds, &base).unwrap();
+
+    // Hand-computed: same fold plan, serial per-fold path fits on the
+    // cell's λ grid, manual unstandardization, manual MSE on raw rows.
+    let plan = FoldPlan::new(&ds, base.folds, base.seed).unwrap();
+    let mut want = vec![0.0; cell.lambdas.len()];
+    for fold in &plan.folds {
+        let fit = PathRunner::new(&fold.train, base.path.clone())
+            .rule(base.rule)
+            .fixed_path(cell.lambdas.clone())
+            .run()
+            .unwrap();
+        for (l, beta_std) in fit.betas.iter().enumerate() {
+            let mut shift = 0.0;
+            let beta_raw: Vec<f64> = beta_std
+                .iter()
+                .zip(&fold.centers)
+                .map(|(&b, &(m, s))| {
+                    shift += b * m / s;
+                    b / s
+                })
+                .collect();
+            let intercept = fold.train_y_mean - shift;
+            let mut mse = 0.0;
+            for i in 0..fold.test.n() {
+                let eta: f64 = intercept
+                    + (0..fold.test.p())
+                        .map(|j| fold.test.x.get(i, j) * beta_raw[j])
+                        .sum::<f64>();
+                mse += (fold.test.y[i] - eta) * (fold.test.y[i] - eta);
+            }
+            want[l] += mse / fold.test.n() as f64 / plan.folds.len() as f64;
+        }
+    }
+    let d = l2(&cell.cv_loss, &want);
+    assert!(d <= 1e-10, "pooled CV loss vs hand-computed raw-scale error: ℓ₂ = {d}");
+    // Sanity: losses are finite and the λ grid is the full-data one.
+    assert!(cell.cv_loss.iter().all(|v| v.is_finite()));
+    assert_eq!(cell.lambdas.len(), base.path.path_len);
 }
 
 /// Warm pools are not just consistent run-to-run but identical to the

@@ -1,0 +1,196 @@
+//! Serving-API equivalence properties: the persistent `SglFitter` must be
+//! a pure performance layer — identical results (ℓ₂ ≤ 1e-10) to the
+//! deprecated one-shot `SglModel::fit_*` shims across response families
+//! and input layouts (including sparse CSC), with zero new workspace
+//! allocations once warm.
+#![allow(deprecated)] // the shims are the parity baseline under test
+
+use dfr::data::Response;
+use dfr::linalg::{l2_distance, CscMatrix, Matrix};
+use dfr::model_api::{Design, SglModel};
+use dfr::path::PathConfig;
+use dfr::rng::Rng;
+use dfr::solver::SolverConfig;
+
+/// Unstandardized raw regression rows (offset + per-column scale) with a
+/// sparse-group signal.
+fn raw_problem(seed: u64, n: usize, p: usize, logistic: bool) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let beta: Vec<f64> =
+        (0..p).map(|j| if j % 5 == 0 { rng.normal(0.0, 1.5) } else { 0.0 }).collect();
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..p).map(|j| 2.0 + (1.0 + j as f64 / 4.0) * rng.gauss()).collect())
+        .collect();
+    let y: Vec<f64> = rows
+        .iter()
+        .map(|r| {
+            let eta: f64 =
+                r.iter().zip(&beta).map(|(x, b)| x * b).sum::<f64>() + rng.normal(0.0, 0.5);
+            if logistic {
+                if eta > 2.0 * rng.gauss() { 1.0 } else { 0.0 }
+            } else {
+                eta
+            }
+        })
+        .collect();
+    (rows, y)
+}
+
+fn model(path_len: usize) -> SglModel {
+    SglModel {
+        path: PathConfig {
+            path_len,
+            solver: SolverConfig { tol: 1e-8, max_iters: 20_000, ..Default::default() },
+            ..PathConfig::default()
+        },
+        cv_folds: 3,
+        ..SglModel::default()
+    }
+}
+
+/// The deprecated shims and the fitter agree exactly for fit_at, both
+/// response families.
+#[test]
+fn fitter_matches_shim_fit_at_linear_and_logistic() {
+    for (seed, resp) in [(31u64, Response::Linear), (32, Response::Logistic)] {
+        let (rows, y) = raw_problem(seed, 70, 12, resp == Response::Logistic);
+        let m = model(10);
+        let shim = m.fit_at(&rows, &y, &[4, 4, 4], resp, 9).unwrap();
+        let mut fitter = m.fitter();
+        let served = fitter.fit_at(&Design::rows(&rows), &y, &[4, 4, 4], resp, 9).unwrap();
+        let d = l2_distance(&shim.coefficients, &served.coefficients);
+        assert!(d <= 1e-10, "{resp:?}: shim vs fitter drift ℓ₂ = {d}");
+        assert!((shim.intercept - served.intercept).abs() <= 1e-10);
+        assert_eq!(shim.lambda_idx, served.lambda_idx);
+    }
+}
+
+/// Parity holds for CV selection too (same folds, same λ grid, same
+/// selected index, same raw-scale coefficients).
+#[test]
+fn fitter_matches_shim_fit_cv() {
+    let (rows, y) = raw_problem(33, 90, 12, false);
+    let m = model(8);
+    let shim = m.fit_cv(&rows, &y, &[4, 4, 4], Response::Linear).unwrap();
+    let mut fitter = m.fitter();
+    let served = fitter.fit_cv(&Design::rows(&rows), &y, &[4, 4, 4], Response::Linear).unwrap();
+    assert_eq!(shim.lambda_idx, served.lambda_idx, "CV picked a different λ");
+    let d = l2_distance(&shim.coefficients, &served.coefficients);
+    assert!(d <= 1e-10, "CV coefficients drift ℓ₂ = {d}");
+    // A repeated fit_cv on unchanged data is served from the CV-cell
+    // cache: no fold fits, no path solve, identical answer.
+    let solves_before = fitter.pool_checkouts();
+    let cv_fits_before = fitter.cv_engine().pool_checkouts();
+    let again = fitter.fit_cv(&Design::rows(&rows), &y, &[4, 4, 4], Response::Linear).unwrap();
+    assert_eq!(fitter.cv_hits(), 1, "CV cell was recomputed");
+    assert_eq!(fitter.pool_checkouts(), solves_before, "warm fit_cv re-solved the path");
+    assert_eq!(
+        fitter.cv_engine().pool_checkouts(),
+        cv_fits_before,
+        "warm fit_cv re-ran fold fits"
+    );
+    assert_eq!(again.lambda_idx, served.lambda_idx);
+    assert!(l2_distance(&again.coefficients, &served.coefficients) <= 1e-12);
+}
+
+/// A CSC design must produce the same fit as the identical dense design.
+#[test]
+fn sparse_csc_fit_matches_dense() {
+    // Sparse-ish raw design: dosage-style entries, ~75% exact zeros.
+    let (n, p) = (80usize, 24usize);
+    let mut rng = Rng::new(34);
+    let dense = Matrix::from_fn(n, p, |_, _| {
+        if rng.bernoulli(0.25) { 1.0 + rng.uniform() } else { 0.0 }
+    });
+    let y: Vec<f64> = (0..n)
+        .map(|i| 1.5 * dense.get(i, 0) - 2.0 * dense.get(i, 5) + 0.3 * rng.gauss())
+        .collect();
+    let csc = CscMatrix::from_dense(&dense, 0.0);
+    assert!(csc.density() < 0.5, "fixture is not sparse enough to be meaningful");
+    // Tight solver tolerance: the CSC and dense standardizations differ in
+    // the last float bits (different summation orders), so this comparison
+    // must measure that perturbation, not optimizer slack.
+    let mut m = model(10);
+    m.path.solver.tol = 1e-10;
+    m.path.solver.max_iters = 100_000;
+    let mut dense_fitter = m.fitter();
+    let from_dense = dense_fitter
+        .fit_at(&Design::Matrix(&dense), &y, &[6, 6, 6, 6], Response::Linear, 9)
+        .unwrap();
+    let mut sparse_fitter = m.fitter();
+    let from_csc = sparse_fitter
+        .fit_at(&Design::Csc(&csc), &y, &[6, 6, 6, 6], Response::Linear, 9)
+        .unwrap();
+    let d = l2_distance(&from_dense.coefficients, &from_csc.coefficients);
+    assert!(d <= 1e-10, "CSC vs dense drift ℓ₂ = {d}");
+    assert!((from_dense.intercept - from_csc.intercept).abs() <= 1e-10);
+    // And all borrowed layouts agree with the rows layout.
+    let rows: Vec<Vec<f64>> =
+        (0..n).map(|i| (0..p).map(|j| dense.get(i, j)).collect()).collect();
+    let cm: Vec<f64> = dense.as_slice().to_vec();
+    let rm: Vec<f64> = rows.iter().flatten().copied().collect();
+    for design in [
+        Design::rows(&rows),
+        Design::col_major(n, p, &cm),
+        Design::row_major(n, p, &rm),
+    ] {
+        let mut fitter = m.fitter();
+        let fit = fitter.fit_at(&design, &y, &[6, 6, 6, 6], Response::Linear, 9).unwrap();
+        let d = l2_distance(&from_dense.coefficients, &fit.coefficients);
+        assert!(d <= 1e-10, "{} vs dense drift ℓ₂ = {d}", design.layout_name());
+    }
+}
+
+/// Repeated fits on a warm fitter allocate no new workspaces: the path
+/// pool stays at one slot, the CV pool at `threads` slots, and requests
+/// that change nothing are served from the caches without a solve.
+#[test]
+fn repeated_fits_allocate_no_new_workspaces() {
+    let (rows, y) = raw_problem(35, 60, 12, false);
+    let m = model(8);
+    let mut fitter = m.fitter();
+    let design = Design::rows(&rows);
+    let first = fitter.fit_at(&design, &y, &[4, 4, 4], Response::Linear, 7).unwrap();
+    let (slots, checkouts) = (fitter.pool_slots(), fitter.pool_checkouts());
+    assert_eq!(slots, 1);
+    assert_eq!(checkouts, 1);
+    // 20 more requests: λ re-selections are cache hits; forced re-solves
+    // (clear_path_cache) reuse the one pooled workspace.
+    for req in 0..20 {
+        if req % 4 == 3 {
+            fitter.clear_path_cache();
+        }
+        let idx = 2 + (req % 6);
+        let fit = fitter.fit_at(&design, &y, &[4, 4, 4], Response::Linear, idx).unwrap();
+        assert_eq!(fit.lambda, first.path_fit.lambdas[idx], "λ grid drifted");
+    }
+    assert_eq!(fitter.pool_slots(), 1, "workspace pool grew under repeated fits");
+    assert_eq!(fitter.prepared_misses(), 1, "prepared dataset was rebuilt");
+    assert_eq!(fitter.prepared_hits(), 20);
+    // Exactly the forced re-solves hit the pool; everything else was cached.
+    assert_eq!(fitter.pool_checkouts(), 1 + 5, "unexpected solve count");
+    // The warm fitter still reproduces the first answer exactly.
+    let again = fitter.fit_at(&design, &y, &[4, 4, 4], Response::Linear, 7).unwrap();
+    let d = l2_distance(&again.coefficients, &first.coefficients);
+    assert!(d <= 1e-12, "warm fitter drifted: ℓ₂ = {d}");
+}
+
+/// Changing the data (new fingerprint) re-ingests; switching back to a
+/// previously-seen design is a miss too (the cache holds one dataset),
+/// but results stay exact.
+#[test]
+fn fitter_detects_design_changes() {
+    let (rows_a, y_a) = raw_problem(36, 50, 8, false);
+    let (rows_b, y_b) = raw_problem(37, 50, 8, false);
+    let m = model(6);
+    let mut fitter = m.fitter();
+    let a1 = fitter.fit_at(&Design::rows(&rows_a), &y_a, &[4, 4], Response::Linear, 5).unwrap();
+    let b = fitter.fit_at(&Design::rows(&rows_b), &y_b, &[4, 4], Response::Linear, 5).unwrap();
+    assert_eq!(fitter.prepared_misses(), 2, "dataset swap went unnoticed");
+    let mut cold = m.fitter();
+    let b_cold =
+        cold.fit_at(&Design::rows(&rows_b), &y_b, &[4, 4], Response::Linear, 5).unwrap();
+    assert!(l2_distance(&b.coefficients, &b_cold.coefficients) <= 1e-12);
+    let a2 = fitter.fit_at(&Design::rows(&rows_a), &y_a, &[4, 4], Response::Linear, 5).unwrap();
+    assert!(l2_distance(&a1.coefficients, &a2.coefficients) <= 1e-12);
+}
