@@ -120,7 +120,7 @@ fn main() -> anyhow::Result<()> {
     };
     let mut fitter = model.fitter();
     let sizes = ds.groups.sizes();
-    let design = Design::Matrix(&ds.x);
+    let design = Design::Matrix(ds.x.dense());
     let t0 = std::time::Instant::now();
     let first = fitter.fit_at(&design, &ds.y, &sizes, ds.response, 19)?;
     let cold = t0.elapsed().as_secs_f64();

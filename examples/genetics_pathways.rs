@@ -92,8 +92,10 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 4. The sparse-genotype serving path: minor-allele counts in {0, 1, 2}
-    //    with low MAF are mostly zeros, so the design ships as CSC and the
-    //    fitter's standardization touches only the stored entries.
+    //    with low MAF are mostly zeros, so the design ships as CSC and —
+    //    because its density sits below the DFR_SPARSE_DENSITY threshold
+    //    (default 0.25) — the whole solve runs on the centered-implicit
+    //    sparse kernels: no n×p dense standardized matrix is ever built.
     let (n, p, group_size) = (160usize, 480usize, 24usize);
     let mut rng = Rng::new(33);
     let mut col_ptr = vec![0usize];
@@ -125,22 +127,31 @@ fn main() -> anyhow::Result<()> {
     };
     let sizes = vec![group_size; p / group_size];
     println!(
-        "\nsparse genotype serving: n={n}, p={p} SNPs in {} genes, density {:.3}",
+        "\nsparse genotype serving: n={n}, p={p} SNPs in {} genes, density {:.3} \
+         (threshold {})",
         sizes.len(),
-        geno.density()
+        geno.density(),
+        dfr::model_api::sparse_density_threshold(),
     );
     let model = SglModel {
         path: PathConfig { path_len: 15, ..PathConfig::default() },
         rule: RuleKind::DfrSgl,
+        sparse: SparseMode::Auto, // density-gated centered-implicit kernels
         ..SglModel::default()
     };
     let mut fitter = model.fitter();
+    let densified_before = dfr::linalg::dense_materializations();
     let fitted =
         fitter.fit_at(&Design::Csc(&geno), &y, &sizes, Response::Logistic, 14)?;
     println!(
         "  DFR-SGL on CSC input: {} SNPs selected (|β| > 1e-8), input proportion {:.4}",
         fitted.selected_with_tol(1e-8).len(),
         fitted.path_fit.metrics.input_proportion()
+    );
+    println!(
+        "  solve kernel: {} (dense materializations during fit: {})",
+        fitter.kernel_variant().unwrap_or("dense"),
+        dfr::linalg::dense_materializations() - densified_before,
     );
     // One-matvec batch predictions straight off the sparse design.
     let mut risk = vec![0.0; n];

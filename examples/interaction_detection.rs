@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     let mut fitter = model.fitter();
     let sizes = expanded.groups.sizes();
     let fitted = fitter.fit_at(
-        &Design::Matrix(&expanded.x),
+        &Design::Matrix(expanded.x.dense()),
         &expanded.y,
         &sizes,
         expanded.response,

@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     };
     let mut fitter = model.fitter();
     let sizes = ds.groups.sizes();
-    let design = Design::Matrix(&ds.x);
+    let design = Design::Matrix(ds.x.dense());
     // Report inside the borrow's scope so nothing needs cloning.
     let path_points = {
         let fit = fitter.fit_path(&design, &ds.y, &sizes, ds.response)?;

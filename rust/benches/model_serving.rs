@@ -10,7 +10,11 @@
 //!   and unstandardize.
 //!
 //! Also prices batch prediction (`predict_into` one-matvec vs per-row
-//! `predict_many`) and the sparse-CSC ingest. The speedup rows land in
+//! `predict_many`) and the sparse-CSC ingest — which, at this fixture's
+//! ~10% density, now routes through the centered-implicit sparse solve
+//! path under the default `SparseMode::Auto` (the dense-vs-sparse
+//! comparison itself lives in the `sparse_path` bench). The speedup rows
+//! land in
 //! `target/bench_results/BENCH_model_serving.json` for the cross-PR
 //! trajectory; the "path workspaces allocated" row must stay at 1.
 #![allow(deprecated)] // the fresh-model baseline IS the deprecated shim

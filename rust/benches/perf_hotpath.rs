@@ -94,7 +94,7 @@ fn main() {
             beta_prev: &beta,
             lambda_prev: lam1,
             lambda_next: 0.9 * lam1,
-            x: &ds.x,
+            x: (&ds.x).into(),
             y: &ds.y,
             response: ds.response,
         };
@@ -118,7 +118,7 @@ fn main() {
 
     // One warm FISTA solve on a screened-size problem (|O_v| ≈ 60).
     let keep: Vec<usize> = (0..60).map(|i| i * (p / 60)).collect();
-    let x_red = ds.x.gather_columns(&keep);
+    let x_red = ds.x.dense().gather_columns(&keep);
     let rpen = pen.restrict(&keep);
     let red_loss = Loss::new(LossKind::Squared, &x_red, &ds.y);
     let cfg = dfr::solver::SolverConfig::default();

@@ -1,0 +1,98 @@
+//! **Sparse solve path bench**: dense standardized kernels vs the
+//! centered-implicit sparse kernels on genotype-like synthetic designs at
+//! 1% / 5% / 20% density — the headline numbers for the `DesignOps`
+//! sparse path (ROADMAP "Design-level sparse solver path").
+//!
+//! Each density level fits the same CSC design through two fitters that
+//! differ only in `SparseMode` (Off → densified standardized matrix,
+//! On → `CenteredSparse`), with the path cache cleared per repetition so
+//! every request solves. Rows land in
+//! `target/bench_results/BENCH_sparse_path.json`:
+//!
+//! * `pathwise fit seconds` per kernel,
+//! * `dense/sparse speedup` (mean dense seconds / mean sparse seconds),
+//! * `csc density` as fitted.
+
+use dfr::bench_harness::{time_stat, BenchTable};
+use dfr::linalg::CscMatrix;
+use dfr::model_api::{Design, SglModel, SparseMode};
+use dfr::path::PathConfig;
+use dfr::rng::Rng;
+
+/// Genotype-like CSC design at (approximately) the requested density:
+/// dosages in {1, 2} at Bernoulli-sampled positions.
+fn genotype(seed: u64, n: usize, p: usize, density: f64) -> CscMatrix {
+    let mut rng = Rng::new(seed);
+    // Two Bernoulli(maf) draws per cell → P(nonzero) = 1 − (1 − maf)².
+    let maf = 1.0 - (1.0 - density).sqrt();
+    let mut col_ptr = vec![0usize];
+    let mut row_idx = Vec::new();
+    let mut values = Vec::new();
+    for _ in 0..p {
+        for i in 0..n {
+            let dosage = (rng.bernoulli(maf) as u8 + rng.bernoulli(maf) as u8) as f64;
+            if dosage > 0.0 {
+                row_idx.push(i);
+                values.push(dosage);
+            }
+        }
+        col_ptr.push(row_idx.len());
+    }
+    CscMatrix::new(n, p, col_ptr, row_idx, values)
+}
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (n, p, path_len) = if full { (400usize, 2000usize, 30usize) } else { (200, 800, 15) };
+    let groups = 40usize;
+    let sizes = vec![p / groups; groups];
+    let mut table =
+        BenchTable::new("Sparse solve path — dense vs centered-implicit kernels");
+    let (warmup, reps) = (1, if full { 5 } else { 7 });
+
+    for (di, density) in [0.01f64, 0.05, 0.20].into_iter().enumerate() {
+        let geno = genotype(90 + di as u64, n, p, density);
+        let mut rng = Rng::new(17 + di as u64);
+        let beta_true: Vec<f64> =
+            (0..p).map(|j| if j % 37 == 0 { rng.normal(0.0, 1.5) } else { 0.0 }).collect();
+        let y: Vec<f64> =
+            geno.matvec(&beta_true).iter().map(|v| v + rng.normal(0.0, 0.3)).collect();
+        let setting = format!("{n}x{p}@{density}");
+
+        let model = SglModel {
+            path: PathConfig { path_len, ..PathConfig::default() },
+            ..SglModel::default()
+        };
+        let run = |mode: SparseMode, label: &str| {
+            let mut fitter =
+                SglModel { sparse: mode, ..model.clone() }.fitter();
+            let acc = time_stat(warmup, reps, || {
+                fitter.clear_path_cache();
+                let fit = fitter
+                    .fit_path(&Design::Csc(&geno), &y, &sizes, dfr::data::Response::Linear)
+                    .expect("fit failed");
+                std::hint::black_box(fit.lambdas.len());
+            });
+            assert_eq!(
+                fitter.kernel_variant(),
+                Some(label),
+                "fitter did not resolve the expected kernel"
+            );
+            acc.mean()
+        };
+        let dense_s = run(SparseMode::Off, "dense");
+        let sparse_s = run(SparseMode::On, "centered-sparse");
+
+        table.push("pathwise fit seconds", &setting, "dense kernel", dense_s);
+        table.push("pathwise fit seconds", &setting, "sparse kernel", sparse_s);
+        table.push(
+            "dense/sparse speedup",
+            &setting,
+            "sparse kernel",
+            dense_s / sparse_s.max(1e-12),
+        );
+        table.push("csc density", &setting, "sparse kernel", geno.density());
+    }
+
+    table.finish("sparse_path");
+}

@@ -199,6 +199,11 @@ impl FoldPlan {
     /// [`grid_search_reference`] exactly (same RNG stream, same
     /// standardization), which is what makes shared plans a pure
     /// de-duplication rather than a behavior change.
+    ///
+    /// Kernel variants survive the split: a centered-sparse parent design
+    /// produces centered-sparse fold training/test sets (row-gathered raw
+    /// nonzeros, re-standardized by affine recomposition) — the sparse
+    /// solve path never densifies inside CV.
     pub fn new(ds: &Dataset, folds: usize, seed: u64) -> anyhow::Result<FoldPlan> {
         anyhow::ensure!(folds >= 2, "need at least 2 folds, got {folds}");
         anyhow::ensure!(
@@ -680,7 +685,7 @@ mod tests {
         });
         let y: Vec<f64> = (0..24).map(|_| 5.0 + rng.gauss()).collect();
         let ds = Dataset {
-            x,
+            x: x.into(),
             y,
             groups: crate::groups::Groups::from_sizes(&[5]),
             response: Response::Linear,
@@ -701,7 +706,7 @@ mod tests {
         let mut want = 0.0;
         for i in 0..fold.test.n() {
             let eta: f64 = intercept
-                + (0..5).map(|j| fold.test.x.get(i, j) * beta_raw[j]).sum::<f64>();
+                + (0..5).map(|j| fold.test.x.dense().get(i, j) * beta_raw[j]).sum::<f64>();
             want += (fold.test.y[i] - eta) * (fold.test.y[i] - eta);
         }
         want /= fold.test.n() as f64;

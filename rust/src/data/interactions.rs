@@ -38,9 +38,11 @@ pub fn expand_interactions(
     for (_, r) in base.groups.iter() {
         let vars: Vec<usize> = r.collect();
         let before = cols.len();
-        // Main effects.
+        // Main effects. (Interaction expansion is a dense-generator
+        // feature — per-cell products have no sparse shortcut.)
+        let base_x = base.x.dense();
         for &j in &vars {
-            cols.push(base.x.col(j).to_vec());
+            cols.push(base_x.col(j).to_vec());
             parents.push(vec![j]);
         }
         // Order-2 products.
@@ -48,7 +50,7 @@ pub fn expand_interactions(
             for b in (a + 1)..vars.len() {
                 let (ja, jb) = (vars[a], vars[b]);
                 let col: Vec<f64> = (0..n)
-                    .map(|i| base.x.get(i, ja) * base.x.get(i, jb))
+                    .map(|i| base_x.get(i, ja) * base_x.get(i, jb))
                     .collect();
                 cols.push(col);
                 parents.push(vec![ja, jb]);
@@ -62,7 +64,7 @@ pub fn expand_interactions(
                         let (ja, jb, jc) = (vars[a], vars[b], vars[c]);
                         let col: Vec<f64> = (0..n)
                             .map(|i| {
-                                base.x.get(i, ja) * base.x.get(i, jb) * base.x.get(i, jc)
+                                base_x.get(i, ja) * base_x.get(i, jb) * base_x.get(i, jc)
                             })
                             .collect();
                         cols.push(col);
@@ -77,7 +79,7 @@ pub fn expand_interactions(
     let mut x = Matrix::from_columns(n, &cols);
     x.standardize_l2();
     let dataset = Dataset {
-        x,
+        x: x.into(),
         y: base.y.clone(),
         groups: Groups::from_sizes(&sizes),
         response: base.response,

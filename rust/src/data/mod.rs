@@ -10,7 +10,7 @@ pub use interactions::InteractionOrder;
 pub use synthetic::{GeneratedData, SyntheticConfig};
 
 use crate::groups::Groups;
-use crate::linalg::Matrix;
+use crate::linalg::DesignOps;
 
 /// Response family of a dataset.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,9 +22,14 @@ pub enum Response {
 }
 
 /// A regression problem: standardized design, response, grouping.
+///
+/// The design is a [`DesignOps`] — dense for everything the in-crate
+/// generators produce, centered-implicit sparse when a CSC input enters
+/// through the model API's sparse solve path. Every layer above consumes
+/// it through the [`crate::linalg::DesignRef`] kernel contract.
 #[derive(Clone, Debug)]
 pub struct Dataset {
-    pub x: Matrix,
+    pub x: DesignOps,
     pub y: Vec<f64>,
     pub groups: Groups,
     pub response: Response,
@@ -90,6 +95,6 @@ mod tests {
         let s = d.subset_rows(&[3, 7, 11]);
         assert_eq!(s.n(), 3);
         assert_eq!(s.y[1], d.y[7]);
-        assert_eq!(s.x.get(2, 4), d.x.get(11, 4));
+        assert_eq!(s.x.dense().get(2, 4), d.x.dense().get(11, 4));
     }
 }

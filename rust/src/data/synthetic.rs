@@ -138,7 +138,7 @@ impl SyntheticConfig {
         };
 
         let mut dataset = Dataset {
-            x,
+            x: x.into(),
             y,
             groups,
             response: self.response,
@@ -177,7 +177,7 @@ mod tests {
             ..SyntheticConfig::default()
         };
         let gd = cfg.generate(9);
-        let x = &gd.dataset.x;
+        let x = gd.dataset.x.dense();
         let corr = |a: usize, b: usize| {
             let (ca, cb) = (x.col(a), x.col(b));
             let n = ca.len() as f64;
@@ -234,7 +234,10 @@ mod tests {
     fn deterministic_given_seed() {
         let a = SyntheticConfig::default().generate(77);
         let b = SyntheticConfig::default().generate(77);
-        assert_eq!(a.dataset.x.as_slice()[..50], b.dataset.x.as_slice()[..50]);
+        assert_eq!(
+            a.dataset.x.dense().as_slice()[..50],
+            b.dataset.x.dense().as_slice()[..50]
+        );
         assert_eq!(a.beta_true, b.beta_true);
     }
 }

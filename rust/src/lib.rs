@@ -13,7 +13,7 @@
 //! | [`screen`] | DFR bi-level strong rules for SGL (Eqs. 5–6) and aSGL (Eqs. 7–8), `sparsegl` group rule, GAP-safe seq/dyn, no-screen baseline, KKT checks | §2.2, §2.4, App. C |
 //! | [`path`] | Algorithm 1/A1: candidates → optimization set → reduced solve → KKT loop; persistent [`path::PathWorkspace`] hot loop | §2.4, App. D.1 metrics |
 //! | [`cv`] | Workspace-pooled k-fold CV and `(α, γ)` grid search with shared fold plans, raw-scale fold scoring | §1.2, App. D.7, Table A36 |
-//! | [`model_api`] | [`model_api::Design`] input abstraction (dense/row/column/CSC-sparse layouts) + persistent [`model_api::SglFitter`] serving API | — |
+//! | [`model_api`] | [`model_api::Design`] input abstraction (dense/row/column/CSC-sparse layouts) + persistent [`model_api::SglFitter`] serving API; CSC designs below the [`model_api::sparse_density_threshold`] solve end-to-end on the centered-implicit sparse kernels ([`linalg::CenteredSparse`]) | — |
 //! | [`data`] | Synthetic designs, interaction expansion, surrogate real datasets | §3.1, §4, Table 1, Table A37 |
 //! | [`runtime`] | PJRT execution of AOT-compiled JAX/Pallas artifacts for the dense hot path | — |
 //! | [`metrics`], [`bench_harness`], [`report`] | Improvement factor, input proportion, paper-style tables, `BENCH_*.json` | §3, App. D.1 |
@@ -96,10 +96,10 @@ pub mod prelude {
     pub use crate::data::real::{RealDatasetKind, SurrogateConfig};
     pub use crate::data::{Dataset, InteractionOrder, Response, SyntheticConfig};
     pub use crate::groups::Groups;
-    pub use crate::linalg::{CscMatrix, Matrix};
+    pub use crate::linalg::{CenteredSparse, CscMatrix, DesignOps, DesignRef, Matrix};
     pub use crate::loss::LossKind;
     pub use crate::metrics::{PathMetrics, PointMetrics};
-    pub use crate::model_api::{Design, FittedSgl, SglFitter, SglModel};
+    pub use crate::model_api::{Design, FittedSgl, SglFitter, SglModel, SparseMode};
     pub use crate::parallel::WorkspacePool;
     pub use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
     pub use crate::solver::SolverWorkspace;

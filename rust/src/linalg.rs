@@ -198,28 +198,11 @@ impl Matrix {
     /// Spectral-norm upper bound via `max_j ‖X e_j‖₂ · √p` is far too loose;
     /// instead run a few power iterations on `XᵀX` to estimate `‖X‖₂²`,
     /// which upper-bounds the gradient Lipschitz constant of the squared
-    /// loss (divided by n).
+    /// loss (divided by n). One shared implementation serves every kernel
+    /// variant ([`DesignRef::op_norm_sq_est`]), so the dense and sparse
+    /// Lipschitz estimates can never drift apart algorithmically.
     pub fn op_norm_sq_est(&self, iters: usize, seed: u64) -> f64 {
-        let mut v: Vec<f64> = {
-            let mut rng = crate::rng::Rng::new(seed);
-            (0..self.p).map(|_| rng.gauss()).collect()
-        };
-        let nv = norm2(&v).max(1e-300);
-        v.iter_mut().for_each(|x| *x /= nv);
-        let mut lam;
-        let mut xb = vec![0.0; self.n];
-        for _ in 0..iters.max(1) {
-            self.matvec_into(&v, &mut xb);
-            let w = self.t_matvec(&xb);
-            lam = norm2(&w);
-            if lam <= 0.0 {
-                return 0.0;
-            }
-            v = w.iter().map(|x| x / lam).collect();
-        }
-        // One extra Rayleigh quotient for a tighter estimate.
-        self.matvec_into(&v, &mut xb);
-        dot(&xb, &xb) / dot(&v, &v)
+        DesignRef::Dense(self).op_norm_sq_est(iters, seed)
     }
 
     /// Center each column to mean zero and scale to unit ℓ₂ norm (the
@@ -459,6 +442,7 @@ impl CscMatrix {
     /// `(mean, scale)` used — the sparse entry point into the dense
     /// pathwise stack.
     pub fn to_standardized_dense(&self) -> (Matrix, Vec<(f64, f64)>) {
+        note_dense_materialization();
         let stats = self.standardize_stats();
         let mut m = Matrix::zeros(self.n, self.p);
         for (j, &(mean, scale)) in stats.iter().enumerate() {
@@ -473,6 +457,7 @@ impl CscMatrix {
 
     /// Densify without standardizing (tests / small problems).
     pub fn to_dense(&self) -> Matrix {
+        note_dense_materialization();
         let mut m = Matrix::zeros(self.n, self.p);
         for j in 0..self.p {
             let dst = m.col_mut(j);
@@ -495,6 +480,633 @@ impl CscMatrix {
     }
 }
 
+thread_local! {
+    /// Per-thread count of sparse→dense materializations (see
+    /// [`dense_materializations`]).
+    static DENSE_MATERIALIZATIONS: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+/// Number of times *this thread* has materialized a sparse design as a
+/// dense matrix ([`CscMatrix::to_dense`], [`CscMatrix::to_standardized_dense`],
+/// [`CenteredSparse::to_dense`]). The sparse solve path's acceptance
+/// witness: a fit through the centered-implicit kernels must leave this
+/// counter untouched (`rust/tests/sparse_equivalence.rs`). Thread-local so
+/// concurrently running tests cannot alias each other's counts.
+pub fn dense_materializations() -> u64 {
+    DENSE_MATERIALIZATIONS.with(|c| c.get())
+}
+
+fn note_dense_materialization() {
+    DENSE_MATERIALIZATIONS.with(|c| c.set(c.get() + 1));
+}
+
+/// ℓ₂-standardized sparse design held in centered-implicit form: the raw
+/// CSC nonzeros plus per-column `(offset, scale)` such that the matrix the
+/// kernels *evaluate* is
+///
+/// ```text
+///     X̃[:, j] = (X[:, j] − offset_j · 1) / scale_j ,
+/// ```
+///
+/// which is **never materialized dense** — centering would fill every
+/// implicit zero with `−offset_j / scale_j`, destroying sparsity, so the
+/// kernels carry the rank-one correction instead (the trick production SGL
+/// solvers like `sparsegl` use):
+///
+/// * `X̃β  = X(β ⊘ s) − (Σ_j β_j μ_j / s_j) · 1` — one sparse matvec plus a
+///   scalar shift, O(nnz + n);
+/// * `X̃ᵀr = (Xᵀr − μ · Σᵢ rᵢ) ⊘ s` — one sparse transpose-matvec plus a
+///   rank-one correction, O(nnz + n).
+///
+/// Built from a [`CscMatrix`] via [`CenteredSparse::from_csc`] (offsets =
+/// column means, scales = centered column ℓ₂ norms, computed from the
+/// nonzeros alone), this is the drop-in sparse counterpart of a dense
+/// standardized [`Matrix`] everywhere the solve path only needs the
+/// [`DesignRef`] kernel contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CenteredSparse {
+    n: usize,
+    p: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<usize>,
+    values: Vec<f64>,
+    /// Per-column centering offset μ_j (the raw column mean at build time).
+    offsets: Vec<f64>,
+    /// Per-column divisor s_j (the centered column norm at build time).
+    scales: Vec<f64>,
+}
+
+impl CenteredSparse {
+    /// Empty design with `n` rows and no columns (grow-only buffer seed
+    /// for the reduced-design cache).
+    pub fn empty(n: usize) -> Self {
+        CenteredSparse {
+            n,
+            p: 0,
+            col_ptr: vec![0],
+            row_idx: Vec::new(),
+            values: Vec::new(),
+            offsets: Vec::new(),
+            scales: Vec::new(),
+        }
+    }
+
+    /// Standardized view of a raw CSC design: offsets/scales are the
+    /// per-column `(mean, centered ℓ₂ norm)` from
+    /// [`CscMatrix::standardize_stats`], so the implied matrix equals
+    /// [`CscMatrix::to_standardized_dense`]'s output without the `n × p`
+    /// allocation.
+    pub fn from_csc(csc: &CscMatrix) -> Self {
+        let stats = csc.standardize_stats();
+        let (offsets, scales) = stats.into_iter().unzip();
+        CenteredSparse {
+            n: csc.n,
+            p: csc.p,
+            col_ptr: csc.col_ptr.clone(),
+            row_idx: csc.row_idx.clone(),
+            values: csc.values.clone(),
+            offsets,
+            scales,
+        }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.p
+    }
+
+    /// Number of stored raw nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fill fraction of the *raw* nonzeros (the implied standardized
+    /// matrix is dense by construction; this measures the kernel cost).
+    pub fn density(&self) -> f64 {
+        if self.n == 0 || self.p == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n * self.p) as f64
+    }
+
+    /// Per-column `(offset, scale)` — the standardization centers callers
+    /// use to map coefficients back to the raw scale.
+    pub fn centers(&self) -> Vec<(f64, f64)> {
+        self.offsets.iter().copied().zip(self.scales.iter().copied()).collect()
+    }
+
+    /// `out = X̃ β` touching only stored entries plus one rank-one shift.
+    pub fn matvec_into(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        let mut shift = 0.0;
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                let bs = b / self.scales[j];
+                shift += bs * self.offsets[j];
+                for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                    out[self.row_idx[k]] += bs * self.values[k];
+                }
+            }
+        }
+        if shift != 0.0 {
+            out.iter_mut().for_each(|v| *v -= shift);
+        }
+    }
+
+    /// `y = X̃ β` (length n).
+    pub fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        self.matvec_into(beta, &mut out);
+        out
+    }
+
+    /// `out = X̃ᵀ r`: sparse column dots corrected by `μ_j · Σᵢ rᵢ`.
+    pub fn t_matvec_into(&self, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        let sr: f64 = r.iter().sum();
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                s += self.values[k] * r[self.row_idx[k]];
+            }
+            *o = (s - self.offsets[j] * sr) / self.scales[j];
+        }
+    }
+
+    /// `g = X̃ᵀ r` (length p).
+    pub fn t_matvec(&self, r: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.p];
+        self.t_matvec_into(r, &mut out);
+        out
+    }
+
+    /// `out = X̃ᵀ r` fanned out across a thread scope. The sparse kernel is
+    /// O(nnz), so the break-even point is on stored entries, not `n·p`.
+    pub fn t_matvec_par_into(&self, r: &[f64], threads: usize, out: &mut [f64]) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        if threads <= 1 || self.nnz() + self.n < 4_000_000 {
+            self.t_matvec_into(r, out);
+            return;
+        }
+        let sr: f64 = r.iter().sum();
+        parallel::for_each_chunk(out, threads, |start, chunk| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                let j = start + k;
+                let mut s = 0.0;
+                for t in self.col_ptr[j]..self.col_ptr[j + 1] {
+                    s += self.values[t] * r[self.row_idx[t]];
+                }
+                *o = (s - self.offsets[j] * sr) / self.scales[j];
+            }
+        });
+    }
+
+    /// ℓ₂ norm of each *implied standardized* column:
+    /// `√(Σ_nz ((v − μ)/s)² + (n − nnz_j)·(μ/s)²)` — 1 by construction for
+    /// non-degenerate columns.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let n = self.n as f64;
+        (0..self.p)
+            .map(|j| {
+                let (mu, s) = (self.offsets[j], self.scales[j]);
+                let mut nnz_j = 0usize;
+                let mut sumsq = 0.0;
+                for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                    let d = (self.values[k] - mu) / s;
+                    sumsq += d * d;
+                    nnz_j += 1;
+                }
+                let z = mu / s;
+                (sumsq + (n - nnz_j as f64) * z * z).sqrt()
+            })
+            .collect()
+    }
+
+    /// Mean of each implied standardized column — `(mean_raw − μ)/s`,
+    /// zero by construction right after [`CenteredSparse::from_csc`].
+    pub fn col_means(&self) -> Vec<f64> {
+        let n = self.n as f64;
+        (0..self.p)
+            .map(|j| {
+                let raw: f64 =
+                    self.values[self.col_ptr[j]..self.col_ptr[j + 1]].iter().sum();
+                (raw / n - self.offsets[j]) / self.scales[j]
+            })
+            .collect()
+    }
+
+    /// Power-iteration estimate of `‖X̃‖₂²` — the shared
+    /// [`DesignRef::op_norm_sq_est`] run through the implicit kernels.
+    pub fn op_norm_sq_est(&self, iters: usize, seed: u64) -> f64 {
+        DesignRef::Sparse(self).op_norm_sq_est(iters, seed)
+    }
+
+    /// Row subset (CV folds): gathers the *raw* nonzeros and keeps the
+    /// per-column `(offset, scale)`, so the implied matrix of the result is
+    /// exactly the row-gather of this design's implied matrix. Arbitrary
+    /// row order (and repeats) are supported, matching
+    /// [`Matrix::gather_rows`].
+    pub fn gather_rows(&self, rows: &[usize]) -> CenteredSparse {
+        let mut positions: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+        for (k, &i) in rows.iter().enumerate() {
+            assert!(i < self.n, "row index {i} out of range");
+            positions[i].push(k);
+        }
+        let mut out = CenteredSparse::empty(rows.len());
+        out.offsets = self.offsets.clone();
+        out.scales = self.scales.clone();
+        out.p = self.p;
+        let mut col: Vec<(usize, f64)> = Vec::new();
+        for j in 0..self.p {
+            col.clear();
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                for &new_i in &positions[self.row_idx[k]] {
+                    col.push((new_i, self.values[k]));
+                }
+            }
+            col.sort_unstable_by_key(|&(i, _)| i);
+            for &(i, v) in &col {
+                out.row_idx.push(i);
+                out.values.push(v);
+            }
+            out.col_ptr.push(out.values.len());
+        }
+        out
+    }
+
+    /// Re-standardize the *implied* matrix in place (zero mean, unit ℓ₂
+    /// norm per column) and return the per-column `(mean, scale)` of the
+    /// implied columns — the sparse counterpart of
+    /// [`Matrix::standardize_l2`], used by the CV fold planner on sparse
+    /// training subsets.
+    ///
+    /// The composition stays affine, so only the offsets/scales move:
+    /// with current `(μ, s)` and implied-column stats `(m', s')`,
+    /// `((x − μ)/s − m')/s' = (x − mean_raw)/(s·s')` where
+    /// `mean_raw = μ + s·m'` is the raw column mean over these rows.
+    pub fn standardize_l2(&mut self) -> Vec<(f64, f64)> {
+        let n = self.n as f64;
+        (0..self.p)
+            .map(|j| {
+                let r = self.col_ptr[j]..self.col_ptr[j + 1];
+                let nnz_j = r.len();
+                let sum: f64 = self.values[r.clone()].iter().sum();
+                let mean_raw = sum / n;
+                // Shifted two-pass centered norm (see
+                // `CscMatrix::standardize_stats` for the cancellation
+                // rationale).
+                let mut centered_sumsq = (n - nnz_j as f64) * mean_raw * mean_raw;
+                for k in r {
+                    let d = self.values[k] - mean_raw;
+                    centered_sumsq += d * d;
+                }
+                let (mu, s) = (self.offsets[j], self.scales[j]);
+                let m_prime = (mean_raw - mu) / s;
+                let nrm = centered_sumsq.sqrt() / s;
+                let s_prime = if nrm > 1e-12 { nrm } else { 1.0 };
+                self.offsets[j] = mean_raw;
+                self.scales[j] = s * s_prime;
+                (m_prime, s_prime)
+            })
+            .collect()
+    }
+
+    /// Materialize the implied standardized matrix (tests / diagnostics
+    /// only — counts as a dense materialization for the sparse-path
+    /// witness counter).
+    pub fn to_dense(&self) -> Matrix {
+        note_dense_materialization();
+        let mut m = Matrix::zeros(self.n, self.p);
+        for j in 0..self.p {
+            let (mu, s) = (self.offsets[j], self.scales[j]);
+            let dst = m.col_mut(j);
+            dst.fill(-mu / s);
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                dst[self.row_idx[k]] = (self.values[k] - mu) / s;
+            }
+        }
+        m
+    }
+
+    /// Drop all but the first `k` columns in place (grow-only buffers, for
+    /// the reduced-design cache).
+    pub(crate) fn truncate_cols(&mut self, k: usize) {
+        assert!(k <= self.p, "truncate_cols past the end");
+        let nnz = self.col_ptr[k];
+        self.col_ptr.truncate(k + 1);
+        self.row_idx.truncate(nnz);
+        self.values.truncate(nnz);
+        self.offsets.truncate(k);
+        self.scales.truncate(k);
+        self.p = k;
+    }
+
+    /// Append a copy of `src`'s column `j` (raw entries + its center).
+    pub(crate) fn push_col_from(&mut self, src: &CenteredSparse, j: usize) {
+        debug_assert_eq!(self.n, src.n);
+        let r = src.col_ptr[j]..src.col_ptr[j + 1];
+        self.row_idx.extend_from_slice(&src.row_idx[r.clone()]);
+        self.values.extend_from_slice(&src.values[r]);
+        self.offsets.push(src.offsets[j]);
+        self.scales.push(src.scales[j]);
+        self.col_ptr.push(self.values.len());
+        self.p += 1;
+    }
+}
+
+/// Kernel-variant display/cache-key name of the dense path — the single
+/// source of the string shared by [`DesignRef::kernel_name`],
+/// [`DesignOps::kernel_name`], and the model API's kernel resolution.
+pub const DENSE_KERNEL: &str = "dense";
+
+/// Kernel-variant name of the centered-implicit sparse path (see
+/// [`DENSE_KERNEL`]).
+pub const SPARSE_KERNEL: &str = "centered-sparse";
+
+/// Borrowed view of a design the solve path can run its kernels on — the
+/// kernel contract shared by every layer of the pathwise stack (loss
+/// gradients, FISTA/ATOS matvecs, GAP-safe screening, power-iteration
+/// Lipschitz estimates).
+///
+/// Two variants: [`DesignRef::Dense`] delegates to the exact same
+/// [`Matrix`] kernels as before (dense results stay bit-stable), and
+/// [`DesignRef::Sparse`] serves the centered-implicit kernels of
+/// [`CenteredSparse`]. `Copy`, so it threads through call stacks like the
+/// `&Matrix` it replaces.
+#[derive(Clone, Copy, Debug)]
+pub enum DesignRef<'a> {
+    Dense(&'a Matrix),
+    Sparse(&'a CenteredSparse),
+}
+
+impl<'a> DesignRef<'a> {
+    #[inline]
+    pub fn nrows(self) -> usize {
+        match self {
+            DesignRef::Dense(m) => m.nrows(),
+            DesignRef::Sparse(s) => s.nrows(),
+        }
+    }
+
+    #[inline]
+    pub fn ncols(self) -> usize {
+        match self {
+            DesignRef::Dense(m) => m.ncols(),
+            DesignRef::Sparse(s) => s.ncols(),
+        }
+    }
+
+    /// The dense matrix behind this view, if any (XLA artifact execution
+    /// and column gathers into dense buffers are dense-only).
+    #[inline]
+    pub fn as_dense(self) -> Option<&'a Matrix> {
+        match self {
+            DesignRef::Dense(m) => Some(m),
+            DesignRef::Sparse(_) => None,
+        }
+    }
+
+    /// Kernel variant name for reports and cache keys.
+    pub fn kernel_name(self) -> &'static str {
+        match self {
+            DesignRef::Dense(_) => DENSE_KERNEL,
+            DesignRef::Sparse(_) => SPARSE_KERNEL,
+        }
+    }
+
+    pub fn matvec_into(self, beta: &[f64], out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(m) => m.matvec_into(beta, out),
+            DesignRef::Sparse(s) => s.matvec_into(beta, out),
+        }
+    }
+
+    pub fn matvec(self, beta: &[f64]) -> Vec<f64> {
+        match self {
+            DesignRef::Dense(m) => m.matvec(beta),
+            DesignRef::Sparse(s) => s.matvec(beta),
+        }
+    }
+
+    pub fn t_matvec_into(self, r: &[f64], out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(m) => m.t_matvec_into(r, out),
+            DesignRef::Sparse(s) => s.t_matvec_into(r, out),
+        }
+    }
+
+    pub fn t_matvec(self, r: &[f64]) -> Vec<f64> {
+        match self {
+            DesignRef::Dense(m) => m.t_matvec(r),
+            DesignRef::Sparse(s) => s.t_matvec(r),
+        }
+    }
+
+    pub fn t_matvec_par(self, r: &[f64], threads: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.ncols()];
+        self.t_matvec_par_into(r, threads, &mut out);
+        out
+    }
+
+    pub fn t_matvec_par_into(self, r: &[f64], threads: usize, out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(m) => m.t_matvec_par_into(r, threads, out),
+            DesignRef::Sparse(s) => s.t_matvec_par_into(r, threads, out),
+        }
+    }
+
+    pub fn col_norms(self) -> Vec<f64> {
+        match self {
+            DesignRef::Dense(m) => m.col_norms(),
+            DesignRef::Sparse(s) => s.col_norms(),
+        }
+    }
+
+    /// Column means of the design the kernels evaluate (adaptive-weight
+    /// PCA centering).
+    pub fn col_means(self) -> Vec<f64> {
+        match self {
+            DesignRef::Dense(m) => {
+                let n = m.nrows() as f64;
+                (0..m.ncols()).map(|j| m.col(j).iter().sum::<f64>() / n).collect()
+            }
+            DesignRef::Sparse(s) => s.col_means(),
+        }
+    }
+
+    /// Power-iteration estimate of `‖X‖₂²` on whichever kernel variant
+    /// this view holds — the single implementation behind
+    /// [`Matrix::op_norm_sq_est`] and [`CenteredSparse::op_norm_sq_est`]
+    /// (for the dense arm this runs the exact historical algorithm through
+    /// the delegating kernels, so dense results are unchanged).
+    pub fn op_norm_sq_est(self, iters: usize, seed: u64) -> f64 {
+        let p = self.ncols();
+        let n = self.nrows();
+        let mut v: Vec<f64> = {
+            let mut rng = crate::rng::Rng::new(seed);
+            (0..p).map(|_| rng.gauss()).collect()
+        };
+        let nv = norm2(&v).max(1e-300);
+        v.iter_mut().for_each(|x| *x /= nv);
+        let mut lam;
+        let mut xb = vec![0.0; n];
+        for _ in 0..iters.max(1) {
+            self.matvec_into(&v, &mut xb);
+            let w = self.t_matvec(&xb);
+            lam = norm2(&w);
+            if lam <= 0.0 {
+                return 0.0;
+            }
+            v = w.iter().map(|x| x / lam).collect();
+        }
+        // One extra Rayleigh quotient for a tighter estimate.
+        self.matvec_into(&v, &mut xb);
+        dot(&xb, &xb) / dot(&v, &v)
+    }
+}
+
+impl<'a> From<&'a Matrix> for DesignRef<'a> {
+    fn from(m: &'a Matrix) -> Self {
+        DesignRef::Dense(m)
+    }
+}
+
+impl<'a> From<&'a CenteredSparse> for DesignRef<'a> {
+    fn from(s: &'a CenteredSparse) -> Self {
+        DesignRef::Sparse(s)
+    }
+}
+
+impl<'a> From<&'a DesignOps> for DesignRef<'a> {
+    fn from(d: &'a DesignOps) -> Self {
+        d.view()
+    }
+}
+
+/// Owned design in whichever kernel representation the solve should run:
+/// a dense standardized [`Matrix`] (today's exact code path) or a
+/// [`CenteredSparse`] centered-implicit design (sparse end-to-end). This
+/// is what a [`crate::data::Dataset`] carries; the compute layers see it
+/// through the borrowed [`DesignRef`] kernel contract.
+#[derive(Clone, Debug)]
+pub enum DesignOps {
+    Dense(Matrix),
+    Sparse(CenteredSparse),
+}
+
+impl DesignOps {
+    /// Borrowed kernel view.
+    #[inline]
+    pub fn view(&self) -> DesignRef<'_> {
+        match self {
+            DesignOps::Dense(m) => DesignRef::Dense(m),
+            DesignOps::Sparse(s) => DesignRef::Sparse(s),
+        }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.view().nrows()
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.view().ncols()
+    }
+
+    /// Kernel variant name ("dense" / "centered-sparse").
+    pub fn kernel_name(&self) -> &'static str {
+        self.view().kernel_name()
+    }
+
+    pub fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        self.view().matvec(beta)
+    }
+
+    pub fn matvec_into(&self, beta: &[f64], out: &mut [f64]) {
+        self.view().matvec_into(beta, out)
+    }
+
+    pub fn t_matvec(&self, r: &[f64]) -> Vec<f64> {
+        self.view().t_matvec(r)
+    }
+
+    pub fn t_matvec_par(&self, r: &[f64], threads: usize) -> Vec<f64> {
+        self.view().t_matvec_par(r, threads)
+    }
+
+    pub fn col_norms(&self) -> Vec<f64> {
+        self.view().col_norms()
+    }
+
+    pub fn op_norm_sq_est(&self, iters: usize, seed: u64) -> f64 {
+        self.view().op_norm_sq_est(iters, seed)
+    }
+
+    /// The dense matrix inside. Panics on a centered-sparse design — for
+    /// dense-only construction/inspection paths (data generators,
+    /// interaction expansion, tests); the solve path never calls it.
+    pub fn dense(&self) -> &Matrix {
+        match self {
+            DesignOps::Dense(m) => m,
+            DesignOps::Sparse(_) => {
+                panic!("dense() called on a centered-sparse design")
+            }
+        }
+    }
+
+    /// Mutable access to the dense matrix inside (panics when sparse).
+    pub fn dense_mut(&mut self) -> &mut Matrix {
+        match self {
+            DesignOps::Dense(m) => m,
+            DesignOps::Sparse(_) => {
+                panic!("dense_mut() called on a centered-sparse design")
+            }
+        }
+    }
+
+    /// ℓ₂-standardize in place (dense: [`Matrix::standardize_l2`]; sparse:
+    /// affine recomposition of the offsets/scales), returning the
+    /// per-column `(mean, scale)` on the *current* implied scale.
+    pub fn standardize_l2(&mut self) -> Vec<(f64, f64)> {
+        match self {
+            DesignOps::Dense(m) => m.standardize_l2(),
+            DesignOps::Sparse(s) => s.standardize_l2(),
+        }
+    }
+
+    /// Row subset with the variant preserved (CV folds stay sparse on the
+    /// sparse path).
+    pub fn gather_rows(&self, rows: &[usize]) -> DesignOps {
+        match self {
+            DesignOps::Dense(m) => DesignOps::Dense(m.gather_rows(rows)),
+            DesignOps::Sparse(s) => DesignOps::Sparse(s.gather_rows(rows)),
+        }
+    }
+}
+
+impl From<Matrix> for DesignOps {
+    fn from(m: Matrix) -> Self {
+        DesignOps::Dense(m)
+    }
+}
+
+impl From<CenteredSparse> for DesignOps {
+    fn from(s: CenteredSparse) -> Self {
+        DesignOps::Sparse(s)
+    }
+}
+
 /// Incremental cache of a screening-reduced design `X[:, idx]`.
 ///
 /// The pathwise coordinator re-gathers the optimization set every λ step
@@ -505,19 +1117,26 @@ impl CscMatrix {
 /// identical sets cost nothing, append-only growth copies only the new
 /// columns, and even a full rebuild reuses the allocation.
 ///
-/// The source matrix is identified by pointer + length + a strided content
-/// fingerprint, so reusing one cache across datasets (CV folds, bench
-/// repeats) detects a swapped design even when the allocator hands the new
-/// matrix the old one's address. Contract: source matrices are immutable
-/// between updates (true everywhere in this crate — designs never change
-/// after construction); an *in-place* mutation of the same allocation can
-/// dodge the 64 sampled positions, so callers mutating a design must call
-/// [`ReducedDesign::invalidate`] themselves.
+/// The source design is identified by variant + pointer + length + a
+/// strided content fingerprint, so reusing one cache across datasets (CV
+/// folds, bench repeats) detects a swapped design even when the allocator
+/// hands the new matrix the old one's address. Contract: source designs
+/// are immutable between updates (true everywhere in this crate — designs
+/// never change after construction); an *in-place* mutation of the same
+/// allocation can dodge the 64 sampled positions, so callers mutating a
+/// design must call [`ReducedDesign::invalidate`] themselves.
+///
+/// Both kernel variants are served: a dense source gathers into a dense
+/// grow-only [`Matrix`] exactly as before, and a [`CenteredSparse`] source
+/// gathers into a reduced *centered-sparse* design (raw column slices plus
+/// their `(offset, scale)` pairs) with the same prefix-diff reuse — the
+/// sparse solve path never densifies its reduced problems.
 #[derive(Clone, Debug)]
 pub struct ReducedDesign {
     idx: Vec<usize>,
     mat: Matrix,
-    key: Option<(usize, usize, u64)>,
+    smat: CenteredSparse,
+    key: Option<(bool, usize, usize, u64)>,
     /// Updates answered with zero copying (identical index set).
     pub hits: usize,
     /// Columns kept in place across updates (common sorted prefix).
@@ -531,6 +1150,7 @@ impl ReducedDesign {
         ReducedDesign {
             idx: Vec::new(),
             mat: Matrix::zeros(0, 0),
+            smat: CenteredSparse::empty(0),
             key: None,
             hits: 0,
             kept_cols: 0,
@@ -539,40 +1159,93 @@ impl ReducedDesign {
     }
 
     /// Point the cache at `x[:, idx]` (sorted indices), reusing any columns
-    /// already in place, and return the reduced matrix.
-    pub fn update(&mut self, x: &Matrix, idx: &[usize]) -> &Matrix {
-        let key = (
-            x.as_slice().as_ptr() as usize,
-            x.as_slice().len(),
-            fingerprint(x.as_slice()),
-        );
-        if self.key != Some(key) {
-            self.key = Some(key);
-            self.idx.clear();
-            if self.mat.nrows() == x.nrows() {
-                self.mat.truncate_cols(0);
-            } else {
-                self.mat = Matrix::zeros(x.nrows(), 0);
+    /// already in place, and return the reduced design in the source's
+    /// kernel variant.
+    pub fn update<'s, 'x>(
+        &'s mut self,
+        src: impl Into<DesignRef<'x>>,
+        idx: &[usize],
+    ) -> DesignRef<'s> {
+        match src.into() {
+            DesignRef::Dense(x) => {
+                let key = (
+                    false,
+                    x.as_slice().as_ptr() as usize,
+                    x.as_slice().len(),
+                    fingerprint(x.as_slice()),
+                );
+                if self.key != Some(key) {
+                    self.key = Some(key);
+                    self.idx.clear();
+                    // Drop any columns gathered from a previous sparse
+                    // source so the cross-variant accessors never serve a
+                    // stale design.
+                    self.smat.truncate_cols(0);
+                    if self.mat.nrows() == x.nrows() {
+                        self.mat.truncate_cols(0);
+                    } else {
+                        self.mat = Matrix::zeros(x.nrows(), 0);
+                    }
+                }
+                if self.idx == idx {
+                    self.hits += 1;
+                    return DesignRef::Dense(&self.mat);
+                }
+                let keep =
+                    self.idx.iter().zip(idx.iter()).take_while(|(a, b)| a == b).count();
+                self.mat.truncate_cols(keep);
+                self.idx.truncate(keep);
+                self.mat.reserve_cols(idx.len() - keep);
+                for &j in &idx[keep..] {
+                    self.mat.push_col(x.col(j));
+                }
+                self.idx.extend_from_slice(&idx[keep..]);
+                self.kept_cols += keep;
+                self.copied_cols += idx.len() - keep;
+                DesignRef::Dense(&self.mat)
+            }
+            DesignRef::Sparse(s) => {
+                let key = (
+                    true,
+                    s.values.as_ptr() as usize,
+                    s.values.len(),
+                    fingerprint(&s.values)
+                        ^ fingerprint(&s.offsets).rotate_left(17)
+                        ^ fingerprint(&s.scales).rotate_left(31),
+                );
+                if self.key != Some(key) {
+                    self.key = Some(key);
+                    self.idx.clear();
+                    // Symmetric to the dense branch: a stale dense gather
+                    // from a previous source must not survive.
+                    self.mat.truncate_cols(0);
+                    if self.smat.nrows() == s.nrows() {
+                        self.smat.truncate_cols(0);
+                    } else {
+                        self.smat = CenteredSparse::empty(s.nrows());
+                    }
+                }
+                if self.idx == idx {
+                    self.hits += 1;
+                    return DesignRef::Sparse(&self.smat);
+                }
+                let keep =
+                    self.idx.iter().zip(idx.iter()).take_while(|(a, b)| a == b).count();
+                self.smat.truncate_cols(keep);
+                self.idx.truncate(keep);
+                for &j in &idx[keep..] {
+                    self.smat.push_col_from(s, j);
+                }
+                self.idx.extend_from_slice(&idx[keep..]);
+                self.kept_cols += keep;
+                self.copied_cols += idx.len() - keep;
+                DesignRef::Sparse(&self.smat)
             }
         }
-        if self.idx == idx {
-            self.hits += 1;
-            return &self.mat;
-        }
-        let keep = self.idx.iter().zip(idx.iter()).take_while(|(a, b)| a == b).count();
-        self.mat.truncate_cols(keep);
-        self.idx.truncate(keep);
-        self.mat.reserve_cols(idx.len() - keep);
-        for &j in &idx[keep..] {
-            self.mat.push_col(x.col(j));
-        }
-        self.idx.extend_from_slice(&idx[keep..]);
-        self.kept_cols += keep;
-        self.copied_cols += idx.len() - keep;
-        &self.mat
     }
 
-    /// The cached reduced matrix (columns of the last `update`).
+    /// The cached dense reduced matrix (columns of the last dense
+    /// `update`; empty if the last source was sparse).
     pub fn matrix(&self) -> &Matrix {
         &self.mat
     }
@@ -582,11 +1255,12 @@ impl ReducedDesign {
         &self.idx
     }
 
-    /// Force the next update to rebuild from scratch (buffer retained).
+    /// Force the next update to rebuild from scratch (buffers retained).
     pub fn invalidate(&mut self) {
         self.idx.clear();
         self.key = None;
         self.mat.truncate_cols(0);
+        self.smat.truncate_cols(0);
     }
 }
 
@@ -778,7 +1452,7 @@ mod tests {
             vec![0, 3, 6],       // no shared prefix → rebuild
             vec![0, 3, 6, 9, 12], // append-only growth
         ] {
-            let got = rd.update(&x, &idx).clone();
+            let got = rd.update(&x, &idx).as_dense().unwrap().clone();
             assert_eq!(got, x.gather_columns(&idx), "idx {idx:?}");
             assert_eq!(rd.indices(), idx.as_slice());
         }
@@ -793,7 +1467,7 @@ mod tests {
         let b = Matrix::from_fn(9, 6, |_, _| rng.gauss());
         let mut rd = ReducedDesign::new();
         rd.update(&a, &[0, 2, 4]);
-        let got = rd.update(&b, &[0, 2, 4]).clone();
+        let got = rd.update(&b, &[0, 2, 4]).as_dense().unwrap().clone();
         assert_eq!(got, b.gather_columns(&[0, 2, 4]), "stale columns served");
     }
 
@@ -935,6 +1609,125 @@ mod tests {
         let csc = CscMatrix::from_dense(&m, 0.0);
         assert_eq!(csc.nnz(), 2, "NaN entry must be stored, not dropped");
         assert!(csc.to_dense().get(1, 0).is_nan());
+    }
+
+    #[test]
+    fn centered_sparse_kernels_match_dense_standardized() {
+        let (_, csc) = sparse_fixture();
+        let cs = CenteredSparse::from_csc(&csc);
+        let (dense_std, stats) = csc.to_standardized_dense();
+        assert_eq!(cs.centers(), stats);
+        let mut rng = crate::rng::Rng::new(21);
+        let beta = rng.gauss_vec(7);
+        let r = rng.gauss_vec(13);
+        for (a, b) in cs.matvec(&beta).iter().zip(&dense_std.matvec(&beta)) {
+            assert!((a - b).abs() < 1e-12, "matvec {a} vs {b}");
+        }
+        for (a, b) in cs.t_matvec(&r).iter().zip(&dense_std.t_matvec(&r)) {
+            assert!((a - b).abs() < 1e-12, "t_matvec {a} vs {b}");
+        }
+        let mut par = vec![9.0; 7];
+        cs.t_matvec_par_into(&r, 3, &mut par);
+        for (a, b) in par.iter().zip(&cs.t_matvec(&r)) {
+            assert!((a - b).abs() < 1e-14, "par t_matvec");
+        }
+        for (a, b) in cs.col_norms().iter().zip(&dense_std.col_norms()) {
+            assert!((a - b).abs() < 1e-12, "col norm {a} vs {b}");
+        }
+        for m in cs.col_means() {
+            assert!(m.abs() < 1e-12, "implied mean {m}");
+        }
+        let (est_s, est_d) = (cs.op_norm_sq_est(60, 7), dense_std.op_norm_sq_est(60, 7));
+        assert!((est_s - est_d).abs() < 1e-6 * (1.0 + est_d), "{est_s} vs {est_d}");
+    }
+
+    #[test]
+    fn centered_sparse_gather_rows_matches_dense() {
+        let (_, csc) = sparse_fixture();
+        let cs = CenteredSparse::from_csc(&csc);
+        let dense_std = cs.to_dense();
+        for rows in [vec![0usize, 3, 7, 12], vec![5, 1, 1, 9]] {
+            let got = cs.gather_rows(&rows).to_dense();
+            let want = dense_std.gather_rows(&rows);
+            for j in 0..7 {
+                for i in 0..rows.len() {
+                    assert!(
+                        (got.get(i, j) - want.get(i, j)).abs() < 1e-12,
+                        "rows {rows:?}, entry ({i}, {j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn centered_sparse_restandardize_matches_dense() {
+        // Gather fold rows, then re-standardize: the sparse affine
+        // recomposition must track the dense two-pass standardization of
+        // the same implied rows (the CV fold-plan contract).
+        let (_, csc) = sparse_fixture();
+        let cs = CenteredSparse::from_csc(&csc);
+        let rows: Vec<usize> = (0..13).filter(|i| i % 3 != 0).collect();
+        let mut sub_sparse = cs.gather_rows(&rows);
+        let mut sub_dense = cs.to_dense().gather_rows(&rows);
+        let got_centers = sub_sparse.standardize_l2();
+        let want_centers = sub_dense.standardize_l2();
+        for j in 0..7 {
+            let ((gm, gs), (wm, ws)) = (got_centers[j], want_centers[j]);
+            assert!((gm - wm).abs() < 1e-10, "col {j} mean {gm} vs {wm}");
+            assert!((gs - ws).abs() < 1e-10, "col {j} scale {gs} vs {ws}");
+        }
+        let got = sub_sparse.to_dense();
+        for j in 0..7 {
+            for i in 0..rows.len() {
+                assert!(
+                    (got.get(i, j) - sub_dense.get(i, j)).abs() < 1e-10,
+                    "entry ({i}, {j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduced_design_serves_sparse_sources() {
+        let (_, csc) = sparse_fixture();
+        let cs = CenteredSparse::from_csc(&csc);
+        let dense_std = cs.to_dense();
+        let mut rd = ReducedDesign::new();
+        for idx in [
+            vec![0usize, 2, 4],
+            vec![0, 2, 5, 6], // shares the [0, 2] prefix
+            vec![0, 2, 5, 6], // identical → cache hit
+            vec![1, 3],       // no shared prefix → rebuild
+        ] {
+            let got = match rd.update(&cs, &idx) {
+                DesignRef::Sparse(s) => s.to_dense(),
+                DesignRef::Dense(_) => panic!("sparse source produced a dense gather"),
+            };
+            let want = dense_std.gather_columns(&idx);
+            assert_eq!(got, want, "idx {idx:?}");
+            assert_eq!(rd.indices(), idx.as_slice());
+        }
+        assert_eq!(rd.hits, 1);
+        assert!(rd.kept_cols >= 2, "sparse prefix reuse never happened");
+        // Switching to a dense source invalidates and serves dense.
+        let got = rd.update(&dense_std, &[1, 3]).as_dense().unwrap().clone();
+        assert_eq!(got, dense_std.gather_columns(&[1, 3]));
+    }
+
+    #[test]
+    fn dense_materialization_counter_ticks_on_densify_only() {
+        let (_, csc) = sparse_fixture();
+        let cs = CenteredSparse::from_csc(&csc);
+        let before = dense_materializations();
+        let mut out = vec![0.0; 13];
+        cs.matvec_into(&[0.1; 7], &mut out);
+        cs.t_matvec(&[0.1; 13]);
+        cs.col_norms();
+        assert_eq!(dense_materializations(), before, "kernels must not densify");
+        let _ = cs.to_dense();
+        let _ = csc.to_standardized_dense();
+        assert_eq!(dense_materializations(), before + 2);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! intermediate, full gradient `∇f`, and a Lipschitz bound on `∇f` used to
 //! seed the solvers' backtracking line search.
 
-use crate::linalg::Matrix;
+use crate::linalg::DesignRef;
 
 /// Which loss to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,16 +24,20 @@ impl LossKind {
     }
 }
 
-/// A smooth loss bound to a dataset.
+/// A smooth loss bound to a dataset. The design is held through the
+/// [`DesignRef`] kernel contract, so the same loss (and everything above
+/// it — solvers, screening, the pathwise coordinator) runs on a dense
+/// standardized matrix or a centered-implicit sparse design unchanged.
 #[derive(Clone)]
 pub struct Loss<'a> {
     pub kind: LossKind,
-    pub x: &'a Matrix,
+    pub x: DesignRef<'a>,
     pub y: &'a [f64],
 }
 
 impl<'a> Loss<'a> {
-    pub fn new(kind: LossKind, x: &'a Matrix, y: &'a [f64]) -> Self {
+    pub fn new(kind: LossKind, x: impl Into<DesignRef<'a>>, y: &'a [f64]) -> Self {
+        let x = x.into();
         assert_eq!(x.nrows(), y.len());
         Loss { kind, x, y }
     }
@@ -160,6 +164,7 @@ pub fn fd_gradient(loss: &Loss, beta: &[f64], h: f64) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::rng::Rng;
 
     fn problem(kind: LossKind, seed: u64) -> (Matrix, Vec<f64>) {

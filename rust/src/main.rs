@@ -13,7 +13,8 @@
 use dfr::cli::{parse_f64_list, parse_gamma_list, parse_rule, usage, Args, OptSpec};
 use dfr::data::real::{RealDatasetKind, SurrogateConfig};
 use dfr::data::{Dataset, Response, SyntheticConfig};
-use dfr::model_api::{Design, SglFitter, SglModel};
+use dfr::linalg::CscMatrix;
+use dfr::model_api::{sparse_density_threshold, Design, SglFitter, SglModel, SparseMode};
 use dfr::path::{compare_with_no_screen, PathConfig, PathRunner};
 use dfr::report;
 use dfr::runtime::XlaEngine;
@@ -31,6 +32,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "path-end", help: "λ_l/λ₁ ratio", default: Some("0.1"), takes_value: true },
         OptSpec { name: "gamma", help: "aSGL adaptive weight exponent γ₁=γ₂", default: None, takes_value: true },
         OptSpec { name: "solver", help: "fista | atos", default: Some("fista"), takes_value: true },
+        OptSpec { name: "sparse", help: "CSC solve kernel: auto (density ≤ DFR_SPARSE_DENSITY, default 0.25) | on | off", default: Some("auto"), takes_value: true },
+        OptSpec { name: "csc", help: "fit/cv: ingest the design as CSC sparse (exact zeros become implicit), letting --sparse route the solve kernel", default: None, takes_value: false },
         OptSpec { name: "folds", help: "cv: number of folds", default: Some("10"), takes_value: true },
         OptSpec { name: "alphas", help: "cv: comma-separated α grid (overrides --alpha)", default: None, takes_value: true },
         OptSpec { name: "gammas", help: "cv: comma-separated γ grid; entries are `none`, `g`, or `g1:g2`", default: None, takes_value: true },
@@ -132,17 +135,39 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             } else {
                 // Native fits go through the serving API: borrowed
                 // zero-copy design straight into the fitter.
+                let sparse = SparseMode::parse(&args.str_or("sparse", "auto"))
+                    .map_err(anyhow::Error::msg)?;
                 let model = SglModel {
                     path: cfg,
                     rule,
                     seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                    sparse,
                     ..SglModel::default()
                 };
                 let mut fitter = model.fitter();
                 let sizes = ds.groups.sizes();
-                let fit =
-                    fitter.fit_path(&Design::Matrix(&ds.x), &ds.y, &sizes, ds.response)?;
+                // `--csc` routes the design through the sparse ingest so
+                // `--sparse` / DFR_SPARSE_DENSITY actually pick the solve
+                // kernel; without it dense inputs always solve dense.
+                let csc = args
+                    .flag("csc")
+                    .then(|| CscMatrix::from_dense(ds.x.dense(), 0.0));
+                let fit = match &csc {
+                    Some(c) => fitter.fit_path(&Design::Csc(c), &ds.y, &sizes, ds.response)?,
+                    None => fitter
+                        .fit_path(&Design::Matrix(ds.x.dense()), &ds.y, &sizes, ds.response)?,
+                };
                 report_fit(&ds, rule.name(), fit, args)?;
+                let density = csc
+                    .as_ref()
+                    .map(|c| format!(", csc density {:.4}", c.density()))
+                    .unwrap_or_default();
+                println!(
+                    "[kernel] {} (sparse mode {:?}, density threshold {}{density})",
+                    fitter.kernel_variant().unwrap_or("dense"),
+                    sparse,
+                    sparse_density_threshold(),
+                );
             }
             Ok(())
         }
@@ -179,6 +204,8 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 cv_folds: args.usize_or("folds", 10).map_err(anyhow::Error::msg)?,
                 one_se_rule: args.flag("one-se"),
                 seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                sparse: SparseMode::parse(&args.str_or("sparse", "auto"))
+                    .map_err(anyhow::Error::msg)?,
             };
             let alphas = match args.options.get("alphas") {
                 Some(s) => parse_f64_list(s).map_err(anyhow::Error::msg)?,
@@ -192,14 +219,22 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             // CV engine, fed the dataset as a borrowed zero-copy design.
             let mut fitter = SglFitter::new(model.clone());
             let sizes = ds.groups.sizes();
-            let (cells, best) = fitter.cv_grid(
-                &Design::Matrix(&ds.x),
-                &ds.y,
-                &sizes,
-                ds.response,
-                &alphas,
-                &gammas,
-            )?;
+            // As in `fit`: --csc routes the design through the sparse
+            // ingest so --sparse can pick the solve kernel for CV too.
+            let csc = args
+                .flag("csc")
+                .then(|| CscMatrix::from_dense(ds.x.dense(), 0.0));
+            let design = match &csc {
+                Some(c) => Design::Csc(c),
+                None => Design::Matrix(ds.x.dense()),
+            };
+            let (cells, best) =
+                fitter.cv_grid(&design, &ds.y, &sizes, ds.response, &alphas, &gammas)?;
+            println!(
+                "[kernel] {} (sparse mode {:?})",
+                fitter.kernel_variant().unwrap_or("dense"),
+                model.sparse,
+            );
             let engine = fitter.cv_engine();
             println!(
                 "cv({} folds, {} grid cell{}, {} thread{}):",

@@ -20,7 +20,11 @@
 //! ingest — column-major is a single `memcpy` into the standardizer),
 //! borrowed row vectors, an owned [`Matrix`], or a CSC sparse matrix
 //! ([`crate::linalg::CscMatrix`]) whose standardization is computed from
-//! the nonzeros alone. Standardization is handled internally and
+//! the nonzeros alone. A CSC design below the density threshold
+//! ([`sparse_density_threshold`], gated by [`SparseMode`]) **solves
+//! end-to-end sparse** on the centered-implicit kernels
+//! ([`crate::linalg::CenteredSparse`]) — no `n × p` dense standardized
+//! matrix is ever allocated. Standardization is handled internally and
 //! coefficients are mapped back to the original feature scale (including
 //! the intercept); λ is selected by k-fold CV with an optional
 //! one-standard-error rule; predictions support both response families
@@ -33,12 +37,56 @@
 
 use crate::cv::{CvCell, CvConfig, CvEngine};
 use crate::data::{Dataset, Response};
-use crate::linalg::{self, CscMatrix, Matrix};
+use crate::linalg::{self, CenteredSparse, CscMatrix, DesignOps, Matrix};
 use crate::loss::sigmoid;
 use crate::parallel::WorkspacePool;
 use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
 use crate::screen::RuleKind;
 use std::sync::Arc;
+
+/// How a CSC [`Design`] chooses its solve kernel.
+///
+/// ℓ₂ standardization destroys sparsity (centering fills every implicit
+/// zero), so the sparse path stores the raw nonzeros with per-column
+/// `(mean, scale)` and evaluates the standardized design implicitly
+/// ([`CenteredSparse`]). The implicit kernels cost O(nnz + n) instead of
+/// O(n·p), but carry a rank-one correction per pass — below the density
+/// threshold they win, above it the dense kernels do.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SparseMode {
+    /// Solve sparse iff the CSC density is at most the threshold
+    /// (`DFR_SPARSE_DENSITY`, default 0.25). The default.
+    #[default]
+    Auto,
+    /// Always solve CSC inputs through the centered-implicit kernels.
+    On,
+    /// Always densify CSC inputs (the pre-sparse-path behavior).
+    Off,
+}
+
+impl SparseMode {
+    /// Parse a CLI-style mode name (`auto` | `on` | `off`).
+    pub fn parse(s: &str) -> Result<SparseMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(SparseMode::Auto),
+            "on" | "true" | "yes" => Ok(SparseMode::On),
+            "off" | "false" | "no" => Ok(SparseMode::Off),
+            other => Err(format!("unknown sparse mode `{other}` (auto|on|off)")),
+        }
+    }
+}
+
+/// Density threshold for [`SparseMode::Auto`]: CSC designs with
+/// `nnz/(n·p)` at or below this solve through the centered-implicit
+/// kernels. Overridable via the `DFR_SPARSE_DENSITY` environment variable
+/// (a fraction in `[0, 1]`; invalid values fall back to the default 0.25).
+pub fn sparse_density_threshold() -> f64 {
+    std::env::var("DFR_SPARSE_DENSITY")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|t| t.is_finite() && (0.0..=1.0).contains(t))
+        .unwrap_or(0.25)
+}
 
 /// Model specification.
 #[derive(Clone, Debug)]
@@ -54,6 +102,8 @@ pub struct SglModel {
     pub one_se_rule: bool,
     /// Seed for the CV fold split.
     pub seed: u64,
+    /// Kernel selection for CSC designs (see [`SparseMode`]).
+    pub sparse: SparseMode,
 }
 
 impl Default for SglModel {
@@ -64,6 +114,7 @@ impl Default for SglModel {
             cv_folds: 10,
             one_se_rule: false,
             seed: 42,
+            sparse: SparseMode::Auto,
         }
     }
 }
@@ -237,6 +288,54 @@ impl<'a> Design<'a> {
             Design::Csc(s) => s.to_standardized_dense(),
         })
     }
+
+    /// Does this design solve through the centered-implicit sparse
+    /// kernels under `mode`? The single (type-checked) routing decision
+    /// behind [`Design::resolved_kernel`] and
+    /// [`Design::standardized_ops`].
+    fn resolves_sparse(&self, mode: SparseMode) -> bool {
+        match self {
+            Design::Csc(s) => match mode {
+                SparseMode::On => true,
+                SparseMode::Off => false,
+                SparseMode::Auto => s.density() <= sparse_density_threshold(),
+            },
+            _ => false,
+        }
+    }
+
+    /// The kernel variant a fit with this design would run under `mode`
+    /// ([`linalg::DENSE_KERNEL`] or [`linalg::SPARSE_KERNEL`]) — cheap
+    /// (no standardization), used for cache keys and fit reports.
+    pub fn resolved_kernel(&self, mode: SparseMode) -> &'static str {
+        if self.resolves_sparse(mode) {
+            linalg::SPARSE_KERNEL
+        } else {
+            linalg::DENSE_KERNEL
+        }
+    }
+
+    /// Standardize into the kernel representation `mode` resolves to: a
+    /// CSC design below the density threshold (or forced `On`) becomes a
+    /// [`CenteredSparse`] — no `n × p` dense allocation anywhere —
+    /// while every other input takes the exact dense path of
+    /// [`Design::standardized`]. Returns the per-column `(mean, scale)`
+    /// alongside, as that method does.
+    pub fn standardized_ops(
+        &self,
+        mode: SparseMode,
+    ) -> anyhow::Result<(DesignOps, Vec<(f64, f64)>)> {
+        if let Design::Csc(s) = self {
+            if self.resolves_sparse(mode) {
+                anyhow::ensure!(self.n() > 0 && self.p() > 0, "empty design");
+                let cs = CenteredSparse::from_csc(s);
+                let centers = cs.centers();
+                return Ok((DesignOps::Sparse(cs), centers));
+            }
+        }
+        let (m, centers) = self.standardized()?;
+        Ok((DesignOps::Dense(m), centers))
+    }
 }
 
 impl<'a> From<&'a Matrix> for Design<'a> {
@@ -382,6 +481,10 @@ impl FittedSgl {
 #[derive(Clone, Debug, PartialEq)]
 struct DesignKey {
     layout: &'static str,
+    /// Resolved kernel variant ("dense" / "centered-sparse"): a changed
+    /// sparse mode or density threshold re-ingests rather than serving a
+    /// dataset prepared for the other kernel.
+    kernel: &'static str,
     n: usize,
     p: usize,
     x_fp: u64,
@@ -508,6 +611,13 @@ impl SglFitter {
     /// CV-cell cache hits (`fit_cv` calls that skipped the fold fits).
     pub fn cv_hits(&self) -> usize {
         self.cv_hits
+    }
+
+    /// Kernel variant of the currently prepared dataset ("dense" /
+    /// "centered-sparse"); `None` before the first fit. Fit reports echo
+    /// this so sparse-path routing is observable.
+    pub fn kernel_variant(&self) -> Option<&'static str> {
+        self.prepared.as_ref().map(|p| p.key.kernel)
     }
 
     /// Drop every cache (prepared dataset, path, CV cell). The content
@@ -690,6 +800,7 @@ impl SglFitter {
         );
         let key = DesignKey {
             layout: design.layout_name(),
+            kernel: design.resolved_kernel(self.model.sparse),
             n,
             p,
             x_fp: design.fingerprint(),
@@ -702,7 +813,7 @@ impl SglFitter {
             return Ok(());
         }
         self.prepared_misses += 1;
-        let (x, centers) = design.standardized()?;
+        let (x, centers) = design.standardized_ops(self.model.sparse)?;
         let mut yv = y.to_vec();
         let y_mean = if response == Response::Linear {
             let m = yv.iter().sum::<f64>() / n as f64;
@@ -1118,6 +1229,27 @@ mod tests {
             for (a, b) in out.iter().zip(&want) {
                 assert!((a - b).abs() < 1e-12, "{} drifted", d.layout_name());
             }
+        }
+    }
+
+    #[test]
+    fn sparse_mode_parses_and_defaults() {
+        assert_eq!(SparseMode::parse("auto").unwrap(), SparseMode::Auto);
+        assert_eq!(SparseMode::parse("ON").unwrap(), SparseMode::On);
+        assert_eq!(SparseMode::parse("off").unwrap(), SparseMode::Off);
+        assert!(SparseMode::parse("sometimes").is_err());
+        assert_eq!(SglModel::default().sparse, SparseMode::Auto);
+        // Without an env override the threshold is the documented default.
+        if std::env::var("DFR_SPARSE_DENSITY").is_err() {
+            assert!((sparse_density_threshold() - 0.25).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn dense_designs_always_resolve_dense() {
+        let (rows, _, _) = raw_problem(11, 10, 4);
+        for mode in [SparseMode::Auto, SparseMode::On, SparseMode::Off] {
+            assert_eq!(Design::rows(&rows).resolved_kernel(mode), "dense");
         }
     }
 

@@ -35,7 +35,7 @@ pub mod lambda;
 pub use lambda::{lambda_max, log_linear_path};
 
 use crate::data::Dataset;
-use crate::linalg::{Matrix, ReducedDesign};
+use crate::linalg::{DesignRef, ReducedDesign};
 use crate::loss::{Loss, LossKind};
 use crate::metrics::{PathMetrics, PointMetrics};
 use crate::penalty::{AdaptiveWeights, Penalty, RestrictedPenalty};
@@ -72,13 +72,14 @@ pub trait Engine {
         out.copy_from_slice(&g);
     }
 
-    /// Solve the reduced problem (columns already gathered) using the
+    /// Solve the reduced problem (columns already gathered — dense or
+    /// centered-sparse, per the source design's kernel variant) using the
     /// caller's solver workspace.
     #[allow(clippy::too_many_arguments)]
     fn solve_reduced(
         &self,
         kind: LossKind,
-        x_red: &Matrix,
+        x_red: DesignRef<'_>,
         y: &[f64],
         pen: &RestrictedPenalty,
         lam: f64,
@@ -416,7 +417,7 @@ impl<'a> PathRunner<'a> {
                 beta_prev,
                 lambda_prev: lam_prev,
                 lambda_next: lam_next,
-                x: &ds.x,
+                x: (&ds.x).into(),
                 y: &ds.y,
                 response: ds.response,
             };

@@ -14,7 +14,7 @@
 //! zero loadings.
 
 use crate::groups::Groups;
-use crate::linalg::{norm2, Matrix};
+use crate::linalg::{norm2, DesignRef};
 
 /// Cap applied to both weight families; matches the common practice of
 /// guarding adaptive lasso weights against zero pilot coefficients.
@@ -33,7 +33,14 @@ impl AdaptiveWeights {
     /// Compute weights from the design via its first PCA loading.
     ///
     /// `X` is centered internally (PCA convention) but not modified.
-    pub fn from_design(x: &Matrix, groups: &Groups, gamma1: f64, gamma2: f64) -> Self {
+    /// Generic over the kernel view, so sparse designs derive their
+    /// weights without densifying.
+    pub fn from_design<'a>(
+        x: impl Into<DesignRef<'a>>,
+        groups: &Groups,
+        gamma1: f64,
+        gamma2: f64,
+    ) -> Self {
         let q1 = first_pc_loading(x, 100, 0xADA97);
         let v: Vec<f64> = q1
             .iter()
@@ -58,12 +65,15 @@ impl AdaptiveWeights {
 /// iteration on `X_cᵀX_c`. Deterministic (seeded start), normalized, with a
 /// sign convention (largest-magnitude entry positive) so results are
 /// reproducible across runs.
-pub fn first_pc_loading(x: &Matrix, iters: usize, seed: u64) -> Vec<f64> {
+pub fn first_pc_loading<'a>(
+    x: impl Into<DesignRef<'a>>,
+    iters: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let x = x.into();
     let n = x.nrows();
     let p = x.ncols();
-    let col_means: Vec<f64> = (0..p)
-        .map(|j| x.col(j).iter().sum::<f64>() / n as f64)
-        .collect();
+    let col_means: Vec<f64> = x.col_means();
     let mut rng = crate::rng::Rng::new(seed);
     let mut v: Vec<f64> = rng.gauss_vec(p);
     let nv = norm2(&v).max(1e-300);
@@ -105,6 +115,7 @@ pub fn first_pc_loading(x: &Matrix, iters: usize, seed: u64) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::rng::Rng;
 
     #[test]

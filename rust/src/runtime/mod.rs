@@ -32,7 +32,7 @@
 //! public API whose every artifact call errors, so all call sites fall
 //! through to the native engine and keep a single code path.
 
-use crate::linalg::Matrix;
+use crate::linalg::{DesignRef, Matrix};
 use crate::loss::{Loss, LossKind};
 use crate::path::Engine;
 use crate::penalty::RestrictedPenalty;
@@ -191,15 +191,19 @@ impl XlaEngine {
     }
 
     /// Full gradient through the `grad_{sq,log}_{n}x{p}` artifact. Errors
-    /// if the artifact does not exist (the [`Engine`] impl guards this and
-    /// falls back to native).
-    pub fn gradient_via_xla(
+    /// if the artifact does not exist or the design is not dense (the
+    /// [`Engine`] impl guards both and falls back to native).
+    pub fn gradient_via_xla<'a>(
         &self,
         kind: LossKind,
-        x: &Matrix,
+        x: impl Into<DesignRef<'a>>,
         y: &[f64],
         beta: &[f64],
     ) -> anyhow::Result<Vec<f64>> {
+        let x = x
+            .into()
+            .as_dense()
+            .ok_or_else(|| anyhow::anyhow!("sparse designs are served by the native kernels"))?;
         let (n, p) = (x.nrows(), x.ncols());
         let stem = Self::gradient_stem(kind, n, p);
         let exe = self.executable(&stem)?;
@@ -377,10 +381,10 @@ impl XlaEngine {
     }
 
     /// Stub: always errors (compiled without the `xla` feature).
-    pub fn gradient_via_xla(
+    pub fn gradient_via_xla<'a>(
         &self,
         _kind: LossKind,
-        _x: &Matrix,
+        _x: impl Into<DesignRef<'a>>,
         _y: &[f64],
         _beta: &[f64],
     ) -> anyhow::Result<Vec<f64>> {
@@ -433,7 +437,7 @@ impl Engine for XlaEngine {
     fn solve_reduced(
         &self,
         kind: LossKind,
-        x_red: &Matrix,
+        x_red: DesignRef<'_>,
         y: &[f64],
         pen: &RestrictedPenalty,
         lam: f64,
@@ -441,13 +445,19 @@ impl Engine for XlaEngine {
         cfg: &SolverConfig,
         ws: &mut SolverWorkspace,
     ) -> SolveResult {
+        // AOT FISTA chunks only exist for dense squared-loss designs;
+        // centered-sparse reduced problems go straight to the native
+        // kernels (which is also where their O(nnz) advantage lives).
         if kind == LossKind::Squared {
-            let stem = Self::fista_stem(x_red.nrows(), Self::bucket_for(x_red.ncols()));
-            if self.has_artifact(&stem) {
-                match self.solve_reduced_via_xla(x_red, y, pen, lam, beta0, cfg) {
-                    Ok(r) => return r,
-                    Err(_) => {
-                        self.stats.borrow_mut().native_fallbacks += 1;
+            if let Some(x_dense) = x_red.as_dense() {
+                let stem =
+                    Self::fista_stem(x_dense.nrows(), Self::bucket_for(x_dense.ncols()));
+                if self.has_artifact(&stem) {
+                    match self.solve_reduced_via_xla(x_dense, y, pen, lam, beta0, cfg) {
+                        Ok(r) => return r,
+                        Err(_) => {
+                            self.stats.borrow_mut().native_fallbacks += 1;
+                        }
                     }
                 }
             }
@@ -509,8 +519,16 @@ mod tests {
         let eng = XlaEngine::new("artifacts-nonexistent").unwrap();
         let cfg = SolverConfig::default();
         let mut ws = SolverWorkspace::new();
-        let via_engine =
-            eng.solve_reduced(LossKind::Squared, &x, &y, &rpen, 0.05, &vec![0.0; 8], &cfg, &mut ws);
+        let via_engine = eng.solve_reduced(
+            LossKind::Squared,
+            (&x).into(),
+            &y,
+            &rpen,
+            0.05,
+            &vec![0.0; 8],
+            &cfg,
+            &mut ws,
+        );
         let loss = Loss::new(LossKind::Squared, &x, &y);
         let native = crate::solver::solve(&loss, &rpen, 0.05, &vec![0.0; 8], &cfg);
         crate::testkit::assert_close(&via_engine.beta, &native.beta, 1e-12, "engine fallback solve");

@@ -149,7 +149,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: lam_max,
             lambda_next: lam_max,
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Linear,
         };
@@ -168,7 +168,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: lam_max,
             lambda_next: 1e-9 * lam_max,
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Linear,
         };
@@ -189,7 +189,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: lam_max,
             lambda_next: lam_next,
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Linear,
         };
@@ -227,7 +227,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: lam_max,
             lambda_next: lam_next,
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Linear,
         };
@@ -248,7 +248,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: lam_max,
             lambda_next: 0.7 * lam_max,
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Linear,
         };

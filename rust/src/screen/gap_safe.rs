@@ -25,7 +25,7 @@
 
 use super::{Candidates, ScreenContext};
 use crate::data::Response;
-use crate::linalg::Matrix;
+use crate::linalg::DesignRef;
 use crate::norms::soft_threshold;
 use crate::penalty::Penalty;
 
@@ -38,14 +38,16 @@ pub fn screen(ctx: &ScreenContext) -> Candidates {
 }
 
 /// GAP safe test at `lambda` using primal point `beta` (shared by the
-/// sequential rule and the dynamic re-screens).
-pub fn screen_at(
+/// sequential rule and the dynamic re-screens). Generic over the kernel
+/// view, so the exact rule never densifies a sparse design.
+pub fn screen_at<'a>(
     pen: &Penalty,
-    x: &Matrix,
+    x: impl Into<DesignRef<'a>>,
     y: &[f64],
     beta: &[f64],
     lambda: f64,
 ) -> Candidates {
+    let x = x.into();
     let n = y.len() as f64;
     let groups = &pen.groups;
     let alpha = pen.alpha;
@@ -111,9 +113,9 @@ pub fn screen_at(
 /// Dynamic GAP safe: given the current inner-solver iterate on the reduced
 /// problem (scattered back to full length by the caller), re-derive a safe
 /// sphere and return a (possibly smaller) candidate set.
-pub fn screen_dynamic(
+pub fn screen_dynamic<'a>(
     pen: &Penalty,
-    x: &Matrix,
+    x: impl Into<DesignRef<'a>>,
     y: &[f64],
     beta_full: &[f64],
     lambda: f64,
@@ -223,7 +225,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: 1.0,
             lambda_next: 0.9,
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Logistic,
         };

@@ -20,7 +20,7 @@ pub mod kkt;
 pub mod sparsegl;
 
 use crate::data::Response;
-use crate::linalg::Matrix;
+use crate::linalg::DesignRef;
 use crate::penalty::Penalty;
 
 /// Which screening rule to run.
@@ -79,8 +79,9 @@ pub struct ScreenContext<'a> {
     pub beta_prev: &'a [f64],
     pub lambda_prev: f64,
     pub lambda_next: f64,
-    /// Design/response — needed by the exact (GAP safe) rules.
-    pub x: &'a Matrix,
+    /// Design/response — needed by the exact (GAP safe) rules. A kernel
+    /// view, so safe screening runs sparse on centered-implicit designs.
+    pub x: DesignRef<'a>,
     pub y: &'a [f64],
     pub response: Response,
 }

@@ -68,7 +68,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: lam_max,
             lambda_next: 0.6 * lam_max,
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Linear,
         };
@@ -96,7 +96,7 @@ mod tests {
             beta_prev: &beta,
             lambda_prev: 1.0,
             lambda_next: 0.2, // 2·0.2 − 1 < 0
-            x: &x,
+            x: (&x).into(),
             y: &y,
             response: Response::Linear,
         };

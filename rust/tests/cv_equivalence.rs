@@ -107,8 +107,8 @@ fn pooled_cv_loss_equals_hand_computed_raw_scale_fold_error() {
     for j in 0..ds.p() {
         let scale = 1.0 + j as f64 / 3.0;
         for i in 0..ds.n() {
-            let v = ds.x.get(i, j);
-            ds.x.set(i, j, 4.0 + scale * v);
+            let v = ds.x.dense().get(i, j);
+            ds.x.dense_mut().set(i, j, 4.0 + scale * v);
         }
     }
     let base = cfg(RuleKind::DfrSgl);
@@ -140,7 +140,7 @@ fn pooled_cv_loss_equals_hand_computed_raw_scale_fold_error() {
             for i in 0..fold.test.n() {
                 let eta: f64 = intercept
                     + (0..fold.test.p())
-                        .map(|j| fold.test.x.get(i, j) * beta_raw[j])
+                        .map(|j| fold.test.x.dense().get(i, j) * beta_raw[j])
                         .sum::<f64>();
                 mse += (fold.test.y[i] - eta) * (fold.test.y[i] - eta);
             }

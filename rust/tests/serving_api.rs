@@ -109,10 +109,14 @@ fn sparse_csc_fit_matches_dense() {
     assert!(csc.density() < 0.5, "fixture is not sparse enough to be meaningful");
     // Tight solver tolerance: the CSC and dense standardizations differ in
     // the last float bits (different summation orders), so this comparison
-    // must measure that perturbation, not optimizer slack.
+    // must measure that perturbation, not optimizer slack. Kernel choice
+    // is pinned to dense so this test covers the CSC *ingest* path
+    // regardless of the fixture's sampled density; the centered-implicit
+    // sparse kernels have their own gate (rust/tests/sparse_equivalence.rs).
     let mut m = model(10);
     m.path.solver.tol = 1e-10;
     m.path.solver.max_iters = 100_000;
+    m.sparse = dfr::model_api::SparseMode::Off;
     let mut dense_fitter = m.fitter();
     let from_dense = dense_fitter
         .fit_at(&Design::Matrix(&dense), &y, &[6, 6, 6, 6], Response::Linear, 9)
