@@ -1,29 +1,79 @@
 //! **Ablation** (DESIGN.md §6.4): screening gains must be
 //! solver-independent — the paper stresses DFR "can be used with any
-//! fitting algorithm". Runs the default synthetic workload under both
-//! inner solvers (FISTA with the exact SGL prox; ATOS, the paper's
-//! algorithm) × {DFR, sparsegl, no-screen}, plus the XLA-served engine
-//! when artifacts exist.
+//! fitting algorithm". Runs the default synthetic workload under the
+//! three inner solvers (FISTA with the exact SGL prox; ATOS, the paper's
+//! algorithm; group-major BCD, the `sparsegl`-style block solver) ×
+//! {DFR, sparsegl, no-screen}, a solver × kernel × group-regime section
+//! (dense vs 5%-density centered-sparse, small vs large groups — the
+//! regimes where block updates pay differently), plus the XLA-served
+//! engine when artifacts exist.
 //!
 //! Expected: improvement factors agree across solvers within noise; the
 //! absolute times differ (FISTA's exact prox usually converges in fewer
-//! iterations); engine choice does not change solutions.
+//! iterations; BCD wins when few groups are active and on sparse column
+//! blocks); engine choice does not change solutions.
 
 mod common;
 
 use dfr::bench_harness::BenchTable;
-use dfr::data::SyntheticConfig;
+use dfr::data::{Dataset, Response, SyntheticConfig};
+use dfr::linalg::{CenteredSparse, CscMatrix, DesignOps, Matrix};
 use dfr::path::{PathConfig, PathRunner};
+use dfr::prelude::Groups;
+use dfr::rng::Rng;
 use dfr::runtime::XlaEngine;
 use dfr::screen::RuleKind;
 use dfr::solver::{SolverConfig, SolverKind};
+
+const SOLVERS: [(SolverKind, &str); 3] = [
+    (SolverKind::Fista, "fista"),
+    (SolverKind::Atos, "atos"),
+    (SolverKind::Bcd, "bcd"),
+];
+
+/// One 5%-density problem as a dense-kernel and a sparse-kernel dataset
+/// (same implied standardized design, same response, even groups of
+/// `gsize`).
+fn sparse_pair(seed: u64, n: usize, p: usize, gsize: usize) -> (Dataset, Dataset) {
+    let mut rng = Rng::new(seed);
+    let raw = Matrix::from_fn(n, p, |_, _| {
+        if rng.bernoulli(0.05) {
+            rng.gauss()
+        } else {
+            0.0
+        }
+    });
+    let csc = CscMatrix::from_dense(&raw, 0.0);
+    let beta_true: Vec<f64> =
+        (0..p).map(|j| if j % 11 == 0 { rng.normal(0.0, 1.5) } else { 0.0 }).collect();
+    let y: Vec<f64> =
+        raw.matvec(&beta_true).iter().map(|v| v + rng.normal(0.0, 0.3)).collect();
+    let groups = Groups::even(p, gsize);
+    let (dense_std, _) = csc.to_standardized_dense();
+    let dense_ds = Dataset {
+        x: dense_std.into(),
+        y: y.clone(),
+        groups: groups.clone(),
+        response: Response::Linear,
+        name: "sparse5-dense".into(),
+    };
+    let sparse_ds = Dataset {
+        x: DesignOps::Sparse(CenteredSparse::from_csc(&csc)),
+        y,
+        groups,
+        response: Response::Linear,
+        name: "sparse5-sparse".into(),
+    };
+    (dense_ds, sparse_ds)
+}
 
 fn main() {
     let full = dfr::bench_harness::full_scale();
     let (p, n, path_len) = if full { (1000, 200, 50) } else { (300, 100, 15) };
 
-    let mut table = BenchTable::new("Ablation — inner solver (FISTA vs ATOS) × screening rule");
-    for (kind, tag) in [(SolverKind::Fista, "fista"), (SolverKind::Atos, "atos")] {
+    let mut table =
+        BenchTable::new("Ablation — inner solver (FISTA vs ATOS vs BCD) × screening rule");
+    for (kind, tag) in SOLVERS {
         for rep in 0..common::repeats() {
             let data = SyntheticConfig { n, p, ..SyntheticConfig::default() }
                 .generate(11_000 + rep as u64);
@@ -39,6 +89,55 @@ fn main() {
                 &cfg,
                 &[RuleKind::DfrSgl, RuleKind::Sparsegl],
             );
+        }
+    }
+
+    // Solver × kernel × group-regime ablation: the same 5%-density
+    // problem solved through the dense and the centered-implicit sparse
+    // kernels, with small groups (many blocks, cheap updates) and large
+    // groups (few blocks, heavy updates) — the two regimes where BCD's
+    // per-group block updates pay differently. The sparse fit reuses the
+    // dense fit's λ path so seconds are directly comparable.
+    let (n2, p2, path_len2) = if full { (400, 800, 30) } else { (120, 240, 10) };
+    for (kind, tag) in SOLVERS {
+        for (regime, gsize) in [("small-groups", 5usize), ("large-groups", 60usize)] {
+            for rep in 0..common::repeats() {
+                let (dense_ds, sparse_ds) =
+                    sparse_pair(13_000 + rep as u64, n2, p2, gsize);
+                let cfg = PathConfig {
+                    path_len: path_len2,
+                    solver: SolverConfig { kind, ..SolverConfig::default() },
+                    ..PathConfig::default()
+                };
+                let setting = format!("{tag} {regime}");
+                let dense_fit = PathRunner::new(&dense_ds, cfg.clone())
+                    .rule(RuleKind::DfrSgl)
+                    .run()
+                    .expect("dense 5%-density fit failed");
+                let sparse_fit = PathRunner::new(&sparse_ds, cfg)
+                    .rule(RuleKind::DfrSgl)
+                    .fixed_path(dense_fit.lambdas.clone())
+                    .run()
+                    .expect("sparse 5%-density fit failed");
+                table.push(
+                    "dense path seconds",
+                    &setting,
+                    "DFR-SGL",
+                    dense_fit.metrics.total_seconds,
+                );
+                table.push(
+                    "sparse path seconds",
+                    &setting,
+                    "DFR-SGL",
+                    sparse_fit.metrics.total_seconds,
+                );
+                table.push(
+                    "l2 distance sparse vs dense",
+                    &setting,
+                    "DFR-SGL",
+                    sparse_fit.l2_distance_to(&dense_fit),
+                );
+            }
         }
     }
 

@@ -79,7 +79,9 @@ pub struct CvConfig {
     pub folds: usize,
     /// Pathwise fit settings shared by the reference and fold fits. The
     /// `alpha` / `adaptive` fields are the grid-cell coordinates; grid
-    /// searches override them per cell.
+    /// searches override them per cell. `path.solver.kind` picks the
+    /// inner solver (FISTA / ATOS / BCD) every fold and grid cell
+    /// dispatches through the [`crate::solver::Solver`] trait.
     pub path: PathConfig,
     /// Screening rule applied to every fit.
     pub rule: RuleKind,

@@ -73,6 +73,14 @@ impl Groups {
         self.starts[g]..self.starts[g + 1]
     }
 
+    /// Start offset of every group plus the `p` sentinel — the group-block
+    /// tiling `[offsets[g], offsets[g+1])` that block-coordinate solvers
+    /// and the reduced-design cache agree on.
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.starts
+    }
+
     /// Group id of variable `i`.
     #[inline]
     pub fn group_of(&self, i: usize) -> usize {

@@ -9,7 +9,7 @@
 //! | Module | Implements | Paper |
 //! |---|---|---|
 //! | [`penalty`], [`norms`] | SGL / aSGL norms, ε-norm duals, exact proxes, PCA adaptive weights | Eq. 1–2, §2.1, App. B.3 |
-//! | [`solver`] | FISTA (exact SGL prox) and ATOS, warm-started, backtracking | §2.3, App. A (Table A1 settings) |
+//! | [`solver`] | Solver subsystem behind the [`solver::Solver`] trait: FISTA (exact SGL prox), ATOS, and group-major block-coordinate descent, all warm-started with backtracking | §2.3, App. A (Table A1 settings) |
 //! | [`screen`] | DFR bi-level strong rules for SGL (Eqs. 5–6) and aSGL (Eqs. 7–8), `sparsegl` group rule, GAP-safe seq/dyn, no-screen baseline, KKT checks | §2.2, §2.4, App. C |
 //! | [`path`] | Algorithm 1/A1: candidates → optimization set → reduced solve → KKT loop; persistent [`path::PathWorkspace`] hot loop | §2.4, App. D.1 metrics |
 //! | [`cv`] | Workspace-pooled k-fold CV and `(α, γ)` grid search with shared fold plans, raw-scale fold scoring | §1.2, App. D.7, Table A36 |

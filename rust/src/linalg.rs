@@ -158,6 +158,40 @@ impl Matrix {
         });
     }
 
+    /// `out += Σ_k coeffs[k] · X[:, cols.start + k]` — the group-block
+    /// matvec `X_g β_g` accumulated into a carried fitted-values buffer
+    /// (the BCD residual-carried block update). Zero coefficients are
+    /// skipped, so updating an inactive block costs nothing.
+    pub fn block_axpy_into(&self, cols: std::ops::Range<usize>, coeffs: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(coeffs.len(), cols.len());
+        debug_assert_eq!(out.len(), self.n);
+        for (k, &c) in coeffs.iter().enumerate() {
+            if c != 0.0 {
+                axpy(c, self.col(cols.start + k), out);
+            }
+        }
+    }
+
+    /// `out[k] = X[:, cols.start + k]ᵀ r` — the group-block transpose
+    /// matvec `X_gᵀ r`, written into the block slice of a gradient buffer.
+    pub fn block_t_matvec_into(&self, cols: std::ops::Range<usize>, r: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), cols.len());
+        debug_assert_eq!(r.len(), self.n);
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = dot(self.col(cols.start + k), r);
+        }
+    }
+
+    /// Squared ℓ₂ norm of every column, written into `out` (length p) —
+    /// the per-column cache behind the BCD block-Lipschitz seeds.
+    pub fn col_sq_norms_into(&self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.p);
+        for (j, o) in out.iter_mut().enumerate() {
+            let c = self.col(j);
+            *o = dot(c, c);
+        }
+    }
+
     /// Gather the given columns into a new (n × idx.len()) matrix — used to
     /// build the screening-reduced design for the inner solver. Pathwise
     /// callers should prefer [`ReducedDesign`], which reuses its backing
@@ -671,6 +705,65 @@ impl CenteredSparse {
         });
     }
 
+    /// `out += Σ_k coeffs[k] · X̃[:, cols.start + k]` — the centered-
+    /// implicit group-block matvec: sparse per-column axpys plus **one**
+    /// rank-one centering shift over the whole block, O(nnz_block + n).
+    pub fn block_axpy_into(&self, cols: std::ops::Range<usize>, coeffs: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(coeffs.len(), cols.len());
+        debug_assert_eq!(out.len(), self.n);
+        let mut shift = 0.0;
+        for (k, &c) in coeffs.iter().enumerate() {
+            if c != 0.0 {
+                let j = cols.start + k;
+                let bs = c / self.scales[j];
+                shift += bs * self.offsets[j];
+                for t in self.col_ptr[j]..self.col_ptr[j + 1] {
+                    out[self.row_idx[t]] += bs * self.values[t];
+                }
+            }
+        }
+        if shift != 0.0 {
+            out.iter_mut().for_each(|v| *v -= shift);
+        }
+    }
+
+    /// `out[k] = X̃[:, cols.start + k]ᵀ r` — sparse block column dots with
+    /// the rank-one centering correction (`Σᵢ rᵢ` computed once per block).
+    pub fn block_t_matvec_into(&self, cols: std::ops::Range<usize>, r: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), cols.len());
+        debug_assert_eq!(r.len(), self.n);
+        let sr: f64 = r.iter().sum();
+        for (k, o) in out.iter_mut().enumerate() {
+            let j = cols.start + k;
+            let mut s = 0.0;
+            for t in self.col_ptr[j]..self.col_ptr[j + 1] {
+                s += self.values[t] * r[self.row_idx[t]];
+            }
+            *o = (s - self.offsets[j] * sr) / self.scales[j];
+        }
+    }
+
+    /// Squared ℓ₂ norm of every *implied standardized* column into `out`
+    /// (the sparse leg of the BCD block-Lipschitz cache) — computed from
+    /// the stored entries alone, like [`CenteredSparse::col_norms`] without
+    /// the square root.
+    pub fn col_sq_norms_into(&self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.p);
+        let n = self.n as f64;
+        for (j, o) in out.iter_mut().enumerate() {
+            let (mu, s) = (self.offsets[j], self.scales[j]);
+            let mut nnz_j = 0usize;
+            let mut sumsq = 0.0;
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                let d = (self.values[k] - mu) / s;
+                sumsq += d * d;
+                nnz_j += 1;
+            }
+            let z = mu / s;
+            *o = sumsq + (n - nnz_j as f64) * z * z;
+        }
+    }
+
     /// ℓ₂ norm of each *implied standardized* column:
     /// `√(Σ_nz ((v − μ)/s)² + (n − nnz_j)·(μ/s)²)` — 1 by construction for
     /// non-degenerate columns.
@@ -932,6 +1025,34 @@ impl<'a> DesignRef<'a> {
         }
     }
 
+    /// Group-block matvec: `out += Σ_k coeffs[k] · X[:, cols.start + k]`
+    /// (dense axpys / centered-implicit sparse axpys + one rank-one
+    /// shift). The kernel contract of the BCD solver's residual-carried
+    /// block updates.
+    pub fn block_axpy_into(self, cols: std::ops::Range<usize>, coeffs: &[f64], out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(m) => m.block_axpy_into(cols, coeffs, out),
+            DesignRef::Sparse(s) => s.block_axpy_into(cols, coeffs, out),
+        }
+    }
+
+    /// Group-block transpose matvec: `out[k] = X[:, cols.start + k]ᵀ r`.
+    pub fn block_t_matvec_into(self, cols: std::ops::Range<usize>, r: &[f64], out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(m) => m.block_t_matvec_into(cols, r, out),
+            DesignRef::Sparse(s) => s.block_t_matvec_into(cols, r, out),
+        }
+    }
+
+    /// Squared ℓ₂ norm of every column of the design the kernels evaluate
+    /// (per-group block-Lipschitz seeds).
+    pub fn col_sq_norms_into(self, out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(m) => m.col_sq_norms_into(out),
+            DesignRef::Sparse(s) => s.col_sq_norms_into(out),
+        }
+    }
+
     /// Column means of the design the kernels evaluate (adaptive-weight
     /// PCA centering).
     pub fn col_means(self) -> Vec<f64> {
@@ -1049,6 +1170,21 @@ impl DesignOps {
         self.view().col_norms()
     }
 
+    /// Group-block matvec (see [`DesignRef::block_axpy_into`]).
+    pub fn block_axpy_into(&self, cols: std::ops::Range<usize>, coeffs: &[f64], out: &mut [f64]) {
+        self.view().block_axpy_into(cols, coeffs, out)
+    }
+
+    /// Group-block transpose matvec (see [`DesignRef::block_t_matvec_into`]).
+    pub fn block_t_matvec_into(&self, cols: std::ops::Range<usize>, r: &[f64], out: &mut [f64]) {
+        self.view().block_t_matvec_into(cols, r, out)
+    }
+
+    /// Per-column squared norms (see [`DesignRef::col_sq_norms_into`]).
+    pub fn col_sq_norms_into(&self, out: &mut [f64]) {
+        self.view().col_sq_norms_into(out)
+    }
+
     pub fn op_norm_sq_est(&self, iters: usize, seed: u64) -> f64 {
         self.view().op_norm_sq_est(iters, seed)
     }
@@ -1137,6 +1273,10 @@ pub struct ReducedDesign {
     mat: Matrix,
     smat: CenteredSparse,
     key: Option<(bool, usize, usize, u64)>,
+    /// Group-block offsets of the last [`ReducedDesign::update_grouped`]
+    /// gather: start of each maximal run of columns drawn from one
+    /// original group, plus the `idx.len()` sentinel.
+    gstarts: Vec<usize>,
     /// Updates answered with zero copying (identical index set).
     pub hits: usize,
     /// Columns kept in place across updates (common sorted prefix).
@@ -1152,6 +1292,7 @@ impl ReducedDesign {
             mat: Matrix::zeros(0, 0),
             smat: CenteredSparse::empty(0),
             key: None,
+            gstarts: Vec::new(),
             hits: 0,
             kept_cols: 0,
             copied_cols: 0,
@@ -1244,6 +1385,38 @@ impl ReducedDesign {
         }
     }
 
+    /// [`ReducedDesign::update`] plus group-block bookkeeping: records the
+    /// offsets at which the gathered columns change original group under
+    /// `groups`, so a block-coordinate solver running on the reduced
+    /// design sees exactly the blocks of the restricted penalty
+    /// ([`crate::groups::Groups::restrict`] renumbers the same runs).
+    /// Offsets are recomputed in O(|idx|) per update; the column gather
+    /// itself keeps all of [`ReducedDesign::update`]'s prefix-diff reuse.
+    pub fn update_grouped<'s, 'x>(
+        &'s mut self,
+        src: impl Into<DesignRef<'x>>,
+        idx: &[usize],
+        groups: &crate::groups::Groups,
+    ) -> DesignRef<'s> {
+        self.gstarts.clear();
+        self.gstarts.push(0);
+        for (k, w) in idx.windows(2).enumerate() {
+            if groups.group_of(w[0]) != groups.group_of(w[1]) {
+                self.gstarts.push(k + 1);
+            }
+        }
+        self.gstarts.push(idx.len());
+        self.update(src, idx)
+    }
+
+    /// Group-block offsets recorded by the last
+    /// [`ReducedDesign::update_grouped`] (block `g` spans columns
+    /// `offsets[g]..offsets[g+1]` of the reduced design). Empty until the
+    /// first grouped update.
+    pub fn group_offsets(&self) -> &[usize] {
+        &self.gstarts
+    }
+
     /// The cached dense reduced matrix (columns of the last dense
     /// `update`; empty if the last source was sparse).
     pub fn matrix(&self) -> &Matrix {
@@ -1261,6 +1434,7 @@ impl ReducedDesign {
         self.key = None;
         self.mat.truncate_cols(0);
         self.smat.truncate_cols(0);
+        self.gstarts.clear();
     }
 }
 
@@ -1469,6 +1643,92 @@ mod tests {
         rd.update(&a, &[0, 2, 4]);
         let got = rd.update(&b, &[0, 2, 4]).as_dense().unwrap().clone();
         assert_eq!(got, b.gather_columns(&[0, 2, 4]), "stale columns served");
+    }
+
+    #[test]
+    fn reduced_design_update_grouped_records_offsets() {
+        let mut rng = crate::rng::Rng::new(8);
+        let x = Matrix::from_fn(9, 10, |_, _| rng.gauss());
+        let groups = crate::groups::Groups::from_sizes(&[3, 3, 4]); // 0-2 | 3-5 | 6-9
+        let mut rd = ReducedDesign::new();
+        // vars {1, 2} ⊂ g0, {4} ⊂ g1, {6, 9} ⊂ g2 → blocks at 0, 2, 3.
+        rd.update_grouped(&x, &[1, 2, 4, 6, 9], &groups);
+        assert_eq!(rd.group_offsets(), &[0, 2, 3, 5]);
+        let (restricted, _) = groups.restrict(&[1, 2, 4, 6, 9]);
+        assert_eq!(rd.group_offsets(), restricted.offsets());
+        // Incremental growth keeps the offsets in sync with the new set.
+        rd.update_grouped(&x, &[1, 2, 4, 5, 6, 9], &groups);
+        assert_eq!(rd.group_offsets(), &[0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn block_kernels_match_whole_design_kernels() {
+        let mut rng = crate::rng::Rng::new(9);
+        let x = Matrix::from_fn(12, 9, |_, _| rng.gauss());
+        let cols = 3..7usize;
+        let coeffs = rng.gauss_vec(4);
+        let r = rng.gauss_vec(12);
+
+        // block_axpy == matvec of a vector supported on the block.
+        let mut full_beta = vec![0.0; 9];
+        full_beta[cols.clone()].copy_from_slice(&coeffs);
+        let expect = x.matvec(&full_beta);
+        let mut got = vec![0.0; 12];
+        x.block_axpy_into(cols.clone(), &coeffs, &mut got);
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-14);
+        }
+
+        // block_t_matvec == the block slice of Xᵀr.
+        let full = x.t_matvec(&r);
+        let mut block = vec![0.0; 4];
+        x.block_t_matvec_into(cols.clone(), &r, &mut block);
+        for (a, b) in block.iter().zip(&full[cols]) {
+            assert!((a - b).abs() < 1e-14);
+        }
+
+        // col_sq_norms == col_norms².
+        let mut sq = vec![0.0; 9];
+        x.col_sq_norms_into(&mut sq);
+        for (a, b) in sq.iter().zip(&x.col_norms()) {
+            assert!((a - b * b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_block_kernels_match_dense_block_kernels() {
+        let (dense, csc) = sparse_fixture();
+        let sparse = CenteredSparse::from_csc(&csc);
+        let dense_std = sparse.to_dense(); // implied standardized matrix
+        let mut rng = crate::rng::Rng::new(10);
+        let cols = 2..6usize;
+        let coeffs = rng.gauss_vec(4);
+        let r = rng.gauss_vec(dense.nrows());
+        let n = dense.nrows();
+
+        let mut a = rng.gauss_vec(n); // nonzero accumulator: += semantics
+        let mut b = a.clone();
+        dense_std.block_axpy_into(cols.clone(), &coeffs, &mut a);
+        sparse.block_axpy_into(cols.clone(), &coeffs, &mut b);
+        for (x1, x2) in a.iter().zip(&b) {
+            assert!((x1 - x2).abs() < 1e-12, "block_axpy drift");
+        }
+
+        let mut da = vec![0.0; 4];
+        let mut db = vec![0.0; 4];
+        dense_std.block_t_matvec_into(cols.clone(), &r, &mut da);
+        sparse.block_t_matvec_into(cols.clone(), &r, &mut db);
+        for (x1, x2) in da.iter().zip(&db) {
+            assert!((x1 - x2).abs() < 1e-12, "block_t_matvec drift");
+        }
+
+        let mut sa = vec![0.0; dense.ncols()];
+        let mut sb = vec![0.0; dense.ncols()];
+        dense_std.col_sq_norms_into(&mut sa);
+        sparse.col_sq_norms_into(&mut sb);
+        for (x1, x2) in sa.iter().zip(&sb) {
+            assert!((x1 - x2).abs() < 1e-12, "col_sq_norms drift");
+        }
     }
 
     #[test]

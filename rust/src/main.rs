@@ -31,7 +31,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "path-len", help: "number of λ path points", default: Some("50"), takes_value: true },
         OptSpec { name: "path-end", help: "λ_l/λ₁ ratio", default: Some("0.1"), takes_value: true },
         OptSpec { name: "gamma", help: "aSGL adaptive weight exponent γ₁=γ₂", default: None, takes_value: true },
-        OptSpec { name: "solver", help: "fista | atos", default: Some("fista"), takes_value: true },
+        OptSpec { name: "solver", help: "inner solver: fista | atos | bcd (group-major block-coordinate descent)", default: Some("fista"), takes_value: true },
+        OptSpec { name: "threads", help: "worker threads (overrides DFR_THREADS)", default: None, takes_value: true },
         OptSpec { name: "sparse", help: "CSC solve kernel: auto (density ≤ DFR_SPARSE_DENSITY, default 0.25) | on | off", default: Some("auto"), takes_value: true },
         OptSpec { name: "csc", help: "fit/cv: ingest the design as CSC sparse (exact zeros become implicit), letting --sparse route the solve kernel", default: None, takes_value: false },
         OptSpec { name: "folds", help: "cv: number of folds", default: Some("10"), takes_value: true },
@@ -91,11 +92,8 @@ fn build_dataset(args: &Args) -> anyhow::Result<Dataset> {
 }
 
 fn build_path_config(args: &Args) -> anyhow::Result<PathConfig> {
-    let solver_kind = match args.str_or("solver", "fista").as_str() {
-        "fista" => SolverKind::Fista,
-        "atos" => SolverKind::Atos,
-        s => anyhow::bail!("unknown solver `{s}`"),
-    };
+    let solver_kind =
+        SolverKind::parse(&args.str_or("solver", "fista")).map_err(anyhow::Error::msg)?;
     Ok(PathConfig {
         alpha: args.f64_or("alpha", 0.95).map_err(anyhow::Error::msg)?,
         path_len: args.usize_or("path-len", 50).map_err(anyhow::Error::msg)?,
@@ -110,18 +108,33 @@ fn build_path_config(args: &Args) -> anyhow::Result<PathConfig> {
 }
 
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    // `--threads` pins the worker count before any engine/pool is built;
+    // the programmatic override beats the `DFR_THREADS` environment
+    // variable by construction.
+    if let Some(t) = args.options.get("threads") {
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads: expected integer, got `{t}`"))?;
+        anyhow::ensure!(n >= 1, "--threads: need at least one worker");
+        dfr::parallel::set_thread_override(Some(n));
+    }
     match cmd {
         "fit" => {
             let ds = build_dataset(args)?;
             let cfg = build_path_config(args)?;
             let rule = parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?;
+            let threads = dfr::parallel::default_threads();
             println!(
-                "fitting {} (p={}, n={}, m={}) with {} ...",
+                "fitting {} (p={}, n={}, m={}) with {} [solver {}, {} thread{}{}] ...",
                 ds.name,
                 ds.p(),
                 ds.n(),
                 ds.m(),
-                rule.name()
+                rule.name(),
+                cfg.solver.kind.name(),
+                threads,
+                if threads == 1 { "" } else { "s" },
+                if args.options.contains_key("threads") { ", --threads" } else { "" },
             );
             if args.flag("xla") {
                 let xla_engine = XlaEngine::new("artifacts")?;
@@ -237,12 +250,14 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
             let engine = fitter.cv_engine();
             println!(
-                "cv({} folds, {} grid cell{}, {} thread{}):",
+                "cv({} folds, {} grid cell{}, {} thread{}{}, solver {}):",
                 model.cv_folds,
                 cells.len(),
                 if cells.len() == 1 { "" } else { "s" },
                 engine.threads(),
                 if engine.threads() == 1 { "" } else { "s" },
+                if args.options.contains_key("threads") { " via --threads" } else { "" },
+                model.path.solver.kind.name(),
             );
             // Report the γ each cell actually fit with (an aSGL rule
             // forces γ=(0.1, 0.1) even when the spec says none).

@@ -125,6 +125,16 @@ impl SglModel {
     pub fn fitter(&self) -> SglFitter {
         SglFitter::new(self.clone())
     }
+
+    /// Same model with a different inner solver (FISTA / ATOS / BCD) —
+    /// the serving-API leg of end-to-end solver selection
+    /// (`path.solver.kind` spelled as a one-liner). Every fit, CV fold,
+    /// and grid cell of a fitter built from the result dispatches through
+    /// the chosen [`crate::solver::Solver`] implementation.
+    pub fn with_solver(mut self, kind: crate::solver::SolverKind) -> Self {
+        self.path.solver.kind = kind;
+        self
+    }
 }
 
 /// A raw design matrix in whichever layout the caller already has.

@@ -11,9 +11,25 @@ use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, TryLockError};
 
-/// Number of worker threads to use by default: respects
-/// `DFR_THREADS` if set, otherwise `available_parallelism`, capped at 16.
+/// Process-wide programmatic thread override (0 = unset). Set by the
+/// CLI's `--threads` flag; wins over the `DFR_THREADS` environment
+/// variable so a flag on the command line always beats ambient config.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override [`default_threads`] programmatically (the CLI `--threads`
+/// hook). `Some(n)` pins the count (min 1); `None` clears the override.
+pub fn set_thread_override(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+}
+
+/// Number of worker threads to use by default: the programmatic override
+/// ([`set_thread_override`]) wins, then `DFR_THREADS` if set, otherwise
+/// `available_parallelism`, capped at 16.
 pub fn default_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
     if let Ok(v) = std::env::var("DFR_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -177,6 +193,18 @@ impl<T> DerefMut for PoolGuard<'_, T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn thread_override_wins_and_clears() {
+        // Concurrent tests observing the override are unaffected: every
+        // parallel kernel returns identical results at any thread count.
+        set_thread_override(Some(3));
+        assert_eq!(default_threads(), 3);
+        set_thread_override(Some(0)); // clamped to at least one worker
+        assert_eq!(default_threads(), 1);
+        set_thread_override(None);
+        assert!(default_threads() >= 1);
+    }
 
     #[test]
     fn chunked_fill_covers_everything() {

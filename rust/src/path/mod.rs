@@ -11,7 +11,12 @@
 //!
 //! The coordinator owns warm starts, timing, and all Appendix-D metrics.
 //! Dense compute (full gradients, reduced solves) flows through an
-//! exchangeable [`Engine`] so the PJRT/XLA runtime can serve the hot path.
+//! exchangeable [`Engine`] so the PJRT/XLA runtime can serve the hot path;
+//! every reduced solve dispatches the configured
+//! [`crate::solver::SolverKind`] (FISTA / ATOS / group-major BCD) through
+//! the [`crate::solver::Solver`] trait, and reduced gathers record their
+//! group-block offsets so the BCD solver's blocks tile the reduced design
+//! exactly ([`ReducedDesign::update_grouped`]).
 //!
 //! ## Persistent workspaces (zero-allocation hot loop)
 //!
@@ -120,7 +125,7 @@ impl Engine for NativeEngine {
 /// nothing.
 #[derive(Clone, Debug, Default)]
 pub struct PathWorkspace {
-    /// Inner-solver buffers (FISTA/ATOS iteration state).
+    /// Inner-solver buffers (FISTA/ATOS/BCD iteration state).
     pub solver: SolverWorkspace,
     /// Incrementally-maintained reduced design `X[:, O_v]`.
     pub reduced: ReducedDesign,
@@ -491,11 +496,16 @@ impl<'a> PathRunner<'a> {
                 let dyn_c = crate::screen::gap_safe::screen_dynamic(
                     &pen, &ds.x, &ds.y, &ws.beta_full, lam_next,
                 );
-                let keep =
-                    screen::union_sorted(&dyn_c.vars, &screen::active_vars(&ws.beta_full));
-                if keep.len() < o_v.len() {
+                // Workspace-scratch union, like the KKT path above: the
+                // violation list and index scratch are both free at this
+                // point in the step, so the shrink set costs no
+                // allocation after warm-up.
+                screen::active_vars_into(&ws.beta_full, &mut ws.viol);
+                screen::union_sorted_into(&dyn_c.vars, &ws.viol, &mut ws.idx_scratch);
+                if ws.idx_scratch.len() < o_v.len() {
                     ws.beta_warm.copy_from_slice(&ws.beta_full);
                     let warm = std::mem::take(&mut ws.beta_warm);
+                    let keep = std::mem::take(&mut ws.idx_scratch);
                     let res = self.solve_on(&pen, kind, &loss, &keep, &warm, lam_next, ws);
                     ws.beta_warm = warm;
                     solver_iterations += res.iterations;
@@ -509,6 +519,7 @@ impl<'a> PathRunner<'a> {
                     );
                     o_v.clear();
                     o_v.extend_from_slice(&keep);
+                    ws.idx_scratch = keep;
                 }
             }
 
@@ -574,7 +585,11 @@ impl<'a> PathRunner<'a> {
         let rpen = pen.restrict(o_v);
         ws.warm.clear();
         ws.warm.extend(o_v.iter().map(|&i| warm_full[i]));
-        let x_red = ws.reduced.update(loss.x, o_v);
+        // Grouped gather: the cache records where the gathered columns
+        // change original group, so block-coordinate solvers see blocks
+        // that tile the reduced design exactly as the restricted
+        // penalty's groups do.
+        let x_red = ws.reduced.update_grouped(loss.x, o_v, &pen.groups);
         let res = self.engine.solve_reduced(
             kind,
             x_red,
@@ -589,6 +604,11 @@ impl<'a> PathRunner<'a> {
         // (excluded columns contribute nothing). Recomputed from the
         // reduced design (O(n·|O_v|)) so any Engine backend is safe.
         x_red.matvec_into(&res.beta, &mut ws.xb);
+        debug_assert_eq!(
+            ws.reduced.group_offsets(),
+            rpen.groups.offsets(),
+            "reduced group-block offsets must tile the reduced design"
+        );
         ws.beta_full.fill(0.0);
         for (t, &i) in o_v.iter().enumerate() {
             ws.beta_full[i] = res.beta[t];

@@ -445,10 +445,14 @@ impl Engine for XlaEngine {
         cfg: &SolverConfig,
         ws: &mut SolverWorkspace,
     ) -> SolveResult {
-        // AOT FISTA chunks only exist for dense squared-loss designs;
-        // centered-sparse reduced problems go straight to the native
-        // kernels (which is also where their O(nnz) advantage lives).
-        if kind == LossKind::Squared {
+        // AOT FISTA chunks only exist for dense squared-loss designs —
+        // and they ARE FISTA, so they only stand in when the configured
+        // solver is FISTA (an explicit `--solver atos|bcd` must run the
+        // algorithm it names; solver_equivalence.rs treats the choice as
+        // part of the contract). Centered-sparse reduced problems go
+        // straight to the native kernels (which is also where their
+        // O(nnz) advantage lives).
+        if kind == LossKind::Squared && cfg.kind == crate::solver::SolverKind::Fista {
             if let Some(x_dense) = x_red.as_dense() {
                 let stem =
                     Self::fista_stem(x_dense.nrows(), Self::bucket_for(x_dense.ncols()));

@@ -155,7 +155,16 @@ pub fn union_sorted_into(a: &[usize], b: &[usize], out: &mut Vec<usize>) {
 
 /// Active variables of a coefficient vector.
 pub fn active_vars(beta: &[f64]) -> Vec<usize> {
-    beta.iter().enumerate().filter(|(_, &b)| b != 0.0).map(|(i, _)| i).collect()
+    let mut out = Vec::new();
+    active_vars_into(beta, &mut out);
+    out
+}
+
+/// Active variables written into a caller-provided buffer (cleared first)
+/// — the allocation-free form for workspace-carried hot loops.
+pub fn active_vars_into(beta: &[f64], out: &mut Vec<usize>) {
+    out.clear();
+    out.extend(beta.iter().enumerate().filter(|(_, &b)| b != 0.0).map(|(i, _)| i));
 }
 
 /// Active groups of a coefficient vector.
@@ -193,6 +202,13 @@ mod tests {
         let beta = [0.0, 1.0, 0.0, 0.0];
         assert_eq!(active_vars(&beta), vec![1]);
         assert_eq!(active_groups(&beta, &g), vec![0]);
+    }
+
+    #[test]
+    fn active_vars_into_clears_stale_contents() {
+        let mut out = vec![7usize, 7, 7, 7];
+        active_vars_into(&[0.5, 0.0, -1.0], &mut out);
+        assert_eq!(out, vec![0, 2]);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! solver used in the paper's experiments (§3).
 //!
 //! Davis–Yin splitting for `min f + g + h` with `f` smooth and `g`, `h`
-//! proxable. For SGL we split the penalty into its ℓ1 part (`g`) and its
+//! proxable, packaged as the [`Atos`] state machine behind the [`Solver`]
+//! trait. For SGL we split the penalty into its ℓ1 part (`g`) and its
 //! group-ℓ2 part (`h`), both with closed-form proxes. The step size adapts
 //! by backtracking on the sufficient-decrease condition
 //! `f(u_h) ≤ f(u_g) + ⟨∇f(u_g), u_h−u_g⟩ + ‖u_h−u_g‖²/(2γ)`.
@@ -12,7 +13,7 @@
 //! argument ↦ `cand`), so the iteration and backtracking loops perform no
 //! heap allocation.
 
-use super::{ProxPenalty, SolveResult, SolverConfig, SolverWorkspace};
+use super::{ProxPenalty, SolveResult, Solver, SolverConfig, SolverWorkspace};
 use crate::linalg::norm2;
 use crate::loss::Loss;
 
@@ -37,35 +38,68 @@ pub fn solve_ws<P: ProxPenalty>(
     cfg: &SolverConfig,
     ws: &mut SolverWorkspace,
 ) -> SolveResult {
-    let p = beta0.len();
-    let n = loss.n();
-    debug_assert_eq!(p, loss.x.ncols());
-    ws.resize(n, p);
-    let lip = loss.lipschitz_bound().max(1e-12);
-    let mut gamma = 1.0 / lip;
+    super::drive::<P, Atos<P>>(loss, penalty, lambda, beta0, cfg, ws)
+}
 
-    ws.z.copy_from_slice(beta0);
-    ws.beta.copy_from_slice(beta0); // u_h; returned as-is if max_iters == 0
-    loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+/// ATOS iteration state (the adaptive step `γ` persists across steps; all
+/// vector state lives in the workspace).
+pub struct Atos<'a, P: ProxPenalty> {
+    loss: &'a Loss<'a>,
+    penalty: &'a P,
+    lambda: f64,
+    cfg: &'a SolverConfig,
+    gamma: f64,
+    threads: usize,
+    inv_n: f64,
+    iterations: usize,
+    converged: bool,
+}
 
-    let threads = crate::parallel::default_threads();
-    let inv_n = 1.0 / n as f64;
-    let mut iterations = 0;
-    let mut converged = false;
+impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
+    fn init(
+        loss: &'a Loss<'a>,
+        penalty: &'a P,
+        lambda: f64,
+        beta0: &[f64],
+        cfg: &'a SolverConfig,
+        ws: &mut SolverWorkspace,
+    ) -> Self {
+        let p = beta0.len();
+        let n = loss.n();
+        debug_assert_eq!(p, loss.x.ncols());
+        ws.resize(n, p);
+        let lip = loss.lipschitz_bound().max(1e-12);
 
-    for it in 0..cfg.max_iters {
-        iterations = it + 1;
+        ws.z.copy_from_slice(beta0);
+        ws.beta.copy_from_slice(beta0); // u_h; returned as-is if max_iters == 0
+        loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+
+        Atos {
+            loss,
+            penalty,
+            lambda,
+            cfg,
+            gamma: 1.0 / lip,
+            threads: crate::parallel::default_threads(),
+            inv_n: 1.0 / n as f64,
+            iterations: 0,
+            converged: false,
+        }
+    }
+
+    fn step(&mut self, ws: &mut SolverWorkspace) {
+        self.iterations += 1;
         // u_g = prox_{γ·λ·h_group}(z)  (group part first; order is a free
         // choice in Davis–Yin — matching the exact-prox composition order).
-        penalty.pen_prox_group_into(&ws.z, gamma * lambda, &mut ws.beta_prev);
+        self.penalty.pen_prox_group_into(&ws.z, self.gamma * self.lambda, &mut ws.beta_prev);
 
         // ∇f(u_g)
-        loss.x.matvec_into(&ws.beta_prev, &mut ws.xb);
-        let f_ug = loss.value_from_xb(&ws.xb);
-        loss.residual_from_xb(&ws.xb, &mut ws.r);
-        loss.x.t_matvec_par_into(&ws.r, threads, &mut ws.grad);
+        self.loss.x.matvec_into(&ws.beta_prev, &mut ws.xb);
+        let f_ug = self.loss.value_from_xb(&ws.xb);
+        self.loss.residual_from_xb(&ws.xb, &mut ws.r);
+        self.loss.x.t_matvec_par_into(&ws.r, self.threads, &mut ws.grad);
         for g in ws.grad.iter_mut() {
-            *g *= inv_n;
+            *g *= self.inv_n;
         }
 
         // Backtracking on γ.
@@ -74,11 +108,11 @@ pub fn solve_ws<P: ProxPenalty>(
             for (((c, &ug), &zj), &gj) in
                 ws.cand.iter_mut().zip(&ws.beta_prev).zip(&ws.z).zip(&ws.grad)
             {
-                *c = 2.0 * ug - zj - gamma * gj;
+                *c = 2.0 * ug - zj - self.gamma * gj;
             }
-            penalty.pen_prox_l1_into(&ws.cand, gamma * lambda, &mut ws.beta); // u_h
-            loss.x.matvec_into(&ws.beta, &mut ws.xb_cand);
-            let f_uh = loss.value_from_xb(&ws.xb_cand);
+            self.penalty.pen_prox_l1_into(&ws.cand, self.gamma * self.lambda, &mut ws.beta); // u_h
+            self.loss.x.matvec_into(&ws.beta, &mut ws.xb_cand);
+            let f_uh = self.loss.value_from_xb(&ws.xb_cand);
             let mut ip = 0.0;
             let mut dsq = 0.0;
             for ((&uh, &ug), &gj) in ws.beta.iter().zip(&ws.beta_prev).zip(&ws.grad) {
@@ -86,14 +120,14 @@ pub fn solve_ws<P: ProxPenalty>(
                 ip += gj * d;
                 dsq += d * d;
             }
-            if f_uh <= f_ug + ip + dsq / (2.0 * gamma) + 1e-12 * f_ug.abs().max(1.0) {
+            if f_uh <= f_ug + ip + dsq / (2.0 * self.gamma) + 1e-12 * f_ug.abs().max(1.0) {
                 break;
             }
             bt += 1;
-            if bt >= cfg.max_backtrack {
+            if bt >= self.cfg.max_backtrack {
                 break;
             }
-            gamma *= cfg.backtrack;
+            self.gamma *= self.cfg.backtrack;
         }
         // The last evaluated candidate is the accepted u_h.
         std::mem::swap(&mut ws.xb_beta, &mut ws.xb_cand);
@@ -106,16 +140,27 @@ pub fn solve_ws<P: ProxPenalty>(
             res += d * d;
         }
         let scale = norm2(&ws.beta_prev).max(1.0);
-        if res.sqrt() / scale <= cfg.tol {
-            converged = true;
-            break;
+        if res.sqrt() / scale <= self.cfg.tol {
+            self.converged = true;
         }
     }
 
-    // The primal iterate is u_h (it has passed through both proxes);
-    // `xb_beta` tracks it, so the objective costs no matvec.
-    let objective = loss.value_from_xb(&ws.xb_beta) + lambda * penalty.pen_value(&ws.beta);
-    SolveResult { beta: ws.beta.clone(), iterations, converged, objective }
+    fn converged(&self) -> bool {
+        self.converged
+    }
+
+    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
+        // The primal iterate is u_h (it has passed through both proxes);
+        // `xb_beta` tracks it, so the objective costs no matvec.
+        let objective =
+            self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta);
+        SolveResult {
+            beta: ws.beta.clone(),
+            iterations: self.iterations,
+            converged: self.converged,
+            objective,
+        }
+    }
 }
 
 #[cfg(test)]

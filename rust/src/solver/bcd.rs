@@ -1,0 +1,427 @@
+//! Group-major proximal block-coordinate descent — the `sparsegl`-style
+//! inner solver (Liang et al. '22; Friedman, Hastie & Tibshirani's SGL
+//! note), packaged as the [`Bcd`] state machine behind the [`Solver`]
+//! trait.
+//!
+//! One iteration is one *sweep*: cycle the penalty's groups and give each
+//! block `g` a proximal gradient update
+//!
+//! ```text
+//!     β_g ← prox_{(1/L_g)·λ·Ω_g}( β_g − (1/L_g) ∇_g f(β) )
+//! ```
+//!
+//! with a per-group Lipschitz estimate `L_g`, seeded from the cached
+//! squared column norms (`max_j‖x_j‖²` is a spectral lower bound of
+//! `‖X_g‖₂²`) and grown in place by per-block backtracking on the
+//! quadratic majorization — so every accepted block update decreases the
+//! objective. The fitted values `Xβ` are **residual-carried**: each block
+//! update adjusts them through the group-block kernels
+//! ([`crate::linalg::DesignRef::block_axpy_into`] /
+//! [`crate::linalg::DesignRef::block_t_matvec_into`]), which cost
+//! O(n·p_g) dense and O(nnz_g + n) on centered-implicit sparse designs —
+//! never a full matvec per block. A periodic full refresh kills the
+//! accumulated floating-point drift.
+//!
+//! Sweeps follow an **active-group epoch schedule**: a full sweep over all
+//! groups, then epochs restricted to the currently-nonzero groups until
+//! they are stable, then a full sweep to certify (a group outside the
+//! active set that moves re-opens the epochs). Convergence is only ever
+//! declared on a certifying full sweep, so the solver cannot silently
+//! converge on a stale active set. On screening-reduced problems the
+//! blocks are the [`crate::penalty::RestrictedPenalty`]'s groups, which
+//! tile the reduced design exactly (see
+//! [`crate::linalg::ReducedDesign::update_grouped`]).
+//!
+//! Like FISTA/ATOS, all vector state lives in the caller's
+//! [`SolverWorkspace`] (plus its BCD extensions: the per-column squared-
+//! norm cache, the per-group Lipschitz estimates, and the active-group
+//! list); the sweep and backtracking loops perform no heap allocation.
+
+use super::{ProxPenalty, SolveResult, Solver, SolverConfig, SolverWorkspace};
+use crate::linalg::{dot, norm2};
+use crate::loss::{Loss, LossKind};
+
+/// Sweeps between full `Xβ` refreshes (drift control for the carried
+/// fitted values).
+const REFRESH_EVERY: usize = 64;
+
+/// One-shot entry point (allocates a private workspace).
+pub fn solve<P: ProxPenalty>(
+    loss: &Loss,
+    penalty: &P,
+    lambda: f64,
+    beta0: &[f64],
+    cfg: &SolverConfig,
+) -> SolveResult {
+    let mut ws = SolverWorkspace::new();
+    solve_ws(loss, penalty, lambda, beta0, cfg, &mut ws)
+}
+
+/// Workspace entry point — the pathwise hot loop.
+pub fn solve_ws<P: ProxPenalty>(
+    loss: &Loss,
+    penalty: &P,
+    lambda: f64,
+    beta0: &[f64],
+    cfg: &SolverConfig,
+    ws: &mut SolverWorkspace,
+) -> SolveResult {
+    super::drive::<P, Bcd<P>>(loss, penalty, lambda, beta0, cfg, ws)
+}
+
+/// Where the epoch schedule currently is.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Sweep every group (also the certification sweep).
+    Full,
+    /// Sweep only the currently-active groups.
+    Active,
+}
+
+/// BCD iteration state (one `step` = one sweep).
+pub struct Bcd<'a, P: ProxPenalty> {
+    loss: &'a Loss<'a>,
+    penalty: &'a P,
+    lambda: f64,
+    cfg: &'a SolverConfig,
+    inv_n: f64,
+    phase: Phase,
+    since_refresh: usize,
+    iterations: usize,
+    converged: bool,
+}
+
+impl<'a, P: ProxPenalty> Solver<'a, P> for Bcd<'a, P> {
+    fn init(
+        loss: &'a Loss<'a>,
+        penalty: &'a P,
+        lambda: f64,
+        beta0: &[f64],
+        cfg: &'a SolverConfig,
+        ws: &mut SolverWorkspace,
+    ) -> Self {
+        let p = beta0.len();
+        let n = loss.n();
+        debug_assert_eq!(p, loss.x.ncols());
+        let groups = penalty.pen_groups();
+        assert_eq!(
+            groups.p(),
+            p,
+            "BCD needs the penalty's groups to tile the coordinate vector"
+        );
+        ws.resize(n, p);
+        ws.beta.copy_from_slice(beta0);
+        // Carried fitted values at the warm start (sparse warm starts skip
+        // zero coordinates).
+        loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+
+        let inv_n = 1.0 / n as f64;
+        // Factor turning a block operator-norm bound `‖X_g‖₂²` into a
+        // block Lipschitz bound of `∇_g f`: `1/n` squared, `1/(4n)`
+        // logistic.
+        let lip_factor = match loss.kind {
+            LossKind::Squared => inv_n,
+            LossKind::Logistic => 0.25 * inv_n,
+        };
+
+        // Per-column squared-norm cache → per-group Lipschitz seeds.
+        // `max_j‖x_j‖²` lower-bounds `‖X_g‖₂²`, so the seed errs fast;
+        // the per-block backtracking doubles it to a certified value (at
+        // most log₂ p_g times ever, since `‖X_g‖₂² ≤ Σ_j‖x_j‖²`).
+        ws.col_sq.clear();
+        ws.col_sq.resize(p, 0.0);
+        loss.x.col_sq_norms_into(&mut ws.col_sq);
+        ws.group_lip.clear();
+        ws.group_lip.resize(groups.m(), 0.0);
+        for (g, r) in groups.iter() {
+            let mx = ws.col_sq[r].iter().fold(0.0f64, |a, &b| a.max(b));
+            ws.group_lip[g] = (lip_factor * mx).max(1e-12);
+        }
+        ws.groups_active.clear();
+
+        Bcd {
+            loss,
+            penalty,
+            lambda,
+            cfg,
+            inv_n,
+            phase: Phase::Full,
+            since_refresh: 0,
+            iterations: 0,
+            converged: false,
+        }
+    }
+
+    fn step(&mut self, ws: &mut SolverWorkspace) {
+        self.iterations += 1;
+        self.since_refresh += 1;
+        if self.since_refresh >= REFRESH_EVERY {
+            // Re-anchor the carried fitted values on the exact matvec.
+            self.loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+            self.since_refresh = 0;
+        }
+        match self.phase {
+            Phase::Full => {
+                let m = self.penalty.pen_groups().m();
+                let mut dsq = 0.0;
+                for g in 0..m {
+                    dsq += self.update_block(g, ws);
+                }
+                if self.rel_change(dsq, ws) <= self.cfg.tol {
+                    // A clean full sweep certifies convergence.
+                    self.converged = true;
+                } else {
+                    self.phase = Phase::Active;
+                }
+            }
+            Phase::Active => {
+                // Active set re-read from the iterate each epoch (blocks
+                // the epoch zeroes out drop off; none can join until the
+                // certifying full sweep).
+                let groups = self.penalty.pen_groups();
+                ws.groups_active.clear();
+                for (g, r) in groups.iter() {
+                    if ws.beta[r].iter().any(|&b| b != 0.0) {
+                        ws.groups_active.push(g);
+                    }
+                }
+                let active = std::mem::take(&mut ws.groups_active);
+                let mut dsq = 0.0;
+                for &g in &active {
+                    dsq += self.update_block(g, ws);
+                }
+                ws.groups_active = active;
+                if self.rel_change(dsq, ws) <= self.cfg.tol {
+                    // Stable on the active set — certify with a full sweep.
+                    self.phase = Phase::Full;
+                }
+            }
+        }
+    }
+
+    fn converged(&self) -> bool {
+        self.converged
+    }
+
+    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
+        // `xb_beta` is carried in lock-step, so the objective needs no
+        // fresh matvec.
+        let objective =
+            self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta);
+        SolveResult {
+            beta: ws.beta.clone(),
+            iterations: self.iterations,
+            converged: self.converged,
+            objective,
+        }
+    }
+}
+
+impl<'a, P: ProxPenalty> Bcd<'a, P> {
+    /// Relative sweep movement `√(Σ_g‖Δβ_g‖²) / max(1, ‖β‖)` — the same
+    /// iterate-change criterion FISTA uses, accumulated per sweep.
+    fn rel_change(&self, sweep_dsq: f64, ws: &SolverWorkspace) -> f64 {
+        sweep_dsq.sqrt() / norm2(&ws.beta).max(1.0)
+    }
+
+    /// One proximal gradient update of block `g`, with backtracking growth
+    /// of `L_g` on the quadratic majorization. Returns `‖Δβ_g‖²`; leaves
+    /// `ws.beta` and the carried `ws.xb_beta` consistent.
+    fn update_block(&mut self, g: usize, ws: &mut SolverWorkspace) -> f64 {
+        let r = self.penalty.pen_groups().range(g);
+
+        // ∇_g f(β) through the carried fitted values: one residual pass
+        // plus one group-block transpose matvec.
+        self.loss.residual_from_xb(&ws.xb_beta, &mut ws.r);
+        self.loss.x.block_t_matvec_into(r.clone(), &ws.r, &mut ws.grad[r.clone()]);
+        for gj in ws.grad[r.clone()].iter_mut() {
+            *gj *= self.inv_n;
+        }
+
+        let mut bt = 0;
+        // Computed on first need: invariant across backtracking retries,
+        // and never needed for blocks that do not move (the common
+        // inactive-block case pays no O(n) loss evaluation).
+        let mut f_old = f64::NAN;
+        loop {
+            let step = 1.0 / ws.group_lip[g];
+            for ((c, &b), &gj) in ws.cand[r.clone()]
+                .iter_mut()
+                .zip(&ws.beta[r.clone()])
+                .zip(&ws.grad[r.clone()])
+            {
+                *c = b - step * gj;
+            }
+            self.penalty.pen_prox_block_into(
+                g,
+                &ws.cand[r.clone()],
+                step * self.lambda,
+                &mut ws.next[r.clone()],
+            );
+            // Δβ_g into the gradient-step buffer (its job is done).
+            let mut dsq = 0.0;
+            for ((c, &nb), &b) in ws.cand[r.clone()]
+                .iter_mut()
+                .zip(&ws.next[r.clone()])
+                .zip(&ws.beta[r.clone()])
+            {
+                let d = nb - b;
+                *c = d;
+                dsq += d * d;
+            }
+            if dsq == 0.0 {
+                // Fixed point (inactive block staying inactive is the
+                // common case): nothing moves, nothing to check.
+                return 0.0;
+            }
+
+            // Majorization check: f(β + Δ_g) ≤ f(β) + ⟨∇_g, Δ⟩ + L_g‖Δ‖²/2
+            // guarantees the prox step decreased the composite objective.
+            ws.xb_cand.copy_from_slice(&ws.xb_beta);
+            self.loss.x.block_axpy_into(r.clone(), &ws.cand[r.clone()], &mut ws.xb_cand);
+            if f_old.is_nan() {
+                f_old = self.loss.value_from_xb(&ws.xb_beta);
+            }
+            let f_new = self.loss.value_from_xb(&ws.xb_cand);
+            let ip = dot(&ws.grad[r.clone()], &ws.cand[r.clone()]);
+            let bound_ok = f_new
+                <= f_old + ip + 0.5 * ws.group_lip[g] * dsq + 1e-12 * f_old.abs().max(1.0);
+            if !bound_ok {
+                bt += 1;
+                if bt < self.cfg.max_backtrack {
+                    ws.group_lip[g] *= 2.0;
+                    continue;
+                }
+                // Backtracking exhausted: accept the latest candidate
+                // (mirrors FISTA's exhaustion behaviour).
+            }
+            ws.beta[r.clone()].copy_from_slice(&ws.next[r.clone()]);
+            std::mem::swap(&mut ws.xb_beta, &mut ws.xb_cand);
+            return dsq;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::groups::Groups;
+    use crate::linalg::Matrix;
+    use crate::loss::{Loss, LossKind};
+    use crate::penalty::Penalty;
+    use crate::rng::Rng;
+    use crate::solver::{SolverConfig, SolverKind, SolverWorkspace};
+
+    fn standardized(seed: u64, n: usize, p: usize) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::from_fn(n, p, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(n);
+        (x, y)
+    }
+
+    #[test]
+    fn bcd_matches_fista_on_random_problems() {
+        let mut seed = 20;
+        for trial in 0..5 {
+            seed += 1;
+            let p = 16;
+            let (x, y) = standardized(seed, 50, p);
+            let loss = Loss::new(LossKind::Squared, &x, &y);
+            let g = Groups::even(p, 4);
+            let pen = Penalty::sgl(g.clone(), 0.9);
+            let lam_max =
+                crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), &g, 0.9);
+            let lambda = 0.2 * lam_max;
+            let cfg_b = SolverConfig {
+                kind: SolverKind::Bcd,
+                tol: 1e-11,
+                max_iters: 100_000,
+                ..Default::default()
+            };
+            let cfg_f = SolverConfig { tol: 1e-11, max_iters: 100_000, ..Default::default() };
+            let rb = super::solve(&loss, &pen, lambda, &vec![0.0; p], &cfg_b);
+            let rf = crate::solver::fista::solve(&loss, &pen, lambda, &vec![0.0; p], &cfg_f);
+            assert!(rb.converged, "trial {trial}: BCD did not certify");
+            let d = crate::linalg::l2_distance(&rb.beta, &rf.beta);
+            assert!(d < 1e-8, "trial {trial}: BCD vs FISTA ℓ₂ = {d}");
+        }
+    }
+
+    #[test]
+    fn bcd_null_model_above_lambda_max() {
+        let p = 12;
+        let (x, y) = standardized(30, 40, p);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let g = Groups::even(p, 3);
+        let pen = Penalty::sgl(g.clone(), 0.95);
+        let lam_max = crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), &g, 0.95);
+        let cfg = SolverConfig { kind: SolverKind::Bcd, ..Default::default() };
+        let r = super::solve(&loss, &pen, 1.05 * lam_max, &vec![0.0; p], &cfg);
+        assert!(r.beta.iter().all(|&b| b == 0.0), "expected null model");
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn bcd_logistic_never_increases_objective() {
+        let mut rng = Rng::new(31);
+        let p = 12;
+        let mut x = Matrix::from_fn(60, p, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> =
+            (0..60).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let loss = Loss::new(LossKind::Logistic, &x, &y);
+        let pen = Penalty::sgl(Groups::even(p, 4), 0.9);
+        let cfg = SolverConfig { kind: SolverKind::Bcd, ..Default::default() };
+        for _ in 0..5 {
+            let b0: Vec<f64> = rng.gauss_vec(p).iter().map(|v| 0.3 * v).collect();
+            let r = super::solve(&loss, &pen, 0.05, &b0, &cfg);
+            let start = crate::solver::objective(&loss, &pen, 0.05, &b0);
+            assert!(r.objective <= start + 1e-10, "{} > {start}", r.objective);
+        }
+    }
+
+    #[test]
+    fn bcd_workspace_reuse_is_exact_and_carries_fitted_values() {
+        let p = 12;
+        let (x, y) = standardized(32, 40, p);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let pen = Penalty::sgl(Groups::even(p, 4), 0.9);
+        let cfg = SolverConfig { kind: SolverKind::Bcd, ..Default::default() };
+        let mut ws = SolverWorkspace::new();
+        // Dirty the workspace with a different-shaped solve first.
+        let (x2, _) = standardized(33, 40, 7);
+        let loss2 = Loss::new(LossKind::Squared, &x2, &y);
+        let pen2 = Penalty::sgl(Groups::even(7, 2), 0.9);
+        super::solve_ws(&loss2, &pen2, 0.05, &vec![0.0; 7], &cfg, &mut ws);
+
+        let reused = super::solve_ws(&loss, &pen, 0.05, &vec![0.0; p], &cfg, &mut ws);
+        let fresh = super::solve(&loss, &pen, 0.05, &vec![0.0; p], &cfg);
+        assert_eq!(reused.beta, fresh.beta, "dirty workspace changed BCD result");
+        assert_eq!(reused.iterations, fresh.iterations);
+        let xb = x.matvec(&reused.beta);
+        for (a, b) in ws.fitted().iter().zip(&xb) {
+            assert!((a - b).abs() < 1e-10, "carried fitted values out of sync");
+        }
+    }
+
+    #[test]
+    fn bcd_warm_start_certifies_quickly() {
+        let p = 20;
+        let (x, y) = standardized(34, 60, p);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let g = Groups::even(p, 5);
+        let pen = Penalty::sgl(g.clone(), 0.9);
+        let lam_max = crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), &g, 0.9);
+        let cfg = SolverConfig { kind: SolverKind::Bcd, tol: 1e-9, ..Default::default() };
+        let cold = super::solve(&loss, &pen, 0.3 * lam_max, &vec![0.0; p], &cfg);
+        let warm = super::solve(&loss, &pen, 0.3 * lam_max, &cold.beta, &cfg);
+        assert!(
+            warm.iterations < cold.iterations.max(2),
+            "warm {} vs cold {} sweeps",
+            warm.iterations,
+            cold.iterations
+        );
+        let d = crate::linalg::l2_distance(&warm.beta, &cold.beta);
+        assert!(d <= 1e-8, "warm restart moved the solution: ℓ₂ = {d}");
+    }
+}

@@ -2,7 +2,8 @@
 //! the exact sparse-group prox.
 //!
 //! Classical Beck–Teboulle iteration with the standard restart-free
-//! momentum sequence. The step size starts at `1/L̂` from a power-iteration
+//! momentum sequence, packaged as the [`Fista`] state machine behind the
+//! [`Solver`] trait. The step size starts at `1/L̂` from a power-iteration
 //! Lipschitz estimate (or the warm-started previous step) and backtracks by
 //! the paper's factor 0.7 whenever the quadratic upper bound is violated.
 //!
@@ -12,7 +13,7 @@
 //! swaps, and the candidate's fitted values `Xβ` are carried so the loss is
 //! never evaluated through a fresh `Xβ` allocation.
 
-use super::{ProxPenalty, SolveResult, SolverConfig, SolverWorkspace};
+use super::{ProxPenalty, SolveResult, Solver, SolverConfig, SolverWorkspace};
 use crate::linalg::{dot, l2_distance};
 use crate::loss::Loss;
 
@@ -37,50 +38,86 @@ pub fn solve_ws<P: ProxPenalty>(
     cfg: &SolverConfig,
     ws: &mut SolverWorkspace,
 ) -> SolveResult {
-    let p = beta0.len();
-    let n = loss.n();
-    debug_assert_eq!(p, loss.x.ncols());
-    ws.resize(n, p);
-    ws.beta.copy_from_slice(beta0);
-    ws.beta_prev.copy_from_slice(beta0);
-    ws.z.copy_from_slice(beta0);
-    let mut t = 1.0f64;
+    super::drive::<P, Fista<P>>(loss, penalty, lambda, beta0, cfg, ws)
+}
 
-    // Initial step: inverse Lipschitz estimate (backtracking will correct).
-    let lip = loss.lipschitz_bound().max(1e-12);
-    let mut step = 1.0 / lip;
+/// FISTA iteration state (everything vector-shaped lives in the
+/// workspace; this holds only the scalars that persist across steps).
+pub struct Fista<'a, P: ProxPenalty> {
+    loss: &'a Loss<'a>,
+    penalty: &'a P,
+    lambda: f64,
+    cfg: &'a SolverConfig,
+    /// Momentum scalar `t_k`.
+    t: f64,
+    /// Current step size (monotone non-increasing under backtracking).
+    step: f64,
+    threads: usize,
+    inv_n: f64,
+    iterations: usize,
+    converged: bool,
+}
 
-    // Fitted values at the warm start (zero coordinates are skipped, so a
-    // sparse warm start costs O(n·nnz)); kept in lock-step with `beta` so
-    // the final objective needs no fresh `Xβ`.
-    loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
+    fn init(
+        loss: &'a Loss<'a>,
+        penalty: &'a P,
+        lambda: f64,
+        beta0: &[f64],
+        cfg: &'a SolverConfig,
+        ws: &mut SolverWorkspace,
+    ) -> Self {
+        let p = beta0.len();
+        let n = loss.n();
+        debug_assert_eq!(p, loss.x.ncols());
+        ws.resize(n, p);
+        ws.beta.copy_from_slice(beta0);
+        ws.beta_prev.copy_from_slice(beta0);
+        ws.z.copy_from_slice(beta0);
 
-    let threads = crate::parallel::default_threads();
-    let inv_n = 1.0 / n as f64;
-    let mut iterations = 0;
-    let mut converged = false;
+        // Initial step: inverse Lipschitz estimate (backtracking corrects).
+        let lip = loss.lipschitz_bound().max(1e-12);
 
-    for it in 0..cfg.max_iters {
-        iterations = it + 1;
+        // Fitted values at the warm start (zero coordinates are skipped, so
+        // a sparse warm start costs O(n·nnz)); kept in lock-step with
+        // `beta` so the final objective needs no fresh `Xβ`.
+        loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+
+        Fista {
+            loss,
+            penalty,
+            lambda,
+            cfg,
+            t: 1.0,
+            step: 1.0 / lip,
+            threads: crate::parallel::default_threads(),
+            inv_n: 1.0 / n as f64,
+            iterations: 0,
+            converged: false,
+        }
+    }
+
+    fn step(&mut self, ws: &mut SolverWorkspace) {
+        self.iterations += 1;
         // Gradient at the extrapolated point z.
-        loss.x.matvec_into(&ws.z, &mut ws.xb);
-        let fz = loss.value_from_xb(&ws.xb);
-        loss.residual_from_xb(&ws.xb, &mut ws.r);
-        loss.x.t_matvec_par_into(&ws.r, threads, &mut ws.grad);
+        self.loss.x.matvec_into(&ws.z, &mut ws.xb);
+        let fz = self.loss.value_from_xb(&ws.xb);
+        self.loss.residual_from_xb(&ws.xb, &mut ws.r);
+        self.loss.x.t_matvec_par_into(&ws.r, self.threads, &mut ws.grad);
         for g in ws.grad.iter_mut() {
-            *g *= inv_n;
+            *g *= self.inv_n;
         }
 
         // Backtracking on the composite upper bound.
         let mut bt = 0;
         loop {
             for ((c, &zj), &gj) in ws.cand.iter_mut().zip(&ws.z).zip(&ws.grad) {
-                *c = zj - step * gj;
+                *c = zj - self.step * gj;
             }
-            penalty.pen_prox_into(&ws.cand, step * lambda, &mut ws.next);
+            self.penalty.pen_prox_into(&ws.cand, self.step * self.lambda, &mut ws.next);
             // Quadratic bound check: f(next) ≤ f(z) + ⟨∇f(z), d⟩ + ‖d‖²/(2·step).
-            loss.x.matvec_into(&ws.next, &mut ws.xb_cand);
-            let fnext = loss.value_from_xb(&ws.xb_cand);
+            self.loss.x.matvec_into(&ws.next, &mut ws.xb_cand);
+            let fnext = self.loss.value_from_xb(&ws.xb_cand);
             let mut ip = 0.0;
             let mut dsq = 0.0;
             for ((&nj, &zj), &gj) in ws.next.iter().zip(&ws.z).zip(&ws.grad) {
@@ -89,11 +126,11 @@ pub fn solve_ws<P: ProxPenalty>(
                 dsq += d * d;
             }
             let bound_ok =
-                fnext <= fz + ip + dsq / (2.0 * step) + 1e-12 * fz.abs().max(1.0);
+                fnext <= fz + ip + dsq / (2.0 * self.step) + 1e-12 * fz.abs().max(1.0);
             if !bound_ok {
                 bt += 1;
-                if bt < cfg.max_backtrack {
-                    step *= cfg.backtrack;
+                if bt < self.cfg.max_backtrack {
+                    self.step *= self.cfg.backtrack;
                     continue;
                 }
                 // Backtracking exhausted: accept the latest candidate.
@@ -107,25 +144,36 @@ pub fn solve_ws<P: ProxPenalty>(
         }
 
         // Momentum update.
-        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
-        let mom = (t - 1.0) / t_next;
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * self.t * self.t).sqrt());
+        let mom = (self.t - 1.0) / t_next;
         for ((zj, &bj), &pj) in ws.z.iter_mut().zip(&ws.beta).zip(&ws.beta_prev) {
             *zj = bj + mom * (bj - pj);
         }
-        t = t_next;
+        self.t = t_next;
 
         // Convergence: relative change in iterates (paper's tol 1e-5).
         let num = l2_distance(&ws.beta, &ws.beta_prev);
         let den = dot(&ws.beta, &ws.beta).sqrt().max(1.0);
-        if num / den <= cfg.tol {
-            converged = true;
-            break;
+        if num / den <= self.cfg.tol {
+            self.converged = true;
         }
     }
 
-    // `xb_beta` tracks `beta` exactly, so the objective costs no matvec.
-    let objective = loss.value_from_xb(&ws.xb_beta) + lambda * penalty.pen_value(&ws.beta);
-    SolveResult { beta: ws.beta.clone(), iterations, converged, objective }
+    fn converged(&self) -> bool {
+        self.converged
+    }
+
+    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
+        // `xb_beta` tracks `beta` exactly, so the objective costs no matvec.
+        let objective =
+            self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta);
+        SolveResult {
+            beta: ws.beta.clone(),
+            iterations: self.iterations,
+            converged: self.converged,
+            objective,
+        }
+    }
 }
 
 #[cfg(test)]

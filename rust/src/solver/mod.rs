@@ -1,33 +1,56 @@
-//! Inner solvers for the SGL / aSGL optimization (Eq. 1).
+//! Inner solvers for the SGL / aSGL optimization (Eq. 1) — a solver
+//! *subsystem* behind the step-driven [`Solver`] trait.
 //!
-//! Two algorithms, both warm-startable and with backtracking line search:
+//! Three algorithms, all warm-startable, all holding their per-iteration
+//! state in a caller-provided [`SolverWorkspace`]:
 //!
 //! * [`fista`] — accelerated proximal gradient with the *exact* sparse-group
-//!   prox (soft-threshold → group-shrink). Default engine: the exact prox
-//!   makes it both faster and more accurate than splitting for this
-//!   penalty.
+//!   prox (soft-threshold → group-shrink) and backtracking line search.
+//!   Default engine: the exact prox makes it both faster and more accurate
+//!   than splitting for this penalty.
 //! * [`atos`] — Adaptive Three Operator Splitting (Pedregosa & Gidel,
 //!   2018), the algorithm the paper's experiments use; splits the penalty
 //!   into its ℓ1 and group-ℓ2 parts, each with a closed-form prox.
+//! * [`bcd`] — proximal block-coordinate descent in the style of the
+//!   `sparsegl` solver (Liang et al. '22) and the Friedman–Hastie–
+//!   Tibshirani note: cycles over groups with per-group Lipschitz
+//!   constants, residual-carried block updates through the
+//!   [`crate::linalg::DesignRef`] block kernels, and an active-group epoch
+//!   schedule (full sweep → active epochs → certifying full sweep).
 //!
-//! Screening is solver-agnostic (the paper stresses DFR works with any
-//! fitting algorithm); the pathwise coordinator takes [`SolverKind`] as a
-//! parameter and the benches pin one solver across all rules so
-//! improvement factors are solver-independent.
+//! Each algorithm is a state machine implementing [`Solver`]
+//! (`init` from workspace → `step` → `converged` → `extract`); [`drive`]
+//! is the shared iteration driver and [`solve_ws`] dispatches a
+//! [`SolverKind`] through it. Screening is solver-agnostic (the paper
+//! stresses DFR works with any fitting algorithm); the pathwise
+//! coordinator takes [`SolverKind`] as a parameter and the benches pin one
+//! solver across all rules so improvement factors are solver-independent.
 
 pub mod atos;
+pub mod bcd;
 pub mod fista;
 
+use crate::groups::Groups;
 use crate::loss::Loss;
 use crate::penalty::{Penalty, RestrictedPenalty};
 
 /// Penalty interface the solvers need. Implemented by the full [`Penalty`]
 /// and by [`RestrictedPenalty`] (screening-reduced problems).
+///
+/// The block accessors expose the grouping that tiles the coordinate
+/// vector and the exact prox of one group's block — the contract the BCD
+/// solver cycles over (whole-vector solvers ignore them).
 pub trait ProxPenalty {
     fn pen_value(&self, beta: &[f64]) -> f64;
     fn pen_prox_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]);
     fn pen_prox_l1_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]);
     fn pen_prox_group_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]);
+    /// Grouping structure the penalty is defined over; its blocks tile the
+    /// coordinate vector exactly.
+    fn pen_groups(&self) -> &Groups;
+    /// Exact prox restricted to group `g`'s block (`z`/`out` are the block
+    /// slices of length `p_g`).
+    fn pen_prox_block_into(&self, g: usize, z: &[f64], t_lambda: f64, out: &mut [f64]);
 }
 
 impl ProxPenalty for Penalty {
@@ -42,6 +65,12 @@ impl ProxPenalty for Penalty {
     }
     fn pen_prox_group_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
         self.prox_group_into(z, t_lambda, out)
+    }
+    fn pen_groups(&self) -> &Groups {
+        &self.groups
+    }
+    fn pen_prox_block_into(&self, g: usize, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        self.prox_block_into(g, z, t_lambda, out)
     }
 }
 
@@ -58,6 +87,12 @@ impl ProxPenalty for RestrictedPenalty {
     fn pen_prox_group_into(&self, z: &[f64], t_lambda: f64, out: &mut [f64]) {
         self.prox_group_into(z, t_lambda, out)
     }
+    fn pen_groups(&self) -> &Groups {
+        &self.groups
+    }
+    fn pen_prox_block_into(&self, g: usize, z: &[f64], t_lambda: f64, out: &mut [f64]) {
+        self.prox_block_into(g, z, t_lambda, out)
+    }
 }
 
 /// Choice of inner solver.
@@ -65,6 +100,29 @@ impl ProxPenalty for RestrictedPenalty {
 pub enum SolverKind {
     Fista,
     Atos,
+    /// Group-major proximal block-coordinate descent ([`bcd`]).
+    Bcd,
+}
+
+impl SolverKind {
+    /// CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Fista => "fista",
+            SolverKind::Atos => "atos",
+            SolverKind::Bcd => "bcd",
+        }
+    }
+
+    /// Parse a CLI-style solver name (`fista` | `atos` | `bcd`).
+    pub fn parse(s: &str) -> Result<SolverKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "fista" => Ok(SolverKind::Fista),
+            "atos" => Ok(SolverKind::Atos),
+            "bcd" | "blockcd" | "block-cd" => Ok(SolverKind::Bcd),
+            other => Err(format!("unknown solver `{other}` (fista|atos|bcd)")),
+        }
+    }
 }
 
 /// Solver settings; defaults follow Table A1's algorithm block
@@ -131,6 +189,14 @@ pub struct SolverWorkspace {
     pub(crate) beta_prev: Vec<f64>,
     /// Extrapolated / splitting state.
     pub(crate) z: Vec<f64>,
+    /// BCD: squared ℓ₂ norm of every design column (length p), cached once
+    /// per solve from [`crate::linalg::DesignRef::col_sq_norms_into`].
+    pub(crate) col_sq: Vec<f64>,
+    /// BCD: per-group block Lipschitz estimates (length m), seeded from
+    /// the column-norm cache and grown in place by per-block backtracking.
+    pub(crate) group_lip: Vec<f64>,
+    /// BCD: the active-group list of the current epoch.
+    pub(crate) groups_active: Vec<usize>,
 }
 
 impl SolverWorkspace {
@@ -167,6 +233,56 @@ impl SolverWorkspace {
     }
 }
 
+/// One inner algorithm as a step-driven state machine.
+///
+/// The lifecycle is fixed by [`drive`]: `init` sizes the workspace and
+/// builds iteration state from the warm start, `step` advances one
+/// iteration (one group sweep for BCD), `converged` reports the stopping
+/// test, and `extract` packages the final iterate — whose fitted values
+/// `Xβ` every implementation must leave in `ws.xb_beta` (the pathwise
+/// coordinator's residual-carry contract, see
+/// [`SolverWorkspace::fitted`]).
+pub trait Solver<'a, P: ProxPenalty>: Sized {
+    /// Build iteration state in `ws` from the warm start `beta0`.
+    fn init(
+        loss: &'a Loss<'a>,
+        penalty: &'a P,
+        lambda: f64,
+        beta0: &[f64],
+        cfg: &'a SolverConfig,
+        ws: &mut SolverWorkspace,
+    ) -> Self;
+
+    /// Advance one iteration.
+    fn step(&mut self, ws: &mut SolverWorkspace);
+
+    /// Has the stopping criterion been met?
+    fn converged(&self) -> bool;
+
+    /// Package the final iterate held in `ws`.
+    fn extract(&self, ws: &SolverWorkspace) -> SolveResult;
+}
+
+/// The shared iteration driver: `init`, then `step` until `converged` or
+/// `cfg.max_iters`, then `extract`.
+pub fn drive<'a, P: ProxPenalty, S: Solver<'a, P>>(
+    loss: &'a Loss<'a>,
+    penalty: &'a P,
+    lambda: f64,
+    beta0: &[f64],
+    cfg: &'a SolverConfig,
+    ws: &mut SolverWorkspace,
+) -> SolveResult {
+    let mut state = S::init(loss, penalty, lambda, beta0, cfg, ws);
+    for _ in 0..cfg.max_iters {
+        state.step(ws);
+        if state.converged() {
+            break;
+        }
+    }
+    state.extract(ws)
+}
+
 /// Solve `min f(β) + λ·Ω(β)` from the warm start `beta0` (allocates a
 /// one-shot workspace; hot paths should hold a [`SolverWorkspace`] and call
 /// [`solve_ws`]).
@@ -182,6 +298,7 @@ pub fn solve<P: ProxPenalty>(
 }
 
 /// Solve with caller-provided buffers — the zero-allocation pathwise form.
+/// Dispatches `cfg.kind` through the [`Solver`] trait via [`drive`].
 pub fn solve_ws<P: ProxPenalty>(
     loss: &Loss,
     penalty: &P,
@@ -191,12 +308,13 @@ pub fn solve_ws<P: ProxPenalty>(
     ws: &mut SolverWorkspace,
 ) -> SolveResult {
     match cfg.kind {
-        SolverKind::Fista => fista::solve_ws(loss, penalty, lambda, beta0, cfg, ws),
-        SolverKind::Atos => atos::solve_ws(loss, penalty, lambda, beta0, cfg, ws),
+        SolverKind::Fista => drive::<P, fista::Fista<P>>(loss, penalty, lambda, beta0, cfg, ws),
+        SolverKind::Atos => drive::<P, atos::Atos<P>>(loss, penalty, lambda, beta0, cfg, ws),
+        SolverKind::Bcd => drive::<P, bcd::Bcd<P>>(loss, penalty, lambda, beta0, cfg, ws),
     }
 }
 
-/// Primal objective — shared by both solvers and the tests.
+/// Primal objective — shared by every solver and the tests.
 pub fn objective<P: ProxPenalty>(loss: &Loss, penalty: &P, lambda: f64, beta: &[f64]) -> f64 {
     loss.value(beta) + lambda * penalty.pen_value(beta)
 }

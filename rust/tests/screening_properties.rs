@@ -8,10 +8,13 @@
 //! * α ∈ {0, 1} reductions (Appendix A.4),
 //! * λ₁ is the exact entry point of the first predictor (Appendix A.3).
 
+use dfr::linalg::{CenteredSparse, CscMatrix, Matrix, ReducedDesign};
 use dfr::loss::{Loss, LossKind};
 use dfr::norms::{eps_g, epsilon_norm, tau_g};
 use dfr::path::lambda_max;
 use dfr::penalty::Penalty;
+use dfr::prelude::Groups;
+use dfr::rng::Rng;
 use dfr::screen::dfr::screen_theoretical;
 use dfr::solver::{solve, SolverConfig};
 use dfr::testkit::{check, random_problem};
@@ -157,6 +160,98 @@ fn epsilon_norm_alpha_limits() {
             Ok(())
         },
     );
+}
+
+/// A random grouped design plus a random sorted non-empty variable
+/// subset — the input shape of every screening-reduced gather.
+fn random_reduction(rng: &mut Rng) -> (Matrix, Groups, Vec<usize>) {
+    let sizes = Groups::random_sizes(20 + rng.below(60), 2, 9, rng);
+    let groups = Groups::from_sizes(&sizes);
+    let p = groups.p();
+    let n = 10 + rng.below(20);
+    let x = Matrix::from_fn(n, p, |_, _| rng.gauss());
+    let mut idx: Vec<usize> = (0..p).filter(|_| rng.bernoulli(0.4)).collect();
+    if idx.is_empty() {
+        idx.push(rng.below(p));
+    }
+    (x, groups, idx)
+}
+
+/// Validate one recorded offset list against the subset it was built for:
+/// the blocks must tile `[0, idx.len())` exactly (start 0, sentinel at the
+/// end, no empty blocks), each block must draw from a single original
+/// group, consecutive blocks from different ones — and the whole list must
+/// equal the restricted penalty's group offsets.
+fn offsets_tile_exactly(
+    offsets: &[usize],
+    idx: &[usize],
+    groups: &Groups,
+) -> Result<(), String> {
+    if offsets.first() != Some(&0) || offsets.last() != Some(&idx.len()) {
+        return Err(format!("offsets {offsets:?} do not span [0, {}]", idx.len()));
+    }
+    if offsets.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(format!("offsets {offsets:?} contain an empty or inverted block"));
+    }
+    for w in offsets.windows(2) {
+        let block = &idx[w[0]..w[1]];
+        let g0 = groups.group_of(block[0]);
+        if block.iter().any(|&j| groups.group_of(j) != g0) {
+            return Err(format!("block {block:?} mixes original groups"));
+        }
+    }
+    for w in offsets.windows(3) {
+        if groups.group_of(idx[w[0]]) == groups.group_of(idx[w[1]]) {
+            return Err("consecutive blocks share an original group".into());
+        }
+    }
+    let (restricted, _) = groups.restrict(idx);
+    if restricted.offsets() != offsets {
+        return Err(format!(
+            "offsets {offsets:?} disagree with Groups::restrict {:?}",
+            restricted.offsets()
+        ));
+    }
+    Ok(())
+}
+
+/// Reduced group-block offsets always tile the reduced design exactly —
+/// dense sources, including across incremental (prefix-reusing) updates.
+#[test]
+fn reduced_group_offsets_tile_dense() {
+    check("reduced-offsets-dense", 25, random_reduction, |(x, groups, idx)| {
+        let mut red = ReducedDesign::new();
+        let ncols = red.update_grouped(x, idx, groups).ncols();
+        if ncols != idx.len() {
+            return Err(format!("gathered {ncols} columns for {} indices", idx.len()));
+        }
+        offsets_tile_exactly(red.group_offsets(), idx, groups)?;
+        // Incremental update: grow the subset (shared sorted prefix keeps
+        // columns in place) and the offsets must still tile exactly.
+        let mut grown = idx.clone();
+        for j in 0..groups.p() {
+            if !grown.contains(&j) && j % 3 == 0 {
+                grown.push(j);
+            }
+        }
+        grown.sort_unstable();
+        red.update_grouped(x, &grown, groups);
+        offsets_tile_exactly(red.group_offsets(), &grown, groups)
+    });
+}
+
+/// The same tiling property through the centered-implicit sparse gather.
+#[test]
+fn reduced_group_offsets_tile_sparse() {
+    check("reduced-offsets-sparse", 15, random_reduction, |(x, groups, idx)| {
+        let sparse = CenteredSparse::from_csc(&CscMatrix::from_dense(x, 0.5));
+        let mut red = ReducedDesign::new();
+        let ncols = red.update_grouped(&sparse, idx, groups).ncols();
+        if ncols != idx.len() {
+            return Err(format!("gathered {ncols} sparse columns for {}", idx.len()));
+        }
+        offsets_tile_exactly(red.group_offsets(), idx, groups)
+    });
 }
 
 /// λ₁ = ‖∇f(0)‖*_sgl is exactly the entry point of the first predictor.

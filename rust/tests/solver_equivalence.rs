@@ -1,0 +1,260 @@
+//! Solver-subsystem equivalence gates: the three inner solvers behind the
+//! [`dfr::solver::Solver`] trait — FISTA, ATOS, and the group-major
+//! block-coordinate solver (BCD) — must reach the same solutions to
+//! ℓ₂ ≤ 1e-8 across every screening rule (DFR, sparsegl, GAP-safe
+//! seq/dyn, DFR-aSGL), both loss families, dense and centered-implicit
+//! sparse kernels, pathwise and at a single λ. The sparse BCD runs must
+//! never materialize an n×p dense design (the thread-local witness
+//! counter), and the default [`SolverKind`] stays FISTA so existing
+//! results are bit-stable.
+
+use dfr::data::{Dataset, Response};
+use dfr::linalg::{dense_materializations, CenteredSparse, CscMatrix, DesignOps};
+use dfr::loss::{Loss, LossKind};
+use dfr::path::{PathConfig, PathFit, PathRunner};
+use dfr::penalty::Penalty;
+use dfr::prelude::Groups;
+use dfr::rng::Rng;
+use dfr::screen::RuleKind;
+use dfr::solver::{solve, SolverConfig, SolverKind};
+
+/// Genotype-like CSC design (mostly implicit zeros); `n > p` keeps the
+/// squared loss strictly convex so all solvers share a unique optimum.
+fn genotype(seed: u64, n: usize, p: usize) -> CscMatrix {
+    let mut rng = Rng::new(seed);
+    let mut col_ptr = vec![0usize];
+    let mut row_idx = Vec::new();
+    let mut values = Vec::new();
+    for _ in 0..p {
+        let maf = 0.05 + 0.10 * rng.uniform();
+        for i in 0..n {
+            let dosage = (rng.bernoulli(maf) as u8 + rng.bernoulli(maf) as u8) as f64;
+            if dosage > 0.0 {
+                row_idx.push(i);
+                values.push(dosage);
+            }
+        }
+        col_ptr.push(row_idx.len());
+    }
+    CscMatrix::new(n, p, col_ptr, row_idx, values)
+}
+
+fn response(geno: &CscMatrix, seed: u64, kind: Response) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xB0CD);
+    let p = geno.ncols();
+    let beta_true: Vec<f64> =
+        (0..p).map(|j| if j % 7 == 0 { rng.normal(0.0, 1.5) } else { 0.0 }).collect();
+    let xb = geno.matvec(&beta_true);
+    match kind {
+        Response::Linear => xb.iter().map(|v| v + rng.normal(0.0, 0.3)).collect(),
+        Response::Logistic => {
+            let mean = xb.iter().sum::<f64>() / xb.len() as f64;
+            xb.iter()
+                .map(|v| if v - mean + rng.normal(0.0, 0.3) > 0.0 { 1.0 } else { 0.0 })
+                .collect()
+        }
+    }
+}
+
+/// The same problem as a dense-kernel and a sparse-kernel [`Dataset`].
+fn paired_datasets(seed: u64, kind: Response) -> (Dataset, Dataset) {
+    let (n, p, gsize) = (60usize, 40usize, 5usize);
+    let geno = genotype(seed, n, p);
+    let mut y = response(&geno, seed, kind);
+    if kind == Response::Linear {
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        y.iter_mut().for_each(|v| *v -= mean);
+    }
+    let groups = Groups::from_sizes(&vec![gsize; p / gsize]);
+    let (dense_std, _) = geno.to_standardized_dense();
+    let sparse = CenteredSparse::from_csc(&geno);
+    let dense_ds = Dataset {
+        x: dense_std.into(),
+        y: y.clone(),
+        groups: groups.clone(),
+        response: kind,
+        name: "solver-eq-dense".into(),
+    };
+    let sparse_ds = Dataset {
+        x: DesignOps::Sparse(sparse),
+        y,
+        groups,
+        response: kind,
+        name: "solver-eq-sparse".into(),
+    };
+    (dense_ds, sparse_ds)
+}
+
+/// Solver settings tight enough that cross-algorithm distance measures
+/// the shared optimum, not stopping-rule slack.
+fn cfg(kind: SolverKind) -> PathConfig {
+    PathConfig {
+        path_len: 8,
+        solver: SolverConfig { kind, tol: 1e-12, max_iters: 200_000, ..Default::default() },
+        ..PathConfig::default()
+    }
+}
+
+const SOLVERS: [SolverKind; 3] = [SolverKind::Fista, SolverKind::Atos, SolverKind::Bcd];
+
+const RULES: [RuleKind; 4] = [
+    RuleKind::DfrSgl,
+    RuleKind::Sparsegl,
+    RuleKind::GapSafeSeq,
+    RuleKind::GapSafeDyn,
+];
+
+/// Pathwise fits of `ds` with each solver on one shared λ grid (derived by
+/// the first solver), asserting pairwise agreement against the first.
+fn assert_pathwise_agreement(ds: &Dataset, rule: RuleKind, adaptive: Option<(f64, f64)>) {
+    let mut reference: Option<PathFit> = None;
+    for kind in SOLVERS {
+        let mut c = cfg(kind);
+        c.adaptive = adaptive;
+        let mut runner = PathRunner::new(ds, c).rule(rule);
+        if let Some(r) = &reference {
+            runner = runner.fixed_path(r.lambdas.clone());
+        }
+        let fit = runner.run().unwrap();
+        if let Some(r) = &reference {
+            let d = fit.l2_distance_to(r);
+            assert!(
+                d <= 1e-8,
+                "{} vs fista on {} ({:?}): ℓ₂ = {d}",
+                kind.name(),
+                rule.name(),
+                ds.response
+            );
+        } else {
+            reference = Some(fit);
+        }
+    }
+}
+
+#[test]
+fn pathwise_dense_linear_all_rules() {
+    let (dense_ds, _) = paired_datasets(1, Response::Linear);
+    for rule in RULES {
+        assert_pathwise_agreement(&dense_ds, rule, None);
+    }
+}
+
+#[test]
+fn pathwise_dense_logistic_all_rules() {
+    let (dense_ds, _) = paired_datasets(2, Response::Logistic);
+    for rule in RULES {
+        assert_pathwise_agreement(&dense_ds, rule, None);
+    }
+}
+
+#[test]
+fn pathwise_dense_asgl_both_losses() {
+    for (seed, kind) in [(3, Response::Linear), (4, Response::Logistic)] {
+        let (dense_ds, _) = paired_datasets(seed, kind);
+        assert_pathwise_agreement(&dense_ds, RuleKind::DfrAsgl, Some((0.1, 0.1)));
+    }
+}
+
+/// Sparse-kernel pathwise runs agree across solvers AND never densify —
+/// BCD's block kernels run centered-implicit end to end.
+#[test]
+fn pathwise_sparse_agrees_and_never_materializes() {
+    for (seed, kind) in [(5, Response::Linear), (6, Response::Logistic)] {
+        let (_, sparse_ds) = paired_datasets(seed, kind);
+        for rule in RULES {
+            let before = dense_materializations();
+            assert_pathwise_agreement(&sparse_ds, rule, None);
+            assert_eq!(
+                dense_materializations(),
+                before,
+                "{} {kind:?}: sparse solver run materialized a dense design",
+                rule.name()
+            );
+        }
+    }
+}
+
+/// Sparse BCD matches the *dense* FISTA solution — cross-kernel AND
+/// cross-solver at once.
+#[test]
+fn sparse_bcd_matches_dense_fista() {
+    for (seed, kind) in [(7, Response::Linear), (8, Response::Logistic)] {
+        let (dense_ds, sparse_ds) = paired_datasets(seed, kind);
+        let fista = PathRunner::new(&dense_ds, cfg(SolverKind::Fista))
+            .rule(RuleKind::DfrSgl)
+            .run()
+            .unwrap();
+        let bcd = PathRunner::new(&sparse_ds, cfg(SolverKind::Bcd))
+            .rule(RuleKind::DfrSgl)
+            .fixed_path(fista.lambdas.clone())
+            .run()
+            .unwrap();
+        let d = bcd.l2_distance_to(&fista);
+        assert!(d <= 1e-8, "{kind:?}: sparse BCD vs dense FISTA ℓ₂ = {d}");
+    }
+}
+
+/// Single-λ equivalence on the raw solver entry points, both losses,
+/// dense and sparse kernels (sparse with the densification witness).
+#[test]
+fn single_lambda_all_solvers_both_losses_both_kernels() {
+    for (seed, resp, lk) in [
+        (9, Response::Linear, LossKind::Squared),
+        (10, Response::Logistic, LossKind::Logistic),
+    ] {
+        let (dense_ds, sparse_ds) = paired_datasets(seed, resp);
+        let p = dense_ds.p();
+        let pen = Penalty::sgl(dense_ds.groups.clone(), 0.95);
+        let tight = |kind| SolverConfig {
+            kind,
+            tol: 1e-12,
+            max_iters: 200_000,
+            ..Default::default()
+        };
+
+        let dense_loss = Loss::new(lk, dense_ds.x.view(), &dense_ds.y);
+        let lam_max = crate_lambda_max(&pen, &dense_loss, p);
+        let lam = 0.3 * lam_max;
+        let fista = solve(&dense_loss, &pen, lam, &vec![0.0; p], &tight(SolverKind::Fista));
+        for kind in [SolverKind::Atos, SolverKind::Bcd] {
+            let r = solve(&dense_loss, &pen, lam, &vec![0.0; p], &tight(kind));
+            let d = dfr::linalg::l2_distance(&r.beta, &fista.beta);
+            assert!(d <= 1e-8, "{} dense {resp:?}: ℓ₂ = {d}", kind.name());
+        }
+
+        let sparse_loss = Loss::new(lk, sparse_ds.x.view(), &sparse_ds.y);
+        let before = dense_materializations();
+        for kind in SOLVERS {
+            let r = solve(&sparse_loss, &pen, lam, &vec![0.0; p], &tight(kind));
+            let d = dfr::linalg::l2_distance(&r.beta, &fista.beta);
+            assert!(d <= 1e-8, "{} sparse {resp:?}: ℓ₂ = {d}", kind.name());
+        }
+        assert_eq!(
+            dense_materializations(),
+            before,
+            "single-λ sparse solves materialized a dense design"
+        );
+    }
+}
+
+fn crate_lambda_max(pen: &Penalty, loss: &Loss, p: usize) -> f64 {
+    dfr::path::lambda_max(pen, &loss.gradient(&vec![0.0; p]))
+}
+
+/// Bit-stability guard: the default solver stays FISTA everywhere a
+/// default config is built.
+#[test]
+fn default_solver_kind_is_fista() {
+    assert_eq!(SolverConfig::default().kind, SolverKind::Fista);
+    assert_eq!(PathConfig::default().solver.kind, SolverKind::Fista);
+    assert_eq!(
+        dfr::model_api::SglModel::default().path.solver.kind,
+        SolverKind::Fista
+    );
+    assert_eq!(
+        dfr::model_api::SglModel::default().with_solver(SolverKind::Bcd).path.solver.kind,
+        SolverKind::Bcd
+    );
+    assert_eq!(SolverKind::parse("bcd").unwrap(), SolverKind::Bcd);
+    assert!(SolverKind::parse("newton").is_err());
+}

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Run one named bench and snapshot its machine-readable results to the
+# repository root, so the cross-PR perf trajectory (docs/BENCHMARKS.md)
+# actually accumulates committed BENCH_<name>.json files.
+#
+# Usage:
+#   scripts/bench_snapshot.sh <bench-name> [extra cargo bench args...]
+#
+# Examples:
+#   scripts/bench_snapshot.sh ablation_solver
+#   DFR_BENCH_FULL=1 scripts/bench_snapshot.sh perf_hotpath
+#
+# The bench binary writes target/bench_results/BENCH_<name>.json (see
+# src/bench_harness.rs); this script copies it to ./BENCH_<name>.json for
+# committing alongside the change that produced it.
+
+set -euo pipefail
+
+name="${1:?usage: scripts/bench_snapshot.sh <bench-name> [cargo bench args...]}"
+shift || true
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+
+(cd "$root/rust" && cargo bench --bench "$name" "$@")
+
+src="$root/rust/target/bench_results/BENCH_${name}.json"
+if [[ ! -f "$src" ]]; then
+    echo "error: $src not found — did the bench call BenchTable::finish(\"$name\")?" >&2
+    exit 1
+fi
+
+cp "$src" "$root/BENCH_${name}.json"
+echo "snapshot: BENCH_${name}.json ($(wc -c <"$root/BENCH_${name}.json") bytes)"
