@@ -99,18 +99,28 @@ pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
 }
 
 /// Parse a comma-separated list of numbers (`"0.5,0.9,0.95"`), as used by
-/// the `dfr cv --alphas` grid flag. Empty entries are skipped.
+/// the `dfr cv --alphas` grid flag. Empty entries are skipped; NaN and ±∞
+/// (which `f64::parse` accepts) are rejected here so they never reach a
+/// solver.
 pub fn parse_f64_list(s: &str) -> Result<Vec<f64>, String> {
     s.split(',')
         .map(str::trim)
         .filter(|t| !t.is_empty())
-        .map(|t| t.parse::<f64>().map_err(|_| format!("expected number, got `{t}`")))
+        .map(|t| {
+            let v: f64 =
+                t.parse().map_err(|_| format!("expected number, got `{t}`"))?;
+            if !v.is_finite() {
+                return Err(format!("expected finite number, got `{t}`"));
+            }
+            Ok(v)
+        })
         .collect()
 }
 
 /// Parse a comma-separated γ grid for `dfr cv --gammas`. Each entry is
 /// `none` (plain SGL), a single number `g` (meaning `γ₁ = γ₂ = g`), or a
-/// pair `g1:g2`.
+/// pair `g1:g2`. γ values must be finite and non-negative (adaptive
+/// weights `1/|β|^γ` make no sense otherwise).
 pub fn parse_gamma_list(s: &str) -> Result<Vec<Option<(f64, f64)>>, String> {
     s.split(',')
         .map(str::trim)
@@ -119,8 +129,14 @@ pub fn parse_gamma_list(s: &str) -> Result<Vec<Option<(f64, f64)>>, String> {
             if t.eq_ignore_ascii_case("none") {
                 return Ok(None);
             }
-            let parse =
-                |v: &str| v.trim().parse::<f64>().map_err(|_| format!("bad γ entry `{t}`"));
+            let parse = |v: &str| {
+                let g: f64 =
+                    v.trim().parse().map_err(|_| format!("bad γ entry `{t}`"))?;
+                if !g.is_finite() || g < 0.0 {
+                    return Err(format!("γ entry `{t}` must be finite and ≥ 0"));
+                }
+                Ok(g)
+            };
             match t.split_once(':') {
                 Some((a, b)) => Ok(Some((parse(a)?, parse(b)?))),
                 None => {
@@ -218,6 +234,14 @@ mod tests {
     }
 
     #[test]
+    fn f64_lists_reject_non_finite() {
+        // `f64::parse` happily accepts these spellings; the CLI must not.
+        assert!(parse_f64_list("nan").is_err());
+        assert!(parse_f64_list("0.5,inf").is_err());
+        assert!(parse_f64_list("-inf,0.5").is_err());
+    }
+
+    #[test]
     fn gamma_lists_parse() {
         assert_eq!(
             parse_gamma_list("none,0.1,0.2:0.5").unwrap(),
@@ -226,5 +250,12 @@ mod tests {
         assert_eq!(parse_gamma_list("NONE").unwrap(), vec![None]);
         assert!(parse_gamma_list("0.1:wat").is_err());
         assert!(parse_gamma_list("huh").is_err());
+    }
+
+    #[test]
+    fn gamma_lists_reject_invalid_values() {
+        assert!(parse_gamma_list("-0.1").is_err());
+        assert!(parse_gamma_list("nan").is_err());
+        assert!(parse_gamma_list("0.1:inf").is_err());
     }
 }

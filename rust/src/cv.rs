@@ -38,6 +38,7 @@ use crate::path::{PathConfig, PathRunner, PathWorkspace};
 use crate::penalty::AdaptiveWeights;
 use crate::rng::Rng;
 use crate::screen::RuleKind;
+use crate::solver::SolveStatus;
 
 /// One `(α, γ)` grid cell result.
 #[derive(Clone, Debug)]
@@ -70,6 +71,9 @@ pub struct CvCell {
     /// shared task queue) it is the summed fit time of the cell's
     /// reference fit plus its fold fits.
     pub seconds: f64,
+    /// Worst solve status across the cell's reference fit and every fold
+    /// fit at every path point ([`SolveStatus::Converged`] when all clean).
+    pub status: SolveStatus,
 }
 
 /// Cross-validation configuration.
@@ -261,6 +265,8 @@ struct FoldFit {
     o_prop: f64,
     /// Fit wall-clock seconds.
     seconds: f64,
+    /// Worst per-point solve status of the fit.
+    status: SolveStatus,
 }
 
 /// Fold-order reduction of one cell; shared by the pooled engine and the
@@ -270,6 +276,7 @@ fn reduce_cell(
     lambdas: Vec<f64>,
     fold_fits: &[FoldFit],
     seconds: f64,
+    ref_status: SolveStatus,
 ) -> CvCell {
     let k = fold_fits.len();
     let l = lambdas.len();
@@ -296,7 +303,8 @@ fn reduce_cell(
     let best_idx = cv_loss
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        // total_cmp: a NaN fold loss sorts high instead of panicking.
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0);
     // λ grid is sorted descending, so the first index within one SE of the
@@ -325,6 +333,7 @@ fn reduce_cell(
         mean_candidate_proportion: mean(&|ff| ff.c_prop),
         mean_input_proportion: mean(&|ff| ff.o_prop),
         seconds,
+        status: fold_fits.iter().fold(ref_status, |s, ff| s.worst(ff.status)),
     }
 }
 
@@ -334,7 +343,8 @@ fn winner(cells: &[CvCell]) -> usize {
         .iter()
         .enumerate()
         .min_by(|a, b| {
-            a.1.cv_loss[a.1.best_idx].partial_cmp(&b.1.cv_loss[b.1.best_idx]).unwrap()
+            // total_cmp: a NaN cell loss sorts high instead of panicking.
+            a.1.cv_loss[a.1.best_idx].total_cmp(&b.1.cv_loss[b.1.best_idx])
         })
         .map(|(i, _)| i)
         .unwrap_or(0)
@@ -390,7 +400,10 @@ impl CvEngine {
         let plan = FoldPlan::new(ds, cfg.folds, cfg.seed)?;
         let point = GridPoint { alpha: cfg.path.alpha, gamma: cfg.path.adaptive };
         let mut cells = self.run_grid(ds, &plan, cfg, &[point])?;
-        let mut cell = cells.pop().expect("single-point grid produced no cell");
+        let mut cell = match cells.pop() {
+            Some(c) => c,
+            None => anyhow::bail!("single-point grid produced no cell"),
+        };
         cell.seconds = t0.elapsed().as_secs_f64();
         Ok(cell)
     }
@@ -457,17 +470,28 @@ impl CvEngine {
             }
         });
         let mut batch_iter = weight_batch.into_iter();
-        let shared_weights: Vec<(AdaptiveWeights, Vec<AdaptiveWeights>)> = (0..gammas.len())
-            .map(|_| {
-                let full = batch_iter.next().expect("weight batch underrun");
-                let per_fold =
-                    (0..k).map(|_| batch_iter.next().expect("weight batch underrun")).collect();
-                (full, per_fold)
-            })
-            .collect();
+        let mut shared_weights: Vec<(AdaptiveWeights, Vec<AdaptiveWeights>)> =
+            Vec::with_capacity(gammas.len());
+        for _ in 0..gammas.len() {
+            let full = match batch_iter.next() {
+                Some(w) => w,
+                None => anyhow::bail!("weight batch underrun"),
+            };
+            let mut per_fold = Vec::with_capacity(k);
+            for _ in 0..k {
+                match batch_iter.next() {
+                    Some(w) => per_fold.push(w),
+                    None => anyhow::bail!("weight batch underrun"),
+                }
+            }
+            shared_weights.push((full, per_fold));
+        }
+        // The position lookup cannot miss (every resolved γ was pushed
+        // above); `and_then` degrades an impossible miss to per-fit weight
+        // recomputation instead of a panic.
         let gamma_slot = |gp: &GridPoint| {
             PathConfig::resolve_adaptive(gp.gamma, base.rule)
-                .map(|g| gammas.iter().position(|&x| x == g).expect("γ precomputed"))
+                .and_then(|g| gammas.iter().position(|&x| x == g))
         };
 
         // Stage 1 — each cell's reference λ path from the full data.
@@ -484,14 +508,20 @@ impl CvEngine {
             let fit = runner
                 .run_with_workspace(&mut ws)
                 .map_err(|e| anyhow::anyhow!("cell {c} reference path fit failed: {e}"))?;
-            Ok::<(Vec<f64>, f64), anyhow::Error>((fit.lambdas, fit.metrics.total_seconds))
+            Ok::<(Vec<f64>, f64, SolveStatus), anyhow::Error>((
+                fit.lambdas,
+                fit.metrics.total_seconds,
+                fit.metrics.worst_status(),
+            ))
         });
         let mut lambdas: Vec<Vec<f64>> = Vec::with_capacity(grid.len());
         let mut ref_seconds: Vec<f64> = Vec::with_capacity(grid.len());
+        let mut ref_status: Vec<SolveStatus> = Vec::with_capacity(grid.len());
         for r in refs {
-            let (l, s) = r?;
+            let (l, s, st) = r?;
             lambdas.push(l);
             ref_seconds.push(s);
+            ref_status.push(st);
         }
 
         // Stage 2 — flattened (cell × fold) fits on one shared queue.
@@ -518,6 +548,7 @@ impl CvEngine {
                 c_prop: m.candidate_proportion(),
                 o_prop: m.input_proportion(),
                 seconds: m.total_seconds,
+                status: m.worst_status(),
             })
         });
         let mut fold_fits: Vec<FoldFit> = Vec::with_capacity(grid.len() * k);
@@ -533,7 +564,7 @@ impl CvEngine {
                 let ffs = &fold_fits[c * k..(c + 1) * k];
                 let seconds =
                     ref_seconds[c] + ffs.iter().map(|ff| ff.seconds).sum::<f64>();
-                reduce_cell(gp, std::mem::take(&mut lambdas[c]), ffs, seconds)
+                reduce_cell(gp, std::mem::take(&mut lambdas[c]), ffs, seconds, ref_status[c])
             })
             .collect();
         Ok(cells)
@@ -597,6 +628,7 @@ pub fn grid_search_reference(
                     c_prop: m.candidate_proportion(),
                     o_prop: m.input_proportion(),
                     seconds: m.total_seconds,
+                    status: m.worst_status(),
                 })
             });
             let mut fold_fits = Vec::with_capacity(plan.folds.len());
@@ -609,6 +641,7 @@ pub fn grid_search_reference(
                 full_fit.lambdas,
                 &fold_fits,
                 t0.elapsed().as_secs_f64(),
+                full_fit.metrics.worst_status(),
             ));
         }
     }

@@ -1,0 +1,158 @@
+//! Structured input-validation errors for the `Design`/`SglFitter`
+//! boundary and the CLI.
+//!
+//! Every rejection of caller input happens through a [`DfrError`] variant,
+//! so callers (the CLI, a serving layer, tests) can match on *what* was
+//! wrong instead of parsing a message string. `DfrError` implements
+//! [`std::error::Error`], so it flows through the crate's `anyhow::Result`
+//! plumbing via `?` unchanged — `downcast_ref::<DfrError>()`-style
+//! recovery is not needed because validation happens before any fit work
+//! starts.
+//!
+//! Degraded-but-recoverable conditions (divergence, stalls, screening-cap
+//! escalation) are **not** errors: they surface as a
+//! [`crate::solver::SolveStatus`] on an otherwise-successful fit. This
+//! module is only for inputs that make the optimization problem itself
+//! ill-posed.
+
+/// A structured rejection of caller input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DfrError {
+    /// A design entry is NaN or ±∞.
+    NonFiniteDesign { row: usize, col: usize, value: f64 },
+    /// A response entry is NaN or ±∞.
+    NonFiniteResponse { index: usize, value: f64 },
+    /// Every design column is constant: after centering the design is
+    /// identically zero and no variable can ever enter the model.
+    /// (Individual constant columns are benign — standardization pins
+    /// them at zero — so only the all-constant design is rejected.)
+    AllColumnsConstant { p: usize },
+    /// A dimension disagreement between two inputs (e.g. `y.len() != n`).
+    DimensionMismatch { what: &'static str, expected: usize, got: usize },
+    /// Group sizes do not tile the coefficient vector.
+    GroupMismatch { sum: usize, p: usize },
+    /// A group of size zero.
+    EmptyGroup { group: usize },
+    /// The design has no rows or no columns.
+    EmptyDesign { n: usize, p: usize },
+    /// The response carries no information: constant `y` for a linear
+    /// model, or a single class for a logistic one.
+    DegenerateResponse { detail: String },
+    /// A scalar hyperparameter violates its constraint (NaN, ∞, sign or
+    /// range), e.g. α ∉ [0, 1] or a non-positive tolerance.
+    InvalidParameter { name: &'static str, value: f64, constraint: &'static str },
+}
+
+impl std::fmt::Display for DfrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DfrError::NonFiniteDesign { row, col, value } => {
+                write!(f, "design entry X[{row}, {col}] is not finite ({value})")
+            }
+            DfrError::NonFiniteResponse { index, value } => {
+                write!(f, "response entry y[{index}] is not finite ({value})")
+            }
+            DfrError::AllColumnsConstant { p } => {
+                write!(f, "all {p} design columns are constant (zero variance): no variable can enter the model")
+            }
+            DfrError::DimensionMismatch { what, expected, got } => {
+                write!(f, "dimension mismatch in {what}: expected {expected}, got {got}")
+            }
+            DfrError::GroupMismatch { sum, p } => {
+                write!(f, "group sizes sum to {sum} but the design has {p} columns")
+            }
+            DfrError::EmptyGroup { group } => {
+                write!(f, "group {group} has size 0 (every group needs at least one variable)")
+            }
+            DfrError::EmptyDesign { n, p } => {
+                write!(f, "empty design ({n} rows × {p} columns)")
+            }
+            DfrError::DegenerateResponse { detail } => {
+                write!(f, "degenerate response: {detail}")
+            }
+            DfrError::InvalidParameter { name, value, constraint } => {
+                write!(f, "invalid parameter {name} = {value}: must be {constraint}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DfrError {}
+
+/// Validate a scalar hyperparameter: finite, and within `[lo, hi]`.
+pub fn check_range(
+    name: &'static str,
+    value: f64,
+    lo: f64,
+    hi: f64,
+    constraint: &'static str,
+) -> Result<(), DfrError> {
+    if !value.is_finite() || value < lo || value > hi {
+        return Err(DfrError::InvalidParameter { name, value, constraint });
+    }
+    Ok(())
+}
+
+/// Validate a strictly-positive finite scalar (tolerances, ratios).
+pub fn check_positive(name: &'static str, value: f64) -> Result<(), DfrError> {
+    if !value.is_finite() || value <= 0.0 {
+        return Err(DfrError::InvalidParameter {
+            name,
+            value,
+            constraint: "finite and > 0",
+        });
+    }
+    Ok(())
+}
+
+/// Validate a finite non-negative scalar (adaptive γ exponents, λ values).
+pub fn check_non_negative(name: &'static str, value: f64) -> Result<(), DfrError> {
+    if !value.is_finite() || value < 0.0 {
+        return Err(DfrError::InvalidParameter {
+            name,
+            value,
+            constraint: "finite and ≥ 0",
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_name_the_offender() {
+        let e = DfrError::NonFiniteDesign { row: 3, col: 7, value: f64::NAN };
+        assert!(e.to_string().contains("X[3, 7]"));
+        let e = DfrError::InvalidParameter {
+            name: "alpha",
+            value: 2.0,
+            constraint: "in [0, 1]",
+        };
+        assert!(e.to_string().contains("alpha"));
+        assert!(e.to_string().contains("[0, 1]"));
+    }
+
+    #[test]
+    fn flows_through_anyhow() {
+        fn inner() -> anyhow::Result<()> {
+            Err(DfrError::EmptyDesign { n: 0, p: 4 })?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("empty design"));
+    }
+
+    #[test]
+    fn range_checks() {
+        assert!(check_range("alpha", 0.5, 0.0, 1.0, "in [0, 1]").is_ok());
+        assert!(check_range("alpha", f64::NAN, 0.0, 1.0, "in [0, 1]").is_err());
+        assert!(check_range("alpha", 1.5, 0.0, 1.0, "in [0, 1]").is_err());
+        assert!(check_positive("tol", 1e-5).is_ok());
+        assert!(check_positive("tol", 0.0).is_err());
+        assert!(check_positive("tol", f64::INFINITY).is_err());
+        assert!(check_non_negative("gamma", 0.0).is_ok());
+        assert!(check_non_negative("gamma", -0.1).is_err());
+    }
+}

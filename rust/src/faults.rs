@@ -1,0 +1,169 @@
+//! Fault injection for robustness testing (the `testkit` companion).
+//!
+//! The solve pipeline carries a handful of *fault hooks* — in the loss
+//! residual, the solvers' backtracking loops, and the [`crate::solver`]
+//! iteration driver — that are inert in production: each hook is a single
+//! relaxed atomic load when no fault plan is armed. Tests arm a
+//! [`FaultPlan`] with [`with_plan`] to force the failure modes the
+//! guardrails must catch:
+//!
+//! * a NaN poisoned into the gradient residual after a countdown,
+//! * backtracking that never certifies for one [`SolverKind`],
+//! * a truncated iteration budget (caps `max_iters` from outside).
+//!
+//! Plans are **thread-local**: a plan armed on a test thread fires only in
+//! solves running on that thread, so concurrent tests (and `par_map`
+//! worker threads) are unaffected. The global armed counter exists purely
+//! so the disarmed fast path costs one atomic load and no TLS access.
+//!
+//! This module is test infrastructure, like [`crate::testkit`]; nothing in
+//! the library arms a plan on its own.
+
+use crate::solver::SolverKind;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Count of threads with an armed plan (fast-path gate for every hook).
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static PLAN: RefCell<Option<FaultPlan>> = const { RefCell::new(None) };
+}
+
+/// What to break, and when. All fields independent; `None` = inert.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Poison the gradient residual with a NaN after this many
+    /// [`crate::loss::Loss::residual_from_xb`] calls (0 = the next one).
+    /// Fires once, then disarms itself.
+    pub nan_gradient_after: Option<u32>,
+    /// Force the named solver's backtracking bound check to fail on every
+    /// attempt, exhausting `max_backtrack` (other solvers untouched — a
+    /// FISTA fallback after a forced BCD failure must be able to succeed).
+    pub fail_backtrack_for: Option<SolverKind>,
+    /// Cap every solve's iteration budget below `cfg.max_iters`.
+    pub truncate_iters: Option<usize>,
+}
+
+/// Arm `plan` on the current thread for the duration of `f`, then disarm
+/// (also on panic — the guard is drop-based, so a failing assertion in a
+/// property test cannot leak the plan into later tests on this thread).
+pub fn with_plan<T>(plan: FaultPlan, f: impl FnOnce() -> T) -> T {
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            PLAN.with(|p| *p.borrow_mut() = None);
+            ACTIVE.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    PLAN.with(|p| *p.borrow_mut() = Some(plan));
+    ACTIVE.fetch_add(1, Ordering::SeqCst);
+    let _guard = Disarm;
+    f()
+}
+
+#[inline]
+fn armed() -> bool {
+    ACTIVE.load(Ordering::Relaxed) > 0
+}
+
+/// Hook: called by [`crate::loss::Loss::residual_from_xb`] after filling
+/// `out`; poisons the first entry with NaN when the countdown fires.
+#[inline]
+pub(crate) fn poison_residual(out: &mut [f64]) {
+    if !armed() {
+        return;
+    }
+    PLAN.with(|p| {
+        if let Some(plan) = p.borrow_mut().as_mut() {
+            match plan.nan_gradient_after {
+                Some(0) => {
+                    plan.nan_gradient_after = None;
+                    if let Some(v) = out.first_mut() {
+                        *v = f64::NAN;
+                    }
+                }
+                Some(k) => plan.nan_gradient_after = Some(k - 1),
+                None => {}
+            }
+        }
+    });
+}
+
+/// Hook: called inside a solver's backtracking bound check; `true` forces
+/// the bound to be treated as violated for the named solver.
+#[inline]
+pub(crate) fn backtrack_must_fail(kind: SolverKind) -> bool {
+    if !armed() {
+        return false;
+    }
+    PLAN.with(|p| {
+        p.borrow().as_ref().map(|plan| plan.fail_backtrack_for == Some(kind)).unwrap_or(false)
+    })
+}
+
+/// Hook: called once per solve by the iteration driver; caps the budget.
+#[inline]
+pub(crate) fn iteration_cap() -> Option<usize> {
+    if !armed() {
+        return None;
+    }
+    PLAN.with(|p| p.borrow().as_ref().and_then(|plan| plan.truncate_iters))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hooks_are_inert_without_a_plan() {
+        let mut r = [1.0, 2.0];
+        poison_residual(&mut r);
+        assert_eq!(r, [1.0, 2.0]);
+        assert!(!backtrack_must_fail(SolverKind::Fista));
+        assert_eq!(iteration_cap(), None);
+    }
+
+    #[test]
+    fn nan_countdown_fires_once() {
+        with_plan(
+            FaultPlan { nan_gradient_after: Some(1), ..FaultPlan::default() },
+            || {
+                let mut r = [1.0, 2.0];
+                poison_residual(&mut r); // countdown 1 → 0
+                assert!(r[0].is_finite());
+                poison_residual(&mut r); // fires
+                assert!(r[0].is_nan());
+                r[0] = 5.0;
+                poison_residual(&mut r); // disarmed
+                assert_eq!(r[0], 5.0);
+            },
+        );
+    }
+
+    #[test]
+    fn backtrack_failure_is_per_kind() {
+        with_plan(
+            FaultPlan { fail_backtrack_for: Some(SolverKind::Bcd), ..FaultPlan::default() },
+            || {
+                assert!(backtrack_must_fail(SolverKind::Bcd));
+                assert!(!backtrack_must_fail(SolverKind::Fista));
+            },
+        );
+    }
+
+    #[test]
+    fn plan_disarms_on_exit_even_on_panic() {
+        let caught = std::panic::catch_unwind(|| {
+            with_plan(
+                FaultPlan { truncate_iters: Some(3), ..FaultPlan::default() },
+                || {
+                    assert_eq!(iteration_cap(), Some(3));
+                    panic!("boom");
+                },
+            )
+        });
+        assert!(caught.is_err());
+        assert_eq!(iteration_cap(), None);
+    }
+}

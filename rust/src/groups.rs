@@ -124,11 +124,12 @@ impl Groups {
         let mut orig: Vec<usize> = Vec::new();
         for &v in vars {
             let g = self.gid[v];
-            if orig.last() == Some(&g) {
-                *sizes.last_mut().unwrap() += 1;
-            } else {
-                orig.push(g);
-                sizes.push(1);
+            match sizes.last_mut() {
+                Some(last) if orig.last() == Some(&g) => *last += 1,
+                _ => {
+                    orig.push(g);
+                    sizes.push(1);
+                }
             }
         }
         if sizes.is_empty() {
@@ -150,11 +151,10 @@ impl Groups {
             let remaining = p - total;
             if remaining <= hi {
                 // Close out, splitting if the remainder is below `lo`.
-                if remaining >= lo || sizes.is_empty() {
-                    sizes.push(remaining);
-                } else {
+                match sizes.last_mut() {
                     // Merge the remainder into the previous group.
-                    *sizes.last_mut().unwrap() += remaining;
+                    Some(last) if remaining < lo => *last += remaining,
+                    _ => sizes.push(remaining),
                 }
                 total = p;
             } else {

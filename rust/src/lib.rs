@@ -69,11 +69,30 @@
 //!     .unwrap();
 //! println!("winner: α = {}", cells[best].alpha);
 //! ```
+//!
+//! ## Fault tolerance
+//!
+//! Every solve concludes with a [`solver::SolveStatus`] (not a bare bool):
+//! guardrails in the solver driver detect divergence, stalls, and budget
+//! exhaustion, a degradation ladder restarts failed solves under FISTA
+//! with a halved step, and KKT-cap exhaustion escalates to a certified
+//! no-screening solve. Invalid *inputs* are rejected up front with a
+//! structured [`error::DfrError`]. The [`faults`] module provides
+//! test-only fault-injection hooks (inert unless armed) that the
+//! robustness suite uses to prove the pipeline degrades instead of
+//! panicking.
+
+// The library proper must not panic through `unwrap`/`expect`: every
+// failure is either a structured `DfrError`, an `anyhow` error, or a
+// degraded `SolveStatus`. Tests and benches are exempt.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod bench_harness;
 pub mod cli;
 pub mod cv;
 pub mod data;
+pub mod error;
+pub mod faults;
 pub mod groups;
 pub mod linalg;
 pub mod loss;
@@ -95,6 +114,7 @@ pub mod prelude {
     pub use crate::cv::{CvCell, CvConfig, CvEngine, FoldPlan};
     pub use crate::data::real::{RealDatasetKind, SurrogateConfig};
     pub use crate::data::{Dataset, InteractionOrder, Response, SyntheticConfig};
+    pub use crate::error::DfrError;
     pub use crate::groups::Groups;
     pub use crate::linalg::{CenteredSparse, CscMatrix, DesignOps, DesignRef, Matrix};
     pub use crate::loss::LossKind;
@@ -106,5 +126,5 @@ pub mod prelude {
     pub use crate::penalty::{AdaptiveWeights, Penalty};
     pub use crate::rng::Rng;
     pub use crate::screen::RuleKind;
-    pub use crate::solver::{SolverConfig, SolverKind};
+    pub use crate::solver::{SolveStatus, SolverConfig, SolverKind};
 }

@@ -314,7 +314,7 @@ impl CscMatrix {
     ) -> Self {
         assert_eq!(col_ptr.len(), p + 1, "col_ptr must have p + 1 entries");
         assert_eq!(col_ptr[0], 0, "col_ptr must start at 0");
-        assert_eq!(*col_ptr.last().unwrap(), row_idx.len(), "col_ptr end ≠ nnz");
+        assert_eq!(col_ptr[p], row_idx.len(), "col_ptr end ≠ nnz");
         assert_eq!(row_idx.len(), values.len(), "row_idx / values length mismatch");
         for j in 0..p {
             assert!(col_ptr[j] <= col_ptr[j + 1], "col_ptr must be monotone");

@@ -95,6 +95,8 @@ impl<'a> Loss<'a> {
                 }
             }
         }
+        // Inert unless a test armed a fault plan (one relaxed atomic load).
+        crate::faults::poison_residual(out);
     }
 
     /// Full gradient `∇f(β) = Xᵀ r(β) / n`.

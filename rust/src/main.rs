@@ -10,8 +10,12 @@
 //!                with per-cell screening stats and the 1-SE rule.
 //! * `info`     — environment report (threads, artifacts, PJRT platform).
 
+// Same no-panic discipline as the library (see lib.rs).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use dfr::cli::{parse_f64_list, parse_gamma_list, parse_rule, usage, Args, OptSpec};
 use dfr::data::real::{RealDatasetKind, SurrogateConfig};
+use dfr::error::{check_non_negative, check_range, DfrError};
 use dfr::data::{Dataset, Response, SyntheticConfig};
 use dfr::linalg::CscMatrix;
 use dfr::model_api::{sparse_density_threshold, Design, SglFitter, SglModel, SparseMode};
@@ -88,23 +92,44 @@ fn build_dataset(args: &Args) -> anyhow::Result<Dataset> {
         .find(|k| k.name() == name)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset `{name}`"))?;
     let scale = args.f64_or("scale", 0.1).map_err(anyhow::Error::msg)?;
+    if !scale.is_finite() || scale <= 0.0 || scale > 1.0 {
+        return Err(DfrError::InvalidParameter {
+            name: "scale",
+            value: scale,
+            constraint: "in (0, 1]",
+        }
+        .into());
+    }
     Ok(SurrogateConfig { kind, scale, seed }.generate())
 }
 
 fn build_path_config(args: &Args) -> anyhow::Result<PathConfig> {
     let solver_kind =
         SolverKind::parse(&args.str_or("solver", "fista")).map_err(anyhow::Error::msg)?;
-    Ok(PathConfig {
+    // `--gamma` parse failures are hard errors: the old behavior silently
+    // substituted 0.1 for any typo, fitting a different model than asked.
+    let adaptive = match args.options.get("gamma") {
+        Some(raw) => {
+            let g: f64 = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--gamma: expected number, got `{raw}`"))?;
+            check_non_negative("gamma", g)?;
+            Some((g, g))
+        }
+        None => None,
+    };
+    let cfg = PathConfig {
         alpha: args.f64_or("alpha", 0.95).map_err(anyhow::Error::msg)?,
         path_len: args.usize_or("path-len", 50).map_err(anyhow::Error::msg)?,
         path_end_ratio: args.f64_or("path-end", 0.1).map_err(anyhow::Error::msg)?,
         solver: SolverConfig { kind: solver_kind, ..SolverConfig::default() },
-        adaptive: args.options.get("gamma").map(|g| {
-            let g: f64 = g.parse().unwrap_or(0.1);
-            (g, g)
-        }),
+        adaptive,
         ..PathConfig::default()
-    })
+    };
+    // Fail fast at the CLI boundary with a structured `DfrError` (α range,
+    // path shape, tolerances) instead of deep inside the first solve.
+    cfg.validate()?;
+    Ok(cfg)
 }
 
 fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
@@ -224,10 +249,17 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 Some(s) => parse_f64_list(s).map_err(anyhow::Error::msg)?,
                 None => vec![model.path.alpha],
             };
+            for &a in &alphas {
+                check_range("alphas", a, 0.0, 1.0, "in [0, 1]")?;
+            }
             let gammas = match args.options.get("gammas") {
                 Some(s) => parse_gamma_list(s).map_err(anyhow::Error::msg)?,
                 None => vec![model.path.adaptive],
             };
+            for (g1, g2) in gammas.iter().flatten() {
+                check_non_negative("gammas", *g1)?;
+                check_non_negative("gammas", *g2)?;
+            }
             // The serving surface: a persistent fitter holding the pooled
             // CV engine, fed the dataset as a borrowed zero-copy design.
             let mut fitter = SglFitter::new(model.clone());
@@ -286,13 +318,14 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let w = &cells[best];
             let idx = if args.flag("one-se") { w.best_1se_idx } else { w.best_idx };
             println!(
-                "selected: α={:.3}, {}, λ={:.5} (index {}{}), held-out loss {:.5}",
+                "selected: α={:.3}, {}, λ={:.5} (index {}{}), held-out loss {:.5}, status {}",
                 w.alpha,
                 fmt_gamma(w.gamma),
                 w.lambdas[idx],
                 idx,
                 if args.flag("one-se") { ", 1-SE rule" } else { "" },
                 w.cv_loss[idx],
+                w.status,
             );
             println!(
                 "workspace pool: {} workspace(s) served {} path fits",
@@ -330,9 +363,10 @@ fn report_fit(
 ) -> anyhow::Result<()> {
     let m = &fit.metrics;
     println!(
-        "done in {:.3}s: input proportion {:.4} (groups {:.4}), KKT violations {}, \
-         failed convergences {}, active at end {}",
+        "done in {:.3}s: status {}, input proportion {:.4} (groups {:.4}), \
+         KKT violations {}, failed convergences {}, active at end {}",
         m.total_seconds,
+        m.worst_status(),
         m.input_proportion(),
         m.group_input_proportion(),
         m.total_kkt_violations(),

@@ -8,6 +8,8 @@
 //! * **improvement factor** = no-screen time / screen time,
 //! * **input proportion** = `|O_v| / p` (and `|O_g| / m`).
 
+use crate::solver::SolveStatus;
+
 /// Metrics for one λ path point.
 #[derive(Clone, Debug, Default)]
 pub struct PointMetrics {
@@ -24,7 +26,10 @@ pub struct PointMetrics {
     /// KKT violations encountered (variables added back).
     pub kkt_violations: usize,
     pub solver_iterations: usize,
-    pub converged: bool,
+    /// How the solve at this path point concluded (defaults to
+    /// [`SolveStatus::Converged`], matching the synthesized null-model
+    /// points).
+    pub status: SolveStatus,
     /// Wall-clock seconds spent fitting this path point.
     pub fit_seconds: f64,
 }
@@ -70,14 +75,23 @@ impl PathMetrics {
         self.points.iter().map(|pt| pt.kkt_violations).sum()
     }
 
-    /// Number of path points that failed to converge.
+    /// Number of path points whose solve did not succeed (anything worse
+    /// than a fallback or a KKT-cap escalation that itself converged).
     pub fn failed_convergences(&self) -> usize {
-        self.points.iter().filter(|pt| !pt.converged).count()
+        self.points.iter().filter(|pt| !pt.status.is_success()).count()
     }
 
     /// Mean solver iterations per path point.
     pub fn mean_iterations(&self) -> f64 {
         mean(self.points.iter().map(|pt| pt.solver_iterations as f64))
+    }
+
+    /// The worst per-point status along the path — the one-line summary a
+    /// caller should act on (see the README troubleshooting table).
+    pub fn worst_status(&self) -> SolveStatus {
+        self.points
+            .iter()
+            .fold(SolveStatus::Converged, |s, pt| s.worst(pt.status))
     }
 }
 
@@ -226,7 +240,7 @@ mod tests {
             o_g: 2,
             a_v: 10,
             c_v: 10,
-            converged: true,
+            status: SolveStatus::Converged,
             ..Default::default()
         });
         pm.points.push(PointMetrics {
@@ -234,7 +248,7 @@ mod tests {
             o_g: 4,
             a_v: 20,
             c_v: 30,
-            converged: false,
+            status: SolveStatus::MaxIters,
             kkt_violations: 3,
             ..Default::default()
         });

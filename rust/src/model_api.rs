@@ -37,11 +37,13 @@
 
 use crate::cv::{CvCell, CvConfig, CvEngine};
 use crate::data::{Dataset, Response};
+use crate::error::DfrError;
 use crate::linalg::{self, CenteredSparse, CscMatrix, DesignOps, Matrix};
 use crate::loss::sigmoid;
 use crate::parallel::WorkspacePool;
 use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
 use crate::screen::RuleKind;
+use crate::solver::SolveStatus;
 use std::sync::Arc;
 
 /// How a CSC [`Design`] chooses its solve kernel.
@@ -242,6 +244,110 @@ impl<'a> Design<'a> {
         Ok(())
     }
 
+    /// Structured content validation: reject NaN/±∞ entries with their
+    /// exact coordinates, and reject a design whose *every* column is
+    /// constant (after centering it is identically zero, so no variable
+    /// can ever enter the model). Individual constant columns are benign —
+    /// standardization pins them at zero — and are deliberately allowed.
+    /// O(n·p); runs once per cold ingest (a fingerprint cache hit means
+    /// these exact bytes already passed).
+    fn validate_contents(&self) -> Result<(), DfrError> {
+        let (n, p) = (self.n(), self.p());
+        let mut constant_cols = 0usize;
+        match self {
+            Design::ColMajor { data, .. } => {
+                for j in 0..p {
+                    let col = &data[j * n..(j + 1) * n];
+                    for (i, &v) in col.iter().enumerate() {
+                        if !v.is_finite() {
+                            return Err(DfrError::NonFiniteDesign { row: i, col: j, value: v });
+                        }
+                    }
+                    if col.iter().all(|&v| v == col[0]) {
+                        constant_cols += 1;
+                    }
+                }
+            }
+            Design::RowMajor { data, .. } => {
+                for j in 0..p {
+                    let mut constant = true;
+                    for i in 0..n {
+                        let v = data[i * p + j];
+                        if !v.is_finite() {
+                            return Err(DfrError::NonFiniteDesign { row: i, col: j, value: v });
+                        }
+                        if v != data[j] {
+                            constant = false;
+                        }
+                    }
+                    if constant {
+                        constant_cols += 1;
+                    }
+                }
+            }
+            Design::Rows(rows) => {
+                for j in 0..p {
+                    let mut constant = true;
+                    for (i, r) in rows.iter().enumerate() {
+                        let v = r[j];
+                        if !v.is_finite() {
+                            return Err(DfrError::NonFiniteDesign { row: i, col: j, value: v });
+                        }
+                        if v != rows[0][j] {
+                            constant = false;
+                        }
+                    }
+                    if constant {
+                        constant_cols += 1;
+                    }
+                }
+            }
+            Design::Matrix(m) => {
+                for j in 0..p {
+                    let col = m.col(j);
+                    for (i, &v) in col.iter().enumerate() {
+                        if !v.is_finite() {
+                            return Err(DfrError::NonFiniteDesign { row: i, col: j, value: v });
+                        }
+                    }
+                    if col.iter().all(|&v| v == col[0]) {
+                        constant_cols += 1;
+                    }
+                }
+            }
+            Design::Csc(s) => {
+                for j in 0..p {
+                    let mut nnz = 0usize;
+                    let mut first = None;
+                    let mut constant = true;
+                    for (i, v) in s.col_entries(j) {
+                        if !v.is_finite() {
+                            return Err(DfrError::NonFiniteDesign { row: i, col: j, value: v });
+                        }
+                        nnz += 1;
+                        match first {
+                            None => first = Some(v),
+                            Some(f) if v != f => constant = false,
+                            Some(_) => {}
+                        }
+                    }
+                    // An implicit-zero column (nnz = 0) is constant; a
+                    // fully-stored column is constant iff its values
+                    // agree; a partially-stored column varies (explicit
+                    // stored zeros are treated as variation — the check
+                    // only relaxes, never tightens).
+                    if nnz == 0 || (nnz == n && constant) {
+                        constant_cols += 1;
+                    }
+                }
+            }
+        }
+        if p > 0 && constant_cols == p {
+            return Err(DfrError::AllColumnsConstant { p });
+        }
+        Ok(())
+    }
+
     /// Full content hash — the design leg of the fitter's
     /// prepared-dataset cache key. Every entry participates (O(n·p), far
     /// cheaper than the copy + standardization a cache hit skips), so any
@@ -381,6 +487,15 @@ pub struct FittedSgl {
 }
 
 impl FittedSgl {
+    /// The worst per-point [`SolveStatus`] along the underlying path —
+    /// [`SolveStatus::Converged`] when every path point solved cleanly.
+    /// Anything with `is_success() == false` means the coefficients are a
+    /// best-effort iterate rather than a certified optimum; see the README
+    /// troubleshooting table for the per-status caller action.
+    pub fn status(&self) -> SolveStatus {
+        self.path_fit.metrics.worst_status()
+    }
+
     /// Selected (nonzero) variables, original indexing. Exact-zero test —
     /// see [`FittedSgl::selected_with_tol`] for a tolerance-aware support.
     pub fn selected(&self) -> Vec<usize> {
@@ -511,9 +626,24 @@ struct CachedPath {
     fit: Arc<PathFit>,
 }
 
+/// Integrity stamp of a cache entry: a deterministic fold of the key's
+/// content fingerprints, recomputed on every probe. A stored entry whose
+/// stamp no longer matches (memory corruption, or an injected fault via
+/// [`SglFitter::testkit_poison_cache`]) is demoted to a cold re-ingest
+/// instead of being served.
+fn stamp_of(key: &DesignKey) -> u64 {
+    key.x_fp
+        .rotate_left(17)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ key.y_fp
+        ^ (((key.n as u64) << 32) | key.p as u64)
+}
+
 /// A standardized dataset cached per design fingerprint.
 struct Prepared {
     key: DesignKey,
+    /// `stamp_of(&key)` at ingest time; checked on every cache probe.
+    stamp: u64,
     ds: Dataset,
     centers: Vec<(f64, f64)>,
     /// Raw response mean (0 for logistic) — the intercept base.
@@ -658,7 +788,10 @@ impl SglFitter {
     ) -> anyhow::Result<&PathFit> {
         self.prepare(design, y, group_sizes, response)?;
         self.ensure_path(self.model.path.clone(), self.model.rule, None)?;
-        Ok(self.prepared.as_ref().unwrap().path.as_ref().unwrap().fit.as_ref())
+        match self.prepared.as_ref().and_then(|prep| prep.path.as_ref()) {
+            Some(cached) => Ok(cached.fit.as_ref()),
+            None => anyhow::bail!("path cache empty after ensure_path"),
+        }
     }
 
     /// Fit the path on a raw design and select λ at a fixed index
@@ -716,7 +849,7 @@ impl SglFitter {
         self.prepare(design, y, group_sizes, response)?;
         let cfg = self.cv_config();
         let mut cell: Option<CvCell> = None;
-        if let Some((c, cached)) = &self.prepared.as_ref().unwrap().cv_cell {
+        if let Some((c, cached)) = self.prepared.as_ref().and_then(|prep| prep.cv_cell.as_ref()) {
             if *c == cfg {
                 cell = Some(cached.clone());
                 self.cv_hits += 1;
@@ -725,11 +858,13 @@ impl SglFitter {
         let cell = match cell {
             Some(c) => c,
             None => {
-                let fresh = {
-                    let prep = self.prepared.as_ref().unwrap();
-                    self.cv.cross_validate(&prep.ds, &cfg)?
+                let fresh = match self.prepared.as_ref() {
+                    Some(prep) => self.cv.cross_validate(&prep.ds, &cfg)?,
+                    None => anyhow::bail!("prepare() must run before fit_cv"),
                 };
-                self.prepared.as_mut().unwrap().cv_cell = Some((cfg, fresh.clone()));
+                if let Some(prep) = self.prepared.as_mut() {
+                    prep.cv_cell = Some((cfg, fresh.clone()));
+                }
                 fresh
             }
         };
@@ -752,7 +887,10 @@ impl SglFitter {
     ) -> anyhow::Result<(Vec<CvCell>, usize)> {
         self.prepare(design, y, group_sizes, response)?;
         let cfg = self.cv_config();
-        let prep = self.prepared.as_ref().unwrap();
+        let prep = match self.prepared.as_ref() {
+            Some(p) => p,
+            None => anyhow::bail!("prepare() must run before cv_grid"),
+        };
         self.cv.grid_search(&prep.ds, &cfg, alphas, gammas)
     }
 
@@ -802,12 +940,19 @@ impl SglFitter {
     ) -> anyhow::Result<()> {
         design.validate()?;
         let (n, p) = (design.n(), design.p());
-        anyhow::ensure!(n > 0 && p > 0, "empty design");
-        anyhow::ensure!(y.len() == n, "y length mismatch: {} vs n = {n}", y.len());
-        anyhow::ensure!(
-            group_sizes.iter().sum::<usize>() == p,
-            "group sizes must sum to p"
-        );
+        if n == 0 || p == 0 {
+            return Err(DfrError::EmptyDesign { n, p }.into());
+        }
+        if y.len() != n {
+            return Err(DfrError::DimensionMismatch { what: "y", expected: n, got: y.len() }.into());
+        }
+        if let Some(g) = group_sizes.iter().position(|&s| s == 0) {
+            return Err(DfrError::EmptyGroup { group: g }.into());
+        }
+        let sum: usize = group_sizes.iter().sum();
+        if sum != p {
+            return Err(DfrError::GroupMismatch { sum, p }.into());
+        }
         let key = DesignKey {
             layout: design.layout_name(),
             kernel: design.resolved_kernel(self.model.sparse),
@@ -818,11 +963,32 @@ impl SglFitter {
             group_sizes: group_sizes.to_vec(),
             response,
         };
-        if self.prepared.as_ref().is_some_and(|prep| prep.key == key) {
+        // A hit must also pass the integrity stamp: a poisoned or
+        // corrupted entry falls through to a cold re-ingest.
+        if self
+            .prepared
+            .as_ref()
+            .is_some_and(|prep| prep.key == key && prep.stamp == stamp_of(&prep.key))
+        {
             self.prepared_hits += 1;
             return Ok(());
         }
         self.prepared_misses += 1;
+        design.validate_contents()?;
+        if let Some(i) = y.iter().position(|v| !v.is_finite()) {
+            return Err(DfrError::NonFiniteResponse { index: i, value: y[i] }.into());
+        }
+        if y.iter().all(|&v| v == y[0]) {
+            let detail = match response {
+                Response::Linear => {
+                    format!("constant response y ≡ {} (zero variance)", y[0])
+                }
+                Response::Logistic => {
+                    format!("single-class response y ≡ {} (logistic needs both classes)", y[0])
+                }
+            };
+            return Err(DfrError::DegenerateResponse { detail }.into());
+        }
         let (x, centers) = design.standardized_ops(self.model.sparse)?;
         let mut yv = y.to_vec();
         let y_mean = if response == Response::Linear {
@@ -839,8 +1005,22 @@ impl SglFitter {
             response,
             name: "user".into(),
         };
-        self.prepared = Some(Prepared { key, ds, centers, y_mean, path: None, cv_cell: None });
+        let stamp = stamp_of(&key);
+        self.prepared =
+            Some(Prepared { key, stamp, ds, centers, y_mean, path: None, cv_cell: None });
         Ok(())
+    }
+
+    /// Corrupt the prepared-dataset cache's integrity stamp — a
+    /// fault-injection hook for the robustness suite. The next `prepare`
+    /// on the same data must detect the mismatch and re-ingest (a cache
+    /// *miss*) instead of serving the poisoned entry; results stay
+    /// bit-identical to a cold fit. No-op when nothing is cached.
+    #[doc(hidden)]
+    pub fn testkit_poison_cache(&mut self) {
+        if let Some(prep) = &mut self.prepared {
+            prep.stamp ^= 0x5eed_bad_c0ffee;
+        }
     }
 
     /// Make sure the path cache holds a fit with exactly these settings,
@@ -852,7 +1032,10 @@ impl SglFitter {
         fixed: Option<Vec<f64>>,
     ) -> anyhow::Result<()> {
         let Self { prepared, pool, path_hits, .. } = self;
-        let prep = prepared.as_mut().expect("prepare() must run before ensure_path()");
+        let prep = match prepared.as_mut() {
+            Some(p) => p,
+            None => anyhow::bail!("prepare() must run before ensure_path()"),
+        };
         if prep
             .path
             .as_ref()
@@ -874,8 +1057,14 @@ impl SglFitter {
     /// Unstandardize the cached path's coefficients at `idx` into a
     /// raw-scale [`FittedSgl`].
     fn finalize_cached(&self, idx: usize) -> anyhow::Result<FittedSgl> {
-        let prep = self.prepared.as_ref().expect("no prepared dataset");
-        let cached = prep.path.as_ref().expect("no cached path fit");
+        let prep = match self.prepared.as_ref() {
+            Some(p) => p,
+            None => anyhow::bail!("no prepared dataset (fit before refit)"),
+        };
+        let cached = match prep.path.as_ref() {
+            Some(c) => c,
+            None => anyhow::bail!("no cached path fit (fit before refit)"),
+        };
         finalize(&cached.fit, &prep.centers, prep.y_mean, prep.ds.response, idx)
     }
 }

@@ -40,7 +40,10 @@ pub fn epsilon_norm(x: &[f64], eps: f64) -> f64 {
         return 0.0;
     }
     let mut d: Vec<f64> = x.iter().map(|v| v.abs()).collect();
-    d.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    // total_cmp: a NaN magnitude sorts low instead of panicking the sort;
+    // the NaN then propagates through the norm arithmetic as NaN, which
+    // the solver guardrails classify as divergence.
+    d.sort_unstable_by(|a, b| b.total_cmp(a));
     if d[0] == 0.0 {
         return 0.0;
     }

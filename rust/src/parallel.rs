@@ -97,12 +97,27 @@ pub fn par_map<R: Send>(n: usize, threads: usize, f: impl Fn(usize) -> R + Sync)
             })
             .collect();
         for h in handles {
-            for (i, r) in h.join().expect("par_map worker panicked") {
-                slots[i] = Some(r);
+            // Re-raise a worker panic on the caller's thread with its
+            // original payload (an `expect` here would erase it).
+            match h.join() {
+                Ok(pairs) => {
+                    for (i, r) in pairs {
+                        slots[i] = Some(r);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
             }
         }
     });
-    slots.into_iter().map(|r| r.expect("par_map missed an index")).collect()
+    slots
+        .into_iter()
+        .map(|r| match r {
+            Some(v) => v,
+            // The atomic counter hands out every index exactly once and
+            // all workers joined above.
+            None => unreachable!("par_map missed an index"),
+        })
+        .collect()
 }
 
 /// A fixed-size pool of reusable worker states (e.g.

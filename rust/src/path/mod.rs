@@ -40,12 +40,13 @@ pub mod lambda;
 pub use lambda::{lambda_max, log_linear_path};
 
 use crate::data::Dataset;
+use crate::error::{check_non_negative, check_positive, check_range, DfrError};
 use crate::linalg::{DesignRef, ReducedDesign};
 use crate::loss::{Loss, LossKind};
 use crate::metrics::{PathMetrics, PointMetrics};
 use crate::penalty::{AdaptiveWeights, Penalty, RestrictedPenalty};
 use crate::screen::{self, RuleKind, ScreenContext};
-use crate::solver::{SolveResult, SolverConfig, SolverWorkspace};
+use crate::solver::{SolveResult, SolveStatus, SolverConfig, SolverWorkspace};
 use std::time::Instant;
 
 /// Dense-compute backend. The default native engine runs everything on the
@@ -241,6 +242,37 @@ impl PathConfig {
     pub fn effective_adaptive(&self, rule: RuleKind) -> Option<(f64, f64)> {
         Self::resolve_adaptive(self.adaptive, rule)
     }
+
+    /// Reject NaN/∞/out-of-range numeric knobs before any fit work starts
+    /// (run automatically by [`PathRunner::run_with_workspace`]).
+    pub fn validate(&self) -> Result<(), DfrError> {
+        check_range("alpha", self.alpha, 0.0, 1.0, "in [0, 1]")?;
+        if self.path_len == 0 {
+            return Err(DfrError::InvalidParameter {
+                name: "path_len",
+                value: 0.0,
+                constraint: "at least 1",
+            });
+        }
+        check_positive("path_end_ratio", self.path_end_ratio)?;
+        check_range("path_end_ratio", self.path_end_ratio, 0.0, 1.0, "in (0, 1]")?;
+        check_positive("tol", self.solver.tol)?;
+        check_range("backtrack", self.solver.backtrack, 1e-6, 1.0 - 1e-6, "in (0, 1)")?;
+        check_positive("step_shrink", self.solver.step_shrink)?;
+        // ∞ = unlimited is the default, so only NaN and non-positive are out.
+        if self.solver.max_seconds.is_nan() || self.solver.max_seconds <= 0.0 {
+            return Err(DfrError::InvalidParameter {
+                name: "max_seconds",
+                value: self.solver.max_seconds,
+                constraint: "> 0 (∞ = unlimited)",
+            });
+        }
+        if let Some((g1, g2)) = self.adaptive {
+            check_non_negative("gamma1", g1)?;
+            check_non_negative("gamma2", g2)?;
+        }
+        Ok(())
+    }
 }
 
 /// Result of a pathwise fit.
@@ -368,6 +400,7 @@ impl<'a> PathRunner<'a> {
     /// folds, and repeated fits amortize all buffer allocation this way;
     /// the workspace self-heals if the dataset or its shape changed).
     pub fn run_with_workspace(&self, ws: &mut PathWorkspace) -> anyhow::Result<PathFit> {
+        self.cfg.validate()?;
         let ds = self.dataset;
         let pen = self.build_penalty();
         let kind = LossKind::for_response(ds.response);
@@ -396,7 +429,7 @@ impl<'a> PathRunner<'a> {
         betas.push(vec![0.0; p]);
         metrics.points.push(PointMetrics {
             lambda: lambdas[0],
-            converged: true,
+            status: SolveStatus::Converged,
             fit_seconds: t0.elapsed().as_secs_f64(),
             ..Default::default()
         });
@@ -435,21 +468,22 @@ impl<'a> PathRunner<'a> {
             if o_v.is_empty() {
                 // Null model survives this step — nothing to solve. The
                 // carried fitted values are identically zero.
-                betas.push(vec![0.0; p]);
+                let beta_null = vec![0.0; p];
                 ws.xb.fill(0.0);
                 self.engine.full_gradient_carried(
                     &loss,
-                    betas.last().unwrap(),
+                    &beta_null,
                     &ws.xb,
                     &mut ws.r,
                     &mut ws.grad,
                 );
+                betas.push(beta_null);
                 std::mem::swap(&mut grad_prev, &mut ws.grad);
                 metrics.points.push(PointMetrics {
                     lambda: lam_next,
                     c_v,
                     c_g,
-                    converged: true,
+                    status: SolveStatus::Converged,
                     fit_seconds: t_point.elapsed().as_secs_f64(),
                     ..Default::default()
                 });
@@ -459,13 +493,13 @@ impl<'a> PathRunner<'a> {
             // --- Solve + KKT loop ---
             let mut kkt_violations = 0usize;
             let mut solver_iterations = 0usize;
-            let mut converged;
+            let mut status;
             let mut rounds = 0usize;
             loop {
                 rounds += 1;
                 let res = self.solve_on(&pen, kind, &loss, &o_v, beta_prev, lam_next, ws);
                 solver_iterations += res.iterations;
-                converged = res.converged;
+                status = res.status;
                 // Residual-carried gradient: one Xᵀr pass over the fitted
                 // values the solve just produced.
                 self.engine.full_gradient_carried(
@@ -476,7 +510,7 @@ impl<'a> PathRunner<'a> {
                     &mut ws.grad,
                 );
 
-                if !self.rule.needs_kkt() || rounds > self.cfg.max_kkt_rounds {
+                if !self.rule.needs_kkt() {
                     break;
                 }
                 self.kkt_check_into(&pen, lam_next, &o_v, ws);
@@ -484,6 +518,29 @@ impl<'a> PathRunner<'a> {
                     break;
                 }
                 kkt_violations += ws.viol.len();
+                if rounds > self.cfg.max_kkt_rounds {
+                    // Degradation ladder, screening rung: re-entry refused
+                    // to settle within the cap, so instead of silently
+                    // returning a possibly-non-optimal β, certify by
+                    // solving the *full* problem (no screening) once from
+                    // the current iterate, and say so via `KktCapHit`.
+                    let full: Vec<usize> = (0..p).collect();
+                    ws.beta_warm.copy_from_slice(&ws.beta_full);
+                    let warm = std::mem::take(&mut ws.beta_warm);
+                    let fres = self.solve_on(&pen, kind, &loss, &full, &warm, lam_next, ws);
+                    ws.beta_warm = warm;
+                    solver_iterations += fres.iterations;
+                    status = fres.status.worst(SolveStatus::KktCapHit);
+                    self.engine.full_gradient_carried(
+                        &loss,
+                        &ws.beta_full,
+                        &ws.xb,
+                        &mut ws.r,
+                        &mut ws.grad,
+                    );
+                    o_v = full;
+                    break;
+                }
                 screen::union_sorted_into(&o_v, &ws.viol, &mut ws.idx_scratch);
                 std::mem::swap(&mut o_v, &mut ws.idx_scratch);
             }
@@ -509,7 +566,7 @@ impl<'a> PathRunner<'a> {
                     let res = self.solve_on(&pen, kind, &loss, &keep, &warm, lam_next, ws);
                     ws.beta_warm = warm;
                     solver_iterations += res.iterations;
-                    converged = res.converged;
+                    status = res.status.worst(status);
                     self.engine.full_gradient_carried(
                         &loss,
                         &ws.beta_full,
@@ -541,7 +598,7 @@ impl<'a> PathRunner<'a> {
                 o_g,
                 kkt_violations,
                 solver_iterations,
-                converged,
+                status,
                 fit_seconds: t_point.elapsed().as_secs_f64(),
             });
             betas.push(ws.beta_full.clone());

@@ -8,7 +8,7 @@ use crate::metrics::PathMetrics;
 //  Figure 5 / A13-style plots.
 pub fn path_metrics_csv(m: &PathMetrics) -> String {
     let mut s = String::from(
-        "lambda,a_v,a_g,c_v,c_g,o_v,o_g,kkt_violations,iterations,converged,fit_seconds,input_proportion\n",
+        "lambda,a_v,a_g,c_v,c_g,o_v,o_g,kkt_violations,iterations,status,fit_seconds,input_proportion\n",
     );
     for pt in &m.points {
         s.push_str(&format!(
@@ -22,7 +22,7 @@ pub fn path_metrics_csv(m: &PathMetrics) -> String {
             pt.o_g,
             pt.kkt_violations,
             pt.solver_iterations,
-            pt.converged,
+            pt.status.label(),
             pt.fit_seconds,
             pt.o_v as f64 / m.p.max(1) as f64,
         ));
@@ -113,6 +113,7 @@ pub fn run_record(
         ("group_input_proportion", Json::Num(m.group_input_proportion())),
         ("kkt_violations", Json::Num(m.total_kkt_violations() as f64)),
         ("failed_convergences", Json::Num(m.failed_convergences() as f64)),
+        ("status", Json::Str(m.worst_status().label().into())),
         ("mean_iterations", Json::Num(m.mean_iterations())),
         (
             "improvement_factor",

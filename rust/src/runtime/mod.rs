@@ -368,7 +368,12 @@ impl XlaEngine {
 
         let beta_red = beta[..k].to_vec();
         let objective = crate::solver::objective(&loss, pen, lam, &beta_red);
-        Ok(SolveResult { beta: beta_red, iterations, converged, objective })
+        let status = if converged {
+            crate::solver::SolveStatus::Converged
+        } else {
+            crate::solver::SolveStatus::MaxIters
+        };
+        Ok(SolveResult { beta: beta_red, iterations, status, objective })
     }
 }
 

@@ -13,7 +13,7 @@
 //! argument ↦ `cand`), so the iteration and backtracking loops perform no
 //! heap allocation.
 
-use super::{ProxPenalty, SolveResult, Solver, SolverConfig, SolverWorkspace};
+use super::{ProxPenalty, SolveResult, SolveStatus, Solver, SolverConfig, SolverKind, SolverWorkspace};
 use crate::linalg::norm2;
 use crate::loss::Loss;
 
@@ -53,6 +53,8 @@ pub struct Atos<'a, P: ProxPenalty> {
     inv_n: f64,
     iterations: usize,
     converged: bool,
+    /// Backtracking exhausted at least once: the step certificate is gone.
+    failed: bool,
 }
 
 impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
@@ -79,11 +81,14 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
             penalty,
             lambda,
             cfg,
-            gamma: 1.0 / lip,
+            // `step_shrink` defaults to 1.0 (bit-identical); the
+            // degradation ladder halves it on a fallback restart.
+            gamma: cfg.step_shrink / lip,
             threads: crate::parallel::default_threads(),
             inv_n: 1.0 / n as f64,
             iterations: 0,
             converged: false,
+            failed: false,
         }
     }
 
@@ -120,11 +125,17 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
                 ip += gj * d;
                 dsq += d * d;
             }
-            if f_uh <= f_ug + ip + dsq / (2.0 * self.gamma) + 1e-12 * f_ug.abs().max(1.0) {
+            let forced = crate::faults::backtrack_must_fail(SolverKind::Atos);
+            if !forced
+                && f_uh <= f_ug + ip + dsq / (2.0 * self.gamma) + 1e-12 * f_ug.abs().max(1.0)
+            {
                 break;
             }
             bt += 1;
             if bt >= self.cfg.max_backtrack {
+                // Exhausted: accept the candidate, but flag the lost step
+                // certificate for the driver's ladder.
+                self.failed = true;
                 break;
             }
             self.gamma *= self.cfg.backtrack;
@@ -149,16 +160,22 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
         self.converged
     }
 
-    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
+    fn objective(&self, ws: &SolverWorkspace) -> f64 {
         // The primal iterate is u_h (it has passed through both proxes);
         // `xb_beta` tracks it, so the objective costs no matvec.
-        let objective =
-            self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta);
+        self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta)
+    }
+
+    fn failed(&self) -> bool {
+        self.failed
+    }
+
+    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
         SolveResult {
             beta: ws.beta.clone(),
             iterations: self.iterations,
-            converged: self.converged,
-            objective,
+            status: if self.converged { SolveStatus::Converged } else { SolveStatus::MaxIters },
+            objective: self.objective(ws),
         }
     }
 }

@@ -37,7 +37,7 @@
 //! norm cache, the per-group Lipschitz estimates, and the active-group
 //! list); the sweep and backtracking loops perform no heap allocation.
 
-use super::{ProxPenalty, SolveResult, Solver, SolverConfig, SolverWorkspace};
+use super::{ProxPenalty, SolveResult, SolveStatus, Solver, SolverConfig, SolverKind, SolverWorkspace};
 use crate::linalg::{dot, norm2};
 use crate::loss::{Loss, LossKind};
 
@@ -89,6 +89,8 @@ pub struct Bcd<'a, P: ProxPenalty> {
     since_refresh: usize,
     iterations: usize,
     converged: bool,
+    /// Backtracking exhausted at least once: the step certificate is gone.
+    failed: bool,
 }
 
 impl<'a, P: ProxPenalty> Solver<'a, P> for Bcd<'a, P> {
@@ -135,7 +137,9 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Bcd<'a, P> {
         ws.group_lip.resize(groups.m(), 0.0);
         for (g, r) in groups.iter() {
             let mx = ws.col_sq[r].iter().fold(0.0f64, |a, &b| a.max(b));
-            ws.group_lip[g] = (lip_factor * mx).max(1e-12);
+            // Block step is 1/L_g, so a halved ladder step (`step_shrink`
+            // 0.5) means doubled seeds; the default 1.0 divides out exactly.
+            ws.group_lip[g] = (lip_factor * mx).max(1e-12) / cfg.step_shrink;
         }
         ws.groups_active.clear();
 
@@ -149,6 +153,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Bcd<'a, P> {
             since_refresh: 0,
             iterations: 0,
             converged: false,
+            failed: false,
         }
     }
 
@@ -203,16 +208,22 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Bcd<'a, P> {
         self.converged
     }
 
-    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
+    fn objective(&self, ws: &SolverWorkspace) -> f64 {
         // `xb_beta` is carried in lock-step, so the objective needs no
         // fresh matvec.
-        let objective =
-            self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta);
+        self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta)
+    }
+
+    fn failed(&self) -> bool {
+        self.failed
+    }
+
+    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
         SolveResult {
             beta: ws.beta.clone(),
             iterations: self.iterations,
-            converged: self.converged,
-            objective,
+            status: if self.converged { SolveStatus::Converged } else { SolveStatus::MaxIters },
+            objective: self.objective(ws),
         }
     }
 }
@@ -279,13 +290,17 @@ impl<'a, P: ProxPenalty> Bcd<'a, P> {
             // guarantees the prox step decreased the composite objective.
             ws.xb_cand.copy_from_slice(&ws.xb_beta);
             self.loss.x.block_axpy_into(r.clone(), &ws.cand[r.clone()], &mut ws.xb_cand);
-            if f_old.is_nan() {
+            if !f_old.is_finite() {
+                // Recompute on NaN *or* ±∞ — an infinite cached objective
+                // is as useless a reference point as a NaN one.
                 f_old = self.loss.value_from_xb(&ws.xb_beta);
             }
             let f_new = self.loss.value_from_xb(&ws.xb_cand);
             let ip = dot(&ws.grad[r.clone()], &ws.cand[r.clone()]);
-            let bound_ok = f_new
-                <= f_old + ip + 0.5 * ws.group_lip[g] * dsq + 1e-12 * f_old.abs().max(1.0);
+            let forced = crate::faults::backtrack_must_fail(SolverKind::Bcd);
+            let bound_ok = !forced
+                && f_new
+                    <= f_old + ip + 0.5 * ws.group_lip[g] * dsq + 1e-12 * f_old.abs().max(1.0);
             if !bound_ok {
                 bt += 1;
                 if bt < self.cfg.max_backtrack {
@@ -293,7 +308,9 @@ impl<'a, P: ProxPenalty> Bcd<'a, P> {
                     continue;
                 }
                 // Backtracking exhausted: accept the latest candidate
-                // (mirrors FISTA's exhaustion behaviour).
+                // (mirrors FISTA's exhaustion behaviour), but flag the
+                // lost majorization certificate for the driver's ladder.
+                self.failed = true;
             }
             ws.beta[r.clone()].copy_from_slice(&ws.next[r.clone()]);
             std::mem::swap(&mut ws.xb_beta, &mut ws.xb_cand);
@@ -341,7 +358,7 @@ mod tests {
             let cfg_f = SolverConfig { tol: 1e-11, max_iters: 100_000, ..Default::default() };
             let rb = super::solve(&loss, &pen, lambda, &vec![0.0; p], &cfg_b);
             let rf = crate::solver::fista::solve(&loss, &pen, lambda, &vec![0.0; p], &cfg_f);
-            assert!(rb.converged, "trial {trial}: BCD did not certify");
+            assert!(rb.converged(), "trial {trial}: BCD did not certify");
             let d = crate::linalg::l2_distance(&rb.beta, &rf.beta);
             assert!(d < 1e-8, "trial {trial}: BCD vs FISTA ℓ₂ = {d}");
         }
@@ -358,7 +375,7 @@ mod tests {
         let cfg = SolverConfig { kind: SolverKind::Bcd, ..Default::default() };
         let r = super::solve(&loss, &pen, 1.05 * lam_max, &vec![0.0; p], &cfg);
         assert!(r.beta.iter().all(|&b| b == 0.0), "expected null model");
-        assert!(r.converged);
+        assert!(r.converged());
     }
 
     #[test]

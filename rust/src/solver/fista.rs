@@ -13,7 +13,7 @@
 //! swaps, and the candidate's fitted values `Xβ` are carried so the loss is
 //! never evaluated through a fresh `Xβ` allocation.
 
-use super::{ProxPenalty, SolveResult, Solver, SolverConfig, SolverWorkspace};
+use super::{ProxPenalty, SolveResult, SolveStatus, Solver, SolverConfig, SolverKind, SolverWorkspace};
 use crate::linalg::{dot, l2_distance};
 use crate::loss::Loss;
 
@@ -56,6 +56,8 @@ pub struct Fista<'a, P: ProxPenalty> {
     inv_n: f64,
     iterations: usize,
     converged: bool,
+    /// Backtracking exhausted at least once: the step certificate is gone.
+    failed: bool,
 }
 
 impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
@@ -89,11 +91,14 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
             lambda,
             cfg,
             t: 1.0,
-            step: 1.0 / lip,
+            // `step_shrink` defaults to 1.0 (bit-identical); the
+            // degradation ladder halves it on a fallback restart.
+            step: cfg.step_shrink / lip,
             threads: crate::parallel::default_threads(),
             inv_n: 1.0 / n as f64,
             iterations: 0,
             converged: false,
+            failed: false,
         }
     }
 
@@ -125,15 +130,18 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
                 ip += gj * d;
                 dsq += d * d;
             }
-            let bound_ok =
-                fnext <= fz + ip + dsq / (2.0 * self.step) + 1e-12 * fz.abs().max(1.0);
+            let forced = crate::faults::backtrack_must_fail(SolverKind::Fista);
+            let bound_ok = !forced
+                && fnext <= fz + ip + dsq / (2.0 * self.step) + 1e-12 * fz.abs().max(1.0);
             if !bound_ok {
                 bt += 1;
                 if bt < self.cfg.max_backtrack {
                     self.step *= self.cfg.backtrack;
                     continue;
                 }
-                // Backtracking exhausted: accept the latest candidate.
+                // Backtracking exhausted: accept the latest candidate, but
+                // flag the lost step certificate for the driver's ladder.
+                self.failed = true;
             }
             // Accept: advance the iterate by buffer rotation (no copies of
             // the coefficient vectors, no allocation).
@@ -163,15 +171,21 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
         self.converged
     }
 
-    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
+    fn objective(&self, ws: &SolverWorkspace) -> f64 {
         // `xb_beta` tracks `beta` exactly, so the objective costs no matvec.
-        let objective =
-            self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta);
+        self.loss.value_from_xb(&ws.xb_beta) + self.lambda * self.penalty.pen_value(&ws.beta)
+    }
+
+    fn failed(&self) -> bool {
+        self.failed
+    }
+
+    fn extract(&self, ws: &SolverWorkspace) -> SolveResult {
         SolveResult {
             beta: ws.beta.clone(),
             iterations: self.iterations,
-            converged: self.converged,
-            objective,
+            status: if self.converged { SolveStatus::Converged } else { SolveStatus::MaxIters },
+            objective: self.objective(ws),
         }
     }
 }

@@ -125,9 +125,109 @@ impl SolverKind {
     }
 }
 
+/// How a solve ended — the taxonomy every layer above the solvers
+/// (path coordinator, CV engine, fitter, CLI) carries instead of a bare
+/// `converged` flag.
+///
+/// Ordered by *severity* ([`SolveStatus::severity`]): aggregations over
+/// several solves (KKT re-entry rounds, CV fold batches) keep the worst
+/// status seen. The first three variants are **successes** — the returned
+/// β satisfies the stopping criterion, possibly via a degraded route; the
+/// rest are failures where the returned β is the best iterate available
+/// but carries no optimality certificate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// Stopping criterion met by the configured solver.
+    Converged,
+    /// The configured solver failed (backtracking exhaustion or
+    /// divergence) and the degradation ladder's restart — `to` with a
+    /// halved step, warm-started from the last finite iterate — met the
+    /// stopping criterion instead.
+    FellBack { from: SolverKind, to: SolverKind },
+    /// The KKT re-entry cap was exhausted and the coordinator escalated
+    /// to a full no-screening solve at that λ. The solution is certified
+    /// (it was solved over *all* variables); the screening rule's
+    /// efficiency claim is what degraded.
+    KktCapHit,
+    /// Iteration budget exhausted before the stopping criterion.
+    MaxIters,
+    /// No objective progress for `stall_window` consecutive iterations.
+    Stalled,
+    /// The wall-clock budget (`max_seconds`) — or an externally truncated
+    /// iteration budget — ran out; β is the best iterate seen so far.
+    BudgetExhausted,
+    /// The objective became non-finite or rose persistently; β is the
+    /// best finite iterate seen before divergence.
+    Diverged,
+}
+
+impl Default for SolveStatus {
+    fn default() -> Self {
+        SolveStatus::Converged
+    }
+}
+
+impl SolveStatus {
+    /// Severity rank (0 = clean convergence, 6 = divergence). Used by
+    /// [`SolveStatus::worst`] to aggregate across solves.
+    pub fn severity(&self) -> u8 {
+        match self {
+            SolveStatus::Converged => 0,
+            SolveStatus::FellBack { .. } => 1,
+            SolveStatus::KktCapHit => 2,
+            SolveStatus::MaxIters => 3,
+            SolveStatus::Stalled => 4,
+            SolveStatus::BudgetExhausted => 5,
+            SolveStatus::Diverged => 6,
+        }
+    }
+
+    /// The more severe of the two statuses (ties keep `self`).
+    pub fn worst(self, other: SolveStatus) -> SolveStatus {
+        if other.severity() > self.severity() {
+            other
+        } else {
+            self
+        }
+    }
+
+    /// Did the solve produce a certified solution (possibly degraded)?
+    /// `true` for [`SolveStatus::Converged`], [`SolveStatus::FellBack`]
+    /// and [`SolveStatus::KktCapHit`].
+    pub fn is_success(&self) -> bool {
+        self.severity() <= SolveStatus::KktCapHit.severity()
+    }
+
+    /// Stable machine-readable label (CSV/JSON columns).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SolveStatus::Converged => "converged",
+            SolveStatus::FellBack { .. } => "fell_back",
+            SolveStatus::KktCapHit => "kkt_cap_hit",
+            SolveStatus::MaxIters => "max_iters",
+            SolveStatus::Stalled => "stalled",
+            SolveStatus::BudgetExhausted => "budget_exhausted",
+            SolveStatus::Diverged => "diverged",
+        }
+    }
+}
+
+impl std::fmt::Display for SolveStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveStatus::FellBack { from, to } => {
+                write!(f, "fell back ({}→{})", from.name(), to.name())
+            }
+            other => f.write_str(other.label()),
+        }
+    }
+}
+
 /// Solver settings; defaults follow Table A1's algorithm block
 /// (max 5000 iterations, backtracking 0.7 with 100 inner steps,
-/// convergence tolerance 1e-5).
+/// convergence tolerance 1e-5). The guardrail fields default to "off"
+/// (`step_shrink` 1, no wall-clock budget, no stall window), so default
+/// configurations are bit-identical to the pre-guardrail solver.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SolverConfig {
     pub kind: SolverKind,
@@ -136,6 +236,17 @@ pub struct SolverConfig {
     /// Backtracking shrink factor on the step size (paper: 0.7).
     pub backtrack: f64,
     pub max_backtrack: usize,
+    /// Multiplier on the initial step size (`1/L̂ · step_shrink`). The
+    /// degradation ladder halves it on each fallback; 1.0 = untouched.
+    pub step_shrink: f64,
+    /// Wall-clock budget per solve in seconds (checked every 32
+    /// iterations); ∞ = unlimited. On exhaustion the solve returns
+    /// [`SolveStatus::BudgetExhausted`] with the best iterate seen.
+    pub max_seconds: f64,
+    /// Declare [`SolveStatus::Stalled`] after this many consecutive
+    /// iterations with no new best objective; 0 disables the check (the
+    /// default — enable it for long-running serving workloads).
+    pub stall_window: usize,
 }
 
 impl Default for SolverConfig {
@@ -146,6 +257,9 @@ impl Default for SolverConfig {
             tol: 1e-5,
             backtrack: 0.7,
             max_backtrack: 100,
+            step_shrink: 1.0,
+            max_seconds: f64::INFINITY,
+            stall_window: 0,
         }
     }
 }
@@ -155,9 +269,18 @@ impl Default for SolverConfig {
 pub struct SolveResult {
     pub beta: Vec<f64>,
     pub iterations: usize,
-    pub converged: bool,
+    /// How the solve ended (see [`SolveStatus`]).
+    pub status: SolveStatus,
     /// Final primal objective value `f(β) + λΩ(β)`.
     pub objective: f64,
+}
+
+impl SolveResult {
+    /// Did the solve meet its stopping criterion (directly or through the
+    /// degradation ladder's fallback)?
+    pub fn converged(&self) -> bool {
+        matches!(self.status, SolveStatus::Converged | SolveStatus::FellBack { .. })
+    }
 }
 
 /// Reusable buffers for the inner solvers.
@@ -197,6 +320,12 @@ pub struct SolverWorkspace {
     pub(crate) group_lip: Vec<f64>,
     /// BCD: the active-group list of the current epoch.
     pub(crate) groups_active: Vec<usize>,
+    /// Guardrails: β at the best finite objective seen this solve.
+    pub(crate) best_beta: Vec<f64>,
+    /// Guardrails: `Xβ` matching `best_beta` (carried-fitted contract).
+    pub(crate) best_xb: Vec<f64>,
+    /// Whether `best_beta`/`best_xb` hold a snapshot from the current solve.
+    pub(crate) best_valid: bool,
 }
 
 impl SolverWorkspace {
@@ -220,6 +349,17 @@ impl SolverWorkspace {
         fit(&mut self.beta, p);
         fit(&mut self.beta_prev, p);
         fit(&mut self.z, p);
+    }
+
+    /// Snapshot the current iterate (and its carried fitted values) as the
+    /// best seen this solve. `clear` + `extend` keeps capacity, so the
+    /// snapshot is allocation-free once the buffers have grown.
+    pub(crate) fn snapshot_best(&mut self) {
+        self.best_beta.clear();
+        self.best_beta.extend_from_slice(&self.beta);
+        self.best_xb.clear();
+        self.best_xb.extend_from_slice(&self.xb_beta);
+        self.best_valid = true;
     }
 
     /// Final iterate of the last solve.
@@ -259,12 +399,138 @@ pub trait Solver<'a, P: ProxPenalty>: Sized {
     /// Has the stopping criterion been met?
     fn converged(&self) -> bool;
 
+    /// Primal objective `f(β) + λΩ(β)` at the current iterate, computed
+    /// from the carried fitted values (no matvec). The driver's numerical
+    /// guardrails observe this every iteration.
+    fn objective(&self, ws: &SolverWorkspace) -> f64;
+
+    /// Did the solver lose its step-size certificate (backtracking
+    /// exhausted)? A `true` here makes the driver distrust `converged`
+    /// and engage the degradation ladder.
+    fn failed(&self) -> bool {
+        false
+    }
+
     /// Package the final iterate held in `ws`.
     fn extract(&self, ws: &SolverWorkspace) -> SolveResult;
 }
 
-/// The shared iteration driver: `init`, then `step` until `converged` or
-/// `cfg.max_iters`, then `extract`.
+/// Consecutive objective observations ≥ `DIVERGE_FACTOR` above the best
+/// before the driver declares divergence.
+const DIVERGE_PATIENCE: usize = 8;
+/// How far (relative) above the best objective counts as "rising".
+const DIVERGE_FACTOR: f64 = 1e4;
+/// Iterations between wall-clock budget checks.
+const CLOCK_CHECK_EVERY: usize = 32;
+
+/// The raw iteration loop with numerical guardrails: `init`, then `step`
+/// until `converged`, divergence, stall, or a budget runs out, then
+/// `extract`. Returns the result plus the solver's failure flag. No
+/// fallback here — [`drive`] owns the degradation ladder.
+///
+/// Guardrails only *observe* on the healthy path (the per-iteration
+/// objective and best-iterate snapshots never touch the iterate), so a
+/// converging run is bit-identical to the pre-guardrail driver. Only the
+/// degraded exits (`Diverged` / `Stalled` / `BudgetExhausted`) replace
+/// the current iterate with the best finite one seen.
+fn drive_core<'a, P: ProxPenalty, S: Solver<'a, P>>(
+    loss: &'a Loss<'a>,
+    penalty: &'a P,
+    lambda: f64,
+    beta0: &[f64],
+    cfg: &'a SolverConfig,
+    ws: &mut SolverWorkspace,
+) -> (SolveResult, bool) {
+    let start = std::time::Instant::now();
+    let budget = match crate::faults::iteration_cap() {
+        Some(cap) => cap.min(cfg.max_iters),
+        None => cfg.max_iters,
+    };
+    let mut state = S::init(loss, penalty, lambda, beta0, cfg, ws);
+    ws.best_valid = false;
+    let mut status = SolveStatus::MaxIters;
+    let mut best_obj = f64::INFINITY;
+    let mut rising = 0usize;
+    let mut since_best = 0usize;
+    let mut done = 0usize;
+    while done < budget {
+        state.step(ws);
+        done += 1;
+        if state.converged() {
+            status = SolveStatus::Converged;
+            break;
+        }
+        let obj = state.objective(ws);
+        if !obj.is_finite() {
+            status = SolveStatus::Diverged;
+            break;
+        }
+        if obj < best_obj {
+            best_obj = obj;
+            rising = 0;
+            since_best = 0;
+            ws.snapshot_best();
+        } else {
+            since_best += 1;
+            if obj > best_obj + DIVERGE_FACTOR * best_obj.abs().max(1.0) {
+                rising += 1;
+                if rising >= DIVERGE_PATIENCE {
+                    status = SolveStatus::Diverged;
+                    break;
+                }
+            } else {
+                rising = 0;
+            }
+        }
+        if cfg.stall_window > 0 && since_best >= cfg.stall_window {
+            status = SolveStatus::Stalled;
+            break;
+        }
+        if cfg.max_seconds.is_finite()
+            && done % CLOCK_CHECK_EVERY == 0
+            && start.elapsed().as_secs_f64() >= cfg.max_seconds
+        {
+            status = SolveStatus::BudgetExhausted;
+            break;
+        }
+    }
+    if status == SolveStatus::MaxIters && budget < cfg.max_iters {
+        // An externally truncated (fault-injected) budget ran out.
+        status = SolveStatus::BudgetExhausted;
+    }
+    if matches!(
+        status,
+        SolveStatus::Diverged | SolveStatus::Stalled | SolveStatus::BudgetExhausted
+    ) && ws.best_valid
+    {
+        // Degraded exit: hand back the best finite iterate, keeping the
+        // carried-fitted-values contract (`ws.xb_beta` tracks `ws.beta`).
+        ws.beta.copy_from_slice(&ws.best_beta);
+        ws.xb_beta.copy_from_slice(&ws.best_xb);
+    }
+    let mut res = state.extract(ws);
+    res.status = status;
+    (res, state.failed())
+}
+
+/// Concrete FISTA instantiation of [`drive_core`] for the ladder (a free
+/// function so the fallback config's fresh lifetime unifies locally).
+fn fista_fallback<P: ProxPenalty>(
+    loss: &Loss,
+    penalty: &P,
+    lambda: f64,
+    warm: &[f64],
+    cfg: &SolverConfig,
+    ws: &mut SolverWorkspace,
+) -> (SolveResult, bool) {
+    drive_core::<P, fista::Fista<P>>(loss, penalty, lambda, warm, cfg, ws)
+}
+
+/// The shared iteration driver: [`drive_core`] plus the degradation
+/// ladder. If the solve diverges or loses its backtracking certificate,
+/// restart once under FISTA with a halved step from the last finite
+/// iterate; a successful restart reports
+/// [`SolveStatus::FellBack`]`{ from, to }`.
 pub fn drive<'a, P: ProxPenalty, S: Solver<'a, P>>(
     loss: &'a Loss<'a>,
     penalty: &'a P,
@@ -273,14 +539,35 @@ pub fn drive<'a, P: ProxPenalty, S: Solver<'a, P>>(
     cfg: &'a SolverConfig,
     ws: &mut SolverWorkspace,
 ) -> SolveResult {
-    let mut state = S::init(loss, penalty, lambda, beta0, cfg, ws);
-    for _ in 0..cfg.max_iters {
-        state.step(ws);
-        if state.converged() {
-            break;
-        }
+    let (res, failed) = drive_core::<P, S>(loss, penalty, lambda, beta0, cfg, ws);
+    if !failed && res.status != SolveStatus::Diverged {
+        return res;
     }
-    state.extract(ws)
+    // Degradation ladder: one FISTA restart, half the step, warm-started
+    // from the best finite iterate (or the sanitized warm start when the
+    // failure predates any finite objective).
+    let warm: Vec<f64> = if ws.best_valid {
+        ws.best_beta.clone()
+    } else {
+        beta0.iter().map(|&b| if b.is_finite() { b } else { 0.0 }).collect()
+    };
+    let fcfg = SolverConfig {
+        kind: SolverKind::Fista,
+        step_shrink: 0.5 * cfg.step_shrink,
+        ..cfg.clone()
+    };
+    let (fres, ffailed) = fista_fallback(loss, penalty, lambda, &warm, &fcfg, ws);
+    let iterations = res.iterations + fres.iterations;
+    let status = if !ffailed && fres.status == SolveStatus::Converged {
+        SolveStatus::FellBack { from: cfg.kind, to: SolverKind::Fista }
+    } else if ffailed && fres.status == SolveStatus::Converged {
+        // Convergence declared under a broken step certificate is not
+        // trustworthy — report the stall instead.
+        SolveStatus::Stalled
+    } else {
+        fres.status
+    };
+    SolveResult { iterations, status, ..fres }
 }
 
 /// Solve `min f(β) + λ·Ω(β)` from the warm start `beta0` (allocates a
@@ -350,7 +637,7 @@ mod tests {
         let cfg_a = SolverConfig { kind: SolverKind::Atos, tol: 1e-9, max_iters: 20000, ..Default::default() };
         let rf = solve(&loss, &pen, lambda, &vec![0.0; 16], &cfg_f);
         let ra = solve(&loss, &pen, lambda, &vec![0.0; 16], &cfg_a);
-        assert!(rf.converged && ra.converged);
+        assert!(rf.converged() && ra.converged());
         assert!(
             (rf.objective - ra.objective).abs() < 1e-6 * (1.0 + rf.objective),
             "fista {} vs atos {}",
@@ -432,7 +719,7 @@ mod tests {
         let pen = Penalty::sgl(g.clone(), 0.95);
         let lam_max = crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; 12]), &g, 0.95);
         let r = solve(&loss, &pen, 0.1 * lam_max, &vec![0.0; 12], &SolverConfig::default());
-        assert!(r.converged);
+        assert!(r.converged());
         // objective must beat the null model
         assert!(r.objective <= objective(&loss, &pen, 0.1 * lam_max, &vec![0.0; 12]) + 1e-12);
     }
@@ -444,7 +731,7 @@ mod tests {
         let aw = crate::penalty::AdaptiveWeights::from_design(&x, &g, 0.1, 0.1);
         let pen = Penalty::asgl(g, 0.95, aw.v, aw.w);
         let r = solve(&loss, &pen, 0.01, &vec![0.0; 16], &SolverConfig::default());
-        assert!(r.converged);
+        assert!(r.converged());
         assert!(r.objective.is_finite());
     }
 }

@@ -1,0 +1,451 @@
+//! Robustness suite: adversarial inputs and injected faults.
+//!
+//! Two halves:
+//!
+//! 1. **Adversarial inputs** — NaN/∞ design entries, degenerate responses,
+//!    broken groupings, empty/single-row designs, dense and sparse — must
+//!    come back as structured `DfrError`s (matched here by their Display
+//!    text, since the vendored anyhow shim formats eagerly), never panics.
+//! 2. **Injected faults** — via `dfr::faults::with_plan`: NaN gradients,
+//!    forced backtracking failure, truncated iteration budgets, poisoned
+//!    fitter caches. Every one must surface as an accurate `SolveStatus`
+//!    (or a transparent recompute) with finite coefficients.
+//!
+//! Plus the KKT-cap escalation equivalence: with `max_kkt_rounds = 0`,
+//! every violating path point escalates to a full no-screening solve, and
+//! the resulting path must match a from-scratch no-screen fit within the
+//! same ℓ₂ bound the screening-equivalence suite pins.
+
+use dfr::data::{Response, SyntheticConfig};
+use dfr::faults::{with_plan, FaultPlan};
+use dfr::groups::Groups;
+use dfr::linalg::{CscMatrix, Matrix};
+use dfr::loss::{Loss, LossKind};
+use dfr::model_api::{Design, SglModel, SparseMode};
+use dfr::path::{PathConfig, PathRunner};
+use dfr::penalty::Penalty;
+use dfr::rng::Rng;
+use dfr::screen::RuleKind;
+use dfr::solver::{solve, SolveStatus, SolverConfig, SolverKind};
+
+/// Well-conditioned raw rows with a sparse signal (the "good" baseline the
+/// adversarial cases perturb).
+fn good_problem(seed: u64, n: usize, p: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let beta: Vec<f64> =
+        (0..p).map(|j| if j % 4 == 0 { rng.normal(0.0, 1.5) } else { 0.0 }).collect();
+    let rows: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..p).map(|_| rng.gauss()).collect()).collect();
+    let y: Vec<f64> = rows
+        .iter()
+        .map(|r| r.iter().zip(&beta).map(|(x, b)| x * b).sum::<f64>() + rng.normal(0.0, 0.3))
+        .collect();
+    (rows, y)
+}
+
+fn small_model() -> SglModel {
+    SglModel {
+        path: PathConfig { path_len: 6, ..PathConfig::default() },
+        ..SglModel::default()
+    }
+}
+
+/// Fit and return the error text (panics the test if the fit succeeded).
+fn expect_fit_error(rows: &[Vec<f64>], y: &[f64], sizes: &[usize], resp: Response) -> String {
+    let mut fitter = small_model().fitter();
+    match fitter.fit_at(&Design::rows(rows), y, sizes, resp, 5) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("adversarial input was accepted"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial inputs → structured errors, never panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nan_design_entry_is_rejected_with_coordinates() {
+    let (mut rows, y) = good_problem(1, 30, 8);
+    rows[7][3] = f64::NAN;
+    let msg = expect_fit_error(&rows, &y, &[4, 4], Response::Linear);
+    assert!(msg.contains("X[7, 3]") && msg.contains("not finite"), "got: {msg}");
+}
+
+#[test]
+fn infinite_design_entry_is_rejected() {
+    let (mut rows, y) = good_problem(2, 30, 8);
+    rows[0][0] = f64::INFINITY;
+    let msg = expect_fit_error(&rows, &y, &[4, 4], Response::Linear);
+    assert!(msg.contains("not finite"), "got: {msg}");
+}
+
+#[test]
+fn nan_response_entry_is_rejected() {
+    let (rows, mut y) = good_problem(3, 30, 8);
+    y[11] = f64::NAN;
+    let msg = expect_fit_error(&rows, &y, &[4, 4], Response::Linear);
+    assert!(msg.contains("y[11]") && msg.contains("not finite"), "got: {msg}");
+}
+
+#[test]
+fn all_constant_design_is_rejected() {
+    let rows: Vec<Vec<f64>> = (0..20).map(|_| vec![3.0, -1.0, 0.0, 7.5]).collect();
+    let mut rng = Rng::new(4);
+    let y: Vec<f64> = (0..20).map(|_| rng.gauss()).collect();
+    let msg = expect_fit_error(&rows, &y, &[2, 2], Response::Linear);
+    assert!(msg.contains("constant"), "got: {msg}");
+}
+
+#[test]
+fn single_constant_column_is_benign() {
+    let (mut rows, y) = good_problem(5, 40, 8);
+    for r in &mut rows {
+        r[2] = 1.0; // an intercept-like column among varying ones
+    }
+    let mut fitter = small_model().fitter();
+    let fit = fitter.fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 5).unwrap();
+    assert_eq!(fit.coefficients[2], 0.0, "constant column must stay out of the model");
+    assert!(fit.status().is_success());
+}
+
+#[test]
+fn single_row_design_is_a_structured_error() {
+    let rows = vec![vec![1.0, 2.0, 3.0, 4.0]];
+    let y = vec![1.5];
+    // With one observation every column is trivially constant: the design
+    // carries no variation to fit — structured rejection, not a panic.
+    let msg = expect_fit_error(&rows, &y, &[2, 2], Response::Linear);
+    assert!(msg.contains("constant"), "got: {msg}");
+}
+
+#[test]
+fn constant_response_is_rejected_as_degenerate() {
+    let (rows, _) = good_problem(12, 30, 8);
+    let y = vec![2.5; 30];
+    let msg = expect_fit_error(&rows, &y, &[4, 4], Response::Linear);
+    assert!(msg.contains("degenerate response") && msg.contains("zero variance"), "got: {msg}");
+}
+
+#[test]
+fn empty_design_is_rejected() {
+    let rows: Vec<Vec<f64>> = Vec::new();
+    let msg = expect_fit_error(&rows, &[], &[], Response::Linear);
+    assert!(msg.contains("empty design"), "got: {msg}");
+}
+
+#[test]
+fn empty_group_is_rejected() {
+    let (rows, y) = good_problem(6, 30, 8);
+    let msg = expect_fit_error(&rows, &y, &[4, 0, 4], Response::Linear);
+    assert!(msg.contains("group 1") && msg.contains("size 0"), "got: {msg}");
+}
+
+#[test]
+fn group_size_mismatch_is_rejected() {
+    let (rows, y) = good_problem(7, 30, 8);
+    let msg = expect_fit_error(&rows, &y, &[4, 3], Response::Linear);
+    assert!(msg.contains("sum to 7") && msg.contains("8 columns"), "got: {msg}");
+}
+
+#[test]
+fn response_length_mismatch_is_rejected() {
+    let (rows, y) = good_problem(8, 30, 8);
+    let msg = expect_fit_error(&rows, &y[..29], &[4, 4], Response::Linear);
+    assert!(msg.contains("dimension mismatch"), "got: {msg}");
+}
+
+#[test]
+fn singleton_groups_fit_cleanly() {
+    let (rows, y) = good_problem(9, 50, 8);
+    let mut fitter = small_model().fitter();
+    let fit = fitter.fit_at(&Design::rows(&rows), &y, &[1; 8], Response::Linear, 5).unwrap();
+    assert!(fit.status().is_success());
+    assert!(fit.coefficients.iter().all(|c| c.is_finite()));
+}
+
+#[test]
+fn one_class_logistic_is_rejected() {
+    let (rows, _) = good_problem(10, 40, 8);
+    let y = vec![1.0; 40];
+    let msg = expect_fit_error(&rows, &y, &[4, 4], Response::Logistic);
+    assert!(msg.contains("single-class"), "got: {msg}");
+}
+
+#[test]
+fn sparse_kernel_rejects_nan_and_all_zero_designs() {
+    // NaN hidden in CSC nonzeros, routed through the sparse kernel.
+    let csc = CscMatrix::new(4, 2, vec![0, 2, 4], vec![0, 2, 1, 3], vec![1.0, f64::NAN, 2.0, 1.0]);
+    let y = vec![0.5, -0.5, 1.0, 0.0];
+    let model = SglModel { sparse: SparseMode::On, ..small_model() };
+    let mut fitter = model.fitter();
+    let msg = match fitter.fit_at(&Design::Csc(&csc), &y, &[1, 1], Response::Linear, 5) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("NaN CSC entry was accepted"),
+    };
+    assert!(msg.contains("not finite"), "got: {msg}");
+
+    // Every column implicit-zero: constant design.
+    let zero = CscMatrix::new(4, 2, vec![0, 0, 0], vec![], vec![]);
+    let msg = match fitter.fit_at(&Design::Csc(&zero), &y, &[1, 1], Response::Linear, 5) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("all-zero CSC design was accepted"),
+    };
+    assert!(msg.contains("constant"), "got: {msg}");
+}
+
+#[test]
+fn invalid_hyperparameters_are_structured_errors() {
+    let (rows, y) = good_problem(11, 30, 8);
+    for (name, cfg) in [
+        ("alpha", PathConfig { alpha: f64::NAN, ..PathConfig::default() }),
+        ("alpha", PathConfig { alpha: 1.5, ..PathConfig::default() }),
+        ("path_end_ratio", PathConfig { path_end_ratio: 0.0, ..PathConfig::default() }),
+        (
+            "tol",
+            PathConfig {
+                solver: SolverConfig { tol: -1.0, ..SolverConfig::default() },
+                ..PathConfig::default()
+            },
+        ),
+        (
+            "max_seconds",
+            PathConfig {
+                solver: SolverConfig { max_seconds: f64::NAN, ..SolverConfig::default() },
+                ..PathConfig::default()
+            },
+        ),
+        ("gamma", PathConfig { adaptive: Some((-0.5, 0.1)), ..PathConfig::default() }),
+    ] {
+        let model = SglModel { path: cfg, ..SglModel::default() };
+        let mut fitter = model.fitter();
+        let err = fitter
+            .fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 0)
+            .expect_err(&format!("invalid {name} was accepted"));
+        assert!(err.to_string().contains("invalid parameter"), "{name}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection → accurate statuses, finite iterates, no panics
+// ---------------------------------------------------------------------------
+
+/// Small standardized solver problem for direct `solve` calls.
+fn solver_problem(seed: u64, n: usize, p: usize) -> (Matrix, Vec<f64>, Groups) {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::from_fn(n, p, |_, _| rng.gauss());
+    x.standardize_l2();
+    let beta: Vec<f64> =
+        (0..p).map(|j| if j % 3 == 0 { rng.normal(0.0, 2.0) } else { 0.0 }).collect();
+    let mut y = x.matvec(&beta);
+    y.iter_mut().for_each(|v| *v += rng.normal(0.0, 0.1));
+    (x, y, Groups::even(p, 4))
+}
+
+fn lambda_for(loss: &Loss, groups: &Groups, alpha: f64, frac: f64, p: usize) -> f64 {
+    frac * dfr::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), groups, alpha)
+}
+
+#[test]
+fn nan_gradient_degrades_with_status_and_finite_beta() {
+    let (x, y, g) = solver_problem(20, 50, 16);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let pen = Penalty::sgl(g.clone(), 0.95);
+    let lam = lambda_for(&loss, &g, 0.95, 0.1, 16);
+    let cfg = SolverConfig { tol: 1e-10, max_iters: 20_000, ..SolverConfig::default() };
+    let res = with_plan(
+        FaultPlan { nan_gradient_after: Some(2), ..FaultPlan::default() },
+        || solve(&loss, &pen, lam, &vec![0.0; 16], &cfg),
+    );
+    assert!(res.beta.iter().all(|b| b.is_finite()), "NaN leaked into β");
+    // The one-shot NaN either trips divergence detection (and the clean
+    // FISTA restart finishes the job) or is classified as divergence.
+    assert!(
+        matches!(res.status, SolveStatus::FellBack { .. } | SolveStatus::Diverged),
+        "status {:?}",
+        res.status
+    );
+}
+
+#[test]
+fn forced_bcd_backtracking_failure_falls_back_to_fista() {
+    let (x, y, g) = solver_problem(21, 50, 16);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let pen = Penalty::sgl(g.clone(), 0.95);
+    let lam = lambda_for(&loss, &g, 0.95, 0.1, 16);
+    let cfg = SolverConfig { kind: SolverKind::Bcd, tol: 1e-8, ..SolverConfig::default() };
+    let res = with_plan(
+        FaultPlan { fail_backtrack_for: Some(SolverKind::Bcd), ..FaultPlan::default() },
+        || solve(&loss, &pen, lam, &vec![0.0; 16], &cfg),
+    );
+    assert_eq!(
+        res.status,
+        SolveStatus::FellBack { from: SolverKind::Bcd, to: SolverKind::Fista },
+        "ladder must record the degraded route"
+    );
+    assert!(res.converged());
+    // The fallback must land on the same solution a clean FISTA run finds.
+    let clean = solve(
+        &loss,
+        &pen,
+        lam,
+        &vec![0.0; 16],
+        &SolverConfig { tol: 1e-8, ..SolverConfig::default() },
+    );
+    let d = dfr::linalg::l2_distance(&res.beta, &clean.beta);
+    assert!(d < 1e-4, "fallback drifted from clean solve: ℓ₂ = {d}");
+}
+
+#[test]
+fn forced_fista_failure_without_escape_reports_failure() {
+    let (x, y, g) = solver_problem(22, 40, 12);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let pen = Penalty::sgl(g.clone(), 0.95);
+    let lam = lambda_for(&loss, &g, 0.95, 0.1, 12);
+    let cfg = SolverConfig { tol: 1e-10, ..SolverConfig::default() };
+    // FISTA forced to fail, and the ladder's fallback is also FISTA: no
+    // escape route. The status must be a non-success, not a fake converge.
+    let res = with_plan(
+        FaultPlan { fail_backtrack_for: Some(SolverKind::Fista), ..FaultPlan::default() },
+        || solve(&loss, &pen, lam, &vec![0.0; 12], &cfg),
+    );
+    assert!(!res.status.is_success(), "broken certificate reported as {:?}", res.status);
+    assert!(res.beta.iter().all(|b| b.is_finite()));
+}
+
+#[test]
+fn truncated_iteration_budget_reports_budget_exhausted() {
+    let (x, y, g) = solver_problem(23, 50, 16);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let pen = Penalty::sgl(g.clone(), 0.95);
+    let lam = lambda_for(&loss, &g, 0.95, 0.05, 16);
+    let cfg = SolverConfig { tol: 1e-12, max_iters: 20_000, ..SolverConfig::default() };
+    let res = with_plan(
+        FaultPlan { truncate_iters: Some(3), ..FaultPlan::default() },
+        || solve(&loss, &pen, lam, &vec![0.0; 16], &cfg),
+    );
+    assert_eq!(res.status, SolveStatus::BudgetExhausted);
+    assert!(res.iterations <= 3 + 3, "budget ignored: {} iterations", res.iterations);
+    assert!(res.beta.iter().all(|b| b.is_finite()));
+}
+
+#[test]
+fn wall_clock_budget_reports_budget_exhausted() {
+    let (x, y, g) = solver_problem(24, 80, 32);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let pen = Penalty::sgl(g.clone(), 0.95);
+    let lam = lambda_for(&loss, &g, 0.95, 0.01, 32);
+    // A tolerance no solver meets in 32 iterations plus a budget that has
+    // already expired at the first clock check.
+    let cfg = SolverConfig {
+        tol: 1e-16,
+        max_iters: 1_000_000,
+        max_seconds: 1e-9,
+        ..SolverConfig::default()
+    };
+    let res = solve(&loss, &pen, lam, &vec![0.0; 32], &cfg);
+    assert_eq!(res.status, SolveStatus::BudgetExhausted);
+    assert!(res.beta.iter().all(|b| b.is_finite()));
+}
+
+#[test]
+fn stall_window_reports_stalled() {
+    let (x, y, g) = solver_problem(25, 60, 24);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let pen = Penalty::sgl(g.clone(), 0.95);
+    let lam = lambda_for(&loss, &g, 0.95, 0.05, 24);
+    // An unreachable tolerance with a small stall window: once the
+    // objective plateaus at machine precision, the stall guardrail (not
+    // the iteration cap) must end the solve.
+    let cfg = SolverConfig {
+        tol: 1e-16,
+        max_iters: 1_000_000,
+        stall_window: 50,
+        ..SolverConfig::default()
+    };
+    let res = solve(&loss, &pen, lam, &vec![0.0; 24], &cfg);
+    assert_eq!(res.status, SolveStatus::Stalled);
+    assert!(res.beta.iter().all(|b| b.is_finite()));
+}
+
+#[test]
+fn poisoned_fitter_cache_recomputes_transparently() {
+    let (rows, y) = good_problem(26, 50, 8);
+    let mut fitter = small_model().fitter();
+    let first = fitter.fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 5).unwrap();
+    assert_eq!(fitter.prepared_misses(), 1);
+    fitter.testkit_poison_cache();
+    // The integrity stamp no longer matches: the fitter must re-ingest
+    // (a second miss) and produce bit-identical results — never serve the
+    // poisoned entry, never panic.
+    let second = fitter.fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 5).unwrap();
+    assert_eq!(fitter.prepared_misses(), 2, "poisoned entry was served");
+    assert_eq!(first.coefficients, second.coefficients);
+    assert_eq!(first.intercept, second.intercept);
+}
+
+#[test]
+fn fault_plans_do_not_leak_across_solves() {
+    let (x, y, g) = solver_problem(27, 40, 12);
+    let loss = Loss::new(LossKind::Squared, &x, &y);
+    let pen = Penalty::sgl(g.clone(), 0.95);
+    let lam = lambda_for(&loss, &g, 0.95, 0.1, 12);
+    let cfg = SolverConfig::default();
+    let _ = with_plan(
+        FaultPlan { truncate_iters: Some(2), ..FaultPlan::default() },
+        || solve(&loss, &pen, lam, &vec![0.0; 12], &cfg),
+    );
+    // Outside the plan the same solve must be healthy again.
+    let clean = solve(&loss, &pen, lam, &vec![0.0; 12], &cfg);
+    assert_eq!(clean.status, SolveStatus::Converged);
+}
+
+// ---------------------------------------------------------------------------
+// KKT-cap escalation: certified equivalence with a no-screen solve
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kkt_cap_escalation_matches_no_screen_path() {
+    let gd = SyntheticConfig {
+        n: 60,
+        p: 90,
+        rho: 0.3,
+        ..SyntheticConfig::default()
+    }
+    .generate(31);
+    let cfg = PathConfig {
+        path_len: 10,
+        // Every KKT violation immediately exhausts the cap, forcing the
+        // escalation path at any violating λ.
+        max_kkt_rounds: 0,
+        solver: SolverConfig { tol: 1e-9, max_iters: 100_000, ..SolverConfig::default() },
+        ..PathConfig::default()
+    };
+    let screened =
+        PathRunner::new(&gd.dataset, cfg.clone()).rule(RuleKind::DfrSgl).run().unwrap();
+    let no_screen =
+        PathRunner::new(&gd.dataset, cfg).rule(RuleKind::NoScreen).run().unwrap();
+    // Same bound the repo's DFR-vs-no-screen equivalence suite pins at
+    // this tolerance (the criterion is relative β change, so two
+    // differently-warm-started solves agree to ~tol-scale, not exactly).
+    let d = screened.l2_distance_to(&no_screen);
+    assert!(d <= 5e-4, "escalated path drifted from no-screen: ℓ₂ = {d}");
+    // Whatever route each point took, the result is certified: worst-case
+    // status must still be a success (Converged or KktCapHit).
+    assert!(
+        screened.metrics.worst_status().is_success(),
+        "escalation left an uncertified point: {:?}",
+        screened.metrics.worst_status()
+    );
+}
+
+#[test]
+fn statuses_flow_into_fit_reports() {
+    let (rows, y) = good_problem(32, 50, 8);
+    let mut fitter = small_model().fitter();
+    let fit = fitter.fit_at(&Design::rows(&rows), &y, &[4, 4], Response::Linear, 5).unwrap();
+    assert_eq!(fit.status(), SolveStatus::Converged);
+    let csv = dfr::report::path_metrics_csv(&fit.path_fit.metrics);
+    let mut lines = csv.lines();
+    assert!(lines.next().unwrap_or_default().contains(",status,"));
+    assert!(lines.next().unwrap_or_default().contains("converged"));
+}

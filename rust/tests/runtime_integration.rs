@@ -137,7 +137,7 @@ fn xla_fista_chunks_match_native_solver() {
         let via_xla = eng
             .solve_reduced_via_xla(&x, &y, &rpen, lam, &vec![0.0; k], &cfg)
             .unwrap();
-        assert!(via_xla.converged, "k={k}: xla solve did not converge");
+        assert!(via_xla.converged(), "k={k}: xla solve did not converge");
         assert!(
             (via_xla.objective - native.objective).abs() < 1e-7 * (1.0 + native.objective),
             "k={k}: objective {} vs native {}",
