@@ -33,12 +33,13 @@ pub const STRONG_RULES: [RuleKind; 3] =
     [RuleKind::DfrAsgl, RuleKind::DfrSgl, RuleKind::Sparsegl];
 
 /// Strong + safe rules (Fig. 1).
-pub const ALL_RULES: [RuleKind; 5] = [
+pub const ALL_RULES: [RuleKind; 6] = [
     RuleKind::DfrAsgl,
     RuleKind::DfrSgl,
     RuleKind::Sparsegl,
     RuleKind::GapSafeSeq,
     RuleKind::GapSafeDyn,
+    RuleKind::Tlfre,
 ];
 
 /// Run one (dataset, setting) cell: no-screen baseline plus every rule,
@@ -98,9 +99,13 @@ pub fn run_cell(
         let name = rule.name();
         table.push("improvement factor", setting, name, t_base / m.total_seconds.max(1e-12));
         table.push("input proportion (O_v/p)", setting, name, m.input_proportion());
+        table.push("candidate proportion (C_v/p)", setting, name, m.candidate_proportion());
         table.push("group input proportion (O_g/m)", setting, name, m.group_input_proportion());
         table.push("screen time (s)", setting, name, m.total_seconds);
         table.push("KKT violations", setting, name, m.total_kkt_violations() as f64);
+        // Safe rules record 0 by construction; strong rules pay per round.
+        table.push("KKT re-entries", setting, name, m.total_kkt_reentries() as f64);
+        table.push("max KKT residual", setting, name, m.max_kkt_residual());
         table.push("failed convergences", setting, name, m.failed_convergences() as f64);
         table.push("l2 distance to no screen", setting, name, fit.l2_distance_to(baseline));
         table.push("O_v / A_v", setting, name, m.ov_over_av());

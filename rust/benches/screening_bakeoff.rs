@@ -1,0 +1,97 @@
+//! **Screening bake-off**: every rule (strong + safe, including TLFre)
+//! across a (correlation × group-regime × loss) grid, reporting the
+//! candidate/optimization proportions, KKT re-entry counts, and wall time
+//! per cell — the head-to-head contrast between heuristic rules that pay
+//! for KKT repair and safe rules that certify their exclusions.
+//!
+//! Output lands in `BENCH_screening_bakeoff.json` (schema in
+//! `docs/BENCHMARKS.md`). `cargo bench --bench screening_bakeoff` runs the
+//! smoke grid CI exercises; `DFR_BENCH_FULL=1` widens it to paper scale.
+//!
+//! Reading the output: safe rules (TLFre, GAP-safe) must show exactly 0 in
+//! the "KKT re-entries" row; strong rules trade nonzero repair rounds for
+//! tighter candidate sets. On logistic cells TLFre falls back to no
+//! screening (its dual projection is derived for the squared loss), so its
+//! input proportion there is 1 — the honest cost of exactness.
+
+mod common;
+
+use dfr::bench_harness::BenchTable;
+use dfr::data::synthetic::GroupSpec;
+use dfr::data::{Response, SyntheticConfig};
+use dfr::path::PathConfig;
+
+struct Scenario {
+    name: &'static str,
+    rho: f64,
+    groups: GroupSpec,
+    response: Response,
+}
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (p, n, path_len) = if full { (1000, 200, 50) } else { (240, 80, 10) };
+    let group_small = if full { 5 } else { 4 };
+    let group_large = if full { 50 } else { 24 };
+
+    // rule × correlation × group-regime × loss. The logistic leg only
+    // varies the group regime at low correlation — the loss contrast, not
+    // another full factorial, is what the table needs.
+    let scenarios = [
+        Scenario {
+            name: "linear rho=0.1 small-groups",
+            rho: 0.1,
+            groups: GroupSpec::Even(group_small),
+            response: Response::Linear,
+        },
+        Scenario {
+            name: "linear rho=0.1 large-groups",
+            rho: 0.1,
+            groups: GroupSpec::Even(group_large),
+            response: Response::Linear,
+        },
+        Scenario {
+            name: "linear rho=0.7 small-groups",
+            rho: 0.7,
+            groups: GroupSpec::Even(group_small),
+            response: Response::Linear,
+        },
+        Scenario {
+            name: "linear rho=0.7 large-groups",
+            rho: 0.7,
+            groups: GroupSpec::Even(group_large),
+            response: Response::Linear,
+        },
+        Scenario {
+            name: "logistic rho=0.1 small-groups",
+            rho: 0.1,
+            groups: GroupSpec::Even(group_small),
+            response: Response::Logistic,
+        },
+        Scenario {
+            name: "logistic rho=0.1 large-groups",
+            rho: 0.1,
+            groups: GroupSpec::Even(group_large),
+            response: Response::Logistic,
+        },
+    ];
+
+    let mut table =
+        BenchTable::new("Screening bake-off — rule × correlation × groups × loss");
+    for (s_idx, sc) in scenarios.iter().enumerate() {
+        for rep in 0..common::repeats() {
+            let data = SyntheticConfig {
+                n,
+                p,
+                rho: sc.rho,
+                groups: sc.groups.clone(),
+                response: sc.response,
+                ..SyntheticConfig::default()
+            }
+            .generate(7000 + 100 * s_idx as u64 + rep as u64);
+            let cfg = PathConfig { ..common::bench_path_config(path_len) };
+            common::run_cell(&mut table, sc.name, &data.dataset, &cfg, &common::ALL_RULES);
+        }
+    }
+    table.finish("screening_bakeoff");
+}

@@ -158,6 +158,7 @@ pub fn parse_rule(name: &str) -> Result<crate::screen::RuleKind, String> {
         "sparsegl" => Sparsegl,
         "gap" | "gap-seq" | "gap-safe" => GapSafeSeq,
         "gap-dyn" => GapSafeDyn,
+        "tlfre" => Tlfre,
         other => return Err(format!("unknown rule `{other}`")),
     })
 }
@@ -215,6 +216,8 @@ mod tests {
     fn rule_names_parse() {
         assert_eq!(parse_rule("dfr").unwrap(), crate::screen::RuleKind::DfrSgl);
         assert_eq!(parse_rule("DFR-aSGL").unwrap(), crate::screen::RuleKind::DfrAsgl);
+        assert_eq!(parse_rule("tlfre").unwrap(), crate::screen::RuleKind::Tlfre);
+        assert_eq!(parse_rule("TLFre").unwrap(), crate::screen::RuleKind::Tlfre);
         assert!(parse_rule("wat").is_err());
     }
 

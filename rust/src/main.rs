@@ -26,7 +26,7 @@ use dfr::solver::{SolverConfig, SolverKind};
 
 fn specs() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "rule", help: "screening rule: none|dfr|dfr-asgl|sparsegl|gap|gap-dyn", default: Some("dfr"), takes_value: true },
+        OptSpec { name: "rule", help: "screening rule: none|dfr|dfr-asgl|sparsegl|gap|gap-dyn|tlfre", default: Some("dfr"), takes_value: true },
         OptSpec { name: "dataset", help: "synthetic | brca1 | scheetz | trust-experts | adenoma | celiac | tumour", default: Some("synthetic"), takes_value: true },
         OptSpec { name: "scale", help: "surrogate real-data scale factor (0..1]", default: Some("0.1"), takes_value: true },
         OptSpec { name: "p", help: "synthetic: number of variables", default: Some("1000"), takes_value: true },

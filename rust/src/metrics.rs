@@ -25,6 +25,15 @@ pub struct PointMetrics {
     pub o_g: usize,
     /// KKT violations encountered (variables added back).
     pub kkt_violations: usize,
+    /// KKT re-entry rounds at this path point: how many times a violation
+    /// forced a re-solve (strong rules only — safe rules take the
+    /// no-recheck fast path and always record 0; the KKT-cap escalation's
+    /// certifying full solve counts as one round).
+    pub kkt_rounds: usize,
+    /// Final stationarity residual of the accepted solution at this λ
+    /// ([`crate::screen::kkt::stationarity_residual`]) — the per-point
+    /// optimality certificate the KKT-audit harness asserts on.
+    pub kkt_residual: f64,
     pub solver_iterations: usize,
     /// How the solve at this path point concluded (defaults to
     /// [`SolveStatus::Converged`], matching the synthesized null-model
@@ -73,6 +82,20 @@ impl PathMetrics {
     /// Total KKT violations across the path.
     pub fn total_kkt_violations(&self) -> usize {
         self.points.iter().map(|pt| pt.kkt_violations).sum()
+    }
+
+    /// Total KKT re-entry rounds across the path — zero by construction
+    /// for safe rules (`needs_kkt() == false`), the bake-off's headline
+    /// contrast with the strong rules.
+    pub fn total_kkt_reentries(&self) -> usize {
+        self.points.iter().map(|pt| pt.kkt_rounds).sum()
+    }
+
+    /// Worst final stationarity residual along the path (0 for an empty
+    /// path) — every rule must end every point KKT-clean up to solver
+    /// tolerance, which `rust/tests/screening_safety.rs` asserts.
+    pub fn max_kkt_residual(&self) -> f64 {
+        self.points.iter().fold(0.0f64, |m, pt| m.max(pt.kkt_residual))
     }
 
     /// Number of path points whose solve did not succeed (anything worse
@@ -250,6 +273,8 @@ mod tests {
             c_v: 30,
             status: SolveStatus::MaxIters,
             kkt_violations: 3,
+            kkt_rounds: 2,
+            kkt_residual: 3e-8,
             ..Default::default()
         });
         assert!((pm.input_proportion() - 0.3).abs() < 1e-12);
@@ -257,6 +282,8 @@ mod tests {
         assert!((pm.candidate_proportion() - 0.2).abs() < 1e-12);
         assert!((pm.ov_over_av() - 2.0).abs() < 1e-12);
         assert_eq!(pm.total_kkt_violations(), 3);
+        assert_eq!(pm.total_kkt_reentries(), 2);
+        assert!((pm.max_kkt_residual() - 3e-8).abs() < 1e-20);
         assert_eq!(pm.failed_convergences(), 1);
     }
 

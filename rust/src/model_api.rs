@@ -137,6 +137,16 @@ impl SglModel {
         self.path.solver.kind = kind;
         self
     }
+
+    /// Same model with a different screening rule — the serving-API leg of
+    /// end-to-end rule selection. Safe rules ([`RuleKind::needs_kkt`]
+    /// `== false`, e.g. [`RuleKind::Tlfre`] and the GAP-safe pair) make
+    /// every fit skip the KKT re-entry loop entirely; strong rules keep
+    /// the violation→re-solve repair.
+    pub fn with_rule(mut self, rule: RuleKind) -> Self {
+        self.rule = rule;
+        self
+    }
 }
 
 /// A raw design matrix in whichever layout the caller already has.
@@ -1204,6 +1214,36 @@ mod tests {
         let corr = correlation(&preds, &y);
         assert!(corr > 0.95, "in-sample correlation {corr}");
         assert!(!fitted.selected().is_empty());
+    }
+
+    /// `with_rule` threads a screening rule through the serving API, and a
+    /// safe rule's fit records zero KKT re-entry rounds while matching the
+    /// default strong rule's solution.
+    #[test]
+    fn with_rule_selects_safe_rule_end_to_end() {
+        assert_eq!(SglModel::default().rule, RuleKind::DfrSgl);
+        let model = SglModel {
+            path: PathConfig { path_len: 10, ..PathConfig::default() },
+            ..Default::default()
+        };
+        assert_eq!(
+            model.clone().with_rule(RuleKind::Tlfre).rule,
+            RuleKind::Tlfre
+        );
+        let (rows, y, _) = raw_problem(12, 80, 16);
+        let strong = model.fit_at(&rows, &y, &[4, 4, 4, 4], Response::Linear, 8).unwrap();
+        let safe = model
+            .with_rule(RuleKind::Tlfre)
+            .fit_at(&rows, &y, &[4, 4, 4, 4], Response::Linear, 8)
+            .unwrap();
+        assert_eq!(safe.path_fit.rule, RuleKind::Tlfre);
+        assert_eq!(safe.path_fit.metrics.total_kkt_reentries(), 0);
+        crate::testkit::assert_close(
+            &safe.path_fit.betas[8],
+            &strong.path_fit.betas[8],
+            1e-4,
+            "TLFre vs DFR serving-API solution",
+        );
     }
 
     #[test]

@@ -430,6 +430,12 @@ impl<'a> PathRunner<'a> {
         metrics.points.push(PointMetrics {
             lambda: lambdas[0],
             status: SolveStatus::Converged,
+            kkt_residual: crate::screen::kkt::stationarity_residual(
+                &pen,
+                &grad0,
+                &vec![0.0; p],
+                lambdas[0],
+            ),
             fit_seconds: t0.elapsed().as_secs_f64(),
             ..Default::default()
         });
@@ -477,21 +483,25 @@ impl<'a> PathRunner<'a> {
                     &mut ws.r,
                     &mut ws.grad,
                 );
-                betas.push(beta_null);
                 std::mem::swap(&mut grad_prev, &mut ws.grad);
                 metrics.points.push(PointMetrics {
                     lambda: lam_next,
                     c_v,
                     c_g,
                     status: SolveStatus::Converged,
+                    kkt_residual: crate::screen::kkt::stationarity_residual(
+                        &pen, &grad_prev, &beta_null, lam_next,
+                    ),
                     fit_seconds: t_point.elapsed().as_secs_f64(),
                     ..Default::default()
                 });
+                betas.push(beta_null);
                 continue;
             }
 
             // --- Solve + KKT loop ---
             let mut kkt_violations = 0usize;
+            let mut kkt_rounds = 0usize;
             let mut solver_iterations = 0usize;
             let mut status;
             let mut rounds = 0usize;
@@ -511,6 +521,12 @@ impl<'a> PathRunner<'a> {
                 );
 
                 if !self.rule.needs_kkt() {
+                    // Safe-rule fast path: exact rules (GAP safe, TLFre,
+                    // no-screen) certify every exclusion, so the
+                    // violation→re-entry loop is skipped entirely — zero
+                    // KKT rounds recorded, one reduced solve per λ. The
+                    // regression test in `rust/tests/screening_safety.rs`
+                    // pins both halves of that claim.
                     break;
                 }
                 self.kkt_check_into(&pen, lam_next, &o_v, ws);
@@ -518,6 +534,7 @@ impl<'a> PathRunner<'a> {
                     break;
                 }
                 kkt_violations += ws.viol.len();
+                kkt_rounds += 1;
                 if rounds > self.cfg.max_kkt_rounds {
                     // Degradation ladder, screening rung: re-entry refused
                     // to settle within the cap, so instead of silently
@@ -588,6 +605,14 @@ impl<'a> PathRunner<'a> {
                 gs.dedup();
                 gs.len()
             };
+            // Final optimality certificate at this λ, from the carried
+            // gradient — one O(p) pass, no extra design products.
+            let kkt_residual = crate::screen::kkt::stationarity_residual(
+                &pen,
+                &ws.grad,
+                &ws.beta_full,
+                lam_next,
+            );
             metrics.points.push(PointMetrics {
                 lambda: lam_next,
                 a_v,
@@ -597,6 +622,8 @@ impl<'a> PathRunner<'a> {
                 o_v: o_v.len(),
                 o_g,
                 kkt_violations,
+                kkt_rounds,
+                kkt_residual,
                 solver_iterations,
                 status,
                 fit_seconds: t_point.elapsed().as_secs_f64(),
@@ -806,6 +833,22 @@ mod tests {
                 c.l2_distance
             );
         }
+    }
+
+    #[test]
+    fn tlfre_matches_no_screen_with_zero_reentries() {
+        let gd = small_data();
+        let c = compare_with_no_screen(&gd.dataset, &cfg(), RuleKind::Tlfre).unwrap();
+        assert!(c.l2_distance < 1e-3, "TLFre drift {}", c.l2_distance);
+        // Safe rule: the no-recheck fast path must record zero KKT events.
+        assert_eq!(c.screened.metrics.total_kkt_reentries(), 0);
+        assert_eq!(c.screened.metrics.total_kkt_violations(), 0);
+        // And it must actually screen.
+        assert!(
+            c.screened.metrics.input_proportion() < 1.0,
+            "TLFre kept everything: O_v/p = {}",
+            c.screened.metrics.input_proportion()
+        );
     }
 
     #[test]

@@ -120,6 +120,53 @@ pub fn group_violations_into(
 /// its tolerance, so exact-zero tests would flag spurious violations.
 pub const KKT_TOL: f64 = 1e-7;
 
+/// Worst-case stationarity residual of `(β, ∇f(β))` at `λ` — the audit
+/// number behind the KKT-audit harness ([`crate::testkit::KktAudit`]) and
+/// the per-point `kkt_residual` metric. Zero at an exact optimum; a small
+/// positive value bounds how far the solution sits from satisfying the
+/// full (a)SGL KKT system:
+///
+/// * active variable `i` in group `g`:
+///   `|∇ᵢf + λαvᵢ·sgn(βᵢ) + λ(1−α)w_g√p_g·βᵢ/‖β^(g)‖₂|`,
+/// * zero variable in an *active* group: `(|∇ᵢf| − λαvᵢ)₊` (the group
+///   subgradient coordinate is exactly 0 there),
+/// * fully inactive group: `(‖S(∇_gf, λαv)‖₂ − λ(1−α)w_g√p_g)₊`.
+///
+/// The maximum over all three families is returned.
+pub fn stationarity_residual(
+    pen: &Penalty,
+    grad: &[f64],
+    beta: &[f64],
+    lambda: f64,
+) -> f64 {
+    let alpha = pen.alpha;
+    let mut worst: f64 = 0.0;
+    for (g, r) in pen.groups.iter() {
+        let rho = lambda * (1.0 - alpha) * pen.w[g] * (pen.groups.size(g) as f64).sqrt();
+        let norm = beta[r.clone()].iter().map(|b| b * b).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for i in r {
+                let res = if beta[i] != 0.0 {
+                    (grad[i] + lambda * alpha * pen.v[i] * beta[i].signum()
+                        + rho * beta[i] / norm)
+                        .abs()
+                } else {
+                    (grad[i].abs() - lambda * alpha * pen.v[i]).max(0.0)
+                };
+                worst = worst.max(res);
+            }
+        } else {
+            let mut nsq = 0.0;
+            for i in r {
+                let s = soft_threshold(grad[i], lambda * alpha * pen.v[i]);
+                nsq += s * s;
+            }
+            worst = worst.max((nsq.sqrt() - rho).max(0.0));
+        }
+    }
+    worst
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +231,39 @@ mod tests {
         let (vars, count) = group_violations(&pen, &grad, 1.0, [1usize].into_iter());
         assert_eq!(count, 1);
         assert_eq!(vars, vec![3, 4, 5]);
+    }
+
+    /// A tightly-solved problem has a near-zero stationarity residual; a
+    /// perturbed copy of the same solution does not.
+    #[test]
+    fn stationarity_residual_vanishes_at_optimum() {
+        let mut rng = Rng::new(21);
+        let p = 20;
+        let mut x = Matrix::from_fn(40, p, |_, _| rng.gauss());
+        x.standardize_l2();
+        let y: Vec<f64> = rng.gauss_vec(40);
+        let g = Groups::even(p, 5);
+        let pen = Penalty::sgl(g.clone(), 0.9);
+        let loss = Loss::new(LossKind::Squared, &x, &y);
+        let lam_max = crate::norms::dual_sgl_norm(&loss.gradient(&vec![0.0; p]), &g, 0.9);
+        let lam = 0.4 * lam_max;
+        let cfg = SolverConfig { tol: 1e-12, max_iters: 200_000, ..Default::default() };
+        let sol = solve(&loss, &pen, lam, &vec![0.0; p], &cfg);
+        let grad = loss.gradient(&sol.beta);
+        let res = stationarity_residual(&pen, &grad, &sol.beta, lam);
+        assert!(res <= 1e-6, "residual {res} at a tight solve");
+        // Perturb one active coordinate: the residual must light up.
+        let mut bad = sol.beta.clone();
+        if let Some(i) = bad.iter().position(|&b| b != 0.0) {
+            bad[i] += 0.5;
+            let grad_bad = loss.gradient(&bad);
+            let res_bad = stationarity_residual(&pen, &grad_bad, &bad, lam);
+            assert!(res_bad > 1e-2, "perturbed residual {res_bad} too small");
+        }
+        // The null model at λ ≥ λ_max is exactly stationary.
+        let grad0 = loss.gradient(&vec![0.0; p]);
+        let res0 = stationarity_residual(&pen, &grad0, &vec![0.0; p], lam_max * 1.0001);
+        assert_eq!(res0, 0.0, "null model above λ₁ must have zero residual");
     }
 
     #[test]

@@ -8,16 +8,20 @@
 //! | [`dfr`] | strong (heuristic) | group + variable | Eqs. 5–8 |
 //! | [`sparsegl`] | strong (heuristic) | group only | Liang et al. '22, Eq. 29 |
 //! | [`gap_safe`] | exact (safe) | group + variable | Ndiaye et al. '16, Eqs. 30–33 |
+//! | [`tlfre`] | exact (safe) | group + variable | Wang & Ye '14 (TLFre) |
 //! | `NoScreen` | — | none | baseline |
 //!
 //! Strong rules may err, so every strong rule is paired with its KKT check
 //! ([`kkt`]); the pathwise coordinator re-solves with violating variables
-//! added back until no violation remains (Algorithm 1).
+//! added back until no violation remains (Algorithm 1). Safe rules
+//! (`needs_kkt() == false`) certify their exclusions, so the coordinator
+//! skips the violation→re-entry loop entirely for them.
 
 pub mod dfr;
 pub mod gap_safe;
 pub mod kkt;
 pub mod sparsegl;
+pub mod tlfre;
 
 use crate::data::Response;
 use crate::linalg::DesignRef;
@@ -39,6 +43,10 @@ pub enum RuleKind {
     GapSafeSeq,
     /// GAP safe sphere rule, dynamic variant (re-screen during solving).
     GapSafeDyn,
+    /// TLFre — the two-layer *safe* rule (Wang & Ye '14): sequential
+    /// (E)DPP balls on the decomposed SGL dual feasible set, group then
+    /// variable elimination, adaptive weights included.
+    Tlfre,
 }
 
 impl RuleKind {
@@ -50,6 +58,7 @@ impl RuleKind {
             RuleKind::Sparsegl => "sparsegl",
             RuleKind::GapSafeSeq => "GAP-safe-seq",
             RuleKind::GapSafeDyn => "GAP-safe-dyn",
+            RuleKind::Tlfre => "TLFre",
         }
     }
 
@@ -59,13 +68,14 @@ impl RuleKind {
     }
 
     /// All rules compared in the paper's figures.
-    pub const ALL: [RuleKind; 6] = [
+    pub const ALL: [RuleKind; 7] = [
         RuleKind::NoScreen,
         RuleKind::DfrSgl,
         RuleKind::DfrAsgl,
         RuleKind::Sparsegl,
         RuleKind::GapSafeSeq,
         RuleKind::GapSafeDyn,
+        RuleKind::Tlfre,
     ];
 }
 
@@ -111,6 +121,7 @@ pub fn screen(kind: RuleKind, ctx: &ScreenContext) -> Candidates {
         RuleKind::DfrSgl | RuleKind::DfrAsgl => dfr::screen(ctx),
         RuleKind::Sparsegl => sparsegl::screen(ctx),
         RuleKind::GapSafeSeq | RuleKind::GapSafeDyn => gap_safe::screen(ctx),
+        RuleKind::Tlfre => tlfre::screen(ctx),
     }
 }
 
@@ -216,7 +227,14 @@ mod tests {
         assert!(RuleKind::DfrSgl.needs_kkt());
         assert!(RuleKind::Sparsegl.needs_kkt());
         assert!(!RuleKind::GapSafeSeq.needs_kkt());
+        assert!(!RuleKind::Tlfre.needs_kkt());
         assert!(!RuleKind::NoScreen.needs_kkt());
         assert_eq!(RuleKind::DfrAsgl.name(), "DFR-aSGL");
+        assert_eq!(RuleKind::Tlfre.name(), "TLFre");
+        assert_eq!(RuleKind::ALL.len(), 7);
+        // Exactly the three strong rules require KKT verification.
+        let strong: Vec<_> =
+            RuleKind::ALL.iter().filter(|r| r.needs_kkt()).collect();
+        assert_eq!(strong.len(), 3);
     }
 }

@@ -77,6 +77,106 @@ pub fn random_problem(rng: &mut Rng) -> RandomProblem {
     RandomProblem { data, alpha }
 }
 
+/// One audited λ point: what the coordinator recorded and an independent
+/// recomputation of the final stationarity residual.
+#[derive(Clone, Debug)]
+pub struct KktAuditPoint {
+    pub lambda: f64,
+    /// KKT violations the coordinator recorded (variables re-entered).
+    pub violations: usize,
+    /// KKT re-entry rounds the coordinator recorded.
+    pub rounds: usize,
+    /// Residual recomputed here from scratch (fresh full gradient).
+    pub residual: f64,
+    /// Residual the coordinator recorded from its carried gradient.
+    pub recorded_residual: f64,
+}
+
+/// KKT-audit harness: given a finished [`crate::path::PathFit`], rebuild
+/// the penalty and recompute the stationarity residual of every path point
+/// *independently* of the coordinator (fresh gradients, no carried state),
+/// paired with the per-λ violation/re-entry counts the coordinator
+/// recorded. [`KktAudit::assert_clean`] is the one-line gate the safety
+/// suite runs under every rule: every path point must end KKT-clean, and
+/// the recorded residuals must agree with the recomputation.
+#[derive(Clone, Debug)]
+pub struct KktAudit {
+    pub rule: crate::screen::RuleKind,
+    pub points: Vec<KktAuditPoint>,
+}
+
+impl KktAudit {
+    /// Audit `fit` against the dataset/config it was produced from.
+    pub fn from_fit(
+        dataset: &crate::data::Dataset,
+        cfg: &crate::path::PathConfig,
+        fit: &crate::path::PathFit,
+    ) -> KktAudit {
+        use crate::loss::{Loss, LossKind};
+        let pen = crate::path::PathRunner::new(dataset, cfg.clone())
+            .rule(fit.rule)
+            .build_penalty();
+        let loss =
+            Loss::new(LossKind::for_response(dataset.response), &dataset.x, &dataset.y);
+        assert_eq!(
+            fit.lambdas.len(),
+            fit.metrics.points.len(),
+            "malformed fit: λ grid and metrics disagree"
+        );
+        let points = fit
+            .lambdas
+            .iter()
+            .zip(&fit.betas)
+            .zip(&fit.metrics.points)
+            .map(|((&lambda, beta), pm)| {
+                let grad = loss.gradient(beta);
+                let residual =
+                    crate::screen::kkt::stationarity_residual(&pen, &grad, beta, lambda);
+                KktAuditPoint {
+                    lambda,
+                    violations: pm.kkt_violations,
+                    rounds: pm.kkt_rounds,
+                    residual,
+                    recorded_residual: pm.kkt_residual,
+                }
+            })
+            .collect();
+        KktAudit { rule: fit.rule, points }
+    }
+
+    /// Worst independently-recomputed residual along the path.
+    pub fn max_residual(&self) -> f64 {
+        self.points.iter().fold(0.0f64, |m, pt| m.max(pt.residual))
+    }
+
+    /// Total re-entry rounds the coordinator recorded.
+    pub fn total_reentries(&self) -> usize {
+        self.points.iter().map(|pt| pt.rounds).sum()
+    }
+
+    /// Assert every path point ends with a stationarity residual ≤ `tol`
+    /// and that the coordinator's recorded residuals match the independent
+    /// recomputation. Panics with the offending (rule, λ index) on failure.
+    pub fn assert_clean(&self, tol: f64) {
+        for (k, pt) in self.points.iter().enumerate() {
+            assert!(
+                pt.residual <= tol,
+                "{}: path point {k} (λ={:.6}) ends KKT-dirty: residual {:.3e} > {tol:.1e}",
+                self.rule.name(),
+                pt.lambda,
+                pt.residual
+            );
+            assert!(
+                (pt.recorded_residual - pt.residual).abs() <= 1e-6 * (1.0 + pt.residual),
+                "{}: point {k} recorded residual {:.3e} disagrees with recomputed {:.3e}",
+                self.rule.name(),
+                pt.recorded_residual,
+                pt.residual
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +209,40 @@ mod tests {
         for _ in 0..5 {
             let rp = random_problem(&mut rng);
             assert_eq!(rp.data.dataset.groups.p(), rp.data.dataset.p());
+        }
+    }
+
+    /// The audit harness itself: a tightly-solved path must come back clean
+    /// under both a strong rule (after its KKT repairs) and a safe rule
+    /// (which must additionally record zero re-entry rounds).
+    #[test]
+    fn kkt_audit_clean_on_small_fits() {
+        use crate::path::{PathConfig, PathRunner};
+        use crate::screen::RuleKind;
+        use crate::solver::SolverConfig;
+        let data_cfg = crate::data::SyntheticConfig {
+            n: 40,
+            p: 24,
+            groups: crate::data::synthetic::GroupSpec::Even(6),
+            ..crate::data::SyntheticConfig::default()
+        };
+        let gd = data_cfg.generate(0xA0D17);
+        let cfg = PathConfig {
+            path_len: 6,
+            path_end_ratio: 0.3,
+            solver: SolverConfig { tol: 1e-10, max_iters: 100_000, ..Default::default() },
+            ..Default::default()
+        };
+        for rule in [RuleKind::DfrSgl, RuleKind::Tlfre] {
+            let fit =
+                PathRunner::new(&gd.dataset, cfg.clone()).rule(rule).run().unwrap();
+            let audit = KktAudit::from_fit(&gd.dataset, &cfg, &fit);
+            assert_eq!(audit.points.len(), cfg.path_len);
+            audit.assert_clean(1e-5);
+            if !rule.needs_kkt() {
+                assert_eq!(audit.total_reentries(), 0, "safe rule recorded re-entries");
+                assert!(audit.points.iter().all(|pt| pt.violations == 0));
+            }
         }
     }
 }

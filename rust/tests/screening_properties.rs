@@ -10,12 +10,13 @@
 
 use dfr::linalg::{CenteredSparse, CscMatrix, Matrix, ReducedDesign};
 use dfr::loss::{Loss, LossKind};
-use dfr::norms::{eps_g, epsilon_norm, tau_g};
+use dfr::norms::{dual_sgl_norm, eps_g, epsilon_norm, tau_g};
 use dfr::path::lambda_max;
 use dfr::penalty::Penalty;
 use dfr::prelude::Groups;
 use dfr::rng::Rng;
 use dfr::screen::dfr::screen_theoretical;
+use dfr::screen::tlfre;
 use dfr::solver::{solve, SolverConfig};
 use dfr::testkit::{check, random_problem};
 
@@ -160,6 +161,156 @@ fn epsilon_norm_alpha_limits() {
             Ok(())
         },
     );
+}
+
+/// The ε-norm is nondecreasing in ε, pinned between its α-limit endpoints
+/// ℓ∞ (ε = 0) and ℓ₂ (ε = 1) — the interpolation the two-layer dual-ball
+/// decomposition rides on.
+#[test]
+fn epsilon_norm_monotone_in_eps() {
+    check(
+        "epsilon-monotone",
+        40,
+        |rng| rng.gauss_vec(1 + rng.below(12)),
+        |xs| {
+            let linf = xs.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            let l2 = xs.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let mut prev = f64::NEG_INFINITY;
+            for k in 0..=10 {
+                let eps = k as f64 / 10.0;
+                let e = epsilon_norm(xs, eps);
+                if e < prev - 1e-12 * (1.0 + prev.abs()) {
+                    return Err(format!("ε-norm decreased at ε={eps}: {e} < {prev}"));
+                }
+                if e < linf - 1e-9 * (1.0 + linf) || e > l2 + 1e-9 * (1.0 + l2) {
+                    return Err(format!(
+                        "ε-norm {e} outside [ℓ∞, ℓ₂] = [{linf}, {l2}] at ε={eps}"
+                    ));
+                }
+                prev = e;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A random ξ vector with a random group layout, α, and strictly positive
+/// adaptive weights — the input shape of the TLFre gauge machinery.
+fn random_dual_point(rng: &mut Rng) -> (Vec<f64>, Groups, f64, Vec<f64>, Vec<f64>) {
+    let sizes = Groups::random_sizes(6 + rng.below(20), 1, 6, rng);
+    let groups = Groups::from_sizes(&sizes);
+    let p = groups.p();
+    let m = groups.m();
+    let xi: Vec<f64> = rng.gauss_vec(p).iter().map(|v| 3.0 * v).collect();
+    let alpha = 0.05 + 0.9 * rng.uniform();
+    let v: Vec<f64> = (0..p).map(|_| 0.2 + 2.0 * rng.uniform()).collect();
+    let w: Vec<f64> = (0..m).map(|_| 0.2 + 2.0 * rng.uniform()).collect();
+    (xi, groups, alpha, v, w)
+}
+
+/// On unit weights the per-group bisection gauge must agree with the
+/// independent ε-norm implementation of the SGL dual norm (clamped at the
+/// feasibility threshold 1): two derivations, one number.
+#[test]
+fn tlfre_gauge_matches_dual_norm_on_unit_weights() {
+    check("tlfre-gauge-vs-dual", 25, random_dual_point, |(xi, groups, alpha, _, _)| {
+        let pen = Penalty::sgl(groups.clone(), *alpha);
+        let gauge = tlfre::feasibility_gauge(xi, &pen)
+            .ok_or("gauge undefined on a finite penalty")?;
+        let dual = dual_sgl_norm(xi, groups, *alpha);
+        let expect = dual.max(1.0);
+        if (gauge - expect).abs() > 1e-7 * (1.0 + expect) {
+            return Err(format!("gauge {gauge} vs ε-norm dual {expect} (α={alpha})"));
+        }
+        Ok(())
+    });
+}
+
+/// Hölder certificate on arbitrary positive adaptive weights: scaling ξ by
+/// its gauge lands inside the dual ball, so `⟨ξ/gauge, β⟩ ≤ Ω(β)` for
+/// every β — the exact feasibility property TLFre's safety rests on.
+#[test]
+fn tlfre_gauge_certifies_dual_feasibility() {
+    check("tlfre-gauge-feasible", 25, random_dual_point, |(xi, groups, alpha, v, w)| {
+        let pen = Penalty::asgl(groups.clone(), *alpha, v.clone(), w.clone());
+        let gauge = tlfre::feasibility_gauge(xi, &pen)
+            .ok_or("gauge undefined on a finite penalty")?;
+        if gauge < 1.0 {
+            return Err(format!("gauge {gauge} below the feasibility clamp"));
+        }
+        let mut rng = Rng::new(xi.len() as u64 ^ 0xD0A1);
+        for _ in 0..20 {
+            let beta = rng.gauss_vec(xi.len());
+            let inner: f64 =
+                xi.iter().zip(&beta).map(|(a, b)| a * b).sum::<f64>() / gauge;
+            let omega = pen.value(&beta);
+            if inner > omega * (1.0 + 1e-9) + 1e-12 {
+                return Err(format!("Hölder violated: ⟨ξ/gauge, β⟩ = {inner} > Ω = {omega}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Adaptive-weight scaling identity: scaling both weight families by c
+/// equals scaling the point by 1/c — `gauge_{cv,cw}(ξ) = gauge_{v,w}(ξ/c)`
+/// exactly (clamps included). With c = 2 the division is float-exact, so
+/// the two bisections walk identical brackets.
+#[test]
+fn tlfre_gauge_weight_scaling() {
+    check("tlfre-gauge-scaling", 25, random_dual_point, |(xi, groups, alpha, v, w)| {
+        let c = 2.0;
+        let scaled_pen = Penalty::asgl(
+            groups.clone(),
+            *alpha,
+            v.iter().map(|x| c * x).collect(),
+            w.iter().map(|x| c * x).collect(),
+        );
+        let pen = Penalty::asgl(groups.clone(), *alpha, v.clone(), w.clone());
+        let xi_over_c: Vec<f64> = xi.iter().map(|x| x / c).collect();
+        let a = tlfre::feasibility_gauge(xi, &scaled_pen).ok_or("gauge undefined")?;
+        let b = tlfre::feasibility_gauge(&xi_over_c, &pen).ok_or("gauge undefined")?;
+        if (a - b).abs() > 1e-12 * (1.0 + b) {
+            return Err(format!("scaling identity broken: {a} vs {b}"));
+        }
+        Ok(())
+    });
+}
+
+/// TLFre exactness on random problems: screening between two λ values
+/// from the previous solution — tight or deliberately sloppy (the δ-
+/// inflation must absorb the inexactness) — never discards a variable
+/// active at the screened λ.
+#[test]
+fn tlfre_is_safe_randomized() {
+    check("tlfre-safety", 10, random_problem, |rp| {
+        let ds = &rp.data.dataset;
+        if ds.response != dfr::data::Response::Linear {
+            return Ok(());
+        }
+        let alpha = rp.alpha.clamp(0.05, 0.95);
+        let pen = Penalty::sgl(ds.groups.clone(), alpha);
+        let loss = Loss::new(LossKind::Squared, &ds.x, &ds.y);
+        let p = ds.p();
+        let lam1 = lambda_max(&pen, &loss.gradient(&vec![0.0; p]));
+        let (lam_prev, lam_next) = (0.6 * lam1, 0.45 * lam1);
+        let truth = solve(&loss, &pen, lam_next, &vec![0.0; p], &tight());
+        let sloppy = SolverConfig { tol: 1e-3, max_iters: 50, ..Default::default() };
+        for cfg in [tight(), sloppy] {
+            let prev = solve(&loss, &pen, lam_prev, &vec![0.0; p], &cfg);
+            let cands =
+                tlfre::screen_between(&pen, &ds.x, &ds.y, &prev.beta, lam_prev, lam_next);
+            for (i, &b) in truth.beta.iter().enumerate() {
+                if b.abs() > 1e-7 && cands.vars.binary_search(&i).is_err() {
+                    return Err(format!(
+                        "TLFre (prev tol {:.0e}) unsafely discarded active var {i} (β={b})",
+                        cfg.tol
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 /// A random grouped design plus a random sorted non-empty variable

@@ -1,0 +1,285 @@
+//! Screening-safety gates: the contract each rule family must honor,
+//! checked against a no-screen oracle on every (rule × loss × kernel)
+//! cell.
+//!
+//! * **Safe rules** (TLFre, GAP-safe seq/dyn — `needs_kkt() == false`)
+//!   may *never* discard a variable that is active in the oracle solution
+//!   at the screened λ, at any path point. This is exact safety — set
+//!   membership, not a distance tolerance.
+//! * **Strong rules** (DFR, sparsegl) may err, but the KKT re-entry loop
+//!   must repair every erroneous discard: final solutions within
+//!   ℓ₂ ≤ 1e-8 of the oracle and identical supports.
+//! * **Everyone** must end every path point KKT-clean: the
+//!   [`dfr::testkit::KktAudit`] harness recomputes the stationarity
+//!   residual of every accepted solution from scratch.
+//! * Safe rules must take the coordinator's no-recheck fast path: zero
+//!   KKT re-entry rounds and zero violations recorded, dense and sparse,
+//!   while still matching the strong-rule solution.
+
+use dfr::data::{Dataset, Response};
+use dfr::linalg::{CenteredSparse, CscMatrix, DesignOps};
+use dfr::loss::{Loss, LossKind};
+use dfr::path::{compare_with_no_screen, PathConfig, PathRunner};
+use dfr::prelude::Groups;
+use dfr::rng::Rng;
+use dfr::screen::{self, RuleKind, ScreenContext};
+use dfr::solver::SolverConfig;
+use dfr::testkit::KktAudit;
+
+const SAFE_RULES: [RuleKind; 3] =
+    [RuleKind::GapSafeSeq, RuleKind::GapSafeDyn, RuleKind::Tlfre];
+const STRONG_RULES: [RuleKind; 2] = [RuleKind::DfrSgl, RuleKind::Sparsegl];
+
+/// Genotype-like CSC design (mostly implicit zeros); `n > p` keeps the
+/// squared loss strictly convex so the oracle optimum is unique.
+fn genotype(seed: u64, n: usize, p: usize) -> CscMatrix {
+    let mut rng = Rng::new(seed);
+    let mut col_ptr = vec![0usize];
+    let mut row_idx = Vec::new();
+    let mut values = Vec::new();
+    for _ in 0..p {
+        let maf = 0.05 + 0.10 * rng.uniform();
+        for i in 0..n {
+            let dosage = (rng.bernoulli(maf) as u8 + rng.bernoulli(maf) as u8) as f64;
+            if dosage > 0.0 {
+                row_idx.push(i);
+                values.push(dosage);
+            }
+        }
+        col_ptr.push(row_idx.len());
+    }
+    CscMatrix::new(n, p, col_ptr, row_idx, values)
+}
+
+fn response(geno: &CscMatrix, seed: u64, kind: Response) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x5AFE);
+    let p = geno.ncols();
+    let beta_true: Vec<f64> =
+        (0..p).map(|j| if j % 6 == 0 { rng.normal(0.0, 1.5) } else { 0.0 }).collect();
+    let xb = geno.matvec(&beta_true);
+    match kind {
+        Response::Linear => xb.iter().map(|v| v + rng.normal(0.0, 0.3)).collect(),
+        Response::Logistic => {
+            let mean = xb.iter().sum::<f64>() / xb.len() as f64;
+            xb.iter()
+                .map(|v| if v - mean + rng.normal(0.0, 0.3) > 0.0 { 1.0 } else { 0.0 })
+                .collect()
+        }
+    }
+}
+
+/// The same problem as a dense-kernel and a sparse-kernel [`Dataset`].
+fn paired_datasets(seed: u64, kind: Response) -> (Dataset, Dataset) {
+    let (n, p, gsize) = (60usize, 40usize, 5usize);
+    let geno = genotype(seed, n, p);
+    let mut y = response(&geno, seed, kind);
+    if kind == Response::Linear {
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        y.iter_mut().for_each(|v| *v -= mean);
+    }
+    let groups = Groups::from_sizes(&vec![gsize; p / gsize]);
+    let (dense_std, _) = geno.to_standardized_dense();
+    let sparse = CenteredSparse::from_csc(&geno);
+    let dense_ds = Dataset {
+        x: dense_std.into(),
+        y: y.clone(),
+        groups: groups.clone(),
+        response: kind,
+        name: "safety-dense".into(),
+    };
+    let sparse_ds = Dataset {
+        x: DesignOps::Sparse(sparse),
+        y,
+        groups,
+        response: kind,
+        name: "safety-sparse".into(),
+    };
+    (dense_ds, sparse_ds)
+}
+
+/// Oracle-grade solver settings: tight enough that the no-screen support
+/// is the true support up to 1e-8.
+fn cfg() -> PathConfig {
+    PathConfig {
+        path_len: 8,
+        solver: SolverConfig { tol: 1e-12, max_iters: 200_000, ..Default::default() },
+        ..PathConfig::default()
+    }
+}
+
+/// A variable counted as active in the oracle solution (the inner solvers
+/// produce exact zeros for inactive coordinates, so any meaningfully
+/// nonzero entry is support).
+const ACTIVE: f64 = 1e-8;
+
+/// Exact safety: replay each safe rule between every pair of consecutive
+/// oracle path points and assert no oracle-active variable at λ_{k+1} is
+/// missing from the candidate set. Every (rule × loss × kernel) cell.
+#[test]
+fn safe_rules_never_discard_oracle_active_variables() {
+    for kind in [Response::Linear, Response::Logistic] {
+        let (dense_ds, sparse_ds) = paired_datasets(11, kind);
+        for ds in [&dense_ds, &sparse_ds] {
+            let oracle = PathRunner::new(ds, cfg())
+                .rule(RuleKind::NoScreen)
+                .run()
+                .unwrap();
+            let pen = PathRunner::new(ds, cfg()).rule(RuleKind::NoScreen).build_penalty();
+            let loss = Loss::new(LossKind::for_response(kind), &ds.x, &ds.y);
+            for rule in SAFE_RULES {
+                for k in 0..oracle.lambdas.len() - 1 {
+                    let grad_prev = loss.gradient(&oracle.betas[k]);
+                    let ctx = ScreenContext {
+                        penalty: &pen,
+                        grad_prev: &grad_prev,
+                        beta_prev: &oracle.betas[k],
+                        lambda_prev: oracle.lambdas[k],
+                        lambda_next: oracle.lambdas[k + 1],
+                        x: ds.x.view(),
+                        y: &ds.y,
+                        response: kind,
+                    };
+                    let cands = screen::screen(rule, &ctx);
+                    for (i, &b) in oracle.betas[k + 1].iter().enumerate() {
+                        assert!(
+                            b.abs() <= ACTIVE || cands.vars.binary_search(&i).is_ok(),
+                            "{} ({kind:?}, {}): discarded oracle-active var {i} \
+                             (β = {b:.3e}) at path point {}",
+                            rule.name(),
+                            ds.name,
+                            k + 1
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Strong rules may discard wrongly, but KKT re-entry must repair every
+/// error: solutions within ℓ₂ ≤ 1e-8 of the oracle and identical supports
+/// at every path point.
+#[test]
+fn strong_rule_discards_are_repaired_by_kkt_reentry() {
+    for kind in [Response::Linear, Response::Logistic] {
+        let (dense_ds, sparse_ds) = paired_datasets(12, kind);
+        for ds in [&dense_ds, &sparse_ds] {
+            for rule in STRONG_RULES {
+                let c = compare_with_no_screen(ds, &cfg(), rule).unwrap();
+                assert!(
+                    c.l2_distance <= 1e-8,
+                    "{} ({kind:?}, {}): ℓ₂ drift {} after KKT repair",
+                    rule.name(),
+                    ds.name,
+                    c.l2_distance
+                );
+                for (k, (a, b)) in
+                    c.screened.betas.iter().zip(&c.no_screen.betas).enumerate()
+                {
+                    for i in 0..a.len() {
+                        // With ℓ₂ ≤ 1e-8 per point, a 1e-7-sized entry on
+                        // one side forces a nonzero entry on the other.
+                        assert!(
+                            !(a[i].abs() > 1e-7 && b[i].abs() <= ACTIVE)
+                                && !(b[i].abs() > 1e-7 && a[i].abs() <= ACTIVE),
+                            "{} ({kind:?}, {}): support mismatch at point {k}, var {i}: \
+                             screened {:.3e} vs oracle {:.3e}",
+                            rule.name(),
+                            ds.name,
+                            a[i],
+                            b[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Every rule ends every path point KKT-clean (stationarity residual ≤
+/// tol, recomputed from scratch), and safe rules record zero re-entries.
+#[test]
+fn all_rules_end_every_path_point_kkt_clean() {
+    let rules = [
+        RuleKind::NoScreen,
+        RuleKind::DfrSgl,
+        RuleKind::Sparsegl,
+        RuleKind::GapSafeSeq,
+        RuleKind::GapSafeDyn,
+        RuleKind::Tlfre,
+    ];
+    for kind in [Response::Linear, Response::Logistic] {
+        let (dense_ds, sparse_ds) = paired_datasets(13, kind);
+        for ds in [&dense_ds, &sparse_ds] {
+            for rule in rules {
+                let c = cfg();
+                let fit = PathRunner::new(ds, c.clone()).rule(rule).run().unwrap();
+                let audit = KktAudit::from_fit(ds, &c, &fit);
+                audit.assert_clean(1e-6);
+                if !rule.needs_kkt() {
+                    assert_eq!(
+                        audit.total_reentries(),
+                        0,
+                        "{} ({kind:?}, {}): safe rule recorded KKT re-entries",
+                        rule.name(),
+                        ds.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The adaptive variant holds to the same audit standard.
+#[test]
+fn adaptive_fits_end_kkt_clean() {
+    let (dense_ds, _) = paired_datasets(14, Response::Linear);
+    let c = PathConfig { adaptive: Some((0.1, 0.1)), ..cfg() };
+    for rule in [RuleKind::DfrAsgl, RuleKind::Tlfre] {
+        let fit = PathRunner::new(&dense_ds, c.clone()).rule(rule).run().unwrap();
+        let audit = KktAudit::from_fit(&dense_ds, &c, &fit);
+        audit.assert_clean(1e-6);
+        if !rule.needs_kkt() {
+            assert_eq!(audit.total_reentries(), 0);
+        }
+    }
+}
+
+/// Fast-path regression: `needs_kkt() == false` rules take the no-recheck
+/// branch (zero re-entry rounds, zero violations recorded) yet match the
+/// strong-rule solution on the same λ grid — dense and sparse kernels.
+#[test]
+fn safe_rule_fast_path_matches_strong_solution() {
+    let (dense_ds, sparse_ds) = paired_datasets(15, Response::Linear);
+    for ds in [&dense_ds, &sparse_ds] {
+        let strong = PathRunner::new(ds, cfg()).rule(RuleKind::DfrSgl).run().unwrap();
+        for rule in SAFE_RULES {
+            let fit = PathRunner::new(ds, cfg())
+                .rule(rule)
+                .fixed_path(strong.lambdas.clone())
+                .run()
+                .unwrap();
+            assert_eq!(
+                fit.metrics.total_kkt_reentries(),
+                0,
+                "{} ({}): fast path recorded re-entry rounds",
+                rule.name(),
+                ds.name
+            );
+            assert_eq!(
+                fit.metrics.total_kkt_violations(),
+                0,
+                "{} ({}): fast path recorded violations",
+                rule.name(),
+                ds.name
+            );
+            let d = fit.l2_distance_to(&strong);
+            assert!(
+                d <= 1e-8,
+                "{} ({}): safe fit drifted from strong solution: ℓ₂ = {d}",
+                rule.name(),
+                ds.name
+            );
+        }
+    }
+}

@@ -97,11 +97,12 @@ fn cfg(kind: SolverKind) -> PathConfig {
 
 const SOLVERS: [SolverKind; 3] = [SolverKind::Fista, SolverKind::Atos, SolverKind::Bcd];
 
-const RULES: [RuleKind; 4] = [
+const RULES: [RuleKind; 5] = [
     RuleKind::DfrSgl,
     RuleKind::Sparsegl,
     RuleKind::GapSafeSeq,
     RuleKind::GapSafeDyn,
+    RuleKind::Tlfre,
 ];
 
 /// Pathwise fits of `ds` with each solver on one shared λ grid (derived by
