@@ -1,0 +1,136 @@
+//! **Serving bench**: the multi-tenant [`dfr::serve::FitterPool`] under
+//! the traffic patterns `dfr serve` is built for:
+//!
+//! * `fit (cold)` — fresh pool per request: key + standardize + full
+//!   pathwise solve, the first-request price every tenant pays once;
+//! * `fit (warm)` — same pool, same content: prepared-dataset and path
+//!   caches hit, requests only finalize a λ;
+//! * `predict (sequential)` — K predict requests served one at a time,
+//!   one matvec each;
+//! * `predict (coalesced)` — the same K requests admitted as one batch
+//!   and coalesced into a single stacked matvec.
+//!
+//! Rows land in `target/bench_results/BENCH_serve.json`; CI snapshots
+//! that to the repo root via `scripts/bench_snapshot.sh serve` so the
+//! cold-vs-warm and coalescing trajectories accumulate across PRs.
+
+use dfr::bench_harness::{time_stat, BenchTable};
+use dfr::model_api::SglModel;
+use dfr::path::PathConfig;
+use dfr::rng::Rng;
+use dfr::serve::{FitRequest, FitterPool, PoolConfig, PredictRequest, Request};
+
+fn fit_request(tenant: &str, x: &[Vec<f64>], y: &[f64], sizes: &[usize], sel: usize) -> FitRequest {
+    FitRequest {
+        id: None,
+        tenant: tenant.to_string(),
+        x: x.to_vec(),
+        y: y.to_vec(),
+        groups: sizes.to_vec(),
+        response: dfr::data::Response::Linear,
+        rule: None,
+        alpha: None,
+        path_len: None,
+        lambda_idx: Some(sel),
+    }
+}
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    let (n, p, path_len) = if full { (200usize, 1000usize, 50usize) } else { (150, 400, 20) };
+    let groups = 20usize;
+    let setting = format!("{n}x{p}");
+    let mut table = BenchTable::new("Multi-tenant serving — FitterPool cold/warm and coalescing");
+
+    let mut rng = Rng::new(4242);
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..p).map(|j| 1.0 + (1.0 + j as f64 / 50.0) * rng.gauss()).collect())
+        .collect();
+    let y: Vec<f64> = rows
+        .iter()
+        .map(|r| r.iter().step_by(7).sum::<f64>() + 0.5 * rng.gauss())
+        .collect();
+    let sizes = vec![p / groups; groups];
+    let model = SglModel {
+        path: PathConfig { path_len, ..PathConfig::default() },
+        ..SglModel::default()
+    };
+    let sel = path_len - 1;
+    let (warmup, reps) = (1, if full { 7 } else { 10 });
+    let pool_cfg = || PoolConfig { model: model.clone(), ..PoolConfig::default() };
+    let req = fit_request("bench", &rows, &y, &sizes, sel);
+
+    // --- cold fit: fresh pool, empty caches, full solve ---------------
+    let acc_cold = time_stat(warmup, reps, || {
+        let pool = FitterPool::new(pool_cfg());
+        let out = pool.fit(&req).expect("cold fit failed");
+        assert!(!out.path_cached, "cold fit somehow hit a cache");
+        std::hint::black_box(out.lambda);
+    });
+    table.push("pool fit seconds", &setting, "fit (cold)", acc_cold.mean());
+
+    // --- warm fit: shared pool, cache-hit requests --------------------
+    let pool = FitterPool::new(pool_cfg());
+    pool.fit(&req).expect("priming fit failed");
+    let acc_warm = time_stat(warmup, reps, || {
+        let out = pool.fit(&req).expect("warm fit failed");
+        assert!(out.prepared_cached && out.path_cached, "warm fit missed");
+        std::hint::black_box(out.lambda);
+    });
+    table.push("pool fit seconds", &setting, "fit (warm)", acc_warm.mean());
+    table.push(
+        "warm fit speedup vs cold",
+        &setting,
+        "fit (warm)",
+        acc_cold.median() / acc_warm.median().max(1e-12),
+    );
+
+    // --- predict: K requests, sequential vs one coalesced batch -------
+    let k = 16usize;
+    let chunk = 8usize;
+    let payloads: Vec<Vec<Vec<f64>>> =
+        (0..k).map(|i| vec![rows[i % n].clone(); chunk]).collect();
+    let acc_seq = time_stat(2, if full { 30 } else { 50 }, || {
+        for c in &payloads {
+            std::hint::black_box(pool.predict("bench", c).expect("predict failed").len());
+        }
+    });
+    table.push("predict K=16 batch seconds", &setting, "predict (sequential)", acc_seq.mean());
+
+    let acc_coal = time_stat(2, if full { 30 } else { 50 }, || {
+        let batch: Vec<Request> = payloads
+            .iter()
+            .map(|c| {
+                Request::Predict(PredictRequest {
+                    id: None,
+                    tenant: "bench".to_string(),
+                    x: c.clone(),
+                })
+            })
+            .collect();
+        let replies = pool.submit_batch(batch);
+        assert!(replies.iter().all(dfr::serve::Reply::is_ok), "coalesced predict failed");
+        std::hint::black_box(replies.len());
+    });
+    table.push("predict K=16 batch seconds", &setting, "predict (coalesced)", acc_coal.mean());
+    table.push(
+        "predict rows/sec",
+        &setting,
+        "predict (sequential)",
+        (k * chunk) as f64 / acc_seq.median().max(1e-12),
+    );
+    table.push(
+        "predict rows/sec",
+        &setting,
+        "predict (coalesced)",
+        (k * chunk) as f64 / acc_coal.median().max(1e-12),
+    );
+    table.push(
+        "coalesced predict speedup",
+        &setting,
+        "predict (coalesced)",
+        acc_seq.median() / acc_coal.median().max(1e-12),
+    );
+
+    table.finish("serve");
+}

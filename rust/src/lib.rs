@@ -16,6 +16,7 @@
 //! | [`model_api`] | [`model_api::Design`] input abstraction (dense/row/column/CSC-sparse layouts) + persistent [`model_api::SglFitter`] serving API; CSC designs below the [`model_api::sparse_density_threshold`] solve end-to-end on the centered-implicit sparse kernels ([`linalg::CenteredSparse`]) | — |
 //! | [`data`] | Synthetic designs, interaction expansion, surrogate real datasets | §3.1, §4, Table 1, Table A37 |
 //! | [`runtime`] | PJRT execution of AOT-compiled JAX/Pallas artifacts for the dense hot path | — |
+//! | [`serve`] | Multi-tenant serving: [`serve::FitterPool`] with content-hash-keyed LRU caches shared across tenants ([`lru::KeyedLru`]), round-robin fair admission, coalesced batch prediction, and the `dfr serve` NDJSON loop with live per-verb latency stats | — |
 //! | [`metrics`], [`bench_harness`], [`report`] | Improvement factor, input proportion, paper-style tables, `BENCH_*.json` | §3, App. D.1 |
 //! | [`linalg`], [`groups`], [`rng`], [`parallel`], [`cli`], [`testkit`] | Offline substrates (no external crates) | — |
 //!
@@ -96,6 +97,7 @@ pub mod faults;
 pub mod groups;
 pub mod linalg;
 pub mod loss;
+pub mod lru;
 pub mod metrics;
 pub mod model_api;
 pub mod norms;
@@ -106,6 +108,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod screen;
+pub mod serve;
 pub mod solver;
 pub mod testkit;
 
@@ -118,7 +121,8 @@ pub mod prelude {
     pub use crate::groups::Groups;
     pub use crate::linalg::{CenteredSparse, CscMatrix, DesignOps, DesignRef, Matrix};
     pub use crate::loss::LossKind;
-    pub use crate::metrics::{PathMetrics, PointMetrics};
+    pub use crate::lru::KeyedLru;
+    pub use crate::metrics::{LatencyHistogram, PathMetrics, PointMetrics};
     pub use crate::model_api::{Design, FittedSgl, SglFitter, SglModel, SparseMode};
     pub use crate::parallel::WorkspacePool;
     pub use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
@@ -126,5 +130,6 @@ pub mod prelude {
     pub use crate::penalty::{AdaptiveWeights, Penalty};
     pub use crate::rng::Rng;
     pub use crate::screen::RuleKind;
+    pub use crate::serve::{FitterPool, PoolConfig, ServeOptions};
     pub use crate::solver::{SolveStatus, SolverConfig, SolverKind};
 }

@@ -1,0 +1,265 @@
+//! Keyed LRU cache substrate for the serving layer.
+//!
+//! [`KeyedLru`] is the reusable form of the cache that used to live
+//! inline in [`crate::model_api::SglFitter`] as a single `Option<_>`
+//! slot: a recency-ordered map from content keys to cached values, with
+//! an entry bound *and* an approximate byte bound. It backs
+//!
+//! * the fitter's prepared-dataset cache (capacity 1 by default, so the
+//!   single-owner semantics of the original slot are preserved), and
+//! * the multi-tenant caches of [`crate::serve::FitterPool`], where many
+//!   tenants share prepared datasets, path fits, and CV cells keyed by
+//!   content hashes.
+//!
+//! Keys are compared with `PartialEq` over a small `Vec` (no hashing):
+//! serving caches hold a handful of entries — tens, not thousands — and a
+//! linear probe over a dense `Vec` beats a hash map at that size while
+//! dodging a `Hash` bound that `f64`-carrying keys cannot meet.
+//!
+//! Eviction policy: inserting beyond either bound evicts from the
+//! least-recently-used end until the cache fits, but never evicts the
+//! entry being inserted — a single oversized entry is retained (and the
+//! next insert will push it out). Evicted pairs are handed back to the
+//! caller so ownership-based accounting (per-tenant eviction counters)
+//! stays possible.
+
+/// One cached entry with its approximate size.
+struct Slot<K, V> {
+    key: K,
+    value: V,
+    bytes: usize,
+}
+
+/// A recency-ordered, doubly-bounded (entries and bytes) keyed cache.
+///
+/// Recency order is the `Vec` order: index 0 is least-recently used, the
+/// last index most-recently used. `get`/`get_mut`/`insert` touch; `peek`
+/// does not.
+pub struct KeyedLru<K, V> {
+    slots: Vec<Slot<K, V>>,
+    max_entries: usize,
+    max_bytes: usize,
+    bytes: usize,
+    evictions: u64,
+}
+
+impl<K: PartialEq, V> KeyedLru<K, V> {
+    /// Cache bounded by `max_entries` (clamped to at least 1) and
+    /// `max_bytes` (use `usize::MAX` for entry-bounded only).
+    pub fn new(max_entries: usize, max_bytes: usize) -> Self {
+        KeyedLru {
+            slots: Vec::new(),
+            max_entries: max_entries.max(1),
+            max_bytes,
+            bytes: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Sum of the `bytes` estimates of every cached entry.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Entry bound this cache was built with.
+    pub fn max_entries(&self) -> usize {
+        self.max_entries
+    }
+
+    /// Byte bound this cache was built with.
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Number of bound-driven evictions so far (explicit `remove` /
+    /// `retain` / `clear` and same-key replacement do not count).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    fn position(&self, key: &K) -> Option<usize> {
+        self.slots.iter().position(|s| s.key == *key)
+    }
+
+    /// Look up `key`, marking the entry most-recently used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let i = self.position(key)?;
+        let slot = self.slots.remove(i);
+        self.slots.push(slot);
+        self.slots.last().map(|s| &s.value)
+    }
+
+    /// Mutable lookup, marking the entry most-recently used on a hit.
+    pub fn get_mut(&mut self, key: &K) -> Option<&mut V> {
+        let i = self.position(key)?;
+        let slot = self.slots.remove(i);
+        self.slots.push(slot);
+        self.slots.last_mut().map(|s| &mut s.value)
+    }
+
+    /// Recency-neutral lookup (no touch) — usable through `&self`.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.slots.iter().find(|s| s.key == *key).map(|s| &s.value)
+    }
+
+    /// Insert (or replace) `key → value` as most-recently used, then
+    /// evict LRU entries until both bounds hold. The just-inserted entry
+    /// is never evicted. Returns the evicted `(key, value)` pairs,
+    /// LRU-first, so callers can attribute them (replacement of the same
+    /// key is not an eviction and is not returned).
+    pub fn insert(&mut self, key: K, value: V, bytes: usize) -> Vec<(K, V)> {
+        if let Some(i) = self.position(&key) {
+            let old = self.slots.remove(i);
+            self.bytes -= old.bytes;
+        }
+        self.slots.push(Slot { key, value, bytes });
+        self.bytes += bytes;
+        let mut evicted = Vec::new();
+        while self.slots.len() > 1
+            && (self.slots.len() > self.max_entries || self.bytes > self.max_bytes)
+        {
+            let victim = self.slots.remove(0);
+            self.bytes -= victim.bytes;
+            self.evictions += 1;
+            evicted.push((victim.key, victim.value));
+        }
+        evicted
+    }
+
+    /// Remove one entry by key, returning its value.
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        let i = self.position(key)?;
+        let slot = self.slots.remove(i);
+        self.bytes -= slot.bytes;
+        Some(slot.value)
+    }
+
+    /// Keep only entries satisfying the predicate; returns how many were
+    /// dropped (not counted as LRU evictions).
+    pub fn retain(&mut self, mut f: impl FnMut(&K, &V) -> bool) -> usize {
+        let before = self.slots.len();
+        let mut kept_bytes = 0;
+        self.slots.retain(|s| {
+            let keep = f(&s.key, &s.value);
+            if keep {
+                kept_bytes += s.bytes;
+            }
+            keep
+        });
+        self.bytes = kept_bytes;
+        before - self.slots.len()
+    }
+
+    /// Drop everything; returns how many entries were dropped.
+    pub fn clear(&mut self) -> usize {
+        let n = self.slots.len();
+        self.slots.clear();
+        self.bytes = 0;
+        n
+    }
+
+    /// Iterate `(key, value)` pairs in recency order (LRU first).
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.slots.iter().map(|s| (&s.key, &s.value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_and_touch_order() {
+        let mut c: KeyedLru<u32, &str> = KeyedLru::new(3, usize::MAX);
+        assert!(c.insert(1, "a", 10).is_empty());
+        assert!(c.insert(2, "b", 10).is_empty());
+        assert!(c.insert(3, "c", 10).is_empty());
+        assert_eq!(c.get(&1), Some(&"a")); // 1 becomes MRU; LRU is now 2
+        let evicted = c.insert(4, "d", 10);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, 2);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.peek(&2).is_none());
+        assert_eq!(c.peek(&1), Some(&"a"));
+    }
+
+    #[test]
+    fn byte_bound_evicts_lru_first() {
+        let mut c: KeyedLru<u32, u32> = KeyedLru::new(100, 100);
+        c.insert(1, 1, 40);
+        c.insert(2, 2, 40);
+        let evicted = c.insert(3, 3, 40); // 120 > 100 → evict key 1
+        assert_eq!(evicted.iter().map(|(k, _)| *k).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(c.bytes(), 80);
+        // One oversized entry is retained (never evict the fresh insert).
+        let evicted = c.insert(4, 4, 500);
+        assert_eq!(evicted.len(), 2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 500);
+        assert_eq!(c.evictions(), 3);
+    }
+
+    #[test]
+    fn replace_same_key_is_not_eviction() {
+        let mut c: KeyedLru<u32, &str> = KeyedLru::new(2, usize::MAX);
+        c.insert(1, "a", 5);
+        let evicted = c.insert(1, "a2", 7);
+        assert!(evicted.is_empty());
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 7);
+        assert_eq!(c.evictions(), 0);
+        assert_eq!(c.peek(&1), Some(&"a2"));
+    }
+
+    #[test]
+    fn remove_retain_clear_adjust_bytes() {
+        let mut c: KeyedLru<u32, u32> = KeyedLru::new(10, usize::MAX);
+        for k in 0..5 {
+            c.insert(k, k * k, 10);
+        }
+        assert_eq!(c.remove(&2), Some(4));
+        assert_eq!(c.bytes(), 40);
+        let dropped = c.retain(|k, _| *k < 3);
+        assert_eq!(dropped, 2); // keys 3, 4
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 20);
+        assert_eq!(c.clear(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.evictions(), 0, "explicit removal never counts as eviction");
+    }
+
+    #[test]
+    fn get_mut_touches_and_mutates() {
+        let mut c: KeyedLru<u32, Vec<u32>> = KeyedLru::new(2, usize::MAX);
+        c.insert(1, vec![1], 1);
+        c.insert(2, vec![2], 1);
+        if let Some(v) = c.get_mut(&1) {
+            v.push(10);
+        }
+        let evicted = c.insert(3, vec![3], 1);
+        assert_eq!(evicted[0].0, 2, "touched key 1 must survive");
+        assert_eq!(c.peek(&1), Some(&vec![1, 10]));
+    }
+
+    #[test]
+    fn capacity_clamped_to_one() {
+        let mut c: KeyedLru<u32, u32> = KeyedLru::new(0, usize::MAX);
+        assert_eq!(c.max_entries(), 1);
+        c.insert(1, 1, 0);
+        let evicted = c.insert(2, 2, 0);
+        assert_eq!(evicted[0].0, 1);
+        assert_eq!(c.len(), 1);
+    }
+}

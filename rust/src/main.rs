@@ -47,6 +47,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "logistic", help: "synthetic: logistic response", default: None, takes_value: false },
         OptSpec { name: "xla", help: "serve full gradients from PJRT artifacts (artifacts/)", default: None, takes_value: false },
         OptSpec { name: "csv", help: "write per-path-point metrics CSV to this path", default: None, takes_value: true },
+        OptSpec { name: "max-entries", help: "serve: LRU entry bound of each shared cache", default: Some("8"), takes_value: true },
+        OptSpec { name: "max-bytes-mb", help: "serve: LRU byte bound of each shared cache (MiB)", default: Some("512"), takes_value: true },
+        OptSpec { name: "batch-max", help: "serve: max requests admitted as one batch", default: Some("64"), takes_value: true },
         OptSpec { name: "help", help: "print help", default: None, takes_value: false },
     ]
 }
@@ -62,7 +65,7 @@ fn main() {
         }
     };
     if args.flag("help") || args.positional.is_empty() {
-        println!("{}", usage("dfr <fit|compare|cv|info>", ABOUT, &specs));
+        println!("{}", usage("dfr <fit|compare|cv|serve|info>", ABOUT, &specs));
         return;
     }
     let cmd = args.positional[0].clone();
@@ -334,6 +337,46 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "serve" => {
+            let cfg = build_path_config(args)?;
+            let rule = parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?;
+            let sparse = dfr::model_api::SparseMode::parse(&args.str_or("sparse", "auto"))
+                .map_err(anyhow::Error::msg)?;
+            let model = dfr::model_api::SglModel {
+                path: cfg,
+                rule,
+                cv_folds: args.usize_or("folds", 10).map_err(anyhow::Error::msg)?,
+                one_se_rule: args.flag("one-se"),
+                seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                sparse,
+            };
+            let max_entries = args.usize_or("max-entries", 8).map_err(anyhow::Error::msg)?;
+            let max_mb = args.usize_or("max-bytes-mb", 512).map_err(anyhow::Error::msg)?;
+            let batch_max = args.usize_or("batch-max", 64).map_err(anyhow::Error::msg)?;
+            let threads = dfr::parallel::default_threads();
+            let pool = dfr::serve::FitterPool::new(dfr::serve::PoolConfig {
+                model,
+                threads,
+                max_entries,
+                max_bytes: max_mb << 20,
+            });
+            eprintln!(
+                "dfr serve: NDJSON on stdin/stdout (verbs fit|predict|cv|stats|evict|shutdown), \
+                 {threads} thread{}, caches ≤{max_entries} entries / {max_mb} MiB each, \
+                 batches ≤{batch_max}",
+                if threads == 1 { "" } else { "s" },
+            );
+            let opts = dfr::serve::ServeOptions { batch_max };
+            let mut stdout = std::io::stdout();
+            let summary = dfr::serve::serve(&pool, std::io::stdin(), &mut stdout, &opts)?;
+            eprintln!(
+                "dfr serve: {} request(s) in {} batch(es), {}",
+                summary.requests,
+                summary.batches,
+                if summary.shutdown { "shutdown verb" } else { "input EOF" },
+            );
+            Ok(())
+        }
         "info" => {
             println!("dfr {}", env!("CARGO_PKG_VERSION"));
             println!("threads: {}", dfr::parallel::default_threads());
@@ -373,6 +416,12 @@ fn report_fit(
         m.failed_convergences(),
         fit.active_vars_last(),
     );
+    if m.screening_fallback {
+        println!(
+            "[screening] {rule} has squared-loss certificates only: logistic \
+             response fell back to full candidate sets (safe, but unscreened)"
+        );
+    }
     println!("{}", report::run_record(&ds.name, rule, m, None, None).render());
     if let Some(csv) = args.options.get("csv") {
         report::write_file(csv, &report::path_metrics_csv(m))?;

@@ -9,6 +9,8 @@
 //! * **input proportion** = `|O_v| / p` (and `|O_g| / m`).
 
 use crate::solver::SolveStatus;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Metrics for one λ path point.
 #[derive(Clone, Debug, Default)]
@@ -50,6 +52,12 @@ pub struct PathMetrics {
     pub p: usize,
     pub m: usize,
     pub total_seconds: f64,
+    /// True when the requested screening rule silently degraded to no
+    /// screening for this fit — the safe rules (TLFre, GAP-safe) carry
+    /// squared-loss certificates only, so on a logistic response they
+    /// return full candidate sets. Surfaced here (and echoed by `dfr
+    /// fit`) instead of fitting silently unscreened.
+    pub screening_fallback: bool,
 }
 
 impl PathMetrics {
@@ -216,6 +224,104 @@ fn mean(it: impl Iterator<Item = f64>) -> f64 {
     }
 }
 
+/// Number of buckets in a [`LatencyHistogram`]: bucket `i` covers
+/// `[2^(i−1), 2^i)` microseconds (bucket 0 is `< 1 µs`), so the top
+/// bucket absorbs everything from ~9 minutes up.
+pub const LATENCY_BUCKETS: usize = 40;
+
+/// Fixed-bucket latency histogram with lock-free recording — the
+/// percentile substrate of the serving layer's per-verb stats.
+///
+/// Buckets are powers of two in microseconds; recording is one relaxed
+/// atomic increment, so many worker threads can record into one shared
+/// histogram without coordination, and readers ([`LatencyHistogram::quantile`])
+/// need no lock either. Quantiles are bucket upper bounds — exact to
+/// within a factor of 2, which is all a p50/p95/p99 dashboard needs.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+    count: AtomicU64,
+    total_micros: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            total_micros: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index of a duration: `⌈log₂(µs)⌉`, clamped to the table.
+    fn bucket_of(micros: u64) -> usize {
+        ((u64::BITS - micros.leading_zeros()) as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Record one observation (relaxed atomics; safe from any thread).
+    pub fn record(&self, d: Duration) {
+        let micros = u64::try_from(d.as_micros()).unwrap_or(u64::MAX);
+        self.buckets[Self::bucket_of(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean_seconds(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_micros.load(Ordering::Relaxed) as f64 * 1e-6 / n as f64
+        }
+    }
+
+    /// The `q`-quantile in seconds (upper bound of the bucket holding the
+    /// `⌈q·n⌉`-th observation; 0 when empty). `q` is clamped to `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                // Bucket i covers [2^(i−1), 2^i) µs; report the upper bound.
+                return (1u64 << i.min(63)) as f64 * 1e-6;
+            }
+        }
+        (1u64 << (LATENCY_BUCKETS - 1)) as f64 * 1e-6
+    }
+
+    /// Median (bucketed).
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th percentile (bucketed).
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th percentile (bucketed).
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
 /// Improvement factor between a no-screen fit and a screened fit.
 pub fn improvement_factor(no_screen_seconds: f64, screen_seconds: f64) -> f64 {
     if screen_seconds <= 0.0 {
@@ -291,5 +397,49 @@ mod tests {
     fn improvement_factor_ratio() {
         assert_eq!(improvement_factor(10.0, 2.0), 5.0);
         assert!(improvement_factor(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_bucketed() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        // 90 fast observations (~100 µs) and 10 slow (~50 ms).
+        for _ in 0..90 {
+            h.record(Duration::from_micros(100));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_millis(50));
+        }
+        assert_eq!(h.count(), 100);
+        // p50 lands in the [64, 128) µs bucket → upper bound 128 µs.
+        assert!((h.p50() - 128e-6).abs() < 1e-12, "p50 = {}", h.p50());
+        // p95/p99 land in the [32.768, 65.536) ms bucket.
+        assert!((h.p95() - 65.536e-3).abs() < 1e-9, "p95 = {}", h.p95());
+        assert!((h.p99() - 65.536e-3).abs() < 1e-9);
+        let mean = h.mean_seconds();
+        assert!(mean > 100e-6 && mean < 50e-3, "mean = {mean}");
+    }
+
+    #[test]
+    fn latency_histogram_concurrent_records() {
+        let h = LatencyHistogram::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..250 {
+                        h.record(Duration::from_micros(10));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 1000);
+        assert!((h.p99() - 16e-6).abs() < 1e-12); // [8, 16) µs bucket
+    }
+
+    #[test]
+    fn screening_fallback_flag_defaults_false() {
+        let pm = PathMetrics::default();
+        assert!(!pm.screening_fallback);
     }
 }

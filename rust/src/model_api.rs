@@ -40,10 +40,12 @@ use crate::data::{Dataset, Response};
 use crate::error::DfrError;
 use crate::linalg::{self, CenteredSparse, CscMatrix, DesignOps, Matrix};
 use crate::loss::sigmoid;
+use crate::lru::KeyedLru;
 use crate::parallel::WorkspacePool;
 use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
 use crate::screen::RuleKind;
 use crate::solver::SolveStatus;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// How a CSC [`Design`] chooses its solve kernel.
@@ -613,19 +615,21 @@ impl FittedSgl {
 
 /// Cache key of a prepared dataset: layout tag, shape, strided content
 /// fingerprints of design and response, grouping, response family.
+/// Shared by the fitter's own keyed-LRU cache and the multi-tenant
+/// caches of [`crate::serve::FitterPool`].
 #[derive(Clone, Debug, PartialEq)]
-struct DesignKey {
-    layout: &'static str,
+pub(crate) struct DesignKey {
+    pub(crate) layout: &'static str,
     /// Resolved kernel variant ("dense" / "centered-sparse"): a changed
     /// sparse mode or density threshold re-ingests rather than serving a
     /// dataset prepared for the other kernel.
-    kernel: &'static str,
-    n: usize,
-    p: usize,
-    x_fp: u64,
-    y_fp: u64,
-    group_sizes: Vec<usize>,
-    response: Response,
+    pub(crate) kernel: &'static str,
+    pub(crate) n: usize,
+    pub(crate) p: usize,
+    pub(crate) x_fp: u64,
+    pub(crate) y_fp: u64,
+    pub(crate) group_sizes: Vec<usize>,
+    pub(crate) response: Response,
 }
 
 /// A pathwise fit cached with the settings that produced it.
@@ -641,7 +645,7 @@ struct CachedPath {
 /// stamp no longer matches (memory corruption, or an injected fault via
 /// [`SglFitter::testkit_poison_cache`]) is demoted to a cold re-ingest
 /// instead of being served.
-fn stamp_of(key: &DesignKey) -> u64 {
+pub(crate) fn stamp_of(key: &DesignKey) -> u64 {
     key.x_fp
         .rotate_left(17)
         .wrapping_mul(0x9e37_79b9_7f4a_7c15)
@@ -649,20 +653,177 @@ fn stamp_of(key: &DesignKey) -> u64 {
         ^ (((key.n as u64) << 32) | key.p as u64)
 }
 
-/// A standardized dataset cached per design fingerprint.
-struct Prepared {
-    key: DesignKey,
+/// A validated, standardized dataset with everything needed to map fits
+/// back to the raw scale — the value type of every prepared-dataset
+/// cache (the fitter's keyed-LRU slot and, behind an `Arc`, the shared
+/// multi-tenant cache of [`crate::serve::FitterPool`]).
+pub(crate) struct PreparedData {
+    pub(crate) key: DesignKey,
     /// `stamp_of(&key)` at ingest time; checked on every cache probe.
-    stamp: u64,
-    ds: Dataset,
-    centers: Vec<(f64, f64)>,
+    pub(crate) stamp: u64,
+    pub(crate) ds: Dataset,
+    pub(crate) centers: Vec<(f64, f64)>,
     /// Raw response mean (0 for logistic) — the intercept base.
-    y_mean: f64,
+    pub(crate) y_mean: f64,
+}
+
+/// Validate shapes and build the content-addressed cache key for one
+/// problem. Cheap relative to ingest: O(n·p) hashing, no copies.
+pub(crate) fn design_key(
+    design: &Design,
+    y: &[f64],
+    group_sizes: &[usize],
+    response: Response,
+    sparse: SparseMode,
+) -> anyhow::Result<DesignKey> {
+    design.validate()?;
+    let (n, p) = (design.n(), design.p());
+    if n == 0 || p == 0 {
+        return Err(DfrError::EmptyDesign { n, p }.into());
+    }
+    if y.len() != n {
+        return Err(DfrError::DimensionMismatch { what: "y", expected: n, got: y.len() }.into());
+    }
+    if let Some(g) = group_sizes.iter().position(|&s| s == 0) {
+        return Err(DfrError::EmptyGroup { group: g }.into());
+    }
+    let sum: usize = group_sizes.iter().sum();
+    if sum != p {
+        return Err(DfrError::GroupMismatch { sum, p }.into());
+    }
+    Ok(DesignKey {
+        layout: design.layout_name(),
+        kernel: design.resolved_kernel(sparse),
+        n,
+        p,
+        x_fp: design.fingerprint(),
+        y_fp: linalg::content_hash(y),
+        group_sizes: group_sizes.to_vec(),
+        response,
+    })
+}
+
+/// Cold ingest under a previously computed key: full content validation,
+/// standardization (dense or centered-sparse per the key's kernel), and
+/// response centering. This is the work a prepared-cache hit skips.
+pub(crate) fn prepare_data(
+    design: &Design,
+    y: &[f64],
+    group_sizes: &[usize],
+    response: Response,
+    sparse: SparseMode,
+    key: DesignKey,
+) -> anyhow::Result<PreparedData> {
+    design.validate_contents()?;
+    if let Some(i) = y.iter().position(|v| !v.is_finite()) {
+        return Err(DfrError::NonFiniteResponse { index: i, value: y[i] }.into());
+    }
+    if y.iter().all(|&v| v == y[0]) {
+        let detail = match response {
+            Response::Linear => {
+                format!("constant response y ≡ {} (zero variance)", y[0])
+            }
+            Response::Logistic => {
+                format!("single-class response y ≡ {} (logistic needs both classes)", y[0])
+            }
+        };
+        return Err(DfrError::DegenerateResponse { detail }.into());
+    }
+    let (x, centers) = design.standardized_ops(sparse)?;
+    let mut yv = y.to_vec();
+    let y_mean = if response == Response::Linear {
+        let m = yv.iter().sum::<f64>() / design.n() as f64;
+        yv.iter_mut().for_each(|v| *v -= m);
+        m
+    } else {
+        0.0
+    };
+    let ds = Dataset {
+        x,
+        y: yv,
+        groups: crate::groups::Groups::from_sizes(group_sizes),
+        response,
+        name: "user".into(),
+    };
+    let stamp = stamp_of(&key);
+    Ok(PreparedData { key, stamp, ds, centers, y_mean })
+}
+
+/// Approximate resident size of a prepared dataset — the byte-accounting
+/// leg of the LRU bounds (design + response + center pairs; exact enough
+/// for capacity planning, not an allocator audit).
+pub(crate) fn prepared_bytes(data: &PreparedData) -> usize {
+    let x = match &data.ds.x {
+        crate::linalg::DesignOps::Dense(m) => m.nrows() * m.ncols() * 8,
+        // Raw nonzeros (index + value) plus per-column affine terms.
+        crate::linalg::DesignOps::Sparse(s) => s.nnz() * 16 + data.ds.p() * 16,
+    };
+    x + data.ds.y.len() * 8 + data.centers.len() * 16
+}
+
+/// A prepared dataset plus the per-dataset sub-caches the fitter layers
+/// on top: the last pathwise fit and the last CV cell.
+struct Prepared {
+    data: PreparedData,
     path: Option<CachedPath>,
     /// Single-cell CV result cached with the exact configuration that
     /// produced it, so repeated `fit_cv` calls skip the k·path_len fold
     /// fits (CV is deterministic given the dataset and config).
     cv_cell: Option<(CvConfig, CvCell)>,
+}
+
+/// Shared cache counters: hit/miss statistics readable from any thread
+/// without `&mut` access to the fitter that owns them.
+///
+/// Counters are relaxed atomics behind an `Arc`
+/// ([`SglFitter::cache_stats`] hands the handle out), so a monitoring
+/// thread — or the serving layer's `stats` verb — can read live values
+/// while fits are in flight. Relaxed ordering is deliberate: the counters
+/// are telemetry, not synchronization.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    prepared_hits: AtomicUsize,
+    prepared_misses: AtomicUsize,
+    path_hits: AtomicUsize,
+    cv_hits: AtomicUsize,
+}
+
+impl CacheStats {
+    /// Prepared-dataset cache hits (fits that skipped copy + standardize).
+    pub fn prepared_hits(&self) -> usize {
+        self.prepared_hits.load(Ordering::Relaxed)
+    }
+
+    /// Prepared-dataset cache misses (cold ingests).
+    pub fn prepared_misses(&self) -> usize {
+        self.prepared_misses.load(Ordering::Relaxed)
+    }
+
+    /// Path-cache hits (fits/refits that skipped the solve entirely).
+    pub fn path_hits(&self) -> usize {
+        self.path_hits.load(Ordering::Relaxed)
+    }
+
+    /// CV-cell cache hits (`fit_cv` calls that skipped the fold fits).
+    pub fn cv_hits(&self) -> usize {
+        self.cv_hits.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn bump_prepared_hit(&self) {
+        self.prepared_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn bump_prepared_miss(&self) {
+        self.prepared_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn bump_path_hit(&self) {
+        self.path_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn bump_cv_hit(&self) {
+        self.cv_hits.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Persistent fitting engine: the serving-path counterpart of the plain
@@ -683,18 +844,26 @@ struct Prepared {
 /// All caches are transparent: outputs are identical to a cold fit (the
 /// equivalence is pinned by `rust/tests/serving_api.rs`). The fitter is a
 /// single-owner object (`&mut self` methods); share work across threads
-/// by giving each worker its own fitter, or lean on the internal
-/// [`CvEngine`] whose pool already spans `threads` workers.
+/// by giving each worker its own fitter, lean on the internal
+/// [`CvEngine`] whose pool already spans `threads` workers, or move up to
+/// the multi-tenant [`crate::serve::FitterPool`] whose shared caches are
+/// built from the same keyed-LRU substrate ([`crate::lru::KeyedLru`]).
+///
+/// The prepared-dataset cache holds one dataset by default (the original
+/// single-slot semantics); [`SglFitter::with_prepared_capacity`] widens
+/// it so one fitter can serve several datasets LRU-style, each with its
+/// own path and CV sub-caches.
 pub struct SglFitter {
     model: SglModel,
     threads: usize,
     pool: WorkspacePool<PathWorkspace>,
     cv: CvEngine,
-    prepared: Option<Prepared>,
-    prepared_hits: usize,
-    prepared_misses: usize,
-    path_hits: usize,
-    cv_hits: usize,
+    /// Keyed-LRU prepared cache; `current` names the entry the last
+    /// `prepare` resolved, which follow-up calls (`refit`,
+    /// `finalize_cached`) operate on.
+    prepared: KeyedLru<DesignKey, Prepared>,
+    current: Option<DesignKey>,
+    stats: Arc<CacheStats>,
 }
 
 impl SglFitter {
@@ -713,12 +882,20 @@ impl SglFitter {
             threads,
             pool: WorkspacePool::new(1),
             cv: CvEngine::new(threads),
-            prepared: None,
-            prepared_hits: 0,
-            prepared_misses: 0,
-            path_hits: 0,
-            cv_hits: 0,
+            prepared: KeyedLru::new(1, usize::MAX),
+            current: None,
+            stats: Arc::new(CacheStats::default()),
         }
+    }
+
+    /// Widen the prepared-dataset cache to hold up to `capacity` datasets
+    /// (LRU-evicted beyond that). Capacity 1 — the default — reproduces
+    /// the historical single-slot behavior exactly. Existing cached
+    /// entries are dropped (the cache is rebuilt with the new bound).
+    pub fn with_prepared_capacity(mut self, capacity: usize) -> Self {
+        self.prepared = KeyedLru::new(capacity, usize::MAX);
+        self.current = None;
+        self
     }
 
     /// The model configuration this fitter runs with.
@@ -745,44 +922,67 @@ impl SglFitter {
 
     /// Prepared-dataset cache hits (fits that skipped copy + standardize).
     pub fn prepared_hits(&self) -> usize {
-        self.prepared_hits
+        self.stats.prepared_hits()
     }
 
     /// Prepared-dataset cache misses (cold ingests).
     pub fn prepared_misses(&self) -> usize {
-        self.prepared_misses
+        self.stats.prepared_misses()
     }
 
     /// Path-cache hits (fits/refits that skipped the solve entirely).
     pub fn path_hits(&self) -> usize {
-        self.path_hits
+        self.stats.path_hits()
     }
 
     /// CV-cell cache hits (`fit_cv` calls that skipped the fold fits).
     pub fn cv_hits(&self) -> usize {
-        self.cv_hits
+        self.stats.cv_hits()
+    }
+
+    /// Shared handle to the fitter's cache counters ([`CacheStats`]).
+    /// Clone-cheap (`Arc`); reads are valid from any thread while the
+    /// fitter keeps working — the shareable-stats leg of the serving
+    /// layer.
+    pub fn cache_stats(&self) -> Arc<CacheStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Datasets currently held by the prepared cache.
+    pub fn prepared_len(&self) -> usize {
+        self.prepared.len()
+    }
+
+    /// Prepared-cache LRU evictions so far (0 until the cache is widened
+    /// past its default single slot and overflows).
+    pub fn prepared_evictions(&self) -> u64 {
+        self.prepared.evictions()
     }
 
     /// Kernel variant of the currently prepared dataset ("dense" /
     /// "centered-sparse"); `None` before the first fit. Fit reports echo
     /// this so sparse-path routing is observable.
     pub fn kernel_variant(&self) -> Option<&'static str> {
-        self.prepared.as_ref().map(|p| p.key.kernel)
+        self.current.as_ref().map(|k| k.kernel)
     }
 
-    /// Drop every cache (prepared dataset, path, CV cell). The content
+    /// Drop every cache (prepared datasets, paths, CV cells). The content
     /// hash already detects any data change — including in-place edits —
     /// so this is an explicit escape hatch (memory release, paranoia),
     /// not a correctness requirement.
     pub fn invalidate(&mut self) {
-        self.prepared = None;
+        self.prepared.clear();
+        self.current = None;
     }
 
-    /// Drop only the cached pathwise fit, keeping the prepared dataset —
-    /// forces the next fit to re-solve (benchmarking aid).
+    /// Drop only the cached pathwise fit of the current dataset, keeping
+    /// the prepared data — forces the next fit to re-solve (benchmarking
+    /// aid).
     pub fn clear_path_cache(&mut self) {
-        if let Some(prep) = &mut self.prepared {
-            prep.path = None;
+        if let Some(key) = self.current.clone() {
+            if let Some(prep) = self.prepared.get_mut(&key) {
+                prep.path = None;
+            }
         }
     }
 
@@ -798,7 +998,12 @@ impl SglFitter {
     ) -> anyhow::Result<&PathFit> {
         self.prepare(design, y, group_sizes, response)?;
         self.ensure_path(self.model.path.clone(), self.model.rule, None)?;
-        match self.prepared.as_ref().and_then(|prep| prep.path.as_ref()) {
+        match self
+            .current
+            .as_ref()
+            .and_then(|k| self.prepared.peek(k))
+            .and_then(|prep| prep.path.as_ref())
+        {
             Some(cached) => Ok(cached.fit.as_ref()),
             None => anyhow::bail!("path cache empty after ensure_path"),
         }
@@ -824,10 +1029,13 @@ impl SglFitter {
     /// data pass; errors if nothing has been fit on this fitter yet.
     pub fn refit(&mut self, lambda_idx: usize) -> anyhow::Result<FittedSgl> {
         anyhow::ensure!(
-            self.prepared.as_ref().is_some_and(|p| p.path.is_some()),
+            self.current
+                .as_ref()
+                .and_then(|k| self.prepared.peek(k))
+                .is_some_and(|p| p.path.is_some()),
             "refit requires a previous fit on this fitter"
         );
-        self.path_hits += 1;
+        self.stats.bump_path_hit();
         self.finalize_cached(lambda_idx)
     }
 
@@ -836,7 +1044,7 @@ impl SglFitter {
     /// since α moves λ_max). Errors if nothing has been prepared yet.
     pub fn refit_alpha(&mut self, alpha: f64, lambda_idx: usize) -> anyhow::Result<FittedSgl> {
         anyhow::ensure!(
-            self.prepared.is_some(),
+            self.current.as_ref().is_some_and(|k| self.prepared.peek(k).is_some()),
             "refit_alpha requires a previous fit on this fitter"
         );
         self.model.path.alpha = alpha;
@@ -858,23 +1066,23 @@ impl SglFitter {
     ) -> anyhow::Result<FittedSgl> {
         self.prepare(design, y, group_sizes, response)?;
         let cfg = self.cv_config();
+        let Self { prepared, current, cv, stats, .. } = self;
+        let prep = match current.as_ref().and_then(|k| prepared.get_mut(k)) {
+            Some(p) => p,
+            None => anyhow::bail!("prepare() must run before fit_cv"),
+        };
         let mut cell: Option<CvCell> = None;
-        if let Some((c, cached)) = self.prepared.as_ref().and_then(|prep| prep.cv_cell.as_ref()) {
+        if let Some((c, cached)) = prep.cv_cell.as_ref() {
             if *c == cfg {
                 cell = Some(cached.clone());
-                self.cv_hits += 1;
+                stats.bump_cv_hit();
             }
         }
         let cell = match cell {
             Some(c) => c,
             None => {
-                let fresh = match self.prepared.as_ref() {
-                    Some(prep) => self.cv.cross_validate(&prep.ds, &cfg)?,
-                    None => anyhow::bail!("prepare() must run before fit_cv"),
-                };
-                if let Some(prep) = self.prepared.as_mut() {
-                    prep.cv_cell = Some((cfg, fresh.clone()));
-                }
+                let fresh = cv.cross_validate(&prep.data.ds, &cfg)?;
+                prep.cv_cell = Some((cfg, fresh.clone()));
                 fresh
             }
         };
@@ -897,11 +1105,11 @@ impl SglFitter {
     ) -> anyhow::Result<(Vec<CvCell>, usize)> {
         self.prepare(design, y, group_sizes, response)?;
         let cfg = self.cv_config();
-        let prep = match self.prepared.as_ref() {
+        let prep = match self.current.as_ref().and_then(|k| self.prepared.peek(k)) {
             Some(p) => p,
             None => anyhow::bail!("prepare() must run before cv_grid"),
         };
-        self.cv.grid_search(&prep.ds, &cfg, alphas, gammas)
+        self.cv.grid_search(&prep.data.ds, &cfg, alphas, gammas)
     }
 
     /// Jointly tune `(λ, α)` — and `(γ₁, γ₂)` for aSGL — by k-fold CV
@@ -948,76 +1156,23 @@ impl SglFitter {
         group_sizes: &[usize],
         response: Response,
     ) -> anyhow::Result<()> {
-        design.validate()?;
-        let (n, p) = (design.n(), design.p());
-        if n == 0 || p == 0 {
-            return Err(DfrError::EmptyDesign { n, p }.into());
-        }
-        if y.len() != n {
-            return Err(DfrError::DimensionMismatch { what: "y", expected: n, got: y.len() }.into());
-        }
-        if let Some(g) = group_sizes.iter().position(|&s| s == 0) {
-            return Err(DfrError::EmptyGroup { group: g }.into());
-        }
-        let sum: usize = group_sizes.iter().sum();
-        if sum != p {
-            return Err(DfrError::GroupMismatch { sum, p }.into());
-        }
-        let key = DesignKey {
-            layout: design.layout_name(),
-            kernel: design.resolved_kernel(self.model.sparse),
-            n,
-            p,
-            x_fp: design.fingerprint(),
-            y_fp: linalg::content_hash(y),
-            group_sizes: group_sizes.to_vec(),
-            response,
-        };
+        let key = design_key(design, y, group_sizes, response, self.model.sparse)?;
         // A hit must also pass the integrity stamp: a poisoned or
         // corrupted entry falls through to a cold re-ingest.
-        if self
+        let hit = self
             .prepared
-            .as_ref()
-            .is_some_and(|prep| prep.key == key && prep.stamp == stamp_of(&prep.key))
-        {
-            self.prepared_hits += 1;
+            .get(&key)
+            .is_some_and(|prep| prep.data.stamp == stamp_of(&prep.data.key));
+        if hit {
+            self.stats.bump_prepared_hit();
+            self.current = Some(key);
             return Ok(());
         }
-        self.prepared_misses += 1;
-        design.validate_contents()?;
-        if let Some(i) = y.iter().position(|v| !v.is_finite()) {
-            return Err(DfrError::NonFiniteResponse { index: i, value: y[i] }.into());
-        }
-        if y.iter().all(|&v| v == y[0]) {
-            let detail = match response {
-                Response::Linear => {
-                    format!("constant response y ≡ {} (zero variance)", y[0])
-                }
-                Response::Logistic => {
-                    format!("single-class response y ≡ {} (logistic needs both classes)", y[0])
-                }
-            };
-            return Err(DfrError::DegenerateResponse { detail }.into());
-        }
-        let (x, centers) = design.standardized_ops(self.model.sparse)?;
-        let mut yv = y.to_vec();
-        let y_mean = if response == Response::Linear {
-            let m = yv.iter().sum::<f64>() / n as f64;
-            yv.iter_mut().for_each(|v| *v -= m);
-            m
-        } else {
-            0.0
-        };
-        let ds = Dataset {
-            x,
-            y: yv,
-            groups: crate::groups::Groups::from_sizes(group_sizes),
-            response,
-            name: "user".into(),
-        };
-        let stamp = stamp_of(&key);
-        self.prepared =
-            Some(Prepared { key, stamp, ds, centers, y_mean, path: None, cv_cell: None });
+        self.stats.bump_prepared_miss();
+        let data = prepare_data(design, y, group_sizes, response, self.model.sparse, key.clone())?;
+        let bytes = prepared_bytes(&data);
+        self.prepared.insert(key.clone(), Prepared { data, path: None, cv_cell: None }, bytes);
+        self.current = Some(key);
         Ok(())
     }
 
@@ -1028,8 +1183,9 @@ impl SglFitter {
     /// bit-identical to a cold fit. No-op when nothing is cached.
     #[doc(hidden)]
     pub fn testkit_poison_cache(&mut self) {
-        if let Some(prep) = &mut self.prepared {
-            prep.stamp ^= 0x5eed_bad_c0ffee;
+        let Self { prepared, current, .. } = self;
+        if let Some(prep) = current.as_ref().and_then(|k| prepared.get_mut(k)) {
+            prep.data.stamp ^= 0x5eed_bad_c0ffee;
         }
     }
 
@@ -1041,8 +1197,8 @@ impl SglFitter {
         rule: RuleKind,
         fixed: Option<Vec<f64>>,
     ) -> anyhow::Result<()> {
-        let Self { prepared, pool, path_hits, .. } = self;
-        let prep = match prepared.as_mut() {
+        let Self { prepared, current, pool, stats, .. } = self;
+        let prep = match current.as_ref().and_then(|k| prepared.get_mut(k)) {
             Some(p) => p,
             None => anyhow::bail!("prepare() must run before ensure_path()"),
         };
@@ -1051,10 +1207,10 @@ impl SglFitter {
             .as_ref()
             .is_some_and(|c| c.rule == rule && c.cfg == cfg && c.fixed == fixed)
         {
-            *path_hits += 1;
+            stats.bump_path_hit();
             return Ok(());
         }
-        let mut runner = PathRunner::new(&prep.ds, cfg.clone()).rule(rule);
+        let mut runner = PathRunner::new(&prep.data.ds, cfg.clone()).rule(rule);
         if let Some(lambdas) = fixed.clone() {
             runner = runner.fixed_path(lambdas);
         }
@@ -1067,7 +1223,7 @@ impl SglFitter {
     /// Unstandardize the cached path's coefficients at `idx` into a
     /// raw-scale [`FittedSgl`].
     fn finalize_cached(&self, idx: usize) -> anyhow::Result<FittedSgl> {
-        let prep = match self.prepared.as_ref() {
+        let prep = match self.current.as_ref().and_then(|k| self.prepared.peek(k)) {
             Some(p) => p,
             None => anyhow::bail!("no prepared dataset (fit before refit)"),
         };
@@ -1075,7 +1231,7 @@ impl SglFitter {
             Some(c) => c,
             None => anyhow::bail!("no cached path fit (fit before refit)"),
         };
-        finalize(&cached.fit, &prep.centers, prep.y_mean, prep.ds.response, idx)
+        finalize(&cached.fit, &prep.data.centers, prep.data.y_mean, prep.data.ds.response, idx)
     }
 }
 
@@ -1083,7 +1239,7 @@ impl SglFitter {
 /// scale: `x_std_j = (x_j − m_j)/s_j ⇒ β_j = β_std_j / s_j`, intercept
 /// absorbs `−Σ β_std_j m_j / s_j` (+ ȳ for linear). The path is attached
 /// by `Arc`, never deep-copied.
-fn finalize(
+pub(crate) fn finalize(
     fit: &Arc<PathFit>,
     centers: &[(f64, f64)],
     y_mean: f64,

@@ -139,6 +139,10 @@ pub fn par_map<R: Send>(n: usize, threads: usize, f: impl Fn(usize) -> R + Sync)
 pub struct WorkspacePool<T> {
     slots: Vec<Mutex<T>>,
     checkouts: AtomicUsize,
+    /// Round-robin rotor: each checkout starts probing at a different
+    /// slot, so concurrent callers spread over the pool instead of
+    /// contending on slot 0 (fair admission for multi-tenant serving).
+    rotor: AtomicUsize,
 }
 
 impl<T: Default> WorkspacePool<T> {
@@ -147,6 +151,7 @@ impl<T: Default> WorkspacePool<T> {
         WorkspacePool {
             slots: (0..slots.max(1)).map(|_| Mutex::new(T::default())).collect(),
             checkouts: AtomicUsize::new(0),
+            rotor: AtomicUsize::new(0),
         }
     }
 }
@@ -170,8 +175,10 @@ impl<T> WorkspacePool<T> {
     /// any state they read — `PathWorkspace::ensure` does exactly that.
     pub fn checkout(&self) -> PoolGuard<'_, T> {
         self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let start = self.rotor.fetch_add(1, Ordering::Relaxed);
         loop {
-            for slot in &self.slots {
+            for i in 0..self.slots.len() {
+                let slot = &self.slots[(start + i) % self.slots.len()];
                 match slot.try_lock() {
                     Ok(guard) => return PoolGuard { guard },
                     // A worker that panicked mid-task poisons its slot;
@@ -286,5 +293,23 @@ mod tests {
         }
         let b = pool.checkout();
         assert_eq!(*b, 1, "state persists across checkouts");
+    }
+
+    #[test]
+    fn pool_checkout_rotates_over_slots() {
+        // Sequential checkouts must land on *different* slots (rotor
+        // fairness), not hammer slot 0: tag each slot on first touch,
+        // then verify all three tags exist by holding three guards at
+        // once — possible only if the three earlier checkouts spread.
+        let pool: WorkspacePool<u32> = WorkspacePool::new(3);
+        for _ in 0..3 {
+            let mut g = pool.checkout();
+            *g += 1;
+        }
+        let (a, b, c) = (pool.checkout(), pool.checkout(), pool.checkout());
+        let mut tags = [*a, *b, *c];
+        tags.sort_unstable();
+        assert_eq!(tags, [1, 1, 1], "each sequential checkout must visit a fresh slot");
+        assert_eq!(pool.checkouts(), 6);
     }
 }

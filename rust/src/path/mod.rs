@@ -422,7 +422,16 @@ impl<'a> PathRunner<'a> {
         let l = lambdas.len();
 
         let mut betas: Vec<Vec<f64>> = Vec::with_capacity(l);
-        let mut metrics = PathMetrics { p, m, ..Default::default() };
+        let mut metrics = PathMetrics {
+            p,
+            m,
+            // A safe rule on logistic loss screens nothing (squared-loss
+            // certificates only) — record the degradation up front so
+            // callers see it instead of a silently unscreened fit.
+            screening_fallback: self.rule.logistic_fallback()
+                && ds.response == crate::data::Response::Logistic,
+            ..Default::default()
+        };
 
         // β̂(λ₁): λ₁ generates the null model by construction.
         let t0 = Instant::now();

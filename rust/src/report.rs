@@ -55,6 +55,67 @@ impl Json {
         Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Parse a JSON document (the read half the NDJSON serving protocol
+    /// needs; no `serde` offline). Strict on structure — trailing garbage,
+    /// unterminated strings, and nesting deeper than 64 levels are errors
+    /// — and lossy only where [`Json`] itself is: every number becomes
+    /// `f64`.
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        anyhow::ensure!(pos == bytes.len(), "trailing characters at byte {pos}");
+        Ok(value)
+    }
+
+    /// Object field lookup (`None` for non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer value, if this is a number representing one.
+    pub fn as_usize(&self) -> Option<usize> {
+        let x = self.as_f64()?;
+        (x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64)
+            .then_some(x as usize)
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Boolean value, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
     pub fn render(&self) -> String {
         match self {
             Json::Null => "null".into(),
@@ -78,6 +139,177 @@ impl Json {
             }
         }
     }
+}
+
+const MAX_DEPTH: usize = 64;
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "expected `{lit}` at byte {}",
+        *pos
+    );
+    *pos += lit.len();
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> anyhow::Result<Json> {
+    anyhow::ensure!(depth < MAX_DEPTH, "JSON nested deeper than {MAX_DEPTH} levels");
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => anyhow::bail!("unexpected end of input"),
+        Some(b'n') => expect(b, pos, "null").map(|()| Json::Null),
+        Some(b't') => expect(b, pos, "true").map(|()| Json::Bool(true)),
+        Some(b'f') => expect(b, pos, "false").map(|()| Json::Bool(false)),
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut xs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(xs));
+            }
+            loop {
+                xs.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(xs));
+                    }
+                    _ => anyhow::bail!("expected `,` or `]` at byte {}", *pos),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut kv = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(kv));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ":")?;
+                kv.push((key, parse_value(b, pos, depth + 1)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(kv));
+                    }
+                    _ => anyhow::bail!("expected `,` or `}}` at byte {}", *pos),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos).map(Json::Num),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    expect(b, pos, "\"")?;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => anyhow::bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hi = parse_hex4(b, *pos + 1)?;
+                        *pos += 4;
+                        // Surrogate pairs arrive as two adjacent \uXXXX.
+                        let code = if (0xD800..0xDC00).contains(&hi) {
+                            anyhow::ensure!(
+                                b.get(*pos + 1..*pos + 3).is_some_and(|s| s == b"\\u"),
+                                "lone high surrogate"
+                            );
+                            let lo = parse_hex4(b, *pos + 3)?;
+                            *pos += 6;
+                            anyhow::ensure!(
+                                (0xDC00..0xE000).contains(&lo),
+                                "invalid low surrogate"
+                            );
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else {
+                            anyhow::ensure!(
+                                !(0xDC00..0xE000).contains(&hi),
+                                "lone low surrogate"
+                            );
+                            hi
+                        };
+                        match char::from_u32(code) {
+                            Some(c) => out.push(c),
+                            None => anyhow::bail!("invalid unicode escape"),
+                        }
+                    }
+                    _ => anyhow::bail!("invalid escape at byte {}", *pos),
+                }
+                *pos += 1;
+            }
+            Some(&c) if c < 0x20 => anyhow::bail!("raw control byte in string"),
+            Some(_) => {
+                // Copy one UTF-8 scalar (input is &str, so boundaries are valid).
+                let start = *pos;
+                *pos += 1;
+                while *pos < b.len() && (b[*pos] & 0xC0) == 0x80 {
+                    *pos += 1;
+                }
+                out.push_str(std::str::from_utf8(&b[start..*pos])?);
+            }
+        }
+    }
+}
+
+fn parse_hex4(b: &[u8], at: usize) -> anyhow::Result<u32> {
+    let hex = b
+        .get(at..at + 4)
+        .and_then(|s| std::str::from_utf8(s).ok())
+        .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+    u32::from_str_radix(hex, 16).map_err(|_| anyhow::anyhow!("bad \\u escape `{hex}`"))
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> anyhow::Result<f64> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while b
+        .get(*pos)
+        .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    let x: f64 = text
+        .parse()
+        .map_err(|_| anyhow::anyhow!("invalid number `{text}` at byte {start}"))?;
+    anyhow::ensure!(x.is_finite(), "non-finite number `{text}`");
+    Ok(x)
 }
 
 fn escape(s: &str) -> String {
@@ -114,6 +346,7 @@ pub fn run_record(
         ("kkt_violations", Json::Num(m.total_kkt_violations() as f64)),
         ("failed_convergences", Json::Num(m.failed_convergences() as f64)),
         ("status", Json::Str(m.worst_status().label().into())),
+        ("screening_fallback", Json::Bool(m.screening_fallback)),
         ("mean_iterations", Json::Num(m.mean_iterations())),
         (
             "improvement_factor",
@@ -150,5 +383,63 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn run_record_carries_screening_fallback() {
+        let m = PathMetrics { p: 3, m: 1, screening_fallback: true, ..Default::default() };
+        let rec = run_record("d", "TLFre", &m, None, None);
+        assert_eq!(rec.get("screening_fallback").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let j = Json::obj(vec![
+            ("verb", Json::Str("fit".into())),
+            ("n", Json::Num(12.0)),
+            ("x", Json::Arr(vec![Json::Num(1.5), Json::Num(-2e3), Json::Null])),
+            ("nested", Json::obj(vec![("ok", Json::Bool(true))])),
+        ]);
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.render(), j.render());
+        assert_eq!(back.get("verb").and_then(Json::as_str), Some("fit"));
+        assert_eq!(back.get("n").and_then(Json::as_usize), Some(12));
+        assert_eq!(back.get("x").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+        assert_eq!(
+            back.get("nested").and_then(|n| n.get("ok")).and_then(Json::as_bool),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn parse_handles_escapes_and_whitespace() {
+        let j = Json::parse(" { \"a\\n\\\"b\" : \"\\u00e9\\ud83d\\ude00\" } ").unwrap();
+        assert_eq!(j.get("a\n\"b").and_then(Json::as_str), Some("é😀"));
+        let esc = Json::Str("tab\t né😀".into());
+        assert_eq!(
+            Json::parse(&esc.render()).unwrap().as_str(),
+            Some("tab\t né😀")
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "\"unterminated", "1 2", "{}extra",
+            "\"\\ud800\"", "nan", "1e999",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject `{bad}`");
+        }
+        // Depth limit holds instead of blowing the stack.
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn parse_accepts_empty_containers_and_negatives() {
+        assert!(matches!(Json::parse("[]").unwrap(), Json::Arr(v) if v.is_empty()));
+        assert!(matches!(Json::parse("{}").unwrap(), Json::Obj(v) if v.is_empty()));
+        assert_eq!(Json::parse("-3.25e-2").unwrap().as_f64(), Some(-0.0325));
+        assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
     }
 }

@@ -67,6 +67,17 @@ impl RuleKind {
         matches!(self, RuleKind::DfrSgl | RuleKind::DfrAsgl | RuleKind::Sparsegl)
     }
 
+    /// Does the rule silently degrade to no screening on a logistic
+    /// response? The safe rules' exclusion certificates (TLFre's (E)DPP
+    /// balls, the GAP-safe spheres as implemented here) are squared-loss
+    /// constructions; on logistic loss they return full candidate sets
+    /// rather than risk an unsafe exclusion. Fits where this happens set
+    /// [`crate::metrics::PathMetrics::screening_fallback`] so the
+    /// degradation is observable instead of silent.
+    pub fn logistic_fallback(&self) -> bool {
+        matches!(self, RuleKind::GapSafeSeq | RuleKind::GapSafeDyn | RuleKind::Tlfre)
+    }
+
     /// All rules compared in the paper's figures.
     pub const ALL: [RuleKind; 7] = [
         RuleKind::NoScreen,
@@ -236,5 +247,19 @@ mod tests {
         let strong: Vec<_> =
             RuleKind::ALL.iter().filter(|r| r.needs_kkt()).collect();
         assert_eq!(strong.len(), 3);
+    }
+
+    #[test]
+    fn logistic_fallback_is_exactly_the_safe_rules() {
+        // The safe rules carry squared-loss certificates only; strong
+        // rules and the no-screen baseline never fall back.
+        for r in RuleKind::ALL {
+            assert_eq!(
+                r.logistic_fallback(),
+                matches!(r, RuleKind::Tlfre | RuleKind::GapSafeSeq | RuleKind::GapSafeDyn),
+                "{}",
+                r.name()
+            );
+        }
     }
 }

@@ -1,0 +1,35 @@
+//! Multi-tenant serving subsystem: a [`FitterPool`] service layer over
+//! the single-owner [`crate::model_api::SglFitter`] pieces, plus the
+//! long-lived `dfr serve` NDJSON loop.
+//!
+//! Three layers:
+//!
+//! * [`protocol`] — the NDJSON wire format: one JSON request per line
+//!   (verbs `fit`, `predict`, `cv`, `stats`, `evict`, `shutdown`), one
+//!   JSON reply per line, parsed/rendered with the crate's own
+//!   [`crate::report::Json`] (no `serde` offline).
+//! * [`pool`] — [`FitterPool`]: content-hash-keyed, LRU-bounded caches of
+//!   prepared datasets, pathwise fits, and CV cells **shared across
+//!   tenants** (two tenants posting byte-identical data hit the same
+//!   entry), per-tenant fitted models behind a read-mostly `RwLock`,
+//!   round-robin fair admission for fit/CV requests contending on the
+//!   shared workspace pool, and coalescing of concurrent predict calls
+//!   against the same model into one stacked matvec. Live statistics —
+//!   per-verb latency histograms, per-tenant hit/miss/eviction counters —
+//!   are lock-free atomics, dumped by the `stats` verb.
+//! * [`server`] — the blocking read → batch → dispatch → reply loop,
+//!   generic over `Read` so tests drive it with an in-memory script.
+//!
+//! Equivalence guarantee: the pool's fit pipeline is built from the exact
+//! same crate-internal pieces as `SglFitter` (`design_key` →
+//! `prepare_data` → `PathRunner` → `finalize`), so a fit served through
+//! the pool is bit-identical to one from a dedicated per-tenant fitter —
+//! pinned by `rust/tests/serve_pool.rs`.
+
+pub mod pool;
+pub mod protocol;
+pub mod server;
+
+pub use pool::{CvOutcome, FitOutcome, FitterPool, PoolConfig, TenantStats};
+pub use protocol::{CvRequest, FitRequest, PredictRequest, Reply, Request};
+pub use server::{serve, ServeOptions, ServeSummary};

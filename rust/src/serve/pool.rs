@@ -1,0 +1,726 @@
+//! [`FitterPool`] — the multi-tenant service layer.
+//!
+//! Shared state, by access pattern:
+//!
+//! * **Content caches** (prepared datasets, pathwise fits, CV cells):
+//!   `Mutex<KeyedLru<..>>` with *short* critical sections — locks are
+//!   held to probe or insert, never across a solve. Two tenants racing a
+//!   cold key may both compute it (the second insert replaces the
+//!   first); that duplicate work is accepted in exchange for never
+//!   serializing solves behind a lock. Values ride in `Arc`s tagged with
+//!   the inserting tenant, so LRU evictions are attributed to owners.
+//! * **Model map** (tenant → fitted model): `RwLock<BTreeMap>` —
+//!   read-mostly; `predict` takes the read lock only long enough to
+//!   clone an `Arc`.
+//! * **Statistics** (per-verb latency histograms, per-tenant counters,
+//!   coalescing counters): lock-free atomics, readable while fits are in
+//!   flight.
+//!
+//! Fairness: heavy requests (`fit`, `cv`) within a batch are admitted
+//! round-robin across tenants — starting from a rotating offset — before
+//! being fanned out over the worker pool, so one tenant posting many
+//! fits cannot starve the rest. The same rotor idea lives one level
+//! down in [`WorkspacePool::checkout`].
+//!
+//! Coalescing: predict requests against the same tenant's model are
+//! stacked into a single design and served by **one**
+//! [`FittedSgl::predict_into`] matvec, then split back per request.
+
+use crate::cv::{CvCell, CvConfig, CvEngine};
+use crate::data::Response;
+use crate::lru::KeyedLru;
+use crate::metrics::LatencyHistogram;
+use crate::model_api::{
+    design_key, finalize, prepare_data, prepared_bytes, Design, DesignKey, FittedSgl,
+    PreparedData, SglModel,
+};
+use crate::parallel::{par_map, WorkspacePool};
+use crate::path::{PathConfig, PathFit, PathRunner, PathWorkspace};
+use crate::report::Json;
+use crate::screen::RuleKind;
+use crate::serve::protocol::{CvRequest, FitRequest, Reply, Request};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::Instant;
+
+/// Pool configuration: the shared model defaults plus resource bounds.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Default model settings (rule, α, path, folds, seed, sparse mode);
+    /// requests may override rule/α/path-length per call.
+    pub model: SglModel,
+    /// Worker threads for batch fan-out and CV fold fits.
+    pub threads: usize,
+    /// Entry bound of each content cache (prepared / paths / CV).
+    pub max_entries: usize,
+    /// Byte bound of each content cache.
+    pub max_bytes: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            model: SglModel::default(),
+            threads: crate::parallel::default_threads(),
+            max_entries: 8,
+            max_bytes: 512 << 20,
+        }
+    }
+}
+
+/// Per-tenant counters (relaxed atomics — telemetry, not sync).
+#[derive(Debug, Default)]
+pub struct TenantStats {
+    fits: AtomicU64,
+    predicts: AtomicU64,
+    cvs: AtomicU64,
+    prepared_hits: AtomicU64,
+    prepared_misses: AtomicU64,
+    path_hits: AtomicU64,
+    cv_hits: AtomicU64,
+    /// Cache entries this tenant inserted that were later LRU-evicted.
+    evictions: AtomicU64,
+}
+
+macro_rules! tenant_counters {
+    ($($field:ident),+) => {$(
+        pub fn $field(&self) -> u64 {
+            self.$field.load(Ordering::Relaxed)
+        }
+    )+};
+}
+
+impl TenantStats {
+    tenant_counters!(
+        fits, predicts, cvs, prepared_hits, prepared_misses, path_hits, cv_hits, evictions
+    );
+
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("fits", Json::Num(self.fits() as f64)),
+            ("predicts", Json::Num(self.predicts() as f64)),
+            ("cvs", Json::Num(self.cvs() as f64)),
+            ("prepared_hits", Json::Num(self.prepared_hits() as f64)),
+            ("prepared_misses", Json::Num(self.prepared_misses() as f64)),
+            ("path_hits", Json::Num(self.path_hits() as f64)),
+            ("cv_hits", Json::Num(self.cv_hits() as f64)),
+            ("evictions", Json::Num(self.evictions() as f64)),
+        ])
+    }
+}
+
+/// Key of a cached pathwise fit: the dataset key plus every setting that
+/// shapes the path.
+#[derive(Clone, PartialEq)]
+struct PathKey {
+    design: DesignKey,
+    rule: RuleKind,
+    cfg: PathConfig,
+    fixed: Option<Vec<f64>>,
+}
+
+/// Cached values carry the inserting tenant for eviction attribution.
+type Owned<T> = (String, Arc<T>);
+
+/// Outcome of a pool `fit` (the payload of the wire reply).
+#[derive(Clone, Debug)]
+pub struct FitOutcome {
+    pub lambda: f64,
+    pub lambda_idx: usize,
+    /// Nonzero coefficients at the selected λ.
+    pub active: usize,
+    /// Safe rule silently degraded to full candidates on logistic loss.
+    pub screening_fallback: bool,
+    pub prepared_cached: bool,
+    pub path_cached: bool,
+}
+
+/// Outcome of a pool `cv`.
+#[derive(Clone, Debug)]
+pub struct CvOutcome {
+    pub best_idx: usize,
+    pub best_1se_idx: usize,
+    /// Index actually selected (respects `one_se`).
+    pub chosen_idx: usize,
+    pub lambda: f64,
+    pub active: usize,
+    pub cv_cached: bool,
+    pub prepared_cached: bool,
+}
+
+/// Multi-tenant serving pool. All methods take `&self`; the pool is
+/// `Sync` and meant to be shared (or driven by [`crate::serve::serve`]).
+pub struct FitterPool {
+    cfg: PoolConfig,
+    prepared: Mutex<KeyedLru<DesignKey, Owned<PreparedData>>>,
+    paths: Mutex<KeyedLru<PathKey, Owned<PathFit>>>,
+    cv_cells: Mutex<KeyedLru<(DesignKey, CvConfig), Owned<CvCell>>>,
+    models: RwLock<BTreeMap<String, Arc<FittedSgl>>>,
+    tenants: RwLock<BTreeMap<String, Arc<TenantStats>>>,
+    workspaces: WorkspacePool<PathWorkspace>,
+    cv_engine: CvEngine,
+    /// Round-robin offset for heavy-request admission.
+    rr: AtomicUsize,
+    lat_fit: LatencyHistogram,
+    lat_predict: LatencyHistogram,
+    lat_cv: LatencyHistogram,
+    coalesced_batches: AtomicU64,
+    coalesced_predicts: AtomicU64,
+    started: Instant,
+}
+
+/// Mutex lock that shrugs off poisoning: cached values are plain data
+/// (a panicked inserter leaves the map structurally sound), and the
+/// no-unwrap discipline forbids propagating the poison as a panic.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+impl FitterPool {
+    pub fn new(cfg: PoolConfig) -> Self {
+        let threads = cfg.threads.max(1);
+        let (me, mb) = (cfg.max_entries, cfg.max_bytes);
+        FitterPool {
+            cfg: PoolConfig { threads, ..cfg },
+            prepared: Mutex::new(KeyedLru::new(me, mb)),
+            paths: Mutex::new(KeyedLru::new(me, mb)),
+            cv_cells: Mutex::new(KeyedLru::new(me, mb)),
+            models: RwLock::new(BTreeMap::new()),
+            tenants: RwLock::new(BTreeMap::new()),
+            workspaces: WorkspacePool::new(threads),
+            cv_engine: CvEngine::new(threads),
+            rr: AtomicUsize::new(0),
+            lat_fit: LatencyHistogram::new(),
+            lat_predict: LatencyHistogram::new(),
+            lat_cv: LatencyHistogram::new(),
+            coalesced_batches: AtomicU64::new(0),
+            coalesced_predicts: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// The pool's configuration.
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    /// Per-tenant counters handle (created on first touch).
+    pub fn tenant_stats(&self, name: &str) -> Arc<TenantStats> {
+        if let Some(t) = read(&self.tenants).get(name) {
+            return Arc::clone(t);
+        }
+        let mut map = write(&self.tenants);
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// The tenant's current fitted model, if any.
+    pub fn model_of(&self, tenant: &str) -> Option<Arc<FittedSgl>> {
+        read(&self.models).get(tenant).cloned()
+    }
+
+    /// (entries, bytes, evictions) of the prepared-dataset cache.
+    pub fn prepared_cache_stats(&self) -> (usize, usize, u64) {
+        let c = lock(&self.prepared);
+        (c.len(), c.bytes(), c.evictions())
+    }
+
+    /// (entries, bytes, evictions) of the path cache.
+    pub fn path_cache_stats(&self) -> (usize, usize, u64) {
+        let c = lock(&self.paths);
+        (c.len(), c.bytes(), c.evictions())
+    }
+
+    // ---- fit / cv pipeline (shared pieces) -----------------------------
+
+    fn prepared_for(
+        &self,
+        tenant: &str,
+        ts: &TenantStats,
+        design: &Design,
+        y: &[f64],
+        groups: &[usize],
+        response: Response,
+    ) -> anyhow::Result<(Arc<PreparedData>, bool)> {
+        let key = design_key(design, y, groups, response, self.cfg.model.sparse)?;
+        if let Some((_, p)) = lock(&self.prepared).get(&key) {
+            TenantStats::bump(&ts.prepared_hits);
+            return Ok((Arc::clone(p), true));
+        }
+        TenantStats::bump(&ts.prepared_misses);
+        // Ingest OUTSIDE the lock: a large standardization must not
+        // serialize every other tenant's cache probe behind it.
+        let data = Arc::new(prepare_data(
+            design,
+            y,
+            groups,
+            response,
+            self.cfg.model.sparse,
+            key.clone(),
+        )?);
+        let bytes = prepared_bytes(&data);
+        let evicted =
+            lock(&self.prepared).insert(key, (tenant.to_string(), Arc::clone(&data)), bytes);
+        self.attribute_evictions(evicted.into_iter().map(|(_, (owner, _))| owner));
+        Ok((data, false))
+    }
+
+    fn path_for(
+        &self,
+        tenant: &str,
+        ts: &TenantStats,
+        prep: &PreparedData,
+        cfg: PathConfig,
+        rule: RuleKind,
+        fixed: Option<Vec<f64>>,
+    ) -> anyhow::Result<(Arc<PathFit>, bool)> {
+        let key =
+            PathKey { design: prep.key.clone(), rule, cfg: cfg.clone(), fixed: fixed.clone() };
+        if let Some((_, f)) = lock(&self.paths).get(&key) {
+            TenantStats::bump(&ts.path_hits);
+            return Ok((Arc::clone(f), true));
+        }
+        let mut runner = PathRunner::new(&prep.ds, cfg).rule(rule);
+        if let Some(lambdas) = fixed {
+            runner = runner.fixed_path(lambdas);
+        }
+        // Solve outside the cache lock, on a checked-out pooled workspace.
+        let mut ws = self.workspaces.checkout();
+        let fit = Arc::new(runner.run_with_workspace(&mut ws)?);
+        drop(ws);
+        let bytes = path_bytes(&fit);
+        let evicted = lock(&self.paths).insert(key, (tenant.to_string(), Arc::clone(&fit)), bytes);
+        self.attribute_evictions(evicted.into_iter().map(|(_, (owner, _))| owner));
+        Ok((fit, false))
+    }
+
+    fn attribute_evictions(&self, owners: impl Iterator<Item = String>) {
+        for owner in owners {
+            TenantStats::bump(&self.tenant_stats(&owner).evictions);
+        }
+    }
+
+    /// Serve one fit request: prepared-cache → path-cache → finalize,
+    /// storing the raw-scale model under the tenant's name.
+    pub fn fit(&self, req: &FitRequest) -> anyhow::Result<FitOutcome> {
+        let ts = self.tenant_stats(&req.tenant);
+        TenantStats::bump(&ts.fits);
+        let design = Design::rows(&req.x);
+        let (prep, prepared_cached) =
+            self.prepared_for(&req.tenant, &ts, &design, &req.y, &req.groups, req.response)?;
+        let (cfg, rule) = self.path_settings(req.alpha, req.path_len, req.rule)?;
+        let idx = req.lambda_idx.unwrap_or(cfg.path_len / 2);
+        anyhow::ensure!(
+            idx < cfg.path_len,
+            "lambda_idx {idx} out of range (path_len {})",
+            cfg.path_len
+        );
+        let (fit, path_cached) = self.path_for(&req.tenant, &ts, &prep, cfg, rule, None)?;
+        let fitted =
+            Arc::new(finalize(&fit, &prep.centers, prep.y_mean, prep.ds.response, idx)?);
+        let out = FitOutcome {
+            lambda: fitted.lambda,
+            lambda_idx: idx,
+            active: fitted.coefficients.iter().filter(|&&c| c != 0.0).count(),
+            screening_fallback: fit.metrics.screening_fallback,
+            prepared_cached,
+            path_cached,
+        };
+        write(&self.models).insert(req.tenant.clone(), fitted);
+        Ok(out)
+    }
+
+    /// Serve one CV request: fold fits through the shared [`CvEngine`],
+    /// cell cached by (dataset, config), winner refit from the path cache.
+    pub fn cv(&self, req: &CvRequest) -> anyhow::Result<CvOutcome> {
+        let ts = self.tenant_stats(&req.tenant);
+        TenantStats::bump(&ts.cvs);
+        let design = Design::rows(&req.x);
+        let (prep, prepared_cached) =
+            self.prepared_for(&req.tenant, &ts, &design, &req.y, &req.groups, req.response)?;
+        let (cfg, rule) = self.path_settings(req.alpha, None, req.rule)?;
+        let ccfg = CvConfig {
+            folds: req.folds.unwrap_or(self.cfg.model.cv_folds),
+            path: cfg.clone(),
+            rule,
+            seed: self.cfg.model.seed,
+            threads: self.cfg.threads,
+        };
+        let ckey = (prep.key.clone(), ccfg.clone());
+        let mut cv_cached = true;
+        // Probe in its own statement: a `match` on the locked lookup
+        // would hold the guard across the miss arm's re-lock (deadlock).
+        let probed = lock(&self.cv_cells).get(&ckey).map(|(_, c)| Arc::clone(c));
+        let cell = match probed {
+            Some(c) => {
+                TenantStats::bump(&ts.cv_hits);
+                c
+            }
+            None => {
+                cv_cached = false;
+                let fresh = Arc::new(self.cv_engine.cross_validate(&prep.ds, &ccfg)?);
+                let bytes = fresh.lambdas.len() * 32 + 256;
+                let evicted = lock(&self.cv_cells).insert(
+                    ckey,
+                    (req.tenant.clone(), Arc::clone(&fresh)),
+                    bytes,
+                );
+                self.attribute_evictions(evicted.into_iter().map(|(_, (owner, _))| owner));
+                fresh
+            }
+        };
+        let chosen = if req.one_se { cell.best_1se_idx } else { cell.best_idx };
+        let (fit, _) =
+            self.path_for(&req.tenant, &ts, &prep, cfg, rule, Some(cell.lambdas.clone()))?;
+        let fitted =
+            Arc::new(finalize(&fit, &prep.centers, prep.y_mean, prep.ds.response, chosen)?);
+        let out = CvOutcome {
+            best_idx: cell.best_idx,
+            best_1se_idx: cell.best_1se_idx,
+            chosen_idx: chosen,
+            lambda: fitted.lambda,
+            active: fitted.coefficients.iter().filter(|&&c| c != 0.0).count(),
+            cv_cached,
+            prepared_cached,
+        };
+        write(&self.models).insert(req.tenant.clone(), fitted);
+        Ok(out)
+    }
+
+    fn path_settings(
+        &self,
+        alpha: Option<f64>,
+        path_len: Option<usize>,
+        rule: Option<RuleKind>,
+    ) -> anyhow::Result<(PathConfig, RuleKind)> {
+        let mut cfg = self.cfg.model.path.clone();
+        if let Some(a) = alpha {
+            anyhow::ensure!((0.0..=1.0).contains(&a), "alpha {a} outside [0, 1]");
+            cfg.alpha = a;
+        }
+        if let Some(l) = path_len {
+            anyhow::ensure!(l >= 2, "path_len must be at least 2, got {l}");
+            cfg.path_len = l;
+        }
+        Ok((cfg, rule.unwrap_or(self.cfg.model.rule)))
+    }
+
+    /// Predict with the tenant's current model. `rows` may stack several
+    /// coalesced requests; `requests` is how many it represents (counter
+    /// attribution only).
+    fn predict_stacked(
+        &self,
+        tenant: &str,
+        rows: &[Vec<f64>],
+        requests: u64,
+    ) -> anyhow::Result<Vec<f64>> {
+        let ts = self.tenant_stats(tenant);
+        ts.predicts.fetch_add(requests, Ordering::Relaxed);
+        let model = self
+            .model_of(tenant)
+            .ok_or_else(|| anyhow::anyhow!("no model for tenant `{tenant}` (fit first)"))?;
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let p = model.coefficients.len();
+        if let Some(bad) = rows.iter().position(|r| r.len() != p) {
+            anyhow::bail!("row {bad} has {} features, model expects {p}", rows[bad].len());
+        }
+        let mut out = vec![0.0; rows.len()];
+        model.predict_into(&Design::rows(rows), &mut out);
+        Ok(out)
+    }
+
+    /// Predict for one request (the uncoalesced path).
+    pub fn predict(&self, tenant: &str, rows: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        self.predict_stacked(tenant, rows, 1)
+    }
+
+    /// Drop the tenant's model and every cache entry it inserted.
+    /// Returns (had a model, cache entries dropped). Explicit drops are
+    /// not counted as LRU evictions.
+    pub fn evict(&self, tenant: &str) -> (bool, usize) {
+        let had = write(&self.models).remove(tenant).is_some();
+        let mut dropped = 0;
+        dropped += lock(&self.prepared).retain(|_, v| v.0 != tenant);
+        dropped += lock(&self.paths).retain(|_, v| v.0 != tenant);
+        dropped += lock(&self.cv_cells).retain(|_, v| v.0 != tenant);
+        (had, dropped)
+    }
+
+    /// Live statistics dump — the `stats` verb payload.
+    pub fn stats_json(&self) -> Json {
+        let tenants: Vec<(String, Json)> = read(&self.tenants)
+            .iter()
+            .map(|(name, ts)| (name.clone(), ts.json()))
+            .collect();
+        Json::obj(vec![
+            ("uptime_seconds", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("threads", Json::Num(self.cfg.threads as f64)),
+            (
+                "verbs",
+                Json::obj(vec![
+                    ("fit", hist_json(&self.lat_fit)),
+                    ("predict", hist_json(&self.lat_predict)),
+                    ("cv", hist_json(&self.lat_cv)),
+                ]),
+            ),
+            (
+                "caches",
+                Json::obj(vec![
+                    ("prepared", cache_json(&self.prepared)),
+                    ("paths", cache_json(&self.paths)),
+                    ("cv", cache_json(&self.cv_cells)),
+                ]),
+            ),
+            (
+                "coalescing",
+                Json::obj(vec![
+                    (
+                        "batches",
+                        Json::Num(self.coalesced_batches.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "predicts",
+                        Json::Num(self.coalesced_predicts.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            ("models", Json::Num(read(&self.models).len() as f64)),
+            ("tenants", Json::Obj(tenants)),
+            (
+                "workspace_checkouts",
+                Json::Num(self.workspaces.checkouts() as f64),
+            ),
+        ])
+    }
+
+    // ---- batch admission ----------------------------------------------
+
+    /// Execute one batch of requests, returning replies in request order.
+    ///
+    /// Admission: heavy requests (fit/cv) first, round-robin interleaved
+    /// across tenants and fanned out over the worker pool; then predicts,
+    /// coalesced per tenant into one stacked matvec each; then control
+    /// verbs (`stats`, `evict`, `shutdown`) in request order, so a
+    /// scripted `fit → predict → stats` pipeline works in a single batch.
+    pub fn submit_batch(&self, mut reqs: Vec<Request>) -> Vec<Reply> {
+        let mut replies: Vec<Option<Reply>> = reqs.iter().map(|_| None).collect();
+
+        // Heavy verbs: queue per tenant (first-come order within one).
+        let mut heavy: Vec<(String, VecDeque<usize>)> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            if matches!(r, Request::Fit(_) | Request::Cv(_)) {
+                let tenant = r.tenant().unwrap_or_default().to_string();
+                match heavy.iter_mut().find(|(t, _)| *t == tenant) {
+                    Some((_, q)) => q.push_back(i),
+                    None => heavy.push((tenant, VecDeque::from([i]))),
+                }
+            }
+        }
+        if !heavy.is_empty() {
+            let lanes = heavy.len();
+            let start = self.rr.fetch_add(1, Ordering::Relaxed) % lanes;
+            let total: usize = heavy.iter().map(|(_, q)| q.len()).sum();
+            let mut order = Vec::with_capacity(total);
+            while order.len() < total {
+                for k in 0..lanes {
+                    if let Some(i) = heavy[(start + k) % lanes].1.pop_front() {
+                        order.push(i);
+                    }
+                }
+            }
+            let reqs_ref: &[Request] = &reqs;
+            let done = par_map(order.len(), self.cfg.threads, |j| {
+                let i = order[j];
+                let t0 = Instant::now();
+                let reply = match &reqs_ref[i] {
+                    Request::Fit(f) => {
+                        let r = self.fit(f).map(fit_fields);
+                        self.lat_fit.record(t0.elapsed());
+                        to_reply(f.id, "fit", Some(&f.tenant), r)
+                    }
+                    Request::Cv(c) => {
+                        let r = self.cv(c).map(cv_fields);
+                        self.lat_cv.record(t0.elapsed());
+                        to_reply(c.id, "cv", Some(&c.tenant), r)
+                    }
+                    other => Reply::err(
+                        other.id(),
+                        other.verb(),
+                        other.tenant(),
+                        "internal: non-heavy request in heavy lane",
+                    ),
+                };
+                (i, reply)
+            });
+            for (i, reply) in done {
+                replies[i] = Some(reply);
+            }
+        }
+
+        // Predicts: coalesce per tenant into one stacked matvec.
+        let mut pred: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            if let Request::Predict(p) = r {
+                match pred.iter_mut().find(|(t, _)| *t == p.tenant) {
+                    Some((_, idxs)) => idxs.push(i),
+                    None => pred.push((p.tenant.clone(), vec![i])),
+                }
+            }
+        }
+        for (tenant, idxs) in pred {
+            let t0 = Instant::now();
+            let mut stacked: Vec<Vec<f64>> = Vec::new();
+            let mut spans: Vec<(usize, Option<f64>, usize)> = Vec::new();
+            for &i in &idxs {
+                if let Request::Predict(p) = &mut reqs[i] {
+                    let rows = std::mem::take(&mut p.x);
+                    spans.push((i, p.id, rows.len()));
+                    stacked.extend(rows);
+                }
+            }
+            let coalesced = idxs.len();
+            if coalesced > 1 {
+                TenantStats::bump(&self.coalesced_batches);
+                self.coalesced_predicts.fetch_add(coalesced as u64, Ordering::Relaxed);
+            }
+            match self.predict_stacked(&tenant, &stacked, coalesced as u64) {
+                Ok(all) => {
+                    let mut offset = 0;
+                    for (i, id, len) in spans {
+                        let preds =
+                            all[offset..offset + len].iter().map(|&v| Json::Num(v)).collect();
+                        offset += len;
+                        replies[i] = Some(Reply::ok(
+                            id,
+                            "predict",
+                            Some(&tenant),
+                            vec![
+                                ("predictions", Json::Arr(preds)),
+                                ("coalesced", Json::Num(coalesced as f64)),
+                            ],
+                        ));
+                    }
+                }
+                Err(e) => {
+                    for (i, id, _) in spans {
+                        replies[i] =
+                            Some(Reply::err(id, "predict", Some(&tenant), e.to_string()));
+                    }
+                }
+            }
+            self.lat_predict.record(t0.elapsed());
+        }
+
+        // Control verbs, in request order.
+        for (i, r) in reqs.iter().enumerate() {
+            match r {
+                Request::Stats { id } => {
+                    replies[i] =
+                        Some(Reply::ok(*id, "stats", None, vec![("stats", self.stats_json())]));
+                }
+                Request::Evict { id, tenant } => {
+                    let (had_model, dropped) = self.evict(tenant);
+                    replies[i] = Some(Reply::ok(
+                        *id,
+                        "evict",
+                        Some(tenant),
+                        vec![
+                            ("had_model", Json::Bool(had_model)),
+                            ("dropped_entries", Json::Num(dropped as f64)),
+                        ],
+                    ));
+                }
+                Request::Shutdown { id } => {
+                    replies[i] = Some(Reply::ok(*id, "shutdown", None, vec![]));
+                }
+                _ => {}
+            }
+        }
+
+        replies
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.unwrap_or_else(|| {
+                    Reply::err(None, "internal", None, format!("request {i} was not scheduled"))
+                })
+            })
+            .collect()
+    }
+}
+
+fn read<'a, K, V>(l: &'a RwLock<BTreeMap<K, V>>) -> std::sync::RwLockReadGuard<'a, BTreeMap<K, V>> {
+    l.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn write<'a, K, V>(
+    l: &'a RwLock<BTreeMap<K, V>>,
+) -> std::sync::RwLockWriteGuard<'a, BTreeMap<K, V>> {
+    l.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn cache_json<K: PartialEq, V>(c: &Mutex<KeyedLru<K, V>>) -> Json {
+    let c = lock(c);
+    Json::obj(vec![
+        ("entries", Json::Num(c.len() as f64)),
+        ("bytes", Json::Num(c.bytes() as f64)),
+        ("max_entries", Json::Num(c.max_entries() as f64)),
+        ("max_bytes", Json::Num(c.max_bytes() as f64)),
+        ("evictions", Json::Num(c.evictions() as f64)),
+    ])
+}
+
+fn path_bytes(fit: &PathFit) -> usize {
+    fit.betas.iter().map(|b| b.len() * 8).sum::<usize>() + fit.lambdas.len() * 8 + 256
+}
+
+fn hist_json(h: &LatencyHistogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("mean_seconds", Json::Num(h.mean_seconds())),
+        ("p50_seconds", Json::Num(h.p50())),
+        ("p95_seconds", Json::Num(h.p95())),
+        ("p99_seconds", Json::Num(h.p99())),
+    ])
+}
+
+fn fit_fields(o: FitOutcome) -> Vec<(&'static str, Json)> {
+    vec![
+        ("lambda", Json::Num(o.lambda)),
+        ("lambda_idx", Json::Num(o.lambda_idx as f64)),
+        ("active", Json::Num(o.active as f64)),
+        ("screening_fallback", Json::Bool(o.screening_fallback)),
+        ("prepared_cached", Json::Bool(o.prepared_cached)),
+        ("path_cached", Json::Bool(o.path_cached)),
+    ]
+}
+
+fn cv_fields(o: CvOutcome) -> Vec<(&'static str, Json)> {
+    vec![
+        ("best_idx", Json::Num(o.best_idx as f64)),
+        ("best_1se_idx", Json::Num(o.best_1se_idx as f64)),
+        ("chosen_idx", Json::Num(o.chosen_idx as f64)),
+        ("lambda", Json::Num(o.lambda)),
+        ("active", Json::Num(o.active as f64)),
+        ("cv_cached", Json::Bool(o.cv_cached)),
+        ("prepared_cached", Json::Bool(o.prepared_cached)),
+    ]
+}
+
+fn to_reply(
+    id: Option<f64>,
+    verb: &'static str,
+    tenant: Option<&str>,
+    result: anyhow::Result<Vec<(&'static str, Json)>>,
+) -> Reply {
+    match result {
+        Ok(fields) => Reply::ok(id, verb, tenant, fields),
+        Err(e) => Reply::err(id, verb, tenant, e.to_string()),
+    }
+}

@@ -1,0 +1,371 @@
+//! NDJSON wire format of `dfr serve`: request parsing and reply
+//! rendering over [`crate::report::Json`].
+//!
+//! One request per line. Every request carries a `verb` and optionally a
+//! numeric `id` echoed back in the reply, so a pipelining client can
+//! match responses to requests even though batching may reorder
+//! execution (replies always come back in request order within a batch).
+//!
+//! ```text
+//! {"verb":"fit","tenant":"a","x":[[..],..],"y":[..],"groups":[2,2]}
+//! {"verb":"predict","tenant":"a","x":[[..]]}
+//! {"verb":"stats"}
+//! {"verb":"shutdown"}
+//! ```
+
+use crate::cli::parse_rule;
+use crate::data::Response;
+use crate::report::Json;
+use crate::screen::RuleKind;
+
+/// A `fit` request: pathwise fit on inline row-major data, model stored
+/// under the tenant's name for follow-up `predict` calls.
+#[derive(Debug)]
+pub struct FitRequest {
+    pub id: Option<f64>,
+    pub tenant: String,
+    /// Row-major design (one inner array per observation).
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+    /// Group sizes (must sum to the row width).
+    pub groups: Vec<usize>,
+    pub response: Response,
+    /// Screening rule override (pool default when absent).
+    pub rule: Option<RuleKind>,
+    /// α override (pool default when absent).
+    pub alpha: Option<f64>,
+    /// Path-length override (pool default when absent).
+    pub path_len: Option<usize>,
+    /// λ index to select; defaults to the middle of the path.
+    pub lambda_idx: Option<usize>,
+}
+
+/// A `predict` request against the tenant's current model.
+#[derive(Debug)]
+pub struct PredictRequest {
+    pub id: Option<f64>,
+    pub tenant: String,
+    pub x: Vec<Vec<f64>>,
+}
+
+/// A `cv` request: k-fold CV λ selection, winning model stored under the
+/// tenant's name.
+#[derive(Debug)]
+pub struct CvRequest {
+    pub id: Option<f64>,
+    pub tenant: String,
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+    pub groups: Vec<usize>,
+    pub response: Response,
+    pub rule: Option<RuleKind>,
+    pub alpha: Option<f64>,
+    /// Fold count override (pool default when absent).
+    pub folds: Option<usize>,
+    /// Select by the one-standard-error rule instead of the CV optimum.
+    pub one_se: bool,
+}
+
+/// One parsed request line.
+#[derive(Debug)]
+pub enum Request {
+    Fit(FitRequest),
+    Predict(PredictRequest),
+    Cv(CvRequest),
+    Stats { id: Option<f64> },
+    Evict { id: Option<f64>, tenant: String },
+    Shutdown { id: Option<f64> },
+}
+
+impl Request {
+    /// Parse one NDJSON line.
+    pub fn parse(line: &str) -> anyhow::Result<Request> {
+        let j = Json::parse(line)?;
+        let verb = j
+            .get("verb")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing string field `verb`"))?;
+        let id = j.get("id").and_then(Json::as_f64);
+        match verb {
+            "fit" => Ok(Request::Fit(FitRequest {
+                id,
+                tenant: tenant_field(&j)?,
+                x: rows_field(&j)?,
+                y: f64s_field(&j, "y")?,
+                groups: usizes_field(&j, "groups")?,
+                response: response_field(&j)?,
+                rule: rule_field(&j)?,
+                alpha: j.get("alpha").and_then(Json::as_f64),
+                path_len: opt_usize_field(&j, "path_len")?,
+                lambda_idx: opt_usize_field(&j, "lambda_idx")?,
+            })),
+            "predict" => Ok(Request::Predict(PredictRequest {
+                id,
+                tenant: tenant_field(&j)?,
+                x: rows_field(&j)?,
+            })),
+            "cv" => Ok(Request::Cv(CvRequest {
+                id,
+                tenant: tenant_field(&j)?,
+                x: rows_field(&j)?,
+                y: f64s_field(&j, "y")?,
+                groups: usizes_field(&j, "groups")?,
+                response: response_field(&j)?,
+                rule: rule_field(&j)?,
+                alpha: j.get("alpha").and_then(Json::as_f64),
+                folds: opt_usize_field(&j, "folds")?,
+                one_se: j.get("one_se").and_then(Json::as_bool).unwrap_or(false),
+            })),
+            "stats" => Ok(Request::Stats { id }),
+            "evict" => Ok(Request::Evict { id, tenant: tenant_field(&j)? }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            other => anyhow::bail!(
+                "unknown verb `{other}` (fit|predict|cv|stats|evict|shutdown)"
+            ),
+        }
+    }
+
+    /// The request's echo id, if any.
+    pub fn id(&self) -> Option<f64> {
+        match self {
+            Request::Fit(r) => r.id,
+            Request::Predict(r) => r.id,
+            Request::Cv(r) => r.id,
+            Request::Stats { id } | Request::Evict { id, .. } | Request::Shutdown { id } => *id,
+        }
+    }
+
+    /// Wire name of the verb.
+    pub fn verb(&self) -> &'static str {
+        match self {
+            Request::Fit(_) => "fit",
+            Request::Predict(_) => "predict",
+            Request::Cv(_) => "cv",
+            Request::Stats { .. } => "stats",
+            Request::Evict { .. } => "evict",
+            Request::Shutdown { .. } => "shutdown",
+        }
+    }
+
+    /// Tenant the request addresses (`None` for pool-wide verbs).
+    pub fn tenant(&self) -> Option<&str> {
+        match self {
+            Request::Fit(r) => Some(&r.tenant),
+            Request::Predict(r) => Some(&r.tenant),
+            Request::Cv(r) => Some(&r.tenant),
+            Request::Evict { tenant, .. } => Some(tenant),
+            Request::Stats { .. } | Request::Shutdown { .. } => None,
+        }
+    }
+}
+
+fn tenant_field(j: &Json) -> anyhow::Result<String> {
+    let t = j
+        .get("tenant")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing string field `tenant`"))?;
+    anyhow::ensure!(!t.is_empty(), "`tenant` must be non-empty");
+    Ok(t.to_string())
+}
+
+fn rows_field(j: &Json) -> anyhow::Result<Vec<Vec<f64>>> {
+    let arr = j
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing array field `x`"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, row)| {
+            row.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("`x[{i}]` is not an array"))?
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("`x[{i}]` holds a non-number")))
+                .collect()
+        })
+        .collect()
+}
+
+fn f64s_field(j: &Json, key: &str) -> anyhow::Result<Vec<f64>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing array field `{key}`"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("`{key}` holds a non-number")))
+        .collect()
+}
+
+fn usizes_field(j: &Json, key: &str) -> anyhow::Result<Vec<usize>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing array field `{key}`"))?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("`{key}` holds a non-integer"))
+        })
+        .collect()
+}
+
+fn opt_usize_field(j: &Json, key: &str) -> anyhow::Result<Option<usize>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("`{key}` must be a non-negative integer")),
+    }
+}
+
+fn response_field(j: &Json) -> anyhow::Result<Response> {
+    match j.get("response").and_then(Json::as_str) {
+        None => Ok(Response::Linear),
+        Some("linear") => Ok(Response::Linear),
+        Some("logistic") => Ok(Response::Logistic),
+        Some(other) => anyhow::bail!("unknown response `{other}` (linear|logistic)"),
+    }
+}
+
+fn rule_field(j: &Json) -> anyhow::Result<Option<RuleKind>> {
+    match j.get("rule").and_then(Json::as_str) {
+        None => Ok(None),
+        Some(name) => parse_rule(name).map(Some).map_err(anyhow::Error::msg),
+    }
+}
+
+/// One reply line: verb + ok flag + echoed id/tenant + either payload
+/// fields or an error message.
+#[derive(Debug)]
+pub struct Reply {
+    pub id: Option<f64>,
+    pub verb: &'static str,
+    pub tenant: Option<String>,
+    pub result: Result<Vec<(String, Json)>, String>,
+}
+
+impl Reply {
+    /// Successful reply with payload fields.
+    pub fn ok(
+        id: Option<f64>,
+        verb: &'static str,
+        tenant: Option<&str>,
+        fields: Vec<(&str, Json)>,
+    ) -> Reply {
+        Reply {
+            id,
+            verb,
+            tenant: tenant.map(str::to_string),
+            result: Ok(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()),
+        }
+    }
+
+    /// Error reply.
+    pub fn err(
+        id: Option<f64>,
+        verb: &'static str,
+        tenant: Option<&str>,
+        msg: impl Into<String>,
+    ) -> Reply {
+        Reply { id, verb, tenant: tenant.map(str::to_string), result: Err(msg.into()) }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
+    /// Reply as a [`Json`] object.
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = vec![
+            ("verb".into(), Json::Str(self.verb.into())),
+            ("ok".into(), Json::Bool(self.result.is_ok())),
+        ];
+        if let Some(id) = self.id {
+            kv.push(("id".into(), Json::Num(id)));
+        }
+        if let Some(t) = &self.tenant {
+            kv.push(("tenant".into(), Json::Str(t.clone())));
+        }
+        match &self.result {
+            Ok(fields) => kv.extend(fields.iter().cloned()),
+            Err(e) => kv.push(("error".into(), Json::Str(e.clone()))),
+        }
+        Json::Obj(kv)
+    }
+
+    /// Render as one NDJSON line (no trailing newline).
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_request_parses_with_defaults_and_overrides() {
+        let line = r#"{"verb":"fit","id":3,"tenant":"a","x":[[1,2],[3,4]],"y":[0.5,1.5],
+                      "groups":[1,1],"rule":"tlfre","alpha":0.5,"lambda_idx":7}"#
+            .replace('\n', " ");
+        let r = Request::parse(&line).unwrap();
+        assert_eq!(r.verb(), "fit");
+        assert_eq!(r.id(), Some(3.0));
+        assert_eq!(r.tenant(), Some("a"));
+        match r {
+            Request::Fit(f) => {
+                assert_eq!(f.x, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+                assert_eq!(f.groups, vec![1, 1]);
+                assert_eq!(f.response, Response::Linear);
+                assert_eq!(f.rule, Some(RuleKind::Tlfre));
+                assert_eq!(f.alpha, Some(0.5));
+                assert_eq!(f.path_len, None);
+                assert_eq!(f.lambda_idx, Some(7));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_verbs_parse() {
+        assert!(matches!(Request::parse(r#"{"verb":"stats"}"#).unwrap(), Request::Stats { .. }));
+        assert!(matches!(
+            Request::parse(r#"{"verb":"shutdown","id":9}"#).unwrap(),
+            Request::Shutdown { id: Some(x) } if x == 9.0
+        ));
+        match Request::parse(r#"{"verb":"evict","tenant":"b"}"#).unwrap() {
+            Request::Evict { tenant, .. } => assert_eq!(tenant, "b"),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        for bad in [
+            "not json",
+            r#"{"no_verb":1}"#,
+            r#"{"verb":"dance"}"#,
+            r#"{"verb":"fit","tenant":"a","x":[[1]],"y":[1]}"#, // missing groups
+            r#"{"verb":"fit","tenant":"","x":[[1]],"y":[1],"groups":[1]}"#,
+            r#"{"verb":"predict","tenant":"a","x":[1]}"#, // rows not arrays
+            r#"{"verb":"fit","tenant":"a","x":[[1]],"y":[1],"groups":[1.5]}"#,
+            r#"{"verb":"fit","tenant":"a","x":[[1]],"y":[1],"groups":[1],"response":"poisson"}"#,
+            r#"{"verb":"evict"}"#,
+        ] {
+            assert!(Request::parse(bad).is_err(), "should reject `{bad}`");
+        }
+    }
+
+    #[test]
+    fn reply_renders_ok_and_error() {
+        let ok = Reply::ok(Some(1.0), "fit", Some("a"), vec![("lambda", Json::Num(0.25))]);
+        let parsed = Json::parse(&ok.render()).unwrap();
+        assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(parsed.get("id").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(parsed.get("lambda").and_then(Json::as_f64), Some(0.25));
+
+        let err = Reply::err(None, "predict", Some("a"), "no model");
+        let parsed = Json::parse(&err.render()).unwrap();
+        assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(parsed.get("error").and_then(Json::as_str), Some("no model"));
+        assert!(parsed.get("id").is_none());
+    }
+}

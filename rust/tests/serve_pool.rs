@@ -1,0 +1,354 @@
+//! Integration tests for the multi-tenant serving subsystem
+//! ([`dfr::serve`]): pool-vs-dedicated-fitter equivalence, LRU bounds,
+//! predict coalescing, counter reconciliation, eviction, and the full
+//! NDJSON serve loop driven by an in-memory script.
+
+use dfr::prelude::*;
+use dfr::report::Json;
+use dfr::serve::{
+    serve, CvRequest, FitRequest, FitterPool, PoolConfig, PredictRequest, Request, ServeOptions,
+};
+use std::io::Cursor;
+
+/// Deterministic toy regression problem (xorshift rows, linear signal).
+fn toy_problem(seed: u64, n: usize, p: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+    };
+    let x: Vec<Vec<f64>> = (0..n).map(|_| (0..p).map(|_| next()).collect()).collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|row| 1.5 * row[0] - 2.0 * row[1] + 0.5 * row[p - 1] + 0.05 * next())
+        .collect();
+    (x, y)
+}
+
+/// Short path so every test fit stays cheap.
+fn test_model() -> SglModel {
+    SglModel { path: PathConfig { path_len: 8, ..PathConfig::default() }, ..SglModel::default() }
+}
+
+fn pool_with(max_entries: usize, max_bytes: usize) -> FitterPool {
+    FitterPool::new(PoolConfig { model: test_model(), threads: 2, max_entries, max_bytes })
+}
+
+fn fit_request(tenant: &str, x: &[Vec<f64>], y: &[f64], groups: &[usize], idx: usize) -> FitRequest {
+    FitRequest {
+        id: None,
+        tenant: tenant.to_string(),
+        x: x.to_vec(),
+        y: y.to_vec(),
+        groups: groups.to_vec(),
+        response: Response::Linear,
+        rule: None,
+        alpha: None,
+        path_len: None,
+        lambda_idx: Some(idx),
+    }
+}
+
+fn json_rows(x: &[Vec<f64>]) -> Json {
+    Json::Arr(x.iter().map(|r| Json::Arr(r.iter().map(|&v| Json::Num(v)).collect())).collect())
+}
+
+#[test]
+fn interleaved_tenants_match_dedicated_fitters() {
+    let pool = pool_with(8, usize::MAX);
+    let groups = [3, 3, 4];
+    let tenants = ["alice", "bob", "carol"];
+    let problems: Vec<_> = (0..3).map(|i| toy_problem(40 + i as u64, 30, 10)).collect();
+    let idx = 5;
+
+    // One batch interleaving all three tenants' fits with predicts
+    // against the very models those fits produce (heavy lane runs
+    // before the predict lane, so this is legal in a single batch).
+    let mut batch = Vec::new();
+    for (t, (x, y)) in tenants.iter().zip(&problems) {
+        batch.push(Request::Fit(fit_request(t, x, y, &groups, idx)));
+    }
+    for (t, (x, _)) in tenants.iter().zip(&problems) {
+        batch.push(Request::Predict(PredictRequest {
+            id: None,
+            tenant: (*t).to_string(),
+            x: x[..4].to_vec(),
+        }));
+    }
+    let replies = pool.submit_batch(batch);
+    for r in &replies {
+        assert!(r.is_ok(), "batch reply failed: {}", r.render());
+    }
+
+    // The pool result must be l2-identical to a dedicated per-tenant
+    // fitter (same pipeline pieces ⇒ expect bitwise equality).
+    for (t, (x, y)) in tenants.iter().zip(&problems) {
+        let served = pool.model_of(t).expect("model stored after fit");
+        let mut dedicated = test_model().fitter();
+        let reference =
+            dedicated.fit_at(&Design::rows(x), y, &groups, Response::Linear, idx).unwrap();
+        let l2: f64 = served
+            .coefficients
+            .iter()
+            .zip(&reference.coefficients)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(l2 <= 1e-10, "tenant {t}: pool vs dedicated l2 = {l2:e}");
+        assert_eq!(served.intercept, reference.intercept, "tenant {t}: intercept");
+        assert_eq!(served.lambda, reference.lambda, "tenant {t}: lambda");
+    }
+}
+
+#[test]
+fn repeat_fit_hits_prepared_and_path_caches() {
+    let pool = pool_with(8, usize::MAX);
+    let (x, y) = toy_problem(7, 24, 9);
+    let req = fit_request("t", &x, &y, &[3, 3, 3], 3);
+
+    let cold = pool.fit(&req).unwrap();
+    assert!(!cold.prepared_cached && !cold.path_cached, "first fit must miss");
+    let warm = pool.fit(&req).unwrap();
+    assert!(warm.prepared_cached && warm.path_cached, "second fit must hit");
+    assert_eq!(cold.lambda, warm.lambda);
+    assert_eq!(cold.active, warm.active);
+
+    // Re-selection at another λ index also rides the cached path.
+    let resel = pool.fit(&fit_request("t", &x, &y, &[3, 3, 3], 6)).unwrap();
+    assert!(resel.prepared_cached && resel.path_cached);
+    assert_eq!(resel.lambda_idx, 6);
+
+    let ts = pool.tenant_stats("t");
+    assert_eq!(ts.fits(), 3);
+    assert_eq!(ts.prepared_misses(), 1);
+    assert_eq!(ts.prepared_hits(), 2);
+    assert_eq!(ts.path_hits(), 2);
+}
+
+#[test]
+fn lru_eviction_honors_entry_bound() {
+    let pool = pool_with(2, usize::MAX);
+    for seed in 0..4 {
+        let (x, y) = toy_problem(100 + seed, 20, 6);
+        pool.fit(&fit_request("hoarder", &x, &y, &[3, 3], 2)).unwrap();
+    }
+    let (len, _, evictions) = pool.prepared_cache_stats();
+    assert!(len <= 2, "prepared cache over entry bound: {len}");
+    assert_eq!(evictions, 2);
+    let (plen, _, pev) = pool.path_cache_stats();
+    assert!(plen <= 2, "path cache over entry bound: {plen}");
+    assert_eq!(pev, 2);
+    // 2 prepared + 2 path evictions, all attributed to their inserter.
+    assert_eq!(pool.tenant_stats("hoarder").evictions(), 4);
+}
+
+#[test]
+fn lru_eviction_honors_byte_bound() {
+    // A 1-byte budget forces every insert to evict everything else —
+    // but never the entry just inserted, so the cache stays usable.
+    let pool = pool_with(64, 1);
+    for seed in 0..3 {
+        let (x, y) = toy_problem(200 + seed, 20, 6);
+        let out = pool.fit(&fit_request("b", &x, &y, &[3, 3], 2)).unwrap();
+        assert!(!out.prepared_cached && !out.path_cached);
+    }
+    let (len, _, evictions) = pool.prepared_cache_stats();
+    assert_eq!(len, 1, "byte bound must keep exactly the newest entry");
+    assert_eq!(evictions, 2);
+}
+
+#[test]
+fn coalesced_batch_predict_matches_sequential() {
+    let pool = pool_with(8, usize::MAX);
+    let (x, y) = toy_problem(11, 30, 10);
+    pool.fit(&fit_request("t", &x, &y, &[5, 5], 4)).unwrap();
+
+    let chunks: Vec<Vec<Vec<f64>>> = vec![x[0..3].to_vec(), x[3..10].to_vec(), x[10..11].to_vec()];
+    let sequential: Vec<Vec<f64>> =
+        chunks.iter().map(|c| pool.predict("t", c).unwrap()).collect();
+
+    let batch: Vec<Request> = chunks
+        .iter()
+        .enumerate()
+        .map(|(k, c)| {
+            Request::Predict(PredictRequest {
+                id: Some(k as f64),
+                tenant: "t".to_string(),
+                x: c.clone(),
+            })
+        })
+        .collect();
+    let replies = pool.submit_batch(batch);
+    assert_eq!(replies.len(), 3);
+    for (k, (reply, expect)) in replies.iter().zip(&sequential).enumerate() {
+        assert!(reply.is_ok(), "predict reply failed: {}", reply.render());
+        // Round-trip through the wire form: render → parse.
+        let j = Json::parse(&reply.render()).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(k as f64));
+        assert_eq!(j.get("coalesced").and_then(Json::as_f64), Some(3.0));
+        let preds: Vec<f64> = j
+            .get("predictions")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(&preds, expect, "request {k}: coalesced != sequential");
+    }
+
+    let stats = pool.stats_json();
+    let coal = stats.get("coalescing").unwrap();
+    assert_eq!(coal.get("batches").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(coal.get("predicts").and_then(Json::as_f64), Some(3.0));
+}
+
+#[test]
+fn cv_caches_cell_and_respects_one_se() {
+    let pool = pool_with(8, usize::MAX);
+    let (x, y) = toy_problem(21, 36, 8);
+    let req = CvRequest {
+        id: None,
+        tenant: "cvr".to_string(),
+        x,
+        y,
+        groups: vec![4, 4],
+        response: Response::Linear,
+        rule: None,
+        alpha: None,
+        folds: Some(3),
+        one_se: false,
+    };
+    let cold = pool.cv(&req).unwrap();
+    assert!(!cold.cv_cached && !cold.prepared_cached);
+    assert_eq!(cold.chosen_idx, cold.best_idx);
+
+    let warm = pool.cv(&CvRequest { one_se: true, ..req }).unwrap();
+    assert!(warm.cv_cached && warm.prepared_cached, "second cv must hit the cell cache");
+    assert_eq!(warm.chosen_idx, warm.best_1se_idx);
+    assert_eq!(warm.best_idx, cold.best_idx);
+
+    let ts = pool.tenant_stats("cvr");
+    assert_eq!(ts.cvs(), 2);
+    assert_eq!(ts.cv_hits(), 1);
+}
+
+#[test]
+fn stats_counters_reconcile() {
+    let pool = pool_with(8, usize::MAX);
+    let (xa, ya) = toy_problem(61, 24, 6);
+    let (xb, yb) = toy_problem(62, 24, 6);
+    pool.fit(&fit_request("a", &xa, &ya, &[3, 3], 2)).unwrap();
+    pool.fit(&fit_request("a", &xa, &ya, &[3, 3], 2)).unwrap();
+    pool.fit(&fit_request("b", &xb, &yb, &[3, 3], 2)).unwrap();
+    pool.predict("a", &xa[..2]).unwrap();
+
+    // Every fit/cv probes the prepared cache exactly once.
+    for name in ["a", "b"] {
+        let ts = pool.tenant_stats(name);
+        assert_eq!(
+            ts.prepared_hits() + ts.prepared_misses(),
+            ts.fits() + ts.cvs(),
+            "tenant {name}: prepared probes must reconcile with fits+cvs"
+        );
+    }
+    assert_eq!(pool.tenant_stats("a").predicts(), 1);
+
+    // The stats verb reply is valid JSON and mirrors the pool state.
+    let replies = pool.submit_batch(vec![Request::Stats { id: Some(9.0) }]);
+    let j = Json::parse(&replies[0].render()).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    let stats = j.get("stats").unwrap();
+    assert_eq!(stats.get("models").and_then(Json::as_usize), Some(2));
+    let verbs = stats.get("verbs").unwrap();
+    // Direct pool calls bypass the histograms; the counters still cover
+    // everything routed through submit_batch (none here).
+    assert!(verbs.get("fit").unwrap().get("count").and_then(Json::as_f64).is_some());
+    let prepared = stats.get("caches").unwrap().get("prepared").unwrap();
+    let (len, bytes, _) = pool.prepared_cache_stats();
+    assert_eq!(prepared.get("entries").and_then(Json::as_usize), Some(len));
+    assert_eq!(prepared.get("bytes").and_then(Json::as_usize), Some(bytes));
+    let ta = stats.get("tenants").unwrap().get("a").unwrap();
+    assert_eq!(ta.get("fits").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(ta.get("prepared_hits").and_then(Json::as_f64), Some(1.0));
+}
+
+#[test]
+fn evict_drops_model_and_owned_entries() {
+    let pool = pool_with(8, usize::MAX);
+    let (xg, yg) = toy_problem(71, 20, 6);
+    let (xs, ys) = toy_problem(72, 20, 6);
+    pool.fit(&fit_request("gone", &xg, &yg, &[3, 3], 2)).unwrap();
+    pool.fit(&fit_request("stays", &xs, &ys, &[3, 3], 2)).unwrap();
+
+    let (had, dropped) = pool.evict("gone");
+    assert!(had);
+    assert_eq!(dropped, 2, "one prepared + one path entry");
+    assert!(pool.model_of("gone").is_none());
+    assert!(pool.model_of("stays").is_some());
+    let (len, _, evictions) = pool.prepared_cache_stats();
+    assert_eq!(len, 1);
+    assert_eq!(evictions, 0, "explicit drops are not LRU evictions");
+    assert_eq!(pool.evict("gone"), (false, 0), "second evict is a no-op");
+}
+
+#[test]
+fn serve_loop_runs_scripted_session() {
+    let pool = pool_with(8, usize::MAX);
+    let (x, y) = toy_problem(33, 24, 6);
+    let fit_line = Json::obj(vec![
+        ("verb", Json::Str("fit".into())),
+        ("id", Json::Num(1.0)),
+        ("tenant", Json::Str("cli".into())),
+        ("x", json_rows(&x)),
+        ("y", Json::Arr(y.iter().map(|&v| Json::Num(v)).collect())),
+        ("groups", Json::Arr(vec![Json::Num(3.0), Json::Num(3.0)])),
+        ("lambda_idx", Json::Num(4.0)),
+    ])
+    .render();
+    let predict_line = Json::obj(vec![
+        ("verb", Json::Str("predict".into())),
+        ("id", Json::Num(2.0)),
+        ("tenant", Json::Str("cli".into())),
+        ("x", json_rows(&x[..5])),
+    ])
+    .render();
+    let script = format!(
+        "{fit_line}\n{predict_line}\nnot json\n\n{{\"verb\":\"stats\",\"id\":3}}\n\
+         {{\"verb\":\"evict\",\"tenant\":\"cli\",\"id\":4}}\n{{\"verb\":\"shutdown\",\"id\":5}}\n"
+    );
+
+    let mut out = Vec::new();
+    let summary =
+        serve(&pool, Cursor::new(script), &mut out, &ServeOptions { batch_max: 4 }).unwrap();
+    assert!(summary.shutdown, "shutdown verb must end the loop");
+    assert_eq!(summary.requests, 6, "blank line skipped, bad line counted");
+    assert!(summary.batches >= 1);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 6, "one reply per non-blank request line");
+
+    let expect = [
+        ("fit", Some(1.0), true),
+        ("predict", Some(2.0), true),
+        ("parse", None, false),
+        ("stats", Some(3.0), true),
+        ("evict", Some(4.0), true),
+        ("shutdown", Some(5.0), true),
+    ];
+    for (j, (verb, id, ok)) in lines.iter().zip(expect) {
+        assert_eq!(j.get("verb").and_then(Json::as_str), Some(verb), "line {}", j.render());
+        assert_eq!(j.get("id").and_then(Json::as_f64), id);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(ok));
+    }
+    assert!(lines[2].get("error").and_then(Json::as_str).is_some());
+    assert_eq!(
+        lines[1].get("predictions").and_then(Json::as_arr).map(Vec::len),
+        Some(5),
+        "predict echoes one prediction per row"
+    );
+    assert_eq!(lines[4].get("had_model").and_then(Json::as_bool), Some(true));
+    assert!(pool.model_of("cli").is_none(), "evict removed the model");
+}

@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# End-to-end smoke test of the `dfr serve` NDJSON loop: build the release
+# binary, pipe a scripted fit → predict → stats → evict → shutdown session
+# through it, and assert on the reply stream. CI runs this after the main
+# test job; it is also the quickest local sanity check of the serving
+# subsystem (`scripts/serve_smoke.sh`).
+
+set -euo pipefail
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+(cd "$root/rust" && cargo build --release)
+bin="$root/rust/target/release/dfr"
+
+script="$(mktemp)"
+out="$(mktemp)"
+trap 'rm -f "$script" "$out"' EXIT
+
+# Tiny deterministic regression problem: 12 rows x 4 features, two groups
+# of two, y = x0 - x1 + 0.5*x2 exactly.
+cat >"$script" <<'EOF'
+{"verb":"fit","id":1,"tenant":"smoke","x":[[-2.5,-1,0.5,2],[1,2.5,-1.5,0],[-1,0.5,2,-2],[2.5,-1.5,0,1.5],[0.5,2,-2,-0.5],[-1.5,0,1.5,-2.5],[2,-2,-0.5,1],[0,1.5,-2.5,-1],[-2,-0.5,1,2.5],[1.5,-2.5,-1,0.5],[-0.5,1,2.5,-1.5],[-2.5,-1,0.5,2]],"y":[-1.25,-2.25,-0.5,4,-2.5,-0.75,3.75,-2.75,-1,3.5,-0.25,-1.25],"groups":[2,2],"lambda_idx":3}
+{"verb":"predict","id":2,"tenant":"smoke","x":[[-2.5,-1,0.5,2],[1,2.5,-1.5,0]]}
+{"verb":"stats","id":3}
+{"verb":"evict","id":4,"tenant":"smoke"}
+{"verb":"shutdown","id":5}
+EOF
+
+"$bin" serve --path-len 8 <"$script" >"$out"
+
+fail() {
+    echo "serve smoke FAILED: $1" >&2
+    echo "--- replies ---" >&2
+    cat "$out" >&2
+    exit 1
+}
+
+expect() {
+    grep -qF "$1" "$out" || fail "reply stream missing \`$1\`"
+}
+
+lines="$(wc -l <"$out")"
+[[ "$lines" -eq 5 ]] || fail "expected 5 reply lines, got $lines"
+
+expect '"verb":"fit","ok":true,"id":1,"tenant":"smoke"'
+expect '"screening_fallback":false'
+expect '"verb":"predict","ok":true,"id":2,"tenant":"smoke"'
+expect '"predictions":['
+expect '"verb":"stats","ok":true,"id":3'
+expect '"uptime_seconds"'
+expect '"prepared":{"entries":1'
+expect '"verb":"evict","ok":true,"id":4,"tenant":"smoke"'
+expect '"had_model":true'
+expect '"verb":"shutdown","ok":true,"id":5'
+
+# No reply may report ok:false.
+if grep -qF '"ok":false' "$out"; then
+    fail "a reply reported ok:false"
+fi
+
+echo "serve smoke OK ($lines replies)"
