@@ -69,25 +69,35 @@ fn armed() -> bool {
 
 /// Hook: called by [`crate::loss::Loss::residual_from_xb`] after filling
 /// `out`; poisons the first entry with NaN when the countdown fires.
+/// Returns whether it mutated the buffer, so fused residual-sum callers
+/// know their carried `Σᵢ rᵢ` is stale and must be recomputed.
 #[inline]
-pub(crate) fn poison_residual(out: &mut [f64]) {
+pub(crate) fn poison_residual(out: &mut [f64]) -> bool {
     if !armed() {
-        return;
+        return false;
     }
     PLAN.with(|p| {
-        if let Some(plan) = p.borrow_mut().as_mut() {
-            match plan.nan_gradient_after {
-                Some(0) => {
-                    plan.nan_gradient_after = None;
-                    if let Some(v) = out.first_mut() {
-                        *v = f64::NAN;
-                    }
+        let mut guard = p.borrow_mut();
+        let Some(plan) = guard.as_mut() else {
+            return false;
+        };
+        match plan.nan_gradient_after {
+            Some(0) => {
+                plan.nan_gradient_after = None;
+                if let Some(v) = out.first_mut() {
+                    *v = f64::NAN;
+                    true
+                } else {
+                    false
                 }
-                Some(k) => plan.nan_gradient_after = Some(k - 1),
-                None => {}
             }
+            Some(k) => {
+                plan.nan_gradient_after = Some(k - 1);
+                false
+            }
+            None => false,
         }
-    });
+    })
 }
 
 /// Hook: called inside a solver's backtracking bound check; `true` forces

@@ -18,7 +18,8 @@
 //! | [`runtime`] | PJRT execution of AOT-compiled JAX/Pallas artifacts for the dense hot path | — |
 //! | [`serve`] | Multi-tenant serving: [`serve::FitterPool`] with content-hash-keyed LRU caches shared across tenants ([`lru::KeyedLru`]), round-robin fair admission, coalesced batch prediction, and the `dfr serve` NDJSON loop with live per-verb latency stats | — |
 //! | [`metrics`], [`bench_harness`], [`report`] | Improvement factor, input proportion, paper-style tables, `BENCH_*.json` | §3, App. D.1 |
-//! | [`linalg`], [`groups`], [`rng`], [`parallel`], [`cli`], [`testkit`] | Offline substrates (no external crates) | — |
+//! | [`linalg`] | Design kernels behind [`linalg::DesignRef`]: dense [`linalg::Matrix`] + centered-implicit [`linalg::CenteredSparse`], cache-blocked and row-parallel matvecs on runtime-dispatched compute kernels ([`linalg::kernels`]: scalar / AVX2+FMA, `DFR_KERNEL`) | — |
+//! | [`groups`], [`rng`], [`parallel`], [`cli`], [`testkit`] | Offline substrates (no external crates) | — |
 //!
 //! ## Quickstart
 //!

@@ -1,0 +1,195 @@
+//! AVX2 + FMA backend (`x86_64` only, selected at runtime).
+//!
+//! Every kernel here shares one structural rule: a reduction is a single
+//! 4-lane `__m256d` accumulator advanced with FMA, horizontally summed as
+//! `(l0 + l2) + (l1 + l3)`, followed by a *sequential scalar* remainder
+//! loop. Because [`dot`] and each lane of [`dot4`] use that identical
+//! structure, per-column results are bitwise independent of how columns
+//! are grouped into blocks or split across thread chunks — which is what
+//! keeps the "parallel ≡ serial" exactness tests meaningful on this
+//! backend too.
+//!
+//! FMA contraction means these results differ from the scalar backend in
+//! the last ulps; that cross-backend drift is bounded by the dispatched ≡
+//! scalar gates in `rust/tests/kernel_equivalence.rs` (ℓ₂ ≤ 1e-12) and by
+//! the existing solver/screening equivalence suites.
+
+use core::arch::x86_64::*;
+
+/// Horizontal sum of a 4-lane accumulator as `(l0 + l2) + (l1 + l3)`.
+///
+/// # Safety
+/// Caller must have verified `avx2` support at runtime.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(v: __m256d) -> f64 {
+    let lo = _mm256_castpd256_pd128(v);
+    let hi = _mm256_extractf128_pd(v, 1);
+    let pair = _mm_add_pd(lo, hi); // [l0 + l2, l1 + l3]
+    let swapped = _mm_unpackhi_pd(pair, pair);
+    _mm_cvtsd_f64(_mm_add_sd(pair, swapped))
+}
+
+/// Dot product: one FMA accumulator + scalar remainder.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` support at runtime.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let va = _mm256_loadu_pd(ap.add(i));
+        let vb = _mm256_loadu_pd(bp.add(i));
+        acc = _mm256_fmadd_pd(va, vb, acc);
+    }
+    let mut s = hsum(acc);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Four dot products against one shared right-hand side, with `r` loaded
+/// once per 4-row step. Each lane is structurally identical to [`dot`]
+/// (own accumulator, same hsum, same scalar remainder), so
+/// `dot4(..)[k] == dot(c_k, r)` bitwise.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` support at runtime.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot4(c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64], r: &[f64]) -> [f64; 4] {
+    let n = r.len();
+    debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+    let chunks = n / 4;
+    let (p0, p1, p2, p3, pr) = (c0.as_ptr(), c1.as_ptr(), c2.as_ptr(), c3.as_ptr(), r.as_ptr());
+    let mut a0 = _mm256_setzero_pd();
+    let mut a1 = _mm256_setzero_pd();
+    let mut a2 = _mm256_setzero_pd();
+    let mut a3 = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let vr = _mm256_loadu_pd(pr.add(i));
+        a0 = _mm256_fmadd_pd(_mm256_loadu_pd(p0.add(i)), vr, a0);
+        a1 = _mm256_fmadd_pd(_mm256_loadu_pd(p1.add(i)), vr, a1);
+        a2 = _mm256_fmadd_pd(_mm256_loadu_pd(p2.add(i)), vr, a2);
+        a3 = _mm256_fmadd_pd(_mm256_loadu_pd(p3.add(i)), vr, a3);
+    }
+    let mut s = [hsum(a0), hsum(a1), hsum(a2), hsum(a3)];
+    for i in 4 * chunks..n {
+        s[0] += c0[i] * r[i];
+        s[1] += c1[i] * r[i];
+        s[2] += c2[i] * r[i];
+        s[3] += c3[i] * r[i];
+    }
+    s
+}
+
+/// `y += a * x`: FMA main loop, scalar mul+add remainder.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` support at runtime.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(a);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let vx = _mm256_loadu_pd(xp.add(i));
+        let vy = _mm256_loadu_pd(yp.add(i));
+        _mm256_storeu_pd(yp.add(i), _mm256_fmadd_pd(va, vx, vy));
+    }
+    for i in 4 * chunks..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Four accumulated axpys with `y` loaded and stored once per 4-row step:
+/// `y += a0·x0 + a1·x1 + a2·x2 + a3·x3`, chained in lane order so the
+/// result is bitwise identical to four sequential [`axpy`] calls (the
+/// vector body chains FMAs in the same order; the remainder applies the
+/// same four mul+adds per element).
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` support at runtime.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn axpy4(a: [f64; 4], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64], y: &mut [f64]) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let chunks = n / 4;
+    let (va0, va1, va2, va3) =
+        (_mm256_set1_pd(a[0]), _mm256_set1_pd(a[1]), _mm256_set1_pd(a[2]), _mm256_set1_pd(a[3]));
+    let (p0, p1, p2, p3) = (x0.as_ptr(), x1.as_ptr(), x2.as_ptr(), x3.as_ptr());
+    let yp = y.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let mut vy = _mm256_loadu_pd(yp.add(i));
+        vy = _mm256_fmadd_pd(va0, _mm256_loadu_pd(p0.add(i)), vy);
+        vy = _mm256_fmadd_pd(va1, _mm256_loadu_pd(p1.add(i)), vy);
+        vy = _mm256_fmadd_pd(va2, _mm256_loadu_pd(p2.add(i)), vy);
+        vy = _mm256_fmadd_pd(va3, _mm256_loadu_pd(p3.add(i)), vy);
+        _mm256_storeu_pd(yp.add(i), vy);
+    }
+    for i in 4 * chunks..n {
+        y[i] += a[0] * x0[i];
+        y[i] += a[1] * x1[i];
+        y[i] += a[2] * x2[i];
+        y[i] += a[3] * x3[i];
+    }
+}
+
+/// ℓ₁ norm: 4-lane |v| accumulator + scalar remainder.
+///
+/// # Safety
+/// Caller must have verified `avx2` support at runtime.
+#[target_feature(enable = "avx2")]
+pub unsafe fn norm1(x: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    // Clearing the sign bit is |v| for every f64 including ±0 and ±inf.
+    let abs_mask = _mm256_castsi256_pd(_mm256_set1_epi64x(0x7fff_ffff_ffff_ffff));
+    let xp = x.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let v = _mm256_and_pd(_mm256_loadu_pd(xp.add(4 * k)), abs_mask);
+        acc = _mm256_add_pd(acc, v);
+    }
+    let mut s = hsum(acc);
+    for v in &x[4 * chunks..] {
+        s += v.abs();
+    }
+    s
+}
+
+/// ℓ∞ norm: 4-lane max-of-|v| accumulator + scalar remainder.
+///
+/// # Safety
+/// Caller must have verified `avx2` support at runtime.
+#[target_feature(enable = "avx2")]
+pub unsafe fn norm_inf(x: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let abs_mask = _mm256_castsi256_pd(_mm256_set1_epi64x(0x7fff_ffff_ffff_ffff));
+    let xp = x.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let v = _mm256_and_pd(_mm256_loadu_pd(xp.add(4 * k)), abs_mask);
+        acc = _mm256_max_pd(acc, v);
+    }
+    let lo = _mm256_castpd256_pd128(acc);
+    let hi = _mm256_extractf128_pd(acc, 1);
+    let pair = _mm_max_pd(lo, hi);
+    let swapped = _mm_unpackhi_pd(pair, pair);
+    let mut m = _mm_cvtsd_f64(_mm_max_sd(pair, swapped));
+    for v in &x[4 * chunks..] {
+        m = m.max(v.abs());
+    }
+    m
+}

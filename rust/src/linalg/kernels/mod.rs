@@ -1,0 +1,376 @@
+//! Runtime-dispatched compute backends for the dense kernel layer.
+//!
+//! One binary runs everywhere: the crate ships a [`scalar`] reference
+//! backend (the exact historical kernels — `DFR_KERNEL=scalar` is the
+//! bit-stability anchor) and an AVX2+FMA backend (`x86_64` only), and
+//! picks between them **once** at first use via
+//! `is_x86_feature_detected!`. The choice can be pinned three ways, in
+//! priority order:
+//!
+//! 1. [`set_backend_override`] — programmatic (tests, benches);
+//! 2. `DFR_KERNEL=auto|scalar|avx2` — environment (read once, cached);
+//! 3. auto-detection — the fastest backend the CPU supports.
+//!
+//! Requesting an unavailable backend (e.g. `avx2` on a machine without
+//! it) degrades to `scalar` rather than failing: the dispatch layer is a
+//! performance knob, never a correctness switch. All entry points come in
+//! a dispatched form (`dot`, `axpy`, …) and an explicit-backend form
+//! (`dot_with`, …) so equivalence tests can compare backends directly.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+pub(crate) mod scalar;
+
+/// A compute backend for the dense vector kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference kernels — bitwise identical to the pre-dispatch
+    /// implementations on every platform.
+    Scalar,
+    /// `std::arch` AVX2 + FMA intrinsics (`x86_64` with runtime support).
+    Avx2,
+}
+
+impl Backend {
+    /// Lower-case display/parse name (`scalar` / `avx2`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this backend can run on the current CPU (checked once and
+    /// cached; `Scalar` is always available).
+    pub fn is_available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Avx2 => avx2_ok(),
+        }
+    }
+
+    /// Clamp to an available backend (unavailable requests degrade to
+    /// [`Backend::Scalar`]).
+    #[inline]
+    fn effective(self) -> Backend {
+        if self.is_available() {
+            self
+        } else {
+            Backend::Scalar
+        }
+    }
+}
+
+fn avx2_ok() -> bool {
+    static OK: OnceLock<bool> = OnceLock::new();
+    *OK.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// Backends the current CPU can actually run, fastest last.
+pub fn available() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    if Backend::Avx2.is_available() {
+        v.push(Backend::Avx2);
+    }
+    v
+}
+
+/// The fastest available backend (what `auto` resolves to).
+pub fn best_available() -> Backend {
+    if Backend::Avx2.is_available() {
+        Backend::Avx2
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Parse a `DFR_KERNEL`-style choice: `auto` (or empty) means "detect",
+/// a backend name pins it. Anything else is an error.
+pub fn parse_choice(s: &str) -> Result<Option<Backend>, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(None),
+        "scalar" => Ok(Some(Backend::Scalar)),
+        "avx2" => Ok(Some(Backend::Avx2)),
+        other => Err(format!("unknown kernel backend `{other}` (expected auto|scalar|avx2)")),
+    }
+}
+
+/// Process-wide programmatic backend override (0 = unset; otherwise the
+/// backend discriminant + 1). Mirrors `parallel::set_thread_override`.
+static BACKEND_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Pin the dispatched backend programmatically (tests and benches; wins
+/// over `DFR_KERNEL`). `None` restores env/auto selection. Pinning a
+/// backend the CPU lacks degrades to scalar at dispatch time.
+pub fn set_backend_override(b: Option<Backend>) {
+    let code = match b {
+        None => 0,
+        Some(Backend::Scalar) => 1,
+        Some(Backend::Avx2) => 2,
+    };
+    BACKEND_OVERRIDE.store(code, Ordering::Relaxed);
+}
+
+/// The `DFR_KERNEL` choice, read and parsed once per process (invalid
+/// values are treated as `auto` — the env knob degrades, never aborts).
+fn env_choice() -> Option<Backend> {
+    static ENV: OnceLock<Option<Backend>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DFR_KERNEL").ok().and_then(|v| parse_choice(&v).ok().flatten())
+    })
+}
+
+/// The backend the dispatched kernels will run on right now:
+/// programmatic override, then `DFR_KERNEL`, then auto-detection —
+/// always clamped to what the CPU supports.
+#[inline]
+pub fn active() -> Backend {
+    match BACKEND_OVERRIDE.load(Ordering::Relaxed) {
+        1 => Backend::Scalar,
+        2 => Backend::Avx2.effective(),
+        _ => match env_choice() {
+            Some(b) => b.effective(),
+            None => best_available(),
+        },
+    }
+}
+
+/// One-line description for CLI headers and bench JSON: the active
+/// backend plus how it was chosen, e.g. `avx2 (auto)` or
+/// `scalar (DFR_KERNEL)`.
+pub fn describe() -> String {
+    let source = match BACKEND_OVERRIDE.load(Ordering::Relaxed) {
+        1 | 2 => "pinned",
+        _ => match env_choice() {
+            Some(_) => "DFR_KERNEL",
+            None => "auto",
+        },
+    };
+    format!("{} ({source})", active().name())
+}
+
+/// Dot product on an explicit backend.
+#[inline]
+pub fn dot_with(backend: Backend, a: &[f64], b: &[f64]) -> f64 {
+    match backend.effective() {
+        Backend::Scalar => scalar::dot(a, b),
+        // SAFETY: `effective()` only yields `Avx2` after `is_available`
+        // verified avx2+fma on this CPU.
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => scalar::dot(a, b),
+    }
+}
+
+/// `y += a·x` on an explicit backend.
+#[inline]
+pub fn axpy_with(backend: Backend, a: f64, x: &[f64], y: &mut [f64]) {
+    match backend.effective() {
+        Backend::Scalar => scalar::axpy(a, x, y),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::axpy(a, x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => scalar::axpy(a, x, y),
+    }
+}
+
+/// ℓ₁ norm on an explicit backend.
+#[inline]
+pub fn norm1_with(backend: Backend, x: &[f64]) -> f64 {
+    match backend.effective() {
+        Backend::Scalar => scalar::norm1(x),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::norm1(x) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => scalar::norm1(x),
+    }
+}
+
+/// ℓ∞ norm on an explicit backend.
+#[inline]
+pub fn norm_inf_with(backend: Backend, x: &[f64]) -> f64 {
+    match backend.effective() {
+        Backend::Scalar => scalar::norm_inf(x),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::norm_inf(x) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => scalar::norm_inf(x),
+    }
+}
+
+/// Four dots against one shared `r` on an explicit backend. Per-lane
+/// results are bitwise equal to [`dot_with`] on the same backend — the
+/// invariant that makes register blocking transparent to chunk layout.
+#[inline]
+pub fn dot4_with(
+    backend: Backend,
+    c0: &[f64],
+    c1: &[f64],
+    c2: &[f64],
+    c3: &[f64],
+    r: &[f64],
+) -> [f64; 4] {
+    match backend.effective() {
+        Backend::Scalar => scalar::dot4(c0, c1, c2, c3, r),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot4(c0, c1, c2, c3, r) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => scalar::dot4(c0, c1, c2, c3, r),
+    }
+}
+
+/// Four accumulated axpys on an explicit backend; bitwise equal to four
+/// sequential [`axpy_with`] calls on the same backend.
+#[inline]
+pub fn axpy4_with(
+    backend: Backend,
+    a: [f64; 4],
+    x0: &[f64],
+    x1: &[f64],
+    x2: &[f64],
+    x3: &[f64],
+    y: &mut [f64],
+) {
+    match backend.effective() {
+        Backend::Scalar => scalar::axpy4(a, x0, x1, x2, x3, y),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::axpy4(a, x0, x1, x2, x3, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => scalar::axpy4(a, x0, x1, x2, x3, y),
+    }
+}
+
+/// Dot product on the [`active`] backend.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_with(active(), a, b)
+}
+
+/// `y += a·x` on the [`active`] backend.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    axpy_with(active(), a, x, y)
+}
+
+/// ℓ₁ norm on the [`active`] backend.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    norm1_with(active(), x)
+}
+
+/// ℓ∞ norm on the [`active`] backend.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    norm_inf_with(active(), x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = crate::rng::Rng::new(seed);
+        (rng.gauss_vec(n), rng.gauss_vec(n))
+    }
+
+    #[test]
+    fn parse_choice_accepts_the_documented_values() {
+        assert_eq!(parse_choice("auto"), Ok(None));
+        assert_eq!(parse_choice(""), Ok(None));
+        assert_eq!(parse_choice("Scalar"), Ok(Some(Backend::Scalar)));
+        assert_eq!(parse_choice(" AVX2 "), Ok(Some(Backend::Avx2)));
+        assert!(parse_choice("sse9").is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_listed_first() {
+        assert!(Backend::Scalar.is_available());
+        let avail = available();
+        assert_eq!(avail[0], Backend::Scalar);
+        assert!(avail.contains(&best_available()));
+        assert!(avail.contains(&active()), "active backend must be runnable");
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_within_tolerance() {
+        // No override flips here: unit tests share one process with the
+        // rest of the crate's tests, so we compare through the explicit
+        // `_with` entry points only.
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 16, 17, 33, 100, 257] {
+            let (a, b) = vecs(n, 40 + n as u64);
+            let want_dot = scalar::dot(&a, &b);
+            let want_n1 = scalar::norm1(&a);
+            let want_ninf = scalar::norm_inf(&a);
+            for bk in available() {
+                let tol = 1e-12 * (1.0 + n as f64);
+                assert!((dot_with(bk, &a, &b) - want_dot).abs() <= tol, "dot n={n} {bk:?}");
+                assert!((norm1_with(bk, &a) - want_n1).abs() <= tol, "norm1 n={n} {bk:?}");
+                assert!(
+                    (norm_inf_with(bk, &a) - want_ninf).abs() <= tol,
+                    "norm_inf n={n} {bk:?}"
+                );
+                let mut y = b.clone();
+                axpy_with(bk, 0.7, &a, &mut y);
+                for i in 0..n {
+                    assert!((y[i] - (b[i] + 0.7 * a[i])).abs() <= 1e-12, "axpy n={n} {bk:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_lanes_match_their_unfused_kernels_bitwise() {
+        // The blocking invariant: dot4 lane k ≡ dot(c_k, r) and axpy4 ≡
+        // four sequential axpys, exactly, on every available backend.
+        for n in [0usize, 1, 3, 4, 6, 8, 11, 64, 129] {
+            let mut rng = crate::rng::Rng::new(70 + n as u64);
+            let cols: Vec<Vec<f64>> = (0..4).map(|_| rng.gauss_vec(n)).collect();
+            let r = rng.gauss_vec(n);
+            let coef = [0.3, -1.2, 0.0, 2.5];
+            for bk in available() {
+                let fused = dot4_with(bk, &cols[0], &cols[1], &cols[2], &cols[3], &r);
+                for k in 0..4 {
+                    let lone = dot_with(bk, &cols[k], &r);
+                    assert_eq!(fused[k].to_bits(), lone.to_bits(), "dot4 n={n} k={k} {bk:?}");
+                }
+                let mut y_fused = r.clone();
+                axpy4_with(bk, coef, &cols[0], &cols[1], &cols[2], &cols[3], &mut y_fused);
+                let mut y_seq = r.clone();
+                for k in 0..4 {
+                    axpy_with(bk, coef[k], &cols[k], &mut y_seq);
+                }
+                for i in 0..n {
+                    assert_eq!(
+                        y_fused[i].to_bits(),
+                        y_seq[i].to_bits(),
+                        "axpy4 n={n} i={i} {bk:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn describe_names_a_runnable_backend() {
+        let d = describe();
+        assert!(d.starts_with(active().name()), "{d}");
+    }
+}

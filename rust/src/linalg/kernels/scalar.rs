@@ -1,0 +1,76 @@
+//! Scalar reference backend — the exact historical kernels.
+//!
+//! These are byte-for-byte the implementations `linalg.rs` shipped before
+//! the dispatch layer existed: same accumulator structure, same remainder
+//! handling, same reduction order. That is a *contract*, not an accident —
+//! `DFR_KERNEL=scalar` must reproduce the pre-dispatch results bit for bit
+//! (pinned by `rust/tests/kernel_equivalence.rs`), so any change here is a
+//! numerics change for every solver, screening rule, and serving path.
+//!
+//! The 4-accumulator `dot` is written so LLVM can auto-vectorize without
+//! needing `-ffast-math`-style reassociation permission; on machines
+//! without AVX2 it is also the fastest portable form we have.
+
+/// Dot product with 4 independent accumulators, reduced as
+/// `(s0 + s1) + (s2 + s3)` with a sequential scalar remainder.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += a * x`, one fused multiply-add-free pass (plain mul + add).
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// ℓ₁ norm — sequential `|v|` sum.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// ℓ∞ norm — sequential `max(|v|)` fold from 0.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |m, v| m.max(v.abs()))
+}
+
+/// Four simultaneous dot products against one shared right-hand side.
+///
+/// Each lane is *exactly* [`dot`] — same accumulators, same reduction —
+/// so `dot4(..)[k] == dot(c_k, r)` bitwise. The fused form exists for the
+/// register-blocked dense kernels; the scalar backend never takes those
+/// paths, but the dispatch layer still needs a total implementation.
+#[inline]
+pub fn dot4(c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64], r: &[f64]) -> [f64; 4] {
+    [dot(c0, r), dot(c1, r), dot(c2, r), dot(c3, r)]
+}
+
+/// Four accumulated axpys `y += Σ_k a[k]·x_k`, applied in lane order so the
+/// result is bitwise identical to four sequential [`axpy`] calls.
+#[inline]
+pub fn axpy4(a: [f64; 4], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64], y: &mut [f64]) {
+    axpy(a[0], x0, y);
+    axpy(a[1], x1, y);
+    axpy(a[2], x2, y);
+    axpy(a[3], x3, y);
+}

@@ -3,12 +3,30 @@
 //! No BLAS binding is available offline, so the crate carries its own
 //! column-major dense matrix with the handful of kernels the pathwise SGL
 //! stack needs: `Xᵀr` (gradient), `Xβ` (predictions), column gathers (for
-//! screening-reduced designs), Gram products and standardization. The
-//! gradient matvec is the L3 hot path when the XLA engine is not in use, so
-//! it is written to auto-vectorize (contiguous column dot products with
-//! 4-way unrolled accumulators) and can fan out over a thread scope.
+//! screening-reduced designs), Gram products and standardization.
+//!
+//! The vector primitives live in [`kernels`], behind runtime CPU-feature
+//! dispatch: a scalar reference backend (bitwise identical to the
+//! pre-dispatch kernels — pin it with `DFR_KERNEL=scalar`) and an
+//! AVX2+FMA backend selected automatically on `x86_64`. On the SIMD
+//! backend the dense matvecs are additionally register-blocked (four
+//! columns per pass over a row tile, so `r`/`out` traffic amortizes over
+//! the column loads) and both `Xβ` and `Xᵀr` can fan out over a thread
+//! scope; the scalar backend keeps the exact historical loop structure so
+//! existing results are reproducible bit for bit.
 
 use crate::parallel;
+
+pub mod kernels;
+#[cfg(test)]
+mod tests;
+
+use kernels::Backend;
+
+/// Row-tile length of the blocked dense `Xβ` scatter: the `out` tile
+/// (8 KiB) stays resident in L1 while every active column streams over it
+/// once per 4-column block.
+const ROW_TILE: usize = 1024;
 
 /// Column-major dense matrix of `f64`.
 ///
@@ -105,11 +123,75 @@ impl Matrix {
     pub fn matvec_into(&self, beta: &[f64], out: &mut [f64]) {
         assert_eq!(beta.len(), self.p);
         assert_eq!(out.len(), self.n);
+        self.matvec_rows_into(0..self.n, beta, out);
+    }
+
+    /// `out = X β` fanned out over row chunks — each worker owns a
+    /// disjoint slice of `out`, so no accumulator races. Per-row results
+    /// see the columns in the same order as the serial form (on the
+    /// scalar backend they are bitwise identical to it).
+    pub fn matvec_par_into(&self, beta: &[f64], threads: usize, out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        if threads <= 1 || self.n * self.p < parallel::par_grain() {
+            self.matvec_rows_into(0..self.n, beta, out);
+            return;
+        }
+        parallel::for_each_chunk(out, threads, |start, chunk| {
+            self.matvec_rows_into(start..start + chunk.len(), beta, chunk);
+        });
+    }
+
+    /// Blocked `Xβ` scatter over a row range (`out.len() == rows.len()`).
+    ///
+    /// Scalar backend: the historical serial column-axpy loop, restricted
+    /// to the row window — bit-stable at any chunking. SIMD backend:
+    /// row-tiled 4-column register blocks ([`ROW_TILE`]), flushing
+    /// remainder columns with single axpys.
+    fn matvec_rows_into(&self, rows: std::ops::Range<usize>, beta: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), rows.len());
         out.fill(0.0);
-        for (j, &b) in beta.iter().enumerate() {
-            if b != 0.0 {
-                axpy(b, self.col(j), out);
+        let backend = kernels::active();
+        if backend == Backend::Scalar {
+            for (j, &b) in beta.iter().enumerate() {
+                if b != 0.0 {
+                    kernels::scalar::axpy(b, &self.col(j)[rows.clone()], out);
+                }
             }
+            return;
+        }
+        let mut tile_start = 0;
+        while tile_start < out.len() {
+            let tile_end = (tile_start + ROW_TILE).min(out.len());
+            let (lo, hi) = (rows.start + tile_start, rows.start + tile_end);
+            let tile = &mut out[tile_start..tile_end];
+            let mut pend_j = [0usize; 4];
+            let mut pend_c = [0.0f64; 4];
+            let mut pending = 0;
+            for (j, &b) in beta.iter().enumerate() {
+                if b == 0.0 {
+                    continue;
+                }
+                pend_j[pending] = j;
+                pend_c[pending] = b;
+                pending += 1;
+                if pending == 4 {
+                    kernels::axpy4_with(
+                        backend,
+                        pend_c,
+                        &self.col(pend_j[0])[lo..hi],
+                        &self.col(pend_j[1])[lo..hi],
+                        &self.col(pend_j[2])[lo..hi],
+                        &self.col(pend_j[3])[lo..hi],
+                        tile,
+                    );
+                    pending = 0;
+                }
+            }
+            for t in 0..pending {
+                kernels::axpy_with(backend, pend_c[t], &self.col(pend_j[t])[lo..hi], tile);
+            }
+            tile_start = tile_end;
         }
     }
 
@@ -125,8 +207,41 @@ impl Matrix {
     pub fn t_matvec_into(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.n);
         assert_eq!(out.len(), self.p);
-        for j in 0..self.p {
-            out[j] = dot(self.col(j), r);
+        self.t_matvec_cols_into(0, r, out);
+    }
+
+    /// `out[k] = X[:, first + k]ᵀ r` for `out.len()` consecutive columns.
+    ///
+    /// Scalar backend: the historical per-column dot loop. SIMD backend:
+    /// four columns per pass over `r` ([`kernels::dot4_with`]), whose
+    /// lanes are bitwise identical to single dots — so results do not
+    /// depend on how a caller chunks the column range (serial, parallel,
+    /// or block-sliced all agree exactly).
+    fn t_matvec_cols_into(&self, first: usize, r: &[f64], out: &mut [f64]) {
+        let backend = kernels::active();
+        if backend == Backend::Scalar {
+            for (k, o) in out.iter_mut().enumerate() {
+                *o = kernels::scalar::dot(self.col(first + k), r);
+            }
+            return;
+        }
+        let len = out.len();
+        let mut k = 0;
+        while k + 4 <= len {
+            let j = first + k;
+            let d = kernels::dot4_with(
+                backend,
+                self.col(j),
+                self.col(j + 1),
+                self.col(j + 2),
+                self.col(j + 3),
+                r,
+            );
+            out[k..k + 4].copy_from_slice(&d);
+            k += 4;
+        }
+        for (kk, o) in out.iter_mut().enumerate().skip(k) {
+            *o = kernels::dot_with(backend, self.col(first + kk), r);
         }
     }
 
@@ -146,15 +261,14 @@ impl Matrix {
         // Scoped-thread spawn costs ~50–100 µs per worker and the matvec
         // is memory-bandwidth bound, so threading only breaks even once
         // the matrix itself is far larger than L2 (measured in
-        // benches/perf_hotpath.rs — see EXPERIMENTS.md §Perf).
-        if threads <= 1 || self.n * self.p < 8_000_000 {
+        // benches/perf_hotpath.rs — see EXPERIMENTS.md §Perf). The
+        // break-even point is the shared `DFR_PAR_GRAIN` tunable.
+        if threads <= 1 || self.n * self.p < parallel::par_grain() {
             self.t_matvec_into(r, out);
             return;
         }
         parallel::for_each_chunk(out, threads, |start, chunk| {
-            for (k, o) in chunk.iter_mut().enumerate() {
-                *o = dot(self.col(start + k), r);
-            }
+            self.t_matvec_cols_into(start, r, chunk);
         });
     }
 
@@ -165,10 +279,42 @@ impl Matrix {
     pub fn block_axpy_into(&self, cols: std::ops::Range<usize>, coeffs: &[f64], out: &mut [f64]) {
         debug_assert_eq!(coeffs.len(), cols.len());
         debug_assert_eq!(out.len(), self.n);
-        for (k, &c) in coeffs.iter().enumerate() {
-            if c != 0.0 {
-                axpy(c, self.col(cols.start + k), out);
+        let backend = kernels::active();
+        if backend == Backend::Scalar {
+            for (k, &c) in coeffs.iter().enumerate() {
+                if c != 0.0 {
+                    kernels::scalar::axpy(c, self.col(cols.start + k), out);
+                }
             }
+            return;
+        }
+        // 4-column register blocks over the nonzero coefficients; `out`
+        // is loaded/stored once per block instead of once per column.
+        let mut pend_j = [0usize; 4];
+        let mut pend_c = [0.0f64; 4];
+        let mut pending = 0;
+        for (k, &c) in coeffs.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            pend_j[pending] = cols.start + k;
+            pend_c[pending] = c;
+            pending += 1;
+            if pending == 4 {
+                kernels::axpy4_with(
+                    backend,
+                    pend_c,
+                    self.col(pend_j[0]),
+                    self.col(pend_j[1]),
+                    self.col(pend_j[2]),
+                    self.col(pend_j[3]),
+                    out,
+                );
+                pending = 0;
+            }
+        }
+        for t in 0..pending {
+            kernels::axpy_with(backend, pend_c[t], self.col(pend_j[t]), out);
         }
     }
 
@@ -177,18 +323,32 @@ impl Matrix {
     pub fn block_t_matvec_into(&self, cols: std::ops::Range<usize>, r: &[f64], out: &mut [f64]) {
         debug_assert_eq!(out.len(), cols.len());
         debug_assert_eq!(r.len(), self.n);
-        for (k, o) in out.iter_mut().enumerate() {
-            *o = dot(self.col(cols.start + k), r);
-        }
+        self.t_matvec_cols_into(cols.start, r, out);
+    }
+
+    /// [`Matrix::block_t_matvec_into`] with a caller-carried residual sum.
+    /// The dense kernels never need `Σᵢrᵢ`, so `_rsum` is ignored — the
+    /// parameter exists so the [`DesignRef`] contract can hand the carried
+    /// sum to the centered-sparse kernels without a variant branch at
+    /// every call site.
+    pub fn block_t_matvec_with_rsum_into(
+        &self,
+        cols: std::ops::Range<usize>,
+        r: &[f64],
+        _rsum: f64,
+        out: &mut [f64],
+    ) {
+        self.block_t_matvec_into(cols, r, out);
     }
 
     /// Squared ℓ₂ norm of every column, written into `out` (length p) —
     /// the per-column cache behind the BCD block-Lipschitz seeds.
     pub fn col_sq_norms_into(&self, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.p);
+        let backend = kernels::active();
         for (j, o) in out.iter_mut().enumerate() {
             let c = self.col(j);
-            *o = dot(c, c);
+            *o = kernels::dot_with(backend, c, c);
         }
     }
 
@@ -662,18 +822,27 @@ impl CenteredSparse {
         out
     }
 
+    /// `out[k] = X̃[:, first + k]ᵀ r` for `out.len()` consecutive columns,
+    /// with the residual sum `sr = Σᵢ rᵢ` supplied by the caller — the one
+    /// shared inner loop behind every sparse transpose-matvec form
+    /// (serial, parallel-chunked, block, carried-sum).
+    fn t_matvec_cols_with_rsum(&self, first: usize, r: &[f64], sr: f64, out: &mut [f64]) {
+        for (k, o) in out.iter_mut().enumerate() {
+            let j = first + k;
+            let mut s = 0.0;
+            for t in self.col_ptr[j]..self.col_ptr[j + 1] {
+                s += self.values[t] * r[self.row_idx[t]];
+            }
+            *o = (s - self.offsets[j] * sr) / self.scales[j];
+        }
+    }
+
     /// `out = X̃ᵀ r`: sparse column dots corrected by `μ_j · Σᵢ rᵢ`.
     pub fn t_matvec_into(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.n);
         assert_eq!(out.len(), self.p);
         let sr: f64 = r.iter().sum();
-        for (j, o) in out.iter_mut().enumerate() {
-            let mut s = 0.0;
-            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
-                s += self.values[k] * r[self.row_idx[k]];
-            }
-            *o = (s - self.offsets[j] * sr) / self.scales[j];
-        }
+        self.t_matvec_cols_with_rsum(0, r, sr, out);
     }
 
     /// `g = X̃ᵀ r` (length p).
@@ -684,23 +853,59 @@ impl CenteredSparse {
     }
 
     /// `out = X̃ᵀ r` fanned out across a thread scope. The sparse kernel is
-    /// O(nnz), so the break-even point is on stored entries, not `n·p`.
+    /// O(nnz), so the break-even point (the shared `DFR_PAR_GRAIN`
+    /// tunable) is on stored entries, not `n·p`.
     pub fn t_matvec_par_into(&self, r: &[f64], threads: usize, out: &mut [f64]) {
         assert_eq!(r.len(), self.n);
         assert_eq!(out.len(), self.p);
-        if threads <= 1 || self.nnz() + self.n < 4_000_000 {
+        if threads <= 1 || self.nnz() + self.n < parallel::par_grain() {
             self.t_matvec_into(r, out);
             return;
         }
         let sr: f64 = r.iter().sum();
         parallel::for_each_chunk(out, threads, |start, chunk| {
-            for (k, o) in chunk.iter_mut().enumerate() {
-                let j = start + k;
-                let mut s = 0.0;
-                for t in self.col_ptr[j]..self.col_ptr[j + 1] {
-                    s += self.values[t] * r[self.row_idx[t]];
+            self.t_matvec_cols_with_rsum(start, r, sr, chunk);
+        });
+    }
+
+    /// `out = X̃ β` fanned out over *row* chunks: each worker rebuilds its
+    /// disjoint slice of `out` by binary-searching every active column's
+    /// row window (row indices are strictly increasing per column), so no
+    /// two workers touch the same output row and results are bitwise
+    /// identical to [`CenteredSparse::matvec_into`] at any thread count.
+    pub fn matvec_par_into(&self, beta: &[f64], threads: usize, out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        if threads <= 1 || self.nnz() + self.n < parallel::par_grain() {
+            self.matvec_into(beta, out);
+            return;
+        }
+        // The rank-one shift is row-independent: accumulate it once, in
+        // the same column order as the serial kernel.
+        let mut shift = 0.0;
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                shift += (b / self.scales[j]) * self.offsets[j];
+            }
+        }
+        parallel::for_each_chunk(out, threads, |start, chunk| {
+            let (lo, hi) = (start, start + chunk.len());
+            chunk.fill(0.0);
+            for (j, &b) in beta.iter().enumerate() {
+                if b == 0.0 {
+                    continue;
                 }
-                *o = (s - self.offsets[j] * sr) / self.scales[j];
+                let bs = b / self.scales[j];
+                let base = self.col_ptr[j];
+                let rows = &self.row_idx[base..self.col_ptr[j + 1]];
+                let s = rows.partition_point(|&i| i < lo);
+                let e = s + rows[s..].partition_point(|&i| i < hi);
+                for t in s..e {
+                    chunk[rows[t] - lo] += bs * self.values[base + t];
+                }
+            }
+            if shift != 0.0 {
+                chunk.iter_mut().for_each(|v| *v -= shift);
             }
         });
     }
@@ -733,29 +938,56 @@ impl CenteredSparse {
         debug_assert_eq!(out.len(), cols.len());
         debug_assert_eq!(r.len(), self.n);
         let sr: f64 = r.iter().sum();
-        for (k, o) in out.iter_mut().enumerate() {
-            let j = cols.start + k;
-            let mut s = 0.0;
-            for t in self.col_ptr[j]..self.col_ptr[j + 1] {
-                s += self.values[t] * r[self.row_idx[t]];
-            }
-            *o = (s - self.offsets[j] * sr) / self.scales[j];
-        }
+        self.t_matvec_cols_with_rsum(cols.start, r, sr, out);
+    }
+
+    /// [`CenteredSparse::block_t_matvec_into`] with the residual sum
+    /// `rsum = Σᵢ rᵢ` carried by the caller — skips the per-block O(n)
+    /// pass entirely. The BCD solver computes the sum once per residual
+    /// refresh (fused into the loss's residual pass) and reuses it across
+    /// every block update against that residual.
+    pub fn block_t_matvec_with_rsum_into(
+        &self,
+        cols: std::ops::Range<usize>,
+        r: &[f64],
+        rsum: f64,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(out.len(), cols.len());
+        debug_assert_eq!(r.len(), self.n);
+        self.t_matvec_cols_with_rsum(cols.start, r, rsum, out);
     }
 
     /// Squared ℓ₂ norm of every *implied standardized* column into `out`
     /// (the sparse leg of the BCD block-Lipschitz cache) — computed from
     /// the stored entries alone, like [`CenteredSparse::col_norms`] without
-    /// the square root.
+    /// the square root. Columns are independent, so large designs fan the
+    /// loop out over the default thread pool (per-column results are
+    /// unchanged by the chunking).
     pub fn col_sq_norms_into(&self, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.p);
+        let threads = parallel::default_threads();
+        if threads <= 1 || self.nnz() + self.n < parallel::par_grain() {
+            self.col_sq_norms_cols(0, out);
+            return;
+        }
+        parallel::for_each_chunk(out, threads, |start, chunk| {
+            self.col_sq_norms_cols(start, chunk);
+        });
+    }
+
+    /// Per-column squared norms for `out.len()` consecutive columns
+    /// starting at `first` (the chunk body of
+    /// [`CenteredSparse::col_sq_norms_into`]).
+    fn col_sq_norms_cols(&self, first: usize, out: &mut [f64]) {
         let n = self.n as f64;
-        for (j, o) in out.iter_mut().enumerate() {
+        for (k, o) in out.iter_mut().enumerate() {
+            let j = first + k;
             let (mu, s) = (self.offsets[j], self.scales[j]);
             let mut nnz_j = 0usize;
             let mut sumsq = 0.0;
-            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
-                let d = (self.values[k] - mu) / s;
+            for t in self.col_ptr[j]..self.col_ptr[j + 1] {
+                let d = (self.values[t] - mu) / s;
                 sumsq += d * d;
                 nnz_j += 1;
             }
@@ -991,6 +1223,16 @@ impl<'a> DesignRef<'a> {
         }
     }
 
+    /// `out = Xβ` fanned out over row chunks (dense: blocked row tiles;
+    /// sparse: binary-searched row windows per column) — both sides gate
+    /// on the `DFR_PAR_GRAIN` break-even, so small problems stay serial.
+    pub fn matvec_par_into(self, beta: &[f64], threads: usize, out: &mut [f64]) {
+        match self {
+            DesignRef::Dense(m) => m.matvec_par_into(beta, threads, out),
+            DesignRef::Sparse(s) => s.matvec_par_into(beta, threads, out),
+        }
+    }
+
     pub fn t_matvec_into(self, r: &[f64], out: &mut [f64]) {
         match self {
             DesignRef::Dense(m) => m.t_matvec_into(r, out),
@@ -1041,6 +1283,24 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.block_t_matvec_into(cols, r, out),
             DesignRef::Sparse(s) => s.block_t_matvec_into(cols, r, out),
+        }
+    }
+
+    /// Group-block transpose matvec with a caller-carried residual sum
+    /// `rsum = Σᵢ rᵢ`: the sparse kernel skips its per-block O(n) pass,
+    /// the dense kernel ignores the sum. Callers that already hold the
+    /// sum (the BCD residual refresh) use this across every block update
+    /// against one residual.
+    pub fn block_t_matvec_with_rsum_into(
+        self,
+        cols: std::ops::Range<usize>,
+        r: &[f64],
+        rsum: f64,
+        out: &mut [f64],
+    ) {
+        match self {
+            DesignRef::Dense(m) => m.block_t_matvec_with_rsum_into(cols, r, rsum, out),
+            DesignRef::Sparse(s) => s.block_t_matvec_with_rsum_into(cols, r, rsum, out),
         }
     }
 
@@ -1158,6 +1418,11 @@ impl DesignOps {
         self.view().matvec_into(beta, out)
     }
 
+    /// Row-parallel `Xβ` (see [`DesignRef::matvec_par_into`]).
+    pub fn matvec_par_into(&self, beta: &[f64], threads: usize, out: &mut [f64]) {
+        self.view().matvec_par_into(beta, threads, out)
+    }
+
     pub fn t_matvec(&self, r: &[f64]) -> Vec<f64> {
         self.view().t_matvec(r)
     }
@@ -1178,6 +1443,18 @@ impl DesignOps {
     /// Group-block transpose matvec (see [`DesignRef::block_t_matvec_into`]).
     pub fn block_t_matvec_into(&self, cols: std::ops::Range<usize>, r: &[f64], out: &mut [f64]) {
         self.view().block_t_matvec_into(cols, r, out)
+    }
+
+    /// Carried-sum group-block transpose matvec (see
+    /// [`DesignRef::block_t_matvec_with_rsum_into`]).
+    pub fn block_t_matvec_with_rsum_into(
+        &self,
+        cols: std::ops::Range<usize>,
+        r: &[f64],
+        rsum: f64,
+        out: &mut [f64],
+    ) {
+        self.view().block_t_matvec_with_rsum_into(cols, r, rsum, out)
     }
 
     /// Per-column squared norms (see [`DesignRef::col_sq_norms_into`]).
@@ -1485,53 +1762,36 @@ pub(crate) fn content_hash_usizes(data: &[usize]) -> u64 {
     h
 }
 
-/// Dot product with 4 independent accumulators (lets LLVM vectorize without
-/// needing `-ffast-math`-style reassociation permission).
+/// Dot product on the active [`kernels`] backend (scalar: 4 independent
+/// accumulators, bitwise the historical kernel; AVX2: FMA lanes).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for k in 0..chunks {
-        let i = 4 * k;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
-    }
-    s
+    kernels::dot(a, b)
 }
 
-/// `y += a * x`.
+/// `y += a * x` on the active [`kernels`] backend.
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += a * xi;
-    }
+    kernels::axpy(a, x, y)
 }
 
-/// Euclidean norm.
+/// Euclidean norm (`√(x·x)` through the dispatched dot, so `norm2` on the
+/// scalar backend is bitwise the historical value).
 #[inline]
 pub fn norm2(x: &[f64]) -> f64 {
-    dot(x, x).sqrt()
+    kernels::dot(x, x).sqrt()
 }
 
-/// ℓ₁ norm.
+/// ℓ₁ norm on the active [`kernels`] backend.
 #[inline]
 pub fn norm1(x: &[f64]) -> f64 {
-    x.iter().map(|v| v.abs()).sum()
+    kernels::norm1(x)
 }
 
-/// ℓ∞ norm.
+/// ℓ∞ norm on the active [`kernels`] backend.
 #[inline]
 pub fn norm_inf(x: &[f64]) -> f64 {
-    x.iter().fold(0.0, |m, v| m.max(v.abs()))
+    kernels::norm_inf(x)
 }
 
 /// ‖a − b‖₂ — used for the paper's "ℓ₂ distance to no screen" metric.
@@ -1551,455 +1811,3 @@ pub fn scale(x: &mut [f64], s: f64) {
     x.iter_mut().for_each(|v| *v *= s);
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn small() -> Matrix {
-        // [[1, 4], [2, 5], [3, 6]]
-        Matrix::from_columns(3, &[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
-    }
-
-    #[test]
-    fn matvec_matches_hand_computation() {
-        let m = small();
-        assert_eq!(m.matvec(&[1.0, -1.0]), vec![-3.0, -3.0, -3.0]);
-    }
-
-    #[test]
-    fn t_matvec_matches_hand_computation() {
-        let m = small();
-        assert_eq!(m.t_matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
-    }
-
-    #[test]
-    fn parallel_t_matvec_matches_serial() {
-        let mut rng = crate::rng::Rng::new(1);
-        let m = Matrix::from_fn(37, 501, |_, _| rng.gauss());
-        let r = rng.gauss_vec(37);
-        let a = m.t_matvec(&r);
-        let b = m.t_matvec_par(&r, 4);
-        for (x, y) in a.iter().zip(&b) {
-            assert!((x - y).abs() < 1e-12);
-        }
-    }
-
-    #[test]
-    fn gather_columns_picks_right_columns() {
-        let m = small();
-        let g = m.gather_columns(&[1]);
-        assert_eq!(g.ncols(), 1);
-        assert_eq!(g.col(0), &[4.0, 5.0, 6.0]);
-    }
-
-    #[test]
-    fn parallel_t_matvec_into_matches_allocating_form() {
-        let mut rng = crate::rng::Rng::new(5);
-        let m = Matrix::from_fn(23, 301, |_, _| rng.gauss());
-        let r = rng.gauss_vec(23);
-        let a = m.t_matvec_par(&r, 3);
-        let mut b = vec![1.0; 301]; // non-zero garbage: must be overwritten
-        m.t_matvec_par_into(&r, 3, &mut b);
-        assert_eq!(a, b);
-    }
-
-    #[test]
-    fn truncate_and_push_cols_roundtrip() {
-        let mut m = small();
-        m.truncate_cols(1);
-        assert_eq!(m.ncols(), 1);
-        assert_eq!(m.col(0), &[1.0, 2.0, 3.0]);
-        m.push_col(&[7.0, 8.0, 9.0]);
-        assert_eq!(m.ncols(), 2);
-        assert_eq!(m.col(1), &[7.0, 8.0, 9.0]);
-    }
-
-    #[test]
-    fn reduced_design_matches_fresh_gather() {
-        let mut rng = crate::rng::Rng::new(6);
-        let x = Matrix::from_fn(11, 14, |_, _| rng.gauss());
-        let mut rd = ReducedDesign::new();
-        for idx in [
-            vec![1usize, 3, 5],
-            vec![1, 3, 6, 7],    // shares the [1, 3] prefix
-            vec![1, 3, 6, 7],    // identical → cache hit
-            vec![0, 3, 6],       // no shared prefix → rebuild
-            vec![0, 3, 6, 9, 12], // append-only growth
-        ] {
-            let got = rd.update(&x, &idx).as_dense().unwrap().clone();
-            assert_eq!(got, x.gather_columns(&idx), "idx {idx:?}");
-            assert_eq!(rd.indices(), idx.as_slice());
-        }
-        assert_eq!(rd.hits, 1);
-        assert!(rd.kept_cols >= 2, "prefix reuse never happened");
-    }
-
-    #[test]
-    fn reduced_design_detects_matrix_change() {
-        let mut rng = crate::rng::Rng::new(7);
-        let a = Matrix::from_fn(9, 6, |_, _| rng.gauss());
-        let b = Matrix::from_fn(9, 6, |_, _| rng.gauss());
-        let mut rd = ReducedDesign::new();
-        rd.update(&a, &[0, 2, 4]);
-        let got = rd.update(&b, &[0, 2, 4]).as_dense().unwrap().clone();
-        assert_eq!(got, b.gather_columns(&[0, 2, 4]), "stale columns served");
-    }
-
-    #[test]
-    fn reduced_design_update_grouped_records_offsets() {
-        let mut rng = crate::rng::Rng::new(8);
-        let x = Matrix::from_fn(9, 10, |_, _| rng.gauss());
-        let groups = crate::groups::Groups::from_sizes(&[3, 3, 4]); // 0-2 | 3-5 | 6-9
-        let mut rd = ReducedDesign::new();
-        // vars {1, 2} ⊂ g0, {4} ⊂ g1, {6, 9} ⊂ g2 → blocks at 0, 2, 3.
-        rd.update_grouped(&x, &[1, 2, 4, 6, 9], &groups);
-        assert_eq!(rd.group_offsets(), &[0, 2, 3, 5]);
-        let (restricted, _) = groups.restrict(&[1, 2, 4, 6, 9]);
-        assert_eq!(rd.group_offsets(), restricted.offsets());
-        // Incremental growth keeps the offsets in sync with the new set.
-        rd.update_grouped(&x, &[1, 2, 4, 5, 6, 9], &groups);
-        assert_eq!(rd.group_offsets(), &[0, 2, 4, 6]);
-    }
-
-    #[test]
-    fn block_kernels_match_whole_design_kernels() {
-        let mut rng = crate::rng::Rng::new(9);
-        let x = Matrix::from_fn(12, 9, |_, _| rng.gauss());
-        let cols = 3..7usize;
-        let coeffs = rng.gauss_vec(4);
-        let r = rng.gauss_vec(12);
-
-        // block_axpy == matvec of a vector supported on the block.
-        let mut full_beta = vec![0.0; 9];
-        full_beta[cols.clone()].copy_from_slice(&coeffs);
-        let expect = x.matvec(&full_beta);
-        let mut got = vec![0.0; 12];
-        x.block_axpy_into(cols.clone(), &coeffs, &mut got);
-        for (a, b) in got.iter().zip(&expect) {
-            assert!((a - b).abs() < 1e-14);
-        }
-
-        // block_t_matvec == the block slice of Xᵀr.
-        let full = x.t_matvec(&r);
-        let mut block = vec![0.0; 4];
-        x.block_t_matvec_into(cols.clone(), &r, &mut block);
-        for (a, b) in block.iter().zip(&full[cols]) {
-            assert!((a - b).abs() < 1e-14);
-        }
-
-        // col_sq_norms == col_norms².
-        let mut sq = vec![0.0; 9];
-        x.col_sq_norms_into(&mut sq);
-        for (a, b) in sq.iter().zip(&x.col_norms()) {
-            assert!((a - b * b).abs() < 1e-12);
-        }
-    }
-
-    #[test]
-    fn sparse_block_kernels_match_dense_block_kernels() {
-        let (dense, csc) = sparse_fixture();
-        let sparse = CenteredSparse::from_csc(&csc);
-        let dense_std = sparse.to_dense(); // implied standardized matrix
-        let mut rng = crate::rng::Rng::new(10);
-        let cols = 2..6usize;
-        let coeffs = rng.gauss_vec(4);
-        let r = rng.gauss_vec(dense.nrows());
-        let n = dense.nrows();
-
-        let mut a = rng.gauss_vec(n); // nonzero accumulator: += semantics
-        let mut b = a.clone();
-        dense_std.block_axpy_into(cols.clone(), &coeffs, &mut a);
-        sparse.block_axpy_into(cols.clone(), &coeffs, &mut b);
-        for (x1, x2) in a.iter().zip(&b) {
-            assert!((x1 - x2).abs() < 1e-12, "block_axpy drift");
-        }
-
-        let mut da = vec![0.0; 4];
-        let mut db = vec![0.0; 4];
-        dense_std.block_t_matvec_into(cols.clone(), &r, &mut da);
-        sparse.block_t_matvec_into(cols.clone(), &r, &mut db);
-        for (x1, x2) in da.iter().zip(&db) {
-            assert!((x1 - x2).abs() < 1e-12, "block_t_matvec drift");
-        }
-
-        let mut sa = vec![0.0; dense.ncols()];
-        let mut sb = vec![0.0; dense.ncols()];
-        dense_std.col_sq_norms_into(&mut sa);
-        sparse.col_sq_norms_into(&mut sb);
-        for (x1, x2) in sa.iter().zip(&sb) {
-            assert!((x1 - x2).abs() < 1e-12, "col_sq_norms drift");
-        }
-    }
-
-    #[test]
-    fn gather_rows_picks_right_rows() {
-        let m = small();
-        let g = m.gather_rows(&[2, 0]);
-        assert_eq!(g.get(0, 0), 3.0);
-        assert_eq!(g.get(1, 1), 4.0);
-    }
-
-    #[test]
-    fn standardize_gives_zero_mean_unit_norm() {
-        let mut rng = crate::rng::Rng::new(2);
-        let mut m = Matrix::from_fn(50, 10, |_, _| rng.normal(3.0, 2.0));
-        m.standardize_l2();
-        for j in 0..10 {
-            let c = m.col(j);
-            let mean: f64 = c.iter().sum::<f64>() / 50.0;
-            assert!(mean.abs() < 1e-12);
-            assert!((norm2(c) - 1.0).abs() < 1e-12);
-        }
-    }
-
-    #[test]
-    fn op_norm_est_close_to_true_on_diagonal_case() {
-        // X = diag-ish: columns orthogonal with norms 1, 2, 3 → ‖X‖₂² = 9.
-        let mut m = Matrix::zeros(3, 3);
-        m.set(0, 0, 1.0);
-        m.set(1, 1, 2.0);
-        m.set(2, 2, 3.0);
-        let est = m.op_norm_sq_est(50, 7);
-        assert!((est - 9.0).abs() < 1e-6, "est {est}");
-    }
-
-    fn sparse_fixture() -> (Matrix, CscMatrix) {
-        // Sparse-ish matrix with exact zeros, a dense column, and an
-        // all-zero column.
-        let mut rng = crate::rng::Rng::new(11);
-        let dense = Matrix::from_fn(13, 7, |i, j| {
-            if j == 3 {
-                rng.gauss() // fully dense column
-            } else if j == 5 {
-                0.0 // empty column
-            } else if (i + j) % 3 == 0 {
-                rng.gauss()
-            } else {
-                0.0
-            }
-        });
-        let csc = CscMatrix::from_dense(&dense, 0.0);
-        (dense, csc)
-    }
-
-    #[test]
-    fn csc_round_trips_through_dense() {
-        let (dense, csc) = sparse_fixture();
-        assert_eq!(csc.to_dense(), dense);
-        assert!(csc.nnz() < 13 * 7);
-        assert!((csc.density() - csc.nnz() as f64 / 91.0).abs() < 1e-15);
-    }
-
-    #[test]
-    fn csc_matvec_and_t_matvec_match_dense() {
-        let (dense, csc) = sparse_fixture();
-        let mut rng = crate::rng::Rng::new(12);
-        let beta = rng.gauss_vec(7);
-        let r = rng.gauss_vec(13);
-        for (a, b) in csc.matvec(&beta).iter().zip(&dense.matvec(&beta)) {
-            assert!((a - b).abs() < 1e-14);
-        }
-        for (a, b) in csc.t_matvec(&r).iter().zip(&dense.t_matvec(&r)) {
-            assert!((a - b).abs() < 1e-14);
-        }
-    }
-
-    #[test]
-    fn csc_col_stats_match_dense() {
-        let (dense, csc) = sparse_fixture();
-        for (a, b) in csc.col_norms().iter().zip(&dense.col_norms()) {
-            assert!((a - b).abs() < 1e-12);
-        }
-        for (j, m) in csc.col_means().iter().enumerate() {
-            let want = dense.col(j).iter().sum::<f64>() / 13.0;
-            assert!((m - want).abs() < 1e-12);
-        }
-    }
-
-    #[test]
-    fn csc_standardized_dense_matches_dense_standardization() {
-        let (dense, csc) = sparse_fixture();
-        let mut want = dense.clone();
-        let want_stats = want.standardize_l2();
-        let (got, got_stats) = csc.to_standardized_dense();
-        for j in 0..7 {
-            let (wm, ws) = want_stats[j];
-            let (gm, gs) = got_stats[j];
-            assert!((wm - gm).abs() < 1e-12, "col {j} mean");
-            assert!((ws - gs).abs() < 1e-12, "col {j} scale");
-            for i in 0..13 {
-                assert!(
-                    (want.get(i, j) - got.get(i, j)).abs() < 1e-12,
-                    "entry ({i}, {j})"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn csc_fingerprint_distinguishes_content_and_structure() {
-        let (_, csc) = sparse_fixture();
-        let fp = csc.fingerprint();
-        let mut other = csc.clone();
-        // Perturb one stored value: the fingerprint must move.
-        let perturbed = CscMatrix::new(
-            other.nrows(),
-            other.ncols(),
-            other.col_ptr.clone(),
-            other.row_idx.clone(),
-            {
-                other.values[0] += 1.0;
-                other.values.clone()
-            },
-        );
-        assert_ne!(fp, perturbed.fingerprint());
-    }
-
-    #[test]
-    #[should_panic(expected = "strictly increasing")]
-    fn csc_rejects_unsorted_rows() {
-        CscMatrix::new(3, 1, vec![0, 2], vec![1, 0], vec![1.0, 2.0]);
-    }
-
-    #[test]
-    fn csc_from_dense_preserves_nan() {
-        let mut m = Matrix::zeros(3, 2);
-        m.set(1, 0, f64::NAN);
-        m.set(2, 1, 5.0);
-        let csc = CscMatrix::from_dense(&m, 0.0);
-        assert_eq!(csc.nnz(), 2, "NaN entry must be stored, not dropped");
-        assert!(csc.to_dense().get(1, 0).is_nan());
-    }
-
-    #[test]
-    fn centered_sparse_kernels_match_dense_standardized() {
-        let (_, csc) = sparse_fixture();
-        let cs = CenteredSparse::from_csc(&csc);
-        let (dense_std, stats) = csc.to_standardized_dense();
-        assert_eq!(cs.centers(), stats);
-        let mut rng = crate::rng::Rng::new(21);
-        let beta = rng.gauss_vec(7);
-        let r = rng.gauss_vec(13);
-        for (a, b) in cs.matvec(&beta).iter().zip(&dense_std.matvec(&beta)) {
-            assert!((a - b).abs() < 1e-12, "matvec {a} vs {b}");
-        }
-        for (a, b) in cs.t_matvec(&r).iter().zip(&dense_std.t_matvec(&r)) {
-            assert!((a - b).abs() < 1e-12, "t_matvec {a} vs {b}");
-        }
-        let mut par = vec![9.0; 7];
-        cs.t_matvec_par_into(&r, 3, &mut par);
-        for (a, b) in par.iter().zip(&cs.t_matvec(&r)) {
-            assert!((a - b).abs() < 1e-14, "par t_matvec");
-        }
-        for (a, b) in cs.col_norms().iter().zip(&dense_std.col_norms()) {
-            assert!((a - b).abs() < 1e-12, "col norm {a} vs {b}");
-        }
-        for m in cs.col_means() {
-            assert!(m.abs() < 1e-12, "implied mean {m}");
-        }
-        let (est_s, est_d) = (cs.op_norm_sq_est(60, 7), dense_std.op_norm_sq_est(60, 7));
-        assert!((est_s - est_d).abs() < 1e-6 * (1.0 + est_d), "{est_s} vs {est_d}");
-    }
-
-    #[test]
-    fn centered_sparse_gather_rows_matches_dense() {
-        let (_, csc) = sparse_fixture();
-        let cs = CenteredSparse::from_csc(&csc);
-        let dense_std = cs.to_dense();
-        for rows in [vec![0usize, 3, 7, 12], vec![5, 1, 1, 9]] {
-            let got = cs.gather_rows(&rows).to_dense();
-            let want = dense_std.gather_rows(&rows);
-            for j in 0..7 {
-                for i in 0..rows.len() {
-                    assert!(
-                        (got.get(i, j) - want.get(i, j)).abs() < 1e-12,
-                        "rows {rows:?}, entry ({i}, {j})"
-                    );
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn centered_sparse_restandardize_matches_dense() {
-        // Gather fold rows, then re-standardize: the sparse affine
-        // recomposition must track the dense two-pass standardization of
-        // the same implied rows (the CV fold-plan contract).
-        let (_, csc) = sparse_fixture();
-        let cs = CenteredSparse::from_csc(&csc);
-        let rows: Vec<usize> = (0..13).filter(|i| i % 3 != 0).collect();
-        let mut sub_sparse = cs.gather_rows(&rows);
-        let mut sub_dense = cs.to_dense().gather_rows(&rows);
-        let got_centers = sub_sparse.standardize_l2();
-        let want_centers = sub_dense.standardize_l2();
-        for j in 0..7 {
-            let ((gm, gs), (wm, ws)) = (got_centers[j], want_centers[j]);
-            assert!((gm - wm).abs() < 1e-10, "col {j} mean {gm} vs {wm}");
-            assert!((gs - ws).abs() < 1e-10, "col {j} scale {gs} vs {ws}");
-        }
-        let got = sub_sparse.to_dense();
-        for j in 0..7 {
-            for i in 0..rows.len() {
-                assert!(
-                    (got.get(i, j) - sub_dense.get(i, j)).abs() < 1e-10,
-                    "entry ({i}, {j})"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn reduced_design_serves_sparse_sources() {
-        let (_, csc) = sparse_fixture();
-        let cs = CenteredSparse::from_csc(&csc);
-        let dense_std = cs.to_dense();
-        let mut rd = ReducedDesign::new();
-        for idx in [
-            vec![0usize, 2, 4],
-            vec![0, 2, 5, 6], // shares the [0, 2] prefix
-            vec![0, 2, 5, 6], // identical → cache hit
-            vec![1, 3],       // no shared prefix → rebuild
-        ] {
-            let got = match rd.update(&cs, &idx) {
-                DesignRef::Sparse(s) => s.to_dense(),
-                DesignRef::Dense(_) => panic!("sparse source produced a dense gather"),
-            };
-            let want = dense_std.gather_columns(&idx);
-            assert_eq!(got, want, "idx {idx:?}");
-            assert_eq!(rd.indices(), idx.as_slice());
-        }
-        assert_eq!(rd.hits, 1);
-        assert!(rd.kept_cols >= 2, "sparse prefix reuse never happened");
-        // Switching to a dense source invalidates and serves dense.
-        let got = rd.update(&dense_std, &[1, 3]).as_dense().unwrap().clone();
-        assert_eq!(got, dense_std.gather_columns(&[1, 3]));
-    }
-
-    #[test]
-    fn dense_materialization_counter_ticks_on_densify_only() {
-        let (_, csc) = sparse_fixture();
-        let cs = CenteredSparse::from_csc(&csc);
-        let before = dense_materializations();
-        let mut out = vec![0.0; 13];
-        cs.matvec_into(&[0.1; 7], &mut out);
-        cs.t_matvec(&[0.1; 13]);
-        cs.col_norms();
-        assert_eq!(dense_materializations(), before, "kernels must not densify");
-        let _ = cs.to_dense();
-        let _ = csc.to_standardized_dense();
-        assert_eq!(dense_materializations(), before + 2);
-    }
-
-    #[test]
-    fn dot_handles_remainders() {
-        let a: Vec<f64> = (0..7).map(|i| i as f64).collect();
-        assert_eq!(dot(&a, &a), 91.0);
-    }
-
-    #[test]
-    fn l2_distance_zero_iff_equal() {
-        let a = [1.0, 2.0];
-        assert_eq!(l2_distance(&a, &a), 0.0);
-        assert!((l2_distance(&a, &[1.0, 4.0]) - 2.0).abs() < 1e-15);
-    }
-}

@@ -1,0 +1,449 @@
+use super::*;
+
+fn small() -> Matrix {
+    // [[1, 4], [2, 5], [3, 6]]
+    Matrix::from_columns(3, &[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+}
+
+#[test]
+fn matvec_matches_hand_computation() {
+    let m = small();
+    assert_eq!(m.matvec(&[1.0, -1.0]), vec![-3.0, -3.0, -3.0]);
+}
+
+#[test]
+fn t_matvec_matches_hand_computation() {
+    let m = small();
+    assert_eq!(m.t_matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+}
+
+#[test]
+fn parallel_t_matvec_matches_serial() {
+    let mut rng = crate::rng::Rng::new(1);
+    let m = Matrix::from_fn(37, 501, |_, _| rng.gauss());
+    let r = rng.gauss_vec(37);
+    let a = m.t_matvec(&r);
+    let b = m.t_matvec_par(&r, 4);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn gather_columns_picks_right_columns() {
+    let m = small();
+    let g = m.gather_columns(&[1]);
+    assert_eq!(g.ncols(), 1);
+    assert_eq!(g.col(0), &[4.0, 5.0, 6.0]);
+}
+
+#[test]
+fn parallel_t_matvec_into_matches_allocating_form() {
+    let mut rng = crate::rng::Rng::new(5);
+    let m = Matrix::from_fn(23, 301, |_, _| rng.gauss());
+    let r = rng.gauss_vec(23);
+    let a = m.t_matvec_par(&r, 3);
+    let mut b = vec![1.0; 301]; // non-zero garbage: must be overwritten
+    m.t_matvec_par_into(&r, 3, &mut b);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn truncate_and_push_cols_roundtrip() {
+    let mut m = small();
+    m.truncate_cols(1);
+    assert_eq!(m.ncols(), 1);
+    assert_eq!(m.col(0), &[1.0, 2.0, 3.0]);
+    m.push_col(&[7.0, 8.0, 9.0]);
+    assert_eq!(m.ncols(), 2);
+    assert_eq!(m.col(1), &[7.0, 8.0, 9.0]);
+}
+
+#[test]
+fn reduced_design_matches_fresh_gather() {
+    let mut rng = crate::rng::Rng::new(6);
+    let x = Matrix::from_fn(11, 14, |_, _| rng.gauss());
+    let mut rd = ReducedDesign::new();
+    for idx in [
+        vec![1usize, 3, 5],
+        vec![1, 3, 6, 7],    // shares the [1, 3] prefix
+        vec![1, 3, 6, 7],    // identical → cache hit
+        vec![0, 3, 6],       // no shared prefix → rebuild
+        vec![0, 3, 6, 9, 12], // append-only growth
+    ] {
+        let got = rd.update(&x, &idx).as_dense().unwrap().clone();
+        assert_eq!(got, x.gather_columns(&idx), "idx {idx:?}");
+        assert_eq!(rd.indices(), idx.as_slice());
+    }
+    assert_eq!(rd.hits, 1);
+    assert!(rd.kept_cols >= 2, "prefix reuse never happened");
+}
+
+#[test]
+fn reduced_design_detects_matrix_change() {
+    let mut rng = crate::rng::Rng::new(7);
+    let a = Matrix::from_fn(9, 6, |_, _| rng.gauss());
+    let b = Matrix::from_fn(9, 6, |_, _| rng.gauss());
+    let mut rd = ReducedDesign::new();
+    rd.update(&a, &[0, 2, 4]);
+    let got = rd.update(&b, &[0, 2, 4]).as_dense().unwrap().clone();
+    assert_eq!(got, b.gather_columns(&[0, 2, 4]), "stale columns served");
+}
+
+#[test]
+fn reduced_design_update_grouped_records_offsets() {
+    let mut rng = crate::rng::Rng::new(8);
+    let x = Matrix::from_fn(9, 10, |_, _| rng.gauss());
+    let groups = crate::groups::Groups::from_sizes(&[3, 3, 4]); // 0-2 | 3-5 | 6-9
+    let mut rd = ReducedDesign::new();
+    // vars {1, 2} ⊂ g0, {4} ⊂ g1, {6, 9} ⊂ g2 → blocks at 0, 2, 3.
+    rd.update_grouped(&x, &[1, 2, 4, 6, 9], &groups);
+    assert_eq!(rd.group_offsets(), &[0, 2, 3, 5]);
+    let (restricted, _) = groups.restrict(&[1, 2, 4, 6, 9]);
+    assert_eq!(rd.group_offsets(), restricted.offsets());
+    // Incremental growth keeps the offsets in sync with the new set.
+    rd.update_grouped(&x, &[1, 2, 4, 5, 6, 9], &groups);
+    assert_eq!(rd.group_offsets(), &[0, 2, 4, 6]);
+}
+
+#[test]
+fn block_kernels_match_whole_design_kernels() {
+    let mut rng = crate::rng::Rng::new(9);
+    let x = Matrix::from_fn(12, 9, |_, _| rng.gauss());
+    let cols = 3..7usize;
+    let coeffs = rng.gauss_vec(4);
+    let r = rng.gauss_vec(12);
+
+    // block_axpy == matvec of a vector supported on the block.
+    let mut full_beta = vec![0.0; 9];
+    full_beta[cols.clone()].copy_from_slice(&coeffs);
+    let expect = x.matvec(&full_beta);
+    let mut got = vec![0.0; 12];
+    x.block_axpy_into(cols.clone(), &coeffs, &mut got);
+    for (a, b) in got.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-14);
+    }
+
+    // block_t_matvec == the block slice of Xᵀr.
+    let full = x.t_matvec(&r);
+    let mut block = vec![0.0; 4];
+    x.block_t_matvec_into(cols.clone(), &r, &mut block);
+    for (a, b) in block.iter().zip(&full[cols]) {
+        assert!((a - b).abs() < 1e-14);
+    }
+
+    // col_sq_norms == col_norms².
+    let mut sq = vec![0.0; 9];
+    x.col_sq_norms_into(&mut sq);
+    for (a, b) in sq.iter().zip(&x.col_norms()) {
+        assert!((a - b * b).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn sparse_block_kernels_match_dense_block_kernels() {
+    let (dense, csc) = sparse_fixture();
+    let sparse = CenteredSparse::from_csc(&csc);
+    let dense_std = sparse.to_dense(); // implied standardized matrix
+    let mut rng = crate::rng::Rng::new(10);
+    let cols = 2..6usize;
+    let coeffs = rng.gauss_vec(4);
+    let r = rng.gauss_vec(dense.nrows());
+    let n = dense.nrows();
+
+    let mut a = rng.gauss_vec(n); // nonzero accumulator: += semantics
+    let mut b = a.clone();
+    dense_std.block_axpy_into(cols.clone(), &coeffs, &mut a);
+    sparse.block_axpy_into(cols.clone(), &coeffs, &mut b);
+    for (x1, x2) in a.iter().zip(&b) {
+        assert!((x1 - x2).abs() < 1e-12, "block_axpy drift");
+    }
+
+    let mut da = vec![0.0; 4];
+    let mut db = vec![0.0; 4];
+    dense_std.block_t_matvec_into(cols.clone(), &r, &mut da);
+    sparse.block_t_matvec_into(cols.clone(), &r, &mut db);
+    for (x1, x2) in da.iter().zip(&db) {
+        assert!((x1 - x2).abs() < 1e-12, "block_t_matvec drift");
+    }
+
+    let mut sa = vec![0.0; dense.ncols()];
+    let mut sb = vec![0.0; dense.ncols()];
+    dense_std.col_sq_norms_into(&mut sa);
+    sparse.col_sq_norms_into(&mut sb);
+    for (x1, x2) in sa.iter().zip(&sb) {
+        assert!((x1 - x2).abs() < 1e-12, "col_sq_norms drift");
+    }
+}
+
+#[test]
+fn gather_rows_picks_right_rows() {
+    let m = small();
+    let g = m.gather_rows(&[2, 0]);
+    assert_eq!(g.get(0, 0), 3.0);
+    assert_eq!(g.get(1, 1), 4.0);
+}
+
+#[test]
+fn standardize_gives_zero_mean_unit_norm() {
+    let mut rng = crate::rng::Rng::new(2);
+    let mut m = Matrix::from_fn(50, 10, |_, _| rng.normal(3.0, 2.0));
+    m.standardize_l2();
+    for j in 0..10 {
+        let c = m.col(j);
+        let mean: f64 = c.iter().sum::<f64>() / 50.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((norm2(c) - 1.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn op_norm_est_close_to_true_on_diagonal_case() {
+    // X = diag-ish: columns orthogonal with norms 1, 2, 3 → ‖X‖₂² = 9.
+    let mut m = Matrix::zeros(3, 3);
+    m.set(0, 0, 1.0);
+    m.set(1, 1, 2.0);
+    m.set(2, 2, 3.0);
+    let est = m.op_norm_sq_est(50, 7);
+    assert!((est - 9.0).abs() < 1e-6, "est {est}");
+}
+
+fn sparse_fixture() -> (Matrix, CscMatrix) {
+    // Sparse-ish matrix with exact zeros, a dense column, and an
+    // all-zero column.
+    let mut rng = crate::rng::Rng::new(11);
+    let dense = Matrix::from_fn(13, 7, |i, j| {
+        if j == 3 {
+            rng.gauss() // fully dense column
+        } else if j == 5 {
+            0.0 // empty column
+        } else if (i + j) % 3 == 0 {
+            rng.gauss()
+        } else {
+            0.0
+        }
+    });
+    let csc = CscMatrix::from_dense(&dense, 0.0);
+    (dense, csc)
+}
+
+#[test]
+fn csc_round_trips_through_dense() {
+    let (dense, csc) = sparse_fixture();
+    assert_eq!(csc.to_dense(), dense);
+    assert!(csc.nnz() < 13 * 7);
+    assert!((csc.density() - csc.nnz() as f64 / 91.0).abs() < 1e-15);
+}
+
+#[test]
+fn csc_matvec_and_t_matvec_match_dense() {
+    let (dense, csc) = sparse_fixture();
+    let mut rng = crate::rng::Rng::new(12);
+    let beta = rng.gauss_vec(7);
+    let r = rng.gauss_vec(13);
+    for (a, b) in csc.matvec(&beta).iter().zip(&dense.matvec(&beta)) {
+        assert!((a - b).abs() < 1e-14);
+    }
+    for (a, b) in csc.t_matvec(&r).iter().zip(&dense.t_matvec(&r)) {
+        assert!((a - b).abs() < 1e-14);
+    }
+}
+
+#[test]
+fn csc_col_stats_match_dense() {
+    let (dense, csc) = sparse_fixture();
+    for (a, b) in csc.col_norms().iter().zip(&dense.col_norms()) {
+        assert!((a - b).abs() < 1e-12);
+    }
+    for (j, m) in csc.col_means().iter().enumerate() {
+        let want = dense.col(j).iter().sum::<f64>() / 13.0;
+        assert!((m - want).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn csc_standardized_dense_matches_dense_standardization() {
+    let (dense, csc) = sparse_fixture();
+    let mut want = dense.clone();
+    let want_stats = want.standardize_l2();
+    let (got, got_stats) = csc.to_standardized_dense();
+    for j in 0..7 {
+        let (wm, ws) = want_stats[j];
+        let (gm, gs) = got_stats[j];
+        assert!((wm - gm).abs() < 1e-12, "col {j} mean");
+        assert!((ws - gs).abs() < 1e-12, "col {j} scale");
+        for i in 0..13 {
+            assert!(
+                (want.get(i, j) - got.get(i, j)).abs() < 1e-12,
+                "entry ({i}, {j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn csc_fingerprint_distinguishes_content_and_structure() {
+    let (_, csc) = sparse_fixture();
+    let fp = csc.fingerprint();
+    let mut other = csc.clone();
+    // Perturb one stored value: the fingerprint must move.
+    let perturbed = CscMatrix::new(
+        other.nrows(),
+        other.ncols(),
+        other.col_ptr.clone(),
+        other.row_idx.clone(),
+        {
+            other.values[0] += 1.0;
+            other.values.clone()
+        },
+    );
+    assert_ne!(fp, perturbed.fingerprint());
+}
+
+#[test]
+#[should_panic(expected = "strictly increasing")]
+fn csc_rejects_unsorted_rows() {
+    CscMatrix::new(3, 1, vec![0, 2], vec![1, 0], vec![1.0, 2.0]);
+}
+
+#[test]
+fn csc_from_dense_preserves_nan() {
+    let mut m = Matrix::zeros(3, 2);
+    m.set(1, 0, f64::NAN);
+    m.set(2, 1, 5.0);
+    let csc = CscMatrix::from_dense(&m, 0.0);
+    assert_eq!(csc.nnz(), 2, "NaN entry must be stored, not dropped");
+    assert!(csc.to_dense().get(1, 0).is_nan());
+}
+
+#[test]
+fn centered_sparse_kernels_match_dense_standardized() {
+    let (_, csc) = sparse_fixture();
+    let cs = CenteredSparse::from_csc(&csc);
+    let (dense_std, stats) = csc.to_standardized_dense();
+    assert_eq!(cs.centers(), stats);
+    let mut rng = crate::rng::Rng::new(21);
+    let beta = rng.gauss_vec(7);
+    let r = rng.gauss_vec(13);
+    for (a, b) in cs.matvec(&beta).iter().zip(&dense_std.matvec(&beta)) {
+        assert!((a - b).abs() < 1e-12, "matvec {a} vs {b}");
+    }
+    for (a, b) in cs.t_matvec(&r).iter().zip(&dense_std.t_matvec(&r)) {
+        assert!((a - b).abs() < 1e-12, "t_matvec {a} vs {b}");
+    }
+    let mut par = vec![9.0; 7];
+    cs.t_matvec_par_into(&r, 3, &mut par);
+    for (a, b) in par.iter().zip(&cs.t_matvec(&r)) {
+        assert!((a - b).abs() < 1e-14, "par t_matvec");
+    }
+    for (a, b) in cs.col_norms().iter().zip(&dense_std.col_norms()) {
+        assert!((a - b).abs() < 1e-12, "col norm {a} vs {b}");
+    }
+    for m in cs.col_means() {
+        assert!(m.abs() < 1e-12, "implied mean {m}");
+    }
+    let (est_s, est_d) = (cs.op_norm_sq_est(60, 7), dense_std.op_norm_sq_est(60, 7));
+    assert!((est_s - est_d).abs() < 1e-6 * (1.0 + est_d), "{est_s} vs {est_d}");
+}
+
+#[test]
+fn centered_sparse_gather_rows_matches_dense() {
+    let (_, csc) = sparse_fixture();
+    let cs = CenteredSparse::from_csc(&csc);
+    let dense_std = cs.to_dense();
+    for rows in [vec![0usize, 3, 7, 12], vec![5, 1, 1, 9]] {
+        let got = cs.gather_rows(&rows).to_dense();
+        let want = dense_std.gather_rows(&rows);
+        for j in 0..7 {
+            for i in 0..rows.len() {
+                assert!(
+                    (got.get(i, j) - want.get(i, j)).abs() < 1e-12,
+                    "rows {rows:?}, entry ({i}, {j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn centered_sparse_restandardize_matches_dense() {
+    // Gather fold rows, then re-standardize: the sparse affine
+    // recomposition must track the dense two-pass standardization of
+    // the same implied rows (the CV fold-plan contract).
+    let (_, csc) = sparse_fixture();
+    let cs = CenteredSparse::from_csc(&csc);
+    let rows: Vec<usize> = (0..13).filter(|i| i % 3 != 0).collect();
+    let mut sub_sparse = cs.gather_rows(&rows);
+    let mut sub_dense = cs.to_dense().gather_rows(&rows);
+    let got_centers = sub_sparse.standardize_l2();
+    let want_centers = sub_dense.standardize_l2();
+    for j in 0..7 {
+        let ((gm, gs), (wm, ws)) = (got_centers[j], want_centers[j]);
+        assert!((gm - wm).abs() < 1e-10, "col {j} mean {gm} vs {wm}");
+        assert!((gs - ws).abs() < 1e-10, "col {j} scale {gs} vs {ws}");
+    }
+    let got = sub_sparse.to_dense();
+    for j in 0..7 {
+        for i in 0..rows.len() {
+            assert!(
+                (got.get(i, j) - sub_dense.get(i, j)).abs() < 1e-10,
+                "entry ({i}, {j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn reduced_design_serves_sparse_sources() {
+    let (_, csc) = sparse_fixture();
+    let cs = CenteredSparse::from_csc(&csc);
+    let dense_std = cs.to_dense();
+    let mut rd = ReducedDesign::new();
+    for idx in [
+        vec![0usize, 2, 4],
+        vec![0, 2, 5, 6], // shares the [0, 2] prefix
+        vec![0, 2, 5, 6], // identical → cache hit
+        vec![1, 3],       // no shared prefix → rebuild
+    ] {
+        let got = match rd.update(&cs, &idx) {
+            DesignRef::Sparse(s) => s.to_dense(),
+            DesignRef::Dense(_) => panic!("sparse source produced a dense gather"),
+        };
+        let want = dense_std.gather_columns(&idx);
+        assert_eq!(got, want, "idx {idx:?}");
+        assert_eq!(rd.indices(), idx.as_slice());
+    }
+    assert_eq!(rd.hits, 1);
+    assert!(rd.kept_cols >= 2, "sparse prefix reuse never happened");
+    // Switching to a dense source invalidates and serves dense.
+    let got = rd.update(&dense_std, &[1, 3]).as_dense().unwrap().clone();
+    assert_eq!(got, dense_std.gather_columns(&[1, 3]));
+}
+
+#[test]
+fn dense_materialization_counter_ticks_on_densify_only() {
+    let (_, csc) = sparse_fixture();
+    let cs = CenteredSparse::from_csc(&csc);
+    let before = dense_materializations();
+    let mut out = vec![0.0; 13];
+    cs.matvec_into(&[0.1; 7], &mut out);
+    cs.t_matvec(&[0.1; 13]);
+    cs.col_norms();
+    assert_eq!(dense_materializations(), before, "kernels must not densify");
+    let _ = cs.to_dense();
+    let _ = csc.to_standardized_dense();
+    assert_eq!(dense_materializations(), before + 2);
+}
+
+#[test]
+fn dot_handles_remainders() {
+    let a: Vec<f64> = (0..7).map(|i| i as f64).collect();
+    assert_eq!(dot(&a, &a), 91.0);
+}
+
+#[test]
+fn l2_distance_zero_iff_equal() {
+    let a = [1.0, 2.0];
+    assert_eq!(l2_distance(&a, &a), 0.0);
+    assert!((l2_distance(&a, &[1.0, 4.0]) - 2.0).abs() < 1e-15);
+}

@@ -83,20 +83,40 @@ impl<'a> Loss<'a> {
     /// The "residual" `r` such that `∇f(β) = Xᵀ r / n`:
     /// squared → `Xβ − y`; logistic → `σ(Xβ) − y`.
     pub fn residual_from_xb(&self, xb: &[f64], out: &mut [f64]) {
+        self.residual_with_sum_from_xb(xb, out);
+    }
+
+    /// [`Loss::residual_from_xb`] fused with the residual sum `Σᵢ rᵢ` —
+    /// one pass instead of two. The sum accumulates in element order, so
+    /// it equals `out.iter().sum()` bit for bit; the centered-sparse
+    /// block kernels reuse it across a whole epoch of BCD block updates
+    /// ([`DesignRef::block_t_matvec_with_rsum_into`]) instead of
+    /// recomputing the O(n) reduction per block.
+    pub fn residual_with_sum_from_xb(&self, xb: &[f64], out: &mut [f64]) -> f64 {
+        let mut sr = 0.0;
         match self.kind {
             LossKind::Squared => {
                 for i in 0..xb.len() {
                     out[i] = xb[i] - self.y[i];
+                    sr += out[i];
                 }
             }
             LossKind::Logistic => {
                 for i in 0..xb.len() {
                     out[i] = sigmoid(xb[i]) - self.y[i];
+                    sr += out[i];
                 }
             }
         }
-        // Inert unless a test armed a fault plan (one relaxed atomic load).
-        crate::faults::poison_residual(out);
+        // Inert unless a test armed a fault plan (one relaxed atomic
+        // load). A fired fault mutates the residual after the fused
+        // accumulation, so recompute the sum to keep it consistent with
+        // the poisoned buffer (the guardrails must see the NaN either
+        // way).
+        if crate::faults::poison_residual(out) {
+            sr = out.iter().sum();
+        }
+        sr
     }
 
     /// Full gradient `∇f(β) = Xᵀ r(β) / n`.

@@ -153,7 +153,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let rule = parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?;
             let threads = dfr::parallel::default_threads();
             println!(
-                "fitting {} (p={}, n={}, m={}) with {} [solver {}, {} thread{}{}] ...",
+                "fitting {} (p={}, n={}, m={}) with {} [solver {}, {} thread{}{}, kernels {}] ...",
                 ds.name,
                 ds.p(),
                 ds.n(),
@@ -163,6 +163,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 threads,
                 if threads == 1 { "" } else { "s" },
                 if args.options.contains_key("threads") { ", --threads" } else { "" },
+                dfr::linalg::kernels::describe(),
             );
             if args.flag("xla") {
                 let xla_engine = XlaEngine::new("artifacts")?;
@@ -285,7 +286,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
             let engine = fitter.cv_engine();
             println!(
-                "cv({} folds, {} grid cell{}, {} thread{}{}, solver {}):",
+                "cv({} folds, {} grid cell{}, {} thread{}{}, solver {}, kernels {}):",
                 model.cv_folds,
                 cells.len(),
                 if cells.len() == 1 { "" } else { "s" },
@@ -293,6 +294,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 if engine.threads() == 1 { "" } else { "s" },
                 if args.options.contains_key("threads") { " via --threads" } else { "" },
                 model.path.solver.kind.name(),
+                dfr::linalg::kernels::describe(),
             );
             // Report the γ each cell actually fit with (an aSGL rule
             // forces γ=(0.1, 0.1) even when the spec says none).
@@ -363,8 +365,9 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             eprintln!(
                 "dfr serve: NDJSON on stdin/stdout (verbs fit|predict|cv|stats|evict|shutdown), \
                  {threads} thread{}, caches ≤{max_entries} entries / {max_mb} MiB each, \
-                 batches ≤{batch_max}",
+                 batches ≤{batch_max}, kernels {}",
                 if threads == 1 { "" } else { "s" },
+                dfr::linalg::kernels::describe(),
             );
             let opts = dfr::serve::ServeOptions { batch_max };
             let mut stdout = std::io::stdout();
@@ -380,6 +383,15 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "info" => {
             println!("dfr {}", env!("CARGO_PKG_VERSION"));
             println!("threads: {}", dfr::parallel::default_threads());
+            println!(
+                "kernels: {} (available: {})",
+                dfr::linalg::kernels::describe(),
+                dfr::linalg::kernels::available()
+                    .iter()
+                    .map(|b| b.name())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            );
             if XlaEngine::compiled_with_xla() {
                 match XlaEngine::new("artifacts") {
                     Ok(_) => println!("pjrt: cpu client OK"),

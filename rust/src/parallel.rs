@@ -9,12 +9,53 @@
 
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard, TryLockError};
+use std::sync::{Mutex, MutexGuard, OnceLock, TryLockError};
 
 /// Process-wide programmatic thread override (0 = unset). Set by the
 /// CLI's `--threads` flag; wins over the `DFR_THREADS` environment
 /// variable so a flag on the command line always beats ambient config.
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Default parallel break-even grain (see [`par_grain`]): a kernel whose
+/// work measure — `n·p` touched entries for dense matvecs, `nnz + n` for
+/// the centered-sparse kernels — falls below this stays serial. Scoped-
+/// thread spawn costs ~50–100 µs per worker and the kernels are memory-
+/// bandwidth bound, so threading only pays once the operands are far
+/// larger than L2 (measured in benches/perf_hotpath.rs).
+pub const DEFAULT_PAR_GRAIN: usize = 4_000_000;
+
+/// Process-wide programmatic grain override (0 = unset), for bench sweeps
+/// and tests that need to force the parallel legs on small fixtures.
+static PAR_GRAIN_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override [`par_grain`] programmatically. `Some(n)` pins the break-even
+/// work measure (min 1 — every kernel goes parallel); `None` restores the
+/// `DFR_PAR_GRAIN` / default resolution. Thresholds only pick a code
+/// path; every parallel kernel is exact at any grain, so flipping this
+/// never changes solver results on the scalar backend and stays within
+/// the equivalence tolerances on SIMD backends.
+pub fn set_par_grain_override(n: Option<usize>) {
+    PAR_GRAIN_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+}
+
+/// Parallel break-even grain consulted by the dense and sparse
+/// `t_matvec_par_into` / `matvec_par_into` / `col_sq_norms_into` kernels:
+/// the programmatic override ([`set_par_grain_override`]) wins, then
+/// `DFR_PAR_GRAIN` (read once per process), otherwise
+/// [`DEFAULT_PAR_GRAIN`].
+pub fn par_grain() -> usize {
+    let o = PAR_GRAIN_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DFR_PAR_GRAIN")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map_or(DEFAULT_PAR_GRAIN, |n| n.max(1))
+    })
+}
 
 /// Override [`default_threads`] programmatically (the CLI `--threads`
 /// hook). `Some(n)` pins the count (min 1); `None` clears the override.
@@ -226,6 +267,16 @@ mod tests {
         assert_eq!(default_threads(), 1);
         set_thread_override(None);
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn par_grain_override_wins_and_clears() {
+        set_par_grain_override(Some(123));
+        assert_eq!(par_grain(), 123);
+        set_par_grain_override(Some(0)); // clamped: grain of at least 1
+        assert_eq!(par_grain(), 1);
+        set_par_grain_override(None);
+        assert!(par_grain() >= 1);
     }
 
     #[test]

@@ -696,7 +696,7 @@ impl<'a> PathRunner<'a> {
         // Carried fitted values: the reduced fit IS the full-model Xβ
         // (excluded columns contribute nothing). Recomputed from the
         // reduced design (O(n·|O_v|)) so any Engine backend is safe.
-        x_red.matvec_into(&res.beta, &mut ws.xb);
+        x_red.matvec_par_into(&res.beta, crate::parallel::default_threads(), &mut ws.xb);
         debug_assert_eq!(
             ws.reduced.group_offsets(),
             rpen.groups.offsets(),

@@ -74,7 +74,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
 
         ws.z.copy_from_slice(beta0);
         ws.beta.copy_from_slice(beta0); // u_h; returned as-is if max_iters == 0
-        loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+        loss.x.matvec_par_into(&ws.beta, crate::parallel::default_threads(), &mut ws.xb_beta);
 
         Atos {
             loss,
@@ -99,7 +99,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
         self.penalty.pen_prox_group_into(&ws.z, self.gamma * self.lambda, &mut ws.beta_prev);
 
         // ∇f(u_g)
-        self.loss.x.matvec_into(&ws.beta_prev, &mut ws.xb);
+        self.loss.x.matvec_par_into(&ws.beta_prev, self.threads, &mut ws.xb);
         let f_ug = self.loss.value_from_xb(&ws.xb);
         self.loss.residual_from_xb(&ws.xb, &mut ws.r);
         self.loss.x.t_matvec_par_into(&ws.r, self.threads, &mut ws.grad);
@@ -116,7 +116,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Atos<'a, P> {
                 *c = 2.0 * ug - zj - self.gamma * gj;
             }
             self.penalty.pen_prox_l1_into(&ws.cand, self.gamma * self.lambda, &mut ws.beta); // u_h
-            self.loss.x.matvec_into(&ws.beta, &mut ws.xb_cand);
+            self.loss.x.matvec_par_into(&ws.beta, self.threads, &mut ws.xb_cand);
             let f_uh = self.loss.value_from_xb(&ws.xb_cand);
             let mut ip = 0.0;
             let mut dsq = 0.0;

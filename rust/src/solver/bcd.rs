@@ -17,7 +17,7 @@
 //! objective. The fitted values `Xβ` are **residual-carried**: each block
 //! update adjusts them through the group-block kernels
 //! ([`crate::linalg::DesignRef::block_axpy_into`] /
-//! [`crate::linalg::DesignRef::block_t_matvec_into`]), which cost
+//! [`crate::linalg::DesignRef::block_t_matvec_with_rsum_into`]), which cost
 //! O(n·p_g) dense and O(nnz_g + n) on centered-implicit sparse designs —
 //! never a full matvec per block. A periodic full refresh kills the
 //! accumulated floating-point drift.
@@ -115,7 +115,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Bcd<'a, P> {
         ws.beta.copy_from_slice(beta0);
         // Carried fitted values at the warm start (sparse warm starts skip
         // zero coordinates).
-        loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+        loss.x.matvec_par_into(&ws.beta, crate::parallel::default_threads(), &mut ws.xb_beta);
 
         let inv_n = 1.0 / n as f64;
         // Factor turning a block operator-norm bound `‖X_g‖₂²` into a
@@ -162,7 +162,11 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Bcd<'a, P> {
         self.since_refresh += 1;
         if self.since_refresh >= REFRESH_EVERY {
             // Re-anchor the carried fitted values on the exact matvec.
-            self.loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+            self.loss.x.matvec_par_into(
+                &ws.beta,
+                crate::parallel::default_threads(),
+                &mut ws.xb_beta,
+            );
             self.since_refresh = 0;
         }
         match self.phase {
@@ -242,9 +246,11 @@ impl<'a, P: ProxPenalty> Bcd<'a, P> {
         let r = self.penalty.pen_groups().range(g);
 
         // ∇_g f(β) through the carried fitted values: one residual pass
-        // plus one group-block transpose matvec.
-        self.loss.residual_from_xb(&ws.xb_beta, &mut ws.r);
-        self.loss.x.block_t_matvec_into(r.clone(), &ws.r, &mut ws.grad[r.clone()]);
+        // plus one group-block transpose matvec. The residual sum rides
+        // along for free and spares the centered-sparse kernel its O(n)
+        // `Σᵢ rᵢ` reduction per block.
+        let sr = self.loss.residual_with_sum_from_xb(&ws.xb_beta, &mut ws.r);
+        self.loss.x.block_t_matvec_with_rsum_into(r.clone(), &ws.r, sr, &mut ws.grad[r.clone()]);
         for gj in ws.grad[r.clone()].iter_mut() {
             *gj *= self.inv_n;
         }

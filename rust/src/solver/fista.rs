@@ -83,7 +83,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
         // Fitted values at the warm start (zero coordinates are skipped, so
         // a sparse warm start costs O(n·nnz)); kept in lock-step with
         // `beta` so the final objective needs no fresh `Xβ`.
-        loss.x.matvec_into(&ws.beta, &mut ws.xb_beta);
+        loss.x.matvec_par_into(&ws.beta, crate::parallel::default_threads(), &mut ws.xb_beta);
 
         Fista {
             loss,
@@ -105,7 +105,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
     fn step(&mut self, ws: &mut SolverWorkspace) {
         self.iterations += 1;
         // Gradient at the extrapolated point z.
-        self.loss.x.matvec_into(&ws.z, &mut ws.xb);
+        self.loss.x.matvec_par_into(&ws.z, self.threads, &mut ws.xb);
         let fz = self.loss.value_from_xb(&ws.xb);
         self.loss.residual_from_xb(&ws.xb, &mut ws.r);
         self.loss.x.t_matvec_par_into(&ws.r, self.threads, &mut ws.grad);
@@ -121,7 +121,7 @@ impl<'a, P: ProxPenalty> Solver<'a, P> for Fista<'a, P> {
             }
             self.penalty.pen_prox_into(&ws.cand, self.step * self.lambda, &mut ws.next);
             // Quadratic bound check: f(next) ≤ f(z) + ⟨∇f(z), d⟩ + ‖d‖²/(2·step).
-            self.loss.x.matvec_into(&ws.next, &mut ws.xb_cand);
+            self.loss.x.matvec_par_into(&ws.next, self.threads, &mut ws.xb_cand);
             let fnext = self.loss.value_from_xb(&ws.xb_cand);
             let mut ip = 0.0;
             let mut dsq = 0.0;

@@ -1,0 +1,297 @@
+//! Kernel-backend equivalence gates (the dispatch layer's safety net).
+//!
+//! Three contracts, each pinned here:
+//!
+//! 1. **Bit stability** — with the backend pinned to `scalar` (what
+//!    `DFR_KERNEL=scalar` resolves to; the env var itself is read once at
+//!    process start, so the tests pin through the programmatic override,
+//!    which takes the same dispatch path), every design kernel reproduces
+//!    the historical pre-dispatch implementations bit for bit.
+//! 2. **Dispatched accuracy** — the auto-selected backend (AVX2+FMA where
+//!    available) matches the scalar reference within `1e-12`-scale ℓ₂ on
+//!    randomized shapes: odd lengths, SIMD remainder lanes, all-zero
+//!    columns, zero coefficients, empty blocks.
+//! 3. **Chunking transparency** — parallel/blocked forms agree with their
+//!    serial counterparts: exactly where the kernel structure guarantees
+//!    it (column-chunked `Xᵀr`, sparse row-partitioned `X̃β`, carried
+//!    residual sums), within tolerance where SIMD lane alignment may
+//!    legitimately shift (dense row-chunked `Xβ` on the AVX2 backend).
+//!
+//! Tests that flip the process-global backend or `DFR_PAR_GRAIN` override
+//! serialize on one mutex and restore the defaults through a drop guard,
+//! so a failing assertion cannot leak a pinned backend into other tests.
+
+use dfr::linalg::kernels::{self, Backend};
+use dfr::linalg::{CenteredSparse, CscMatrix, Matrix};
+use dfr::rng::Rng;
+use std::sync::{Mutex, MutexGuard};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize the test and pin the dispatched backend; restores auto
+/// selection (and the parallel grain default) on drop, panics included.
+struct Pin {
+    _guard: MutexGuard<'static, ()>,
+}
+
+fn pin(b: Option<Backend>) -> Pin {
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    kernels::set_backend_override(b);
+    Pin { _guard: guard }
+}
+
+impl Drop for Pin {
+    fn drop(&mut self) {
+        kernels::set_backend_override(None);
+        dfr::parallel::set_par_grain_override(None);
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+fn assert_close(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let (mut dsq, mut nsq) = (0.0, 0.0);
+    for (x, y) in a.iter().zip(b) {
+        dsq += (x - y) * (x - y);
+        nsq += y * y;
+    }
+    let tol = 1e-12 * (1.0 + nsq.sqrt());
+    assert!(dsq.sqrt() <= tol, "{what}: ℓ₂ distance {} > {tol}", dsq.sqrt());
+}
+
+/// Random design with all-zero columns (every 5th) and a coefficient
+/// vector with exact zeros (every 4th) — the skip paths the blocked
+/// kernels special-case.
+fn dense_design(n: usize, p: usize, seed: u64) -> (Matrix, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Matrix::from_fn(n, p, |_, j| if j % 5 == 3 { 0.0 } else { rng.gauss() });
+    let r = rng.gauss_vec(n);
+    let beta: Vec<f64> = rng
+        .gauss_vec(p)
+        .iter()
+        .enumerate()
+        .map(|(j, v)| if j % 4 == 1 { 0.0 } else { *v })
+        .collect();
+    (x, r, beta)
+}
+
+fn sparse_design(n: usize, p: usize, seed: u64) -> CenteredSparse {
+    let mut rng = Rng::new(seed);
+    let xd = Matrix::from_fn(n, p, |_, j| {
+        if j % 6 == 5 || !rng.bernoulli(0.3) {
+            0.0
+        } else {
+            rng.gauss()
+        }
+    });
+    CenteredSparse::from_csc(&CscMatrix::from_dense(&xd, 0.0))
+}
+
+/// The shapes every gate sweeps: degenerate, sub-lane, one-past-lane,
+/// odd primes (SIMD remainders on both the 4-wide register blocks and the
+/// 4-lane vector loops), and a few square-ish sizes.
+const SHAPES: [(usize, usize); 8] =
+    [(1, 1), (2, 3), (5, 4), (7, 9), (17, 8), (64, 16), (103, 37), (250, 33)];
+
+// --- contract 1: DFR_KERNEL=scalar is bit-stable ------------------------
+
+/// The historical 4-accumulator dot, copied verbatim as an independent
+/// reference (if `kernels::scalar` drifts, this fails).
+fn ref_dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// The historical dense `Xβ`: skip-zero column axpys in index order.
+fn ref_matvec(x: &Matrix, beta: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; x.nrows()];
+    for (j, &b) in beta.iter().enumerate() {
+        if b != 0.0 {
+            for (o, &v) in out.iter_mut().zip(x.col(j)) {
+                *o += b * v;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn pinned_scalar_backend_reproduces_the_historical_kernels_bitwise() {
+    let _pin = pin(Some(Backend::Scalar));
+    assert_eq!(kernels::active(), Backend::Scalar);
+    for (si, &(n, p)) in SHAPES.iter().enumerate() {
+        let (x, r, beta) = dense_design(n, p, 500 + si as u64);
+        let what = format!("scalar pin {n}x{p}");
+
+        let mut xb = vec![0.0; n];
+        x.matvec_into(&beta, &mut xb);
+        assert_bits_eq(&xb, &ref_matvec(&x, &beta), &format!("{what} matvec"));
+
+        let mut g = vec![0.0; p];
+        x.t_matvec_into(&r, &mut g);
+        let ref_g: Vec<f64> = (0..p).map(|j| ref_dot(x.col(j), &r)).collect();
+        assert_bits_eq(&g, &ref_g, &format!("{what} t_matvec"));
+
+        let mut sq = vec![0.0; p];
+        x.col_sq_norms_into(&mut sq);
+        let ref_sq: Vec<f64> = (0..p).map(|j| ref_dot(x.col(j), x.col(j))).collect();
+        assert_bits_eq(&sq, &ref_sq, &format!("{what} col_sq_norms"));
+
+        // Free-function vector kernels route through the same dispatch.
+        assert_eq!(dfr::linalg::dot(&r, &r).to_bits(), ref_dot(&r, &r).to_bits(), "{what} dot");
+    }
+}
+
+// --- contract 2: dispatched ≡ scalar within tolerance -------------------
+
+#[test]
+fn dispatched_backend_matches_scalar_on_randomized_shapes() {
+    let _pin = pin(None);
+    for (si, &(n, p)) in SHAPES.iter().enumerate() {
+        let (x, r, beta) = dense_design(n, p, 900 + si as u64);
+        let what = format!("dispatched {n}x{p}");
+
+        // Scalar references through the explicit-backend entry points
+        // (no override flip mid-test).
+        let want_xb = ref_matvec(&x, &beta);
+        let want_g: Vec<f64> = (0..p).map(|j| ref_dot(x.col(j), &r)).collect();
+
+        let mut xb = vec![0.0; n];
+        x.matvec_into(&beta, &mut xb);
+        assert_close(&xb, &want_xb, &format!("{what} matvec"));
+
+        let mut g = vec![0.0; p];
+        x.t_matvec_into(&r, &mut g);
+        assert_close(&g, &want_g, &format!("{what} t_matvec"));
+
+        // Block kernels over an interior window (plus the empty block).
+        let cols = (p / 3)..(p - p / 4).max(p / 3);
+        let mut blk = vec![0.0; cols.len()];
+        x.block_t_matvec_into(cols.clone(), &r, &mut blk);
+        assert_close(&blk, &want_g[cols.clone()], &format!("{what} block_t_matvec"));
+
+        let mut acc = r.clone();
+        x.block_axpy_into(cols.clone(), &beta[cols.clone()], &mut acc);
+        let mut want_acc = r.clone();
+        for (k, &b) in beta[cols.clone()].iter().enumerate() {
+            if b != 0.0 {
+                for (o, &v) in want_acc.iter_mut().zip(x.col(cols.start + k)) {
+                    *o += b * v;
+                }
+            }
+        }
+        assert_close(&acc, &want_acc, &format!("{what} block_axpy"));
+
+        let mut empty: [f64; 0] = [];
+        x.block_t_matvec_into(0..0, &r, &mut empty);
+        x.block_axpy_into(0..0, &[], &mut acc);
+        assert_close(&acc, &want_acc, &format!("{what} empty block_axpy is a no-op"));
+
+        let mut sq = vec![0.0; p];
+        x.col_sq_norms_into(&mut sq);
+        let want_sq: Vec<f64> = (0..p).map(|j| ref_dot(x.col(j), x.col(j))).collect();
+        assert_close(&sq, &want_sq, &format!("{what} col_sq_norms"));
+    }
+}
+
+#[test]
+fn unavailable_backend_requests_degrade_to_a_runnable_one() {
+    let _pin = pin(Some(Backend::Avx2));
+    let active = kernels::active();
+    assert!(active.is_available(), "active backend {active:?} must be runnable");
+    if !Backend::Avx2.is_available() {
+        assert_eq!(active, Backend::Scalar, "unavailable pin must clamp to scalar");
+    }
+    assert_eq!(kernels::parse_choice("scalar"), Ok(Some(Backend::Scalar)));
+    assert!(kernels::parse_choice("neon").is_err());
+}
+
+// --- contract 3: chunking transparency ----------------------------------
+
+#[test]
+fn parallel_and_carried_sum_forms_match_serial() {
+    for pin_choice in [Some(Backend::Scalar), None] {
+        let _pin = pin(pin_choice);
+        // Grain 1 forces the parallel paths even at test sizes.
+        dfr::parallel::set_par_grain_override(Some(1));
+        let label = match pin_choice {
+            Some(_) => "scalar",
+            None => "dispatched",
+        };
+        for (si, &(n, p)) in SHAPES.iter().enumerate() {
+            let (x, r, beta) = dense_design(n, p, 1300 + si as u64);
+            let what = format!("{label} {n}x{p}");
+
+            // Column-chunked Xᵀr is exactly serial on every backend
+            // (dot4 lanes are bitwise single dots).
+            let mut serial = vec![0.0; p];
+            x.t_matvec_into(&r, &mut serial);
+            let mut par = vec![0.0; p];
+            x.t_matvec_par_into(&r, 4, &mut par);
+            assert_bits_eq(&par, &serial, &format!("{what} t_matvec par"));
+
+            // Row-chunked Xβ: bitwise on scalar (chunk-invariant axpy
+            // loops), tolerance on SIMD (lane alignment shifts at chunk
+            // boundaries).
+            let mut serial_xb = vec![0.0; n];
+            x.matvec_into(&beta, &mut serial_xb);
+            let mut par_xb = vec![0.0; n];
+            x.matvec_par_into(&beta, 4, &mut par_xb);
+            match pin_choice {
+                Some(_) => assert_bits_eq(&par_xb, &serial_xb, &format!("{what} matvec par")),
+                None => assert_close(&par_xb, &serial_xb, &format!("{what} matvec par")),
+            }
+
+            // Carried residual sum: dense ignores it, sparse skips its
+            // O(n) pass — both must equal the plain block kernel bitwise.
+            let sr: f64 = r.iter().sum();
+            let cols = 0..p;
+            let mut plain = vec![0.0; p];
+            x.block_t_matvec_into(cols.clone(), &r, &mut plain);
+            let mut carried = vec![0.0; p];
+            x.block_t_matvec_with_rsum_into(cols.clone(), &r, 123.456, &mut carried);
+            assert_bits_eq(&carried, &plain, &format!("{what} dense rsum ignored"));
+
+            let xs = sparse_design(n, p, 1700 + si as u64);
+            let mut s_plain = vec![0.0; p];
+            xs.block_t_matvec_into(cols.clone(), &r, &mut s_plain);
+            let mut s_carried = vec![0.0; p];
+            xs.block_t_matvec_with_rsum_into(cols.clone(), &r, sr, &mut s_carried);
+            assert_bits_eq(&s_carried, &s_plain, &format!("{what} sparse rsum"));
+
+            // Sparse parallel forms are bitwise serial at any chunking:
+            // row-disjoint X̃β partitions, column-chunked X̃ᵀr.
+            let mut s_serial = vec![0.0; n];
+            xs.matvec_into(&beta, &mut s_serial);
+            let mut s_par = vec![0.0; n];
+            xs.matvec_par_into(&beta, 4, &mut s_par);
+            assert_bits_eq(&s_par, &s_serial, &format!("{what} sparse matvec par"));
+
+            let mut s_g = vec![0.0; p];
+            xs.t_matvec_into(&r, &mut s_g);
+            let mut s_g_par = vec![0.0; p];
+            xs.t_matvec_par_into(&r, 4, &mut s_g_par);
+            assert_bits_eq(&s_g_par, &s_g, &format!("{what} sparse t_matvec par"));
+        }
+        dfr::parallel::set_par_grain_override(None);
+    }
+}
