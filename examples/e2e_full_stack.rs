@@ -3,23 +3,23 @@
 //! 50-point path to 0.1·λ₁).
 //!
 //! Layers exercised:
-//!   L1  Pallas mat-vec kernels  —  inside the gradient artifacts
-//!   L2  JAX gradient graphs     —  AOT-lowered to artifacts/grad_*_200x1000
+//!   L1  dispatched SIMD kernels —  dot/axpy/gather behind `DFR_KERNEL`
+//!   L2  design kernels          —  dense, centered-sparse, and the
+//!                                  out-of-core streaming store (`dfr pack`)
 //!   L3  Rust coordinator        —  DFR screening, KKT loop, warm-started
-//!                                  pathwise FISTA, PJRT gradient serving
+//!                                  pathwise FISTA, persistent serving
 //!
 //! Reports the paper's headline metrics (improvement factor, input
 //! proportion, ℓ₂ distance to no-screen, KKT violations) for every rule,
-//! and verifies the XLA-served fit matches the native fit. Results are
-//! recorded in EXPERIMENTS.md.
+//! and verifies the out-of-core fit matches the in-memory fit. Results
+//! are recorded in EXPERIMENTS.md.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_full_stack
+//! cargo run --release --example e2e_full_stack
 //! ```
 
 use dfr::path::compare_with_no_screen;
 use dfr::prelude::*;
-use dfr::runtime::XlaEngine;
 
 fn main() -> anyhow::Result<()> {
     // Table A1 defaults.
@@ -43,30 +43,40 @@ fn main() -> anyhow::Result<()> {
     };
 
     // --- Stage 1: three-layer wiring check -------------------------------
-    // DFR fit with screening gradients served by PJRT from the AOT
-    // artifacts, verified against the all-native fit.
-    println!("\n[stage 1] PJRT-served DFR fit vs native DFR fit");
+    // The same DFR fit streamed out-of-core from a pack file, verified
+    // against the all-in-memory fit. The design matrix never sits in RAM:
+    // only `DFR_OOC_BLOCK`-sized column blocks are resident.
+    println!("\n[stage 1] out-of-core DFR fit vs in-memory DFR fit");
     let native = PathRunner::new(ds, cfg.clone()).rule(RuleKind::DfrSgl).run()?;
-    match XlaEngine::new("artifacts") {
-        Ok(eng) if eng.has_artifact("grad_sq_200x1000") => {
-            let xla_fit = PathRunner::new(ds, cfg.clone())
-                .rule(RuleKind::DfrSgl)
-                .engine(&eng)
-                .run()?;
-            let stats = eng.stats();
-            let dist = xla_fit.l2_distance_to(&native);
-            println!(
-                "  xla gradients: {} calls, {} fallbacks | ℓ₂(native, xla) = {:.2e} | \
-                 native {:.2}s vs xla {:.2}s",
-                stats.xla_gradient_calls,
-                stats.native_fallbacks,
-                dist,
-                native.metrics.total_seconds,
-                xla_fit.metrics.total_seconds,
-            );
-            assert!(dist < 1e-6, "XLA and native fits disagree");
-        }
-        _ => println!("  (artifacts/ missing — run `make artifacts`; skipping PJRT stage)"),
+    {
+        let pack = std::env::temp_dir().join(format!("dfr-e2e-{}.dfrpack", std::process::id()));
+        // Pack the raw (pre-standardization) design: a same-seed twin
+        // with `standardize: false` regenerates exactly the matrix the
+        // in-memory pipeline standardized, so the pack-time stats match
+        // the ingest-time stats bit for bit.
+        let raw =
+            SyntheticConfig { standardize: false, ..SyntheticConfig::default() }.generate(2025);
+        let ooc = dfr::linalg::ooc::pack_matrix(raw.dataset.x.dense(), &pack)?;
+        dfr::linalg::ooc_reset_peak();
+        let mut ooc_ds = ds.clone();
+        ooc_ds.x = DesignOps::Ooc(ooc.clone());
+        let ooc_fit = PathRunner::new(&ooc_ds, cfg.clone())
+            .rule(RuleKind::DfrSgl)
+            .fixed_path(native.lambdas.clone())
+            .run()?;
+        let dist = ooc_fit.l2_distance_to(&native);
+        println!(
+            "  ℓ₂(in-memory, ooc) = {:.2e} | block {} cols | peak resident {} KiB vs \
+             dense design {} KiB | in-memory {:.2}s vs ooc {:.2}s",
+            dist,
+            ooc.block_cols(),
+            dfr::linalg::ooc_peak_resident_bytes() >> 10,
+            (ds.n() * ds.p() * 8) >> 10,
+            native.metrics.total_seconds,
+            ooc_fit.metrics.total_seconds,
+        );
+        assert!(dist < 1e-8, "out-of-core and in-memory fits disagree");
+        let _ = std::fs::remove_file(&pack);
     }
 
     // --- Stage 2: the paper's headline table ------------------------------

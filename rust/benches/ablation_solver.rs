@@ -3,15 +3,14 @@
 //! fitting algorithm". Runs the default synthetic workload under the
 //! three inner solvers (FISTA with the exact SGL prox; ATOS, the paper's
 //! algorithm; group-major BCD, the `sparsegl`-style block solver) ×
-//! {DFR, sparsegl, no-screen}, a solver × kernel × group-regime section
-//! (dense vs 5%-density centered-sparse, small vs large groups — the
-//! regimes where block updates pay differently), plus the XLA-served
-//! engine when artifacts exist.
+//! {DFR, sparsegl, no-screen}, plus a solver × kernel × group-regime
+//! section (dense vs 5%-density centered-sparse, small vs large groups —
+//! the regimes where block updates pay differently).
 //!
 //! Expected: improvement factors agree across solvers within noise; the
 //! absolute times differ (FISTA's exact prox usually converges in fewer
 //! iterations; BCD wins when few groups are active and on sparse column
-//! blocks); engine choice does not change solutions.
+//! blocks); kernel choice does not change solutions.
 
 mod common;
 
@@ -21,7 +20,6 @@ use dfr::linalg::{CenteredSparse, CscMatrix, DesignOps, Matrix};
 use dfr::path::{PathConfig, PathRunner};
 use dfr::prelude::Groups;
 use dfr::rng::Rng;
-use dfr::runtime::XlaEngine;
 use dfr::screen::RuleKind;
 use dfr::solver::{SolverConfig, SolverKind};
 
@@ -141,42 +139,5 @@ fn main() {
         }
     }
 
-    // Engine ablation: native vs PJRT-served (gradients + bucketed solver)
-    // on the Table A1 shape with artifacts present.
-    if let Ok(eng) = XlaEngine::new("artifacts") {
-        if eng.has_artifact("grad_sq_200x1000") {
-            for rep in 0..common::repeats() {
-                let data = SyntheticConfig { n: 200, p: 1000, ..SyntheticConfig::default() }
-                    .generate(12_000 + rep as u64);
-                let cfg = PathConfig { path_len: 20, ..PathConfig::default() };
-                let native =
-                    PathRunner::new(&data.dataset, cfg.clone()).rule(RuleKind::DfrSgl).run().unwrap();
-                let xla = PathRunner::new(&data.dataset, cfg)
-                    .rule(RuleKind::DfrSgl)
-                    .engine(&eng)
-                    .fixed_path(native.lambdas.clone())
-                    .run()
-                    .unwrap();
-                table.push(
-                    "path seconds",
-                    "engine=native",
-                    "DFR-SGL",
-                    native.metrics.total_seconds,
-                );
-                table.push("path seconds", "engine=pjrt", "DFR-SGL", xla.metrics.total_seconds);
-                table.push(
-                    "l2 distance native vs pjrt",
-                    "engine=pjrt",
-                    "DFR-SGL",
-                    xla.l2_distance_to(&native),
-                );
-            }
-            let s = eng.stats();
-            println!(
-                "[pjrt] {} gradient calls, {} solver chunks, {} fallbacks",
-                s.xla_gradient_calls, s.xla_solver_chunks, s.native_fallbacks
-            );
-        }
-    }
     table.finish("ablation_solver");
 }

@@ -1,0 +1,133 @@
+//! **Out-of-core streaming bench**: the same DFR pathwise fit solved from
+//! the in-memory dense standardized design and from a `.dfrpack` file
+//! streamed in column blocks, on a wide design (n ≪ p — the biobank
+//! shape the out-of-core store targets).
+//!
+//! Reported per scale:
+//!   * pack seconds            — one-time `dfr pack` ingest cost
+//!   * path seconds            — wall time of the full screened λ path
+//!   * peak design MiB         — bytes of design resident at once
+//!                               (dense: the whole n×p matrix; ooc: the
+//!                               streaming-buffer high watermark)
+//!   * process VmHWM MiB       — the kernel's peak-RSS witness
+//!                               (/proc/self/status; 0 off Linux)
+//!   * ℓ₂(ooc, dense)          — solution equivalence on the shared path
+//!
+//! Expected: identical solutions (ℓ₂ ≈ 1e-12); ooc pays a disk-read
+//! multiple on wall time but holds two blocks instead of the full design.
+//!
+//! ```bash
+//! cargo bench --bench ooc_path            # smoke scale
+//! DFR_BENCH_FULL=1 cargo bench --bench ooc_path
+//! DFR_OOC_BLOCK=256 cargo bench --bench ooc_path   # force narrow blocks
+//! ```
+
+mod common;
+
+use dfr::bench_harness::BenchTable;
+use dfr::data::{Dataset, Response};
+use dfr::linalg::{ooc_peak_resident_bytes, ooc_reset_peak, DesignOps, Matrix};
+use dfr::path::{PathConfig, PathRunner};
+use dfr::prelude::Groups;
+use dfr::rng::Rng;
+use dfr::screen::RuleKind;
+
+/// Peak resident set size of this process in bytes (Linux VmHWM), 0 where
+/// /proc is unavailable. A process-lifetime high watermark: it can only
+/// ever grow, so the interesting comparison is against the dense design's
+/// footprint, not between rows.
+fn vm_hwm_bytes() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines().find(|l| l.starts_with("VmHWM:")).and_then(|l| {
+                l.split_whitespace().nth(1).and_then(|kb| kb.parse::<usize>().ok())
+            })
+        })
+        .map(|kb| kb * 1024)
+        .unwrap_or(0)
+}
+
+/// Wide raw design + sparse-signal response, grouped in tens.
+fn workload(seed: u64, n: usize, p: usize) -> (Matrix, Vec<f64>, Groups) {
+    let mut rng = Rng::new(seed);
+    let raw = Matrix::from_fn(n, p, |_, _| rng.gauss());
+    let beta_true: Vec<f64> =
+        (0..p).map(|j| if j % 97 == 0 { rng.normal(0.0, 2.0) } else { 0.0 }).collect();
+    let mut y: Vec<f64> = raw.matvec(&beta_true).iter().map(|v| v + rng.normal(0.0, 0.3)).collect();
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    y.iter_mut().for_each(|v| *v -= mean);
+    (raw, y, Groups::even(p, 10))
+}
+
+fn main() {
+    let full = dfr::bench_harness::full_scale();
+    // Wide shapes: the regime where the dense design dominates RAM.
+    let scales: &[(usize, usize)] = if full {
+        &[(200, 20_000), (200, 100_000)]
+    } else {
+        &[(100, 2_000), (200, 5_000)]
+    };
+    let path_len = if full { 30 } else { 10 };
+    let mib = |bytes: usize| bytes as f64 / (1024.0 * 1024.0);
+
+    let mut table = BenchTable::new("Out-of-core streaming vs in-memory dense — DFR-SGL path");
+    for &(n, p) in scales {
+        let setting = format!("n={n} p={p}");
+        for rep in 0..common::repeats() {
+            let (raw, y, groups) = workload(17_000 + rep as u64, n, p);
+            let cfg = PathConfig { path_len, ..PathConfig::default() };
+
+            let mut dense_std = raw.clone();
+            dense_std.standardize_l2();
+            let dense_ds = Dataset {
+                x: dense_std.into(),
+                y: y.clone(),
+                groups: groups.clone(),
+                response: Response::Linear,
+                name: "ooc-bench-dense".into(),
+            };
+            let dense_fit = PathRunner::new(&dense_ds, cfg.clone())
+                .rule(RuleKind::DfrSgl)
+                .run()
+                .expect("dense fit failed");
+            table.push("path seconds", &setting, "dense", dense_fit.metrics.total_seconds);
+            table.push("peak design MiB", &setting, "dense", mib(n * p * 8));
+
+            let pack = std::env::temp_dir()
+                .join(format!("dfr-bench-{}-{n}x{p}-{rep}.dfrpack", std::process::id()));
+            let t0 = std::time::Instant::now();
+            let ooc = dfr::linalg::ooc::pack_matrix(&raw, &pack).expect("pack failed");
+            table.push("pack seconds", &setting, "ooc", t0.elapsed().as_secs_f64());
+            // Free the in-memory copies so VmHWM reflects the streaming fit.
+            drop(dense_ds);
+            drop(raw);
+
+            let ooc_ds = Dataset {
+                x: DesignOps::Ooc(ooc.clone()),
+                y,
+                groups,
+                response: Response::Linear,
+                name: "ooc-bench-stream".into(),
+            };
+            ooc_reset_peak();
+            let ooc_fit = PathRunner::new(&ooc_ds, cfg)
+                .rule(RuleKind::DfrSgl)
+                .fixed_path(dense_fit.lambdas.clone())
+                .run()
+                .expect("ooc fit failed");
+            table.push("path seconds", &setting, "ooc", ooc_fit.metrics.total_seconds);
+            table.push("peak design MiB", &setting, "ooc", mib(ooc_peak_resident_bytes()));
+            table.push("block cols", &setting, "ooc", ooc.block_cols() as f64);
+            table.push(
+                "l2 distance ooc vs dense",
+                &setting,
+                "ooc",
+                ooc_fit.l2_distance_to(&dense_fit),
+            );
+            table.push("process VmHWM MiB", &setting, "ooc", mib(vm_hwm_bytes()));
+            let _ = std::fs::remove_file(&pack);
+        }
+    }
+    table.finish("ooc_path");
+}

@@ -2,9 +2,7 @@
 //! behind every pathwise fit.
 //!
 //! * L3 native gradient `Xᵀr/n` — serial vs threaded (the dominant cost of
-//!   screening + KKT checks when PJRT is not used),
-//! * L1/L2 PJRT gradient via the Pallas artifacts (and, when present, the
-//!   `--no-pallas` plain-dot artifacts for the lowering ablation),
+//!   screening + KKT checks),
 //! * ε-norm solver, SGL prox, one full screening pass, one FISTA step —
 //!   the L3 coordinator costs that must stay below the matvec,
 //! * the full pathwise DFR fit — the headline number: persistent-workspace
@@ -23,7 +21,6 @@ use dfr::norms::epsilon_norm;
 use dfr::path::{PathConfig, PathRunner, PathWorkspace};
 use dfr::penalty::Penalty;
 use dfr::rng::Rng;
-use dfr::runtime::XlaEngine;
 use dfr::screen::{screen, RuleKind, ScreenContext};
 use dfr::solver::SolverWorkspace;
 
@@ -54,33 +51,6 @@ fn main() {
             "native",
             acc.mean(),
         );
-    }
-
-    // --- PJRT gradient (Pallas artifacts) ---
-    if let Ok(eng) = XlaEngine::new("artifacts") {
-        if eng.has_artifact(&format!("grad_sq_{n}x{p}")) {
-            // Warm the executable + device design buffer first.
-            let _ = eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta);
-            let acc = time_stat(warm, reps, || {
-                std::hint::black_box(
-                    eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta).unwrap(),
-                );
-            });
-            table.push("gradient (pjrt, pallas artifact)", &setting, "xla", acc.mean());
-        } else {
-            println!("[perf] artifacts missing — run `make artifacts` for the PJRT rows");
-        }
-    }
-    if let Ok(eng) = XlaEngine::new("artifacts-plain") {
-        if eng.has_artifact(&format!("grad_sq_{n}x{p}")) {
-            let _ = eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta);
-            let acc = time_stat(warm, reps, || {
-                std::hint::black_box(
-                    eng.gradient_via_xla(LossKind::Squared, &ds.x, &ds.y, &beta).unwrap(),
-                );
-            });
-            table.push("gradient (pjrt, plain-dot artifact)", &setting, "xla", acc.mean());
-        }
     }
 
     // --- L3 coordinator pieces ---

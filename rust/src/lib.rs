@@ -13,12 +13,11 @@
 //! | [`screen`] | DFR bi-level strong rules for SGL (Eqs. 5–6) and aSGL (Eqs. 7–8), `sparsegl` group rule, GAP-safe seq/dyn, no-screen baseline, KKT checks | §2.2, §2.4, App. C |
 //! | [`path`] | Algorithm 1/A1: candidates → optimization set → reduced solve → KKT loop; persistent [`path::PathWorkspace`] hot loop | §2.4, App. D.1 metrics |
 //! | [`cv`] | Workspace-pooled k-fold CV and `(α, γ)` grid search with shared fold plans, raw-scale fold scoring | §1.2, App. D.7, Table A36 |
-//! | [`model_api`] | [`model_api::Design`] input abstraction (dense/row/column/CSC-sparse layouts) + persistent [`model_api::SglFitter`] serving API; CSC designs below the [`model_api::sparse_density_threshold`] solve end-to-end on the centered-implicit sparse kernels ([`linalg::CenteredSparse`]) | — |
+//! | [`model_api`] | [`model_api::Design`] input abstraction (dense/row/column/CSC-sparse/out-of-core layouts) + persistent [`model_api::SglFitter`] serving API; CSC designs below the [`model_api::sparse_density_threshold`] solve end-to-end on the centered-implicit sparse kernels ([`linalg::CenteredSparse`]) | — |
 //! | [`data`] | Synthetic designs, interaction expansion, surrogate real datasets | §3.1, §4, Table 1, Table A37 |
-//! | [`runtime`] | PJRT execution of AOT-compiled JAX/Pallas artifacts for the dense hot path | — |
 //! | [`serve`] | Multi-tenant serving: [`serve::FitterPool`] with content-hash-keyed LRU caches shared across tenants ([`lru::KeyedLru`]), round-robin fair admission, coalesced batch prediction, and the `dfr serve` NDJSON loop with live per-verb latency stats | — |
 //! | [`metrics`], [`bench_harness`], [`report`] | Improvement factor, input proportion, paper-style tables, `BENCH_*.json` | §3, App. D.1 |
-//! | [`linalg`] | Design kernels behind [`linalg::DesignRef`]: dense [`linalg::Matrix`] + centered-implicit [`linalg::CenteredSparse`], cache-blocked and row-parallel matvecs on runtime-dispatched compute kernels ([`linalg::kernels`]: scalar / AVX2+FMA, `DFR_KERNEL`) | — |
+//! | [`linalg`] | Design kernels behind [`linalg::DesignRef`]: dense [`linalg::Matrix`], centered-implicit [`linalg::CenteredSparse`], and chunk-file-streaming [`linalg::OocDesign`] (`dfr pack`, `DFR_OOC_BLOCK`), cache-blocked and row-parallel matvecs on runtime-dispatched compute kernels ([`linalg::kernels`]: scalar / AVX2+FMA / NEON, `DFR_KERNEL`) | — |
 //! | [`groups`], [`rng`], [`parallel`], [`cli`], [`testkit`] | Offline substrates (no external crates) | — |
 //!
 //! ## Quickstart
@@ -107,7 +106,6 @@ pub mod path;
 pub mod penalty;
 pub mod report;
 pub mod rng;
-pub mod runtime;
 pub mod screen;
 pub mod serve;
 pub mod solver;
@@ -120,7 +118,7 @@ pub mod prelude {
     pub use crate::data::{Dataset, InteractionOrder, Response, SyntheticConfig};
     pub use crate::error::DfrError;
     pub use crate::groups::Groups;
-    pub use crate::linalg::{CenteredSparse, CscMatrix, DesignOps, DesignRef, Matrix};
+    pub use crate::linalg::{CenteredSparse, CscMatrix, DesignOps, DesignRef, Matrix, OocDesign};
     pub use crate::loss::LossKind;
     pub use crate::lru::KeyedLru;
     pub use crate::metrics::{LatencyHistogram, PathMetrics, PointMetrics};

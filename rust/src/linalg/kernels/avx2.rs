@@ -145,6 +145,32 @@ pub unsafe fn axpy4(a: [f64; 4], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64],
     }
 }
 
+/// Indexed gather `dst[k] = src[idx[k]]` through the hardware
+/// `vgatherqpd` instruction (4 indices loaded as one `__m256i`, scale 8),
+/// with an unchecked scalar remainder.
+///
+/// # Safety
+/// Caller must have verified `avx2` support at runtime; every `idx[k]`
+/// must be `< src.len()` and `idx.len() == dst.len()`. (usize is 64-bit
+/// on every `x86_64` target, so indices load directly as i64 lanes.)
+#[target_feature(enable = "avx2")]
+pub unsafe fn gather(src: &[f64], idx: &[usize], dst: &mut [f64]) {
+    debug_assert_eq!(idx.len(), dst.len());
+    let n = idx.len();
+    let chunks = n / 4;
+    let base = src.as_ptr();
+    let ip = idx.as_ptr();
+    let dp = dst.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let vi = _mm256_loadu_si256(ip.add(i).cast());
+        _mm256_storeu_pd(dp.add(i), _mm256_i64gather_pd::<8>(base, vi));
+    }
+    for i in 4 * chunks..n {
+        *dp.add(i) = *base.add(*ip.add(i));
+    }
+}
+
 /// ℓ₁ norm: 4-lane |v| accumulator + scalar remainder.
 ///
 /// # Safety

@@ -2,13 +2,15 @@
 //!
 //! One binary runs everywhere: the crate ships a [`scalar`] reference
 //! backend (the exact historical kernels — `DFR_KERNEL=scalar` is the
-//! bit-stability anchor) and an AVX2+FMA backend (`x86_64` only), and
-//! picks between them **once** at first use via
-//! `is_x86_feature_detected!`. The choice can be pinned three ways, in
-//! priority order:
+//! bit-stability anchor), an AVX2+FMA backend (`x86_64` only, detected
+//! once via `is_x86_feature_detected!`), and a NEON backend (`aarch64`
+//! only — NEON is baseline on AArch64, so it is unconditionally
+//! available there). The choice can be pinned three ways, in priority
+//! order:
 //!
 //! 1. [`set_backend_override`] — programmatic (tests, benches);
-//! 2. `DFR_KERNEL=auto|scalar|avx2` — environment (read once, cached);
+//! 2. `DFR_KERNEL=auto|scalar|avx2|neon` — environment (read once,
+//!    cached);
 //! 3. auto-detection — the fastest backend the CPU supports.
 //!
 //! Requesting an unavailable backend (e.g. `avx2` on a machine without
@@ -22,6 +24,8 @@ use std::sync::OnceLock;
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
 pub(crate) mod scalar;
 
 /// A compute backend for the dense vector kernels.
@@ -32,14 +36,17 @@ pub enum Backend {
     Scalar,
     /// `std::arch` AVX2 + FMA intrinsics (`x86_64` with runtime support).
     Avx2,
+    /// `std::arch` NEON intrinsics (`aarch64`, where NEON is baseline).
+    Neon,
 }
 
 impl Backend {
-    /// Lower-case display/parse name (`scalar` / `avx2`).
+    /// Lower-case display/parse name (`scalar` / `avx2` / `neon`).
     pub fn name(self) -> &'static str {
         match self {
             Backend::Scalar => "scalar",
             Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
         }
     }
 
@@ -49,6 +56,7 @@ impl Backend {
         match self {
             Backend::Scalar => true,
             Backend::Avx2 => avx2_ok(),
+            Backend::Neon => cfg!(target_arch = "aarch64"),
         }
     }
 
@@ -81,6 +89,9 @@ fn avx2_ok() -> bool {
 /// Backends the current CPU can actually run, fastest last.
 pub fn available() -> Vec<Backend> {
     let mut v = vec![Backend::Scalar];
+    if Backend::Neon.is_available() {
+        v.push(Backend::Neon);
+    }
     if Backend::Avx2.is_available() {
         v.push(Backend::Avx2);
     }
@@ -91,6 +102,8 @@ pub fn available() -> Vec<Backend> {
 pub fn best_available() -> Backend {
     if Backend::Avx2.is_available() {
         Backend::Avx2
+    } else if Backend::Neon.is_available() {
+        Backend::Neon
     } else {
         Backend::Scalar
     }
@@ -103,7 +116,10 @@ pub fn parse_choice(s: &str) -> Result<Option<Backend>, String> {
         "" | "auto" => Ok(None),
         "scalar" => Ok(Some(Backend::Scalar)),
         "avx2" => Ok(Some(Backend::Avx2)),
-        other => Err(format!("unknown kernel backend `{other}` (expected auto|scalar|avx2)")),
+        "neon" => Ok(Some(Backend::Neon)),
+        other => {
+            Err(format!("unknown kernel backend `{other}` (expected auto|scalar|avx2|neon)"))
+        }
     }
 }
 
@@ -119,6 +135,7 @@ pub fn set_backend_override(b: Option<Backend>) {
         None => 0,
         Some(Backend::Scalar) => 1,
         Some(Backend::Avx2) => 2,
+        Some(Backend::Neon) => 3,
     };
     BACKEND_OVERRIDE.store(code, Ordering::Relaxed);
 }
@@ -140,6 +157,7 @@ pub fn active() -> Backend {
     match BACKEND_OVERRIDE.load(Ordering::Relaxed) {
         1 => Backend::Scalar,
         2 => Backend::Avx2.effective(),
+        3 => Backend::Neon.effective(),
         _ => match env_choice() {
             Some(b) => b.effective(),
             None => best_available(),
@@ -152,7 +170,7 @@ pub fn active() -> Backend {
 /// `scalar (DFR_KERNEL)`.
 pub fn describe() -> String {
     let source = match BACKEND_OVERRIDE.load(Ordering::Relaxed) {
-        1 | 2 => "pinned",
+        1 | 2 | 3 => "pinned",
         _ => match env_choice() {
             Some(_) => "DFR_KERNEL",
             None => "auto",
@@ -172,6 +190,12 @@ pub fn dot_with(backend: Backend, a: &[f64], b: &[f64]) -> f64 {
         Backend::Avx2 => unsafe { avx2::dot(a, b) },
         #[cfg(not(target_arch = "x86_64"))]
         Backend::Avx2 => scalar::dot(a, b),
+        // SAFETY: NEON is baseline on aarch64; `effective()` clamps the
+        // variant away everywhere else.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot(a, b) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => scalar::dot(a, b),
     }
 }
 
@@ -185,6 +209,11 @@ pub fn axpy_with(backend: Backend, a: f64, x: &[f64], y: &mut [f64]) {
         Backend::Avx2 => unsafe { avx2::axpy(a, x, y) },
         #[cfg(not(target_arch = "x86_64"))]
         Backend::Avx2 => scalar::axpy(a, x, y),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::axpy(a, x, y) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => scalar::axpy(a, x, y),
     }
 }
 
@@ -198,6 +227,11 @@ pub fn norm1_with(backend: Backend, x: &[f64]) -> f64 {
         Backend::Avx2 => unsafe { avx2::norm1(x) },
         #[cfg(not(target_arch = "x86_64"))]
         Backend::Avx2 => scalar::norm1(x),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::norm1(x) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => scalar::norm1(x),
     }
 }
 
@@ -211,6 +245,11 @@ pub fn norm_inf_with(backend: Backend, x: &[f64]) -> f64 {
         Backend::Avx2 => unsafe { avx2::norm_inf(x) },
         #[cfg(not(target_arch = "x86_64"))]
         Backend::Avx2 => scalar::norm_inf(x),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::norm_inf(x) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => scalar::norm_inf(x),
     }
 }
 
@@ -233,6 +272,11 @@ pub fn dot4_with(
         Backend::Avx2 => unsafe { avx2::dot4(c0, c1, c2, c3, r) },
         #[cfg(not(target_arch = "x86_64"))]
         Backend::Avx2 => scalar::dot4(c0, c1, c2, c3, r),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot4(c0, c1, c2, c3, r) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => scalar::dot4(c0, c1, c2, c3, r),
     }
 }
 
@@ -255,7 +299,48 @@ pub fn axpy4_with(
         Backend::Avx2 => unsafe { avx2::axpy4(a, x0, x1, x2, x3, y) },
         #[cfg(not(target_arch = "x86_64"))]
         Backend::Avx2 => scalar::axpy4(a, x0, x1, x2, x3, y),
+        // SAFETY: see `dot_with`.
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::axpy4(a, x0, x1, x2, x3, y) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => scalar::axpy4(a, x0, x1, x2, x3, y),
     }
+}
+
+/// Indexed gather `dst[k] = src[idx[k]]` on an explicit backend — the
+/// sparse-design and fold-split copy kernel (AVX2 uses hardware
+/// `vgatherdpd`; scalar/NEON run an unrolled unchecked loop).
+///
+/// # Safety
+///
+/// Every `idx[k]` must be `< src.len()` and `idx.len() == dst.len()`;
+/// callers bounds-check once up front so the per-element loop doesn't.
+#[inline]
+pub unsafe fn gather_with(backend: Backend, src: &[f64], idx: &[usize], dst: &mut [f64]) {
+    debug_assert_eq!(idx.len(), dst.len());
+    debug_assert!(idx.iter().all(|&i| i < src.len()));
+    match backend.effective() {
+        // SAFETY: forwarded contract — caller guarantees index bounds.
+        Backend::Scalar => unsafe { scalar::gather(src, idx, dst) },
+        // SAFETY: `effective()` verified avx2+fma; index bounds forwarded.
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::gather(src, idx, dst) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 => unsafe { scalar::gather(src, idx, dst) },
+        // NEON has no gather instruction; the unrolled scalar loop is the
+        // fastest portable form on aarch64 too.
+        Backend::Neon => unsafe { scalar::gather(src, idx, dst) },
+    }
+}
+
+/// Indexed gather on the [`active`] backend (see [`gather_with`]).
+///
+/// # Safety
+///
+/// Same contract as [`gather_with`].
+#[inline]
+pub unsafe fn gather(src: &[f64], idx: &[usize], dst: &mut [f64]) {
+    unsafe { gather_with(active(), src, idx, dst) }
 }
 
 /// Dot product on the [`active`] backend.
@@ -363,6 +448,25 @@ mod tests {
                         y_seq[i].to_bits(),
                         "axpy4 n={n} i={i} {bk:?}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_indexed_copy_on_every_backend() {
+        for n in [0usize, 1, 3, 4, 5, 8, 17, 100] {
+            let mut rng = crate::rng::Rng::new(90 + n as u64);
+            let src = rng.gauss_vec(n.max(1) * 2);
+            let idx: Vec<usize> =
+                (0..n).map(|k| (k * 7 + 3) % src.len()).collect();
+            let want: Vec<f64> = idx.iter().map(|&i| src[i]).collect();
+            for bk in available() {
+                let mut dst = vec![0.0; n];
+                // SAFETY: idx was built modulo src.len().
+                unsafe { gather_with(bk, &src, &idx, &mut dst) };
+                for k in 0..n {
+                    assert_eq!(dst[k].to_bits(), want[k].to_bits(), "gather n={n} k={k} {bk:?}");
                 }
             }
         }

@@ -1,0 +1,190 @@
+//! NEON backend (`aarch64` only, where NEON/ASIMD is baseline).
+//!
+//! Same structural rule as the AVX2 backend, scaled to 128-bit vectors: a
+//! reduction walks four elements per step through **two** 2-lane
+//! `float64x2_t` FMA accumulators (positions `4k`/`4k+1` in the first,
+//! `4k+2`/`4k+3` in the second), is reduced as
+//! `vaddvq(acc0) + vaddvq(acc1)`, and finishes with a *sequential scalar*
+//! remainder loop. [`dot`] and each lane of [`dot4`] share that exact
+//! structure, so per-column results stay bitwise independent of block
+//! grouping and thread chunking — the invariant the
+//! `kernel_equivalence` fused-lane pins assert on every available
+//! backend, this one included.
+//!
+//! FMA contraction makes these results differ from the scalar backend in
+//! the last ulps; the dispatched ≡ scalar gates (ℓ₂ ≤ 1e-12) bound the
+//! drift exactly as they do for AVX2.
+
+use core::arch::aarch64::*;
+
+/// Dot product: two FMA accumulators + scalar remainder.
+///
+/// # Safety
+/// aarch64 only (NEON is baseline there); behind `Backend::Neon` dispatch.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = vdupq_n_f64(0.0);
+    let mut acc1 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc0 = vfmaq_f64(acc0, vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i)));
+        acc1 = vfmaq_f64(acc1, vld1q_f64(ap.add(i + 2)), vld1q_f64(bp.add(i + 2)));
+    }
+    let mut s = vaddvq_f64(acc0) + vaddvq_f64(acc1);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Four dot products against one shared right-hand side, with `r` loaded
+/// once per 4-row step. Each lane is structurally identical to [`dot`]
+/// (own accumulator pair, same reduce, same scalar remainder), so
+/// `dot4(..)[k] == dot(c_k, r)` bitwise.
+///
+/// # Safety
+/// See [`dot`].
+#[target_feature(enable = "neon")]
+pub unsafe fn dot4(c0: &[f64], c1: &[f64], c2: &[f64], c3: &[f64], r: &[f64]) -> [f64; 4] {
+    let n = r.len();
+    debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+    let chunks = n / 4;
+    let (p0, p1, p2, p3, pr) = (c0.as_ptr(), c1.as_ptr(), c2.as_ptr(), c3.as_ptr(), r.as_ptr());
+    let mut a = [vdupq_n_f64(0.0); 8];
+    for k in 0..chunks {
+        let i = 4 * k;
+        let rlo = vld1q_f64(pr.add(i));
+        let rhi = vld1q_f64(pr.add(i + 2));
+        a[0] = vfmaq_f64(a[0], vld1q_f64(p0.add(i)), rlo);
+        a[1] = vfmaq_f64(a[1], vld1q_f64(p0.add(i + 2)), rhi);
+        a[2] = vfmaq_f64(a[2], vld1q_f64(p1.add(i)), rlo);
+        a[3] = vfmaq_f64(a[3], vld1q_f64(p1.add(i + 2)), rhi);
+        a[4] = vfmaq_f64(a[4], vld1q_f64(p2.add(i)), rlo);
+        a[5] = vfmaq_f64(a[5], vld1q_f64(p2.add(i + 2)), rhi);
+        a[6] = vfmaq_f64(a[6], vld1q_f64(p3.add(i)), rlo);
+        a[7] = vfmaq_f64(a[7], vld1q_f64(p3.add(i + 2)), rhi);
+    }
+    let mut s = [
+        vaddvq_f64(a[0]) + vaddvq_f64(a[1]),
+        vaddvq_f64(a[2]) + vaddvq_f64(a[3]),
+        vaddvq_f64(a[4]) + vaddvq_f64(a[5]),
+        vaddvq_f64(a[6]) + vaddvq_f64(a[7]),
+    ];
+    for i in 4 * chunks..n {
+        s[0] += c0[i] * r[i];
+        s[1] += c1[i] * r[i];
+        s[2] += c2[i] * r[i];
+        s[3] += c3[i] * r[i];
+    }
+    s
+}
+
+/// `y += a * x`: FMA main loop, scalar mul+add remainder.
+///
+/// # Safety
+/// See [`dot`].
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let va = vdupq_n_f64(a);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        vst1q_f64(yp.add(i), vfmaq_f64(vld1q_f64(yp.add(i)), vld1q_f64(xp.add(i)), va));
+        vst1q_f64(
+            yp.add(i + 2),
+            vfmaq_f64(vld1q_f64(yp.add(i + 2)), vld1q_f64(xp.add(i + 2)), va),
+        );
+    }
+    for i in 4 * chunks..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Four accumulated axpys with `y` loaded and stored once per 4-row step,
+/// FMAs chained in lane order so the result is bitwise identical to four
+/// sequential [`axpy`] calls (elementwise ops don't care about the
+/// 2-lane vector width; the remainder applies the same four separate
+/// mul+adds per element).
+///
+/// # Safety
+/// See [`dot`].
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy4(a: [f64; 4], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64], y: &mut [f64]) {
+    let n = y.len();
+    debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+    let chunks = n / 4;
+    let (va0, va1, va2, va3) =
+        (vdupq_n_f64(a[0]), vdupq_n_f64(a[1]), vdupq_n_f64(a[2]), vdupq_n_f64(a[3]));
+    let (p0, p1, p2, p3) = (x0.as_ptr(), x1.as_ptr(), x2.as_ptr(), x3.as_ptr());
+    let yp = y.as_mut_ptr();
+    for k in 0..chunks {
+        for half in [4 * k, 4 * k + 2] {
+            let mut vy = vld1q_f64(yp.add(half));
+            vy = vfmaq_f64(vy, vld1q_f64(p0.add(half)), va0);
+            vy = vfmaq_f64(vy, vld1q_f64(p1.add(half)), va1);
+            vy = vfmaq_f64(vy, vld1q_f64(p2.add(half)), va2);
+            vy = vfmaq_f64(vy, vld1q_f64(p3.add(half)), va3);
+            vst1q_f64(yp.add(half), vy);
+        }
+    }
+    for i in 4 * chunks..n {
+        y[i] += a[0] * x0[i];
+        y[i] += a[1] * x1[i];
+        y[i] += a[2] * x2[i];
+        y[i] += a[3] * x3[i];
+    }
+}
+
+/// ℓ₁ norm: two |v| add-accumulators + scalar remainder.
+///
+/// # Safety
+/// See [`dot`].
+#[target_feature(enable = "neon")]
+pub unsafe fn norm1(x: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_ptr();
+    let mut acc0 = vdupq_n_f64(0.0);
+    let mut acc1 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc0 = vaddq_f64(acc0, vabsq_f64(vld1q_f64(xp.add(i))));
+        acc1 = vaddq_f64(acc1, vabsq_f64(vld1q_f64(xp.add(i + 2))));
+    }
+    let mut s = vaddvq_f64(acc0) + vaddvq_f64(acc1);
+    for v in &x[4 * chunks..] {
+        s += v.abs();
+    }
+    s
+}
+
+/// ℓ∞ norm: two max-of-|v| accumulators + scalar remainder.
+///
+/// # Safety
+/// See [`dot`].
+#[target_feature(enable = "neon")]
+pub unsafe fn norm_inf(x: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_ptr();
+    let mut acc0 = vdupq_n_f64(0.0);
+    let mut acc1 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc0 = vmaxq_f64(acc0, vabsq_f64(vld1q_f64(xp.add(i))));
+        acc1 = vmaxq_f64(acc1, vabsq_f64(vld1q_f64(xp.add(i + 2))));
+    }
+    let mut m = vmaxvq_f64(vmaxq_f64(acc0, acc1));
+    for v in &x[4 * chunks..] {
+        m = m.max(v.abs());
+    }
+    m
+}

@@ -74,3 +74,34 @@ pub fn axpy4(a: [f64; 4], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64], y: &mu
     axpy(a[2], x2, y);
     axpy(a[3], x3, y);
 }
+
+/// Indexed gather `dst[k] = src[idx[k]]`, 4-unrolled with unchecked
+/// source reads (the bounds check lives at the caller, once, instead of
+/// per element — that check is what made the old per-column copy loops
+/// scalar-bound).
+///
+/// # Safety
+/// Every `idx[k]` must be `< src.len()` and `idx.len() == dst.len()`.
+#[inline]
+pub unsafe fn gather(src: &[f64], idx: &[usize], dst: &mut [f64]) {
+    debug_assert_eq!(idx.len(), dst.len());
+    let n = idx.len();
+    let chunks = n / 4;
+    for k in 0..chunks {
+        let i = 4 * k;
+        // SAFETY: caller guarantees every index is in range for `src`,
+        // and `i + 3 < n` holds for both `idx` and `dst` by construction.
+        unsafe {
+            *dst.get_unchecked_mut(i) = *src.get_unchecked(*idx.get_unchecked(i));
+            *dst.get_unchecked_mut(i + 1) = *src.get_unchecked(*idx.get_unchecked(i + 1));
+            *dst.get_unchecked_mut(i + 2) = *src.get_unchecked(*idx.get_unchecked(i + 2));
+            *dst.get_unchecked_mut(i + 3) = *src.get_unchecked(*idx.get_unchecked(i + 3));
+        }
+    }
+    for i in 4 * chunks..n {
+        // SAFETY: same contract as above.
+        unsafe {
+            *dst.get_unchecked_mut(i) = *src.get_unchecked(*idx.get_unchecked(i));
+        }
+    }
+}

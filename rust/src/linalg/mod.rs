@@ -7,19 +7,30 @@
 //!
 //! The vector primitives live in [`kernels`], behind runtime CPU-feature
 //! dispatch: a scalar reference backend (bitwise identical to the
-//! pre-dispatch kernels — pin it with `DFR_KERNEL=scalar`) and an
-//! AVX2+FMA backend selected automatically on `x86_64`. On the SIMD
-//! backend the dense matvecs are additionally register-blocked (four
-//! columns per pass over a row tile, so `r`/`out` traffic amortizes over
-//! the column loads) and both `Xβ` and `Xᵀr` can fan out over a thread
-//! scope; the scalar backend keeps the exact historical loop structure so
-//! existing results are reproducible bit for bit.
+//! pre-dispatch kernels — pin it with `DFR_KERNEL=scalar`), an AVX2+FMA
+//! backend selected automatically on `x86_64`, and a NEON backend on
+//! `aarch64`. On the SIMD backends the dense matvecs are additionally
+//! register-blocked (four columns per pass over a row tile, so `r`/`out`
+//! traffic amortizes over the column loads) and both `Xβ` and `Xᵀr` can
+//! fan out over a thread scope; the scalar backend keeps the exact
+//! historical loop structure so existing results are reproducible bit
+//! for bit.
+//!
+//! Designs too large for RAM live in the [`ooc`] module: a chunk-file-
+//! backed column-major store streamed in fixed column blocks, the third
+//! variant of the [`DesignRef`]/[`DesignOps`] kernel contract.
 
 use crate::parallel;
 
 pub mod kernels;
+pub mod ooc;
 #[cfg(test)]
 mod tests;
+
+pub use ooc::{
+    ooc_peak_resident_bytes, ooc_reset_peak, ooc_resident_bytes, set_ooc_block_override,
+    OocDesign,
+};
 
 use kernels::Backend;
 
@@ -245,8 +256,8 @@ impl Matrix {
         }
     }
 
-    /// `Xᵀ r` fanned out across a thread scope — the no-XLA gradient hot
-    /// path for large `p`.
+    /// `Xᵀ r` fanned out across a thread scope — the gradient hot path
+    /// for large `p`.
     pub fn t_matvec_par(&self, r: &[f64], threads: usize) -> Vec<f64> {
         let mut out = vec![0.0; self.p];
         self.t_matvec_par_into(r, threads, &mut out);
@@ -426,15 +437,18 @@ impl Matrix {
         Matrix { n: self.n, p: self.p + other.p, data }
     }
 
-    /// Select a subset of rows (used by the CV fold splitter).
+    /// Select a subset of rows (used by the CV fold splitter). The
+    /// per-column copies run on the dispatched [`kernels::gather`]; one
+    /// upfront bounds check covers every column.
     pub fn gather_rows(&self, rows: &[usize]) -> Matrix {
+        assert!(rows.iter().all(|&i| i < self.n), "gather_rows: row index out of range");
+        let backend = kernels::active();
         let mut m = Matrix::zeros(rows.len(), self.p);
         for j in 0..self.p {
             let src = self.col(j);
             let dst = m.col_mut(j);
-            for (k, &i) in rows.iter().enumerate() {
-                dst[k] = src[i];
-            }
+            // SAFETY: every index in `rows` was bounds-checked above.
+            unsafe { kernels::gather_with(backend, src, rows, dst) };
         }
         m
     }
@@ -1051,19 +1065,30 @@ impl CenteredSparse {
         out.offsets = self.offsets.clone();
         out.scales = self.scales.clone();
         out.p = self.p;
-        let mut col: Vec<(usize, f64)> = Vec::new();
+        let backend = kernels::active();
+        // Sort (new row, source position) pairs, then bulk-gather the
+        // values through the dispatched kernel — the value copy is the
+        // hot half of the fold build, the index shuffle is cheap.
+        let mut col: Vec<(usize, usize)> = Vec::new();
+        let mut src_pos: Vec<usize> = Vec::new();
         for j in 0..self.p {
             col.clear();
             for k in self.col_ptr[j]..self.col_ptr[j + 1] {
                 for &new_i in &positions[self.row_idx[k]] {
-                    col.push((new_i, self.values[k]));
+                    col.push((new_i, k));
                 }
             }
             col.sort_unstable_by_key(|&(i, _)| i);
-            for &(i, v) in &col {
-                out.row_idx.push(i);
-                out.values.push(v);
-            }
+            let base = out.row_idx.len();
+            out.row_idx.extend(col.iter().map(|&(i, _)| i));
+            src_pos.clear();
+            src_pos.extend(col.iter().map(|&(_, k)| k));
+            out.values.resize(base + col.len(), 0.0);
+            // SAFETY: every source position came from this matrix's own
+            // col_ptr ranges, so all are < values.len().
+            unsafe {
+                kernels::gather_with(backend, &self.values, &src_pos, &mut out.values[base..])
+            };
             out.col_ptr.push(out.values.len());
         }
         out
@@ -1158,20 +1183,27 @@ pub const DENSE_KERNEL: &str = "dense";
 /// [`DENSE_KERNEL`]).
 pub const SPARSE_KERNEL: &str = "centered-sparse";
 
+/// Kernel-variant name of the out-of-core column-block streaming path
+/// (see [`DENSE_KERNEL`]).
+pub const OOC_KERNEL: &str = "ooc-stream";
+
 /// Borrowed view of a design the solve path can run its kernels on — the
 /// kernel contract shared by every layer of the pathwise stack (loss
 /// gradients, FISTA/ATOS matvecs, GAP-safe screening, power-iteration
 /// Lipschitz estimates).
 ///
-/// Two variants: [`DesignRef::Dense`] delegates to the exact same
-/// [`Matrix`] kernels as before (dense results stay bit-stable), and
+/// Three variants: [`DesignRef::Dense`] delegates to the exact same
+/// [`Matrix`] kernels as before (dense results stay bit-stable),
 /// [`DesignRef::Sparse`] serves the centered-implicit kernels of
-/// [`CenteredSparse`]. `Copy`, so it threads through call stacks like the
-/// `&Matrix` it replaces.
+/// [`CenteredSparse`], and [`DesignRef::Ooc`] streams a chunk-file-backed
+/// [`OocDesign`] in column blocks without ever holding the design in RAM.
+/// `Copy`, so it threads through call stacks like the `&Matrix` it
+/// replaces.
 #[derive(Clone, Copy, Debug)]
 pub enum DesignRef<'a> {
     Dense(&'a Matrix),
     Sparse(&'a CenteredSparse),
+    Ooc(&'a OocDesign),
 }
 
 impl<'a> DesignRef<'a> {
@@ -1180,6 +1212,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.nrows(),
             DesignRef::Sparse(s) => s.nrows(),
+            DesignRef::Ooc(o) => o.nrows(),
         }
     }
 
@@ -1188,16 +1221,17 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.ncols(),
             DesignRef::Sparse(s) => s.ncols(),
+            DesignRef::Ooc(o) => o.ncols(),
         }
     }
 
-    /// The dense matrix behind this view, if any (XLA artifact execution
-    /// and column gathers into dense buffers are dense-only).
+    /// The dense matrix behind this view, if any (column gathers into
+    /// dense buffers are dense-only).
     #[inline]
     pub fn as_dense(self) -> Option<&'a Matrix> {
         match self {
             DesignRef::Dense(m) => Some(m),
-            DesignRef::Sparse(_) => None,
+            DesignRef::Sparse(_) | DesignRef::Ooc(_) => None,
         }
     }
 
@@ -1206,6 +1240,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(_) => DENSE_KERNEL,
             DesignRef::Sparse(_) => SPARSE_KERNEL,
+            DesignRef::Ooc(_) => OOC_KERNEL,
         }
     }
 
@@ -1213,6 +1248,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.matvec_into(beta, out),
             DesignRef::Sparse(s) => s.matvec_into(beta, out),
+            DesignRef::Ooc(o) => o.matvec_into(beta, out),
         }
     }
 
@@ -1220,6 +1256,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.matvec(beta),
             DesignRef::Sparse(s) => s.matvec(beta),
+            DesignRef::Ooc(o) => o.matvec(beta),
         }
     }
 
@@ -1230,6 +1267,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.matvec_par_into(beta, threads, out),
             DesignRef::Sparse(s) => s.matvec_par_into(beta, threads, out),
+            DesignRef::Ooc(o) => o.matvec_par_into(beta, threads, out),
         }
     }
 
@@ -1237,6 +1275,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.t_matvec_into(r, out),
             DesignRef::Sparse(s) => s.t_matvec_into(r, out),
+            DesignRef::Ooc(o) => o.t_matvec_into(r, out),
         }
     }
 
@@ -1244,6 +1283,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.t_matvec(r),
             DesignRef::Sparse(s) => s.t_matvec(r),
+            DesignRef::Ooc(o) => o.t_matvec(r),
         }
     }
 
@@ -1257,6 +1297,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.t_matvec_par_into(r, threads, out),
             DesignRef::Sparse(s) => s.t_matvec_par_into(r, threads, out),
+            DesignRef::Ooc(o) => o.t_matvec_par_into(r, threads, out),
         }
     }
 
@@ -1264,6 +1305,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.col_norms(),
             DesignRef::Sparse(s) => s.col_norms(),
+            DesignRef::Ooc(o) => o.col_norms(),
         }
     }
 
@@ -1275,6 +1317,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.block_axpy_into(cols, coeffs, out),
             DesignRef::Sparse(s) => s.block_axpy_into(cols, coeffs, out),
+            DesignRef::Ooc(o) => o.block_axpy_into(cols, coeffs, out),
         }
     }
 
@@ -1283,6 +1326,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.block_t_matvec_into(cols, r, out),
             DesignRef::Sparse(s) => s.block_t_matvec_into(cols, r, out),
+            DesignRef::Ooc(o) => o.block_t_matvec_into(cols, r, out),
         }
     }
 
@@ -1301,6 +1345,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.block_t_matvec_with_rsum_into(cols, r, rsum, out),
             DesignRef::Sparse(s) => s.block_t_matvec_with_rsum_into(cols, r, rsum, out),
+            DesignRef::Ooc(o) => o.block_t_matvec_with_rsum_into(cols, r, rsum, out),
         }
     }
 
@@ -1310,6 +1355,7 @@ impl<'a> DesignRef<'a> {
         match self {
             DesignRef::Dense(m) => m.col_sq_norms_into(out),
             DesignRef::Sparse(s) => s.col_sq_norms_into(out),
+            DesignRef::Ooc(o) => o.col_sq_norms_into(out),
         }
     }
 
@@ -1322,6 +1368,7 @@ impl<'a> DesignRef<'a> {
                 (0..m.ncols()).map(|j| m.col(j).iter().sum::<f64>() / n).collect()
             }
             DesignRef::Sparse(s) => s.col_means(),
+            DesignRef::Ooc(o) => o.col_means(),
         }
     }
 
@@ -1368,6 +1415,12 @@ impl<'a> From<&'a CenteredSparse> for DesignRef<'a> {
     }
 }
 
+impl<'a> From<&'a OocDesign> for DesignRef<'a> {
+    fn from(o: &'a OocDesign) -> Self {
+        DesignRef::Ooc(o)
+    }
+}
+
 impl<'a> From<&'a DesignOps> for DesignRef<'a> {
     fn from(d: &'a DesignOps) -> Self {
         d.view()
@@ -1375,14 +1428,18 @@ impl<'a> From<&'a DesignOps> for DesignRef<'a> {
 }
 
 /// Owned design in whichever kernel representation the solve should run:
-/// a dense standardized [`Matrix`] (today's exact code path) or a
-/// [`CenteredSparse`] centered-implicit design (sparse end-to-end). This
-/// is what a [`crate::data::Dataset`] carries; the compute layers see it
-/// through the borrowed [`DesignRef`] kernel contract.
+/// a dense standardized [`Matrix`] (today's exact code path), a
+/// [`CenteredSparse`] centered-implicit design (sparse end-to-end), or an
+/// out-of-core [`OocDesign`] streamed from disk (the handle is an `Arc`
+/// over the open pack file, so this variant is as cheap to clone as the
+/// sparse one is to borrow). This is what a [`crate::data::Dataset`]
+/// carries; the compute layers see it through the borrowed [`DesignRef`]
+/// kernel contract.
 #[derive(Clone, Debug)]
 pub enum DesignOps {
     Dense(Matrix),
     Sparse(CenteredSparse),
+    Ooc(OocDesign),
 }
 
 impl DesignOps {
@@ -1392,6 +1449,7 @@ impl DesignOps {
         match self {
             DesignOps::Dense(m) => DesignRef::Dense(m),
             DesignOps::Sparse(s) => DesignRef::Sparse(s),
+            DesignOps::Ooc(o) => DesignRef::Ooc(o),
         }
     }
 
@@ -1475,35 +1533,54 @@ impl DesignOps {
             DesignOps::Sparse(_) => {
                 panic!("dense() called on a centered-sparse design")
             }
+            DesignOps::Ooc(_) => {
+                panic!("dense() called on an out-of-core design")
+            }
         }
     }
 
-    /// Mutable access to the dense matrix inside (panics when sparse).
+    /// Mutable access to the dense matrix inside (panics when sparse or
+    /// out-of-core).
     pub fn dense_mut(&mut self) -> &mut Matrix {
         match self {
             DesignOps::Dense(m) => m,
             DesignOps::Sparse(_) => {
                 panic!("dense_mut() called on a centered-sparse design")
             }
+            DesignOps::Ooc(_) => {
+                panic!("dense_mut() called on an out-of-core design")
+            }
         }
     }
 
     /// ℓ₂-standardize in place (dense: [`Matrix::standardize_l2`]; sparse:
     /// affine recomposition of the offsets/scales), returning the
-    /// per-column `(mean, scale)` on the *current* implied scale.
+    /// per-column `(mean, scale)` on the *current* implied scale. Panics
+    /// on an out-of-core design: its standardization stats are computed
+    /// once at pack time and the file is immutable (the model API hands
+    /// them out directly instead of calling this).
     pub fn standardize_l2(&mut self) -> Vec<(f64, f64)> {
         match self {
             DesignOps::Dense(m) => m.standardize_l2(),
             DesignOps::Sparse(s) => s.standardize_l2(),
+            DesignOps::Ooc(_) => {
+                panic!("standardize_l2() called on an out-of-core design (stats are pack-time)")
+            }
         }
     }
 
     /// Row subset with the variant preserved (CV folds stay sparse on the
-    /// sparse path).
+    /// sparse path). Panics on an out-of-core design: CV folds require
+    /// row gathers + re-standardization, which the streaming store does
+    /// not support — the model API rejects `cv` on `--ooc` before this
+    /// can be reached.
     pub fn gather_rows(&self, rows: &[usize]) -> DesignOps {
         match self {
             DesignOps::Dense(m) => DesignOps::Dense(m.gather_rows(rows)),
             DesignOps::Sparse(s) => DesignOps::Sparse(s.gather_rows(rows)),
+            DesignOps::Ooc(_) => {
+                panic!("gather_rows() called on an out-of-core design")
+            }
         }
     }
 }
@@ -1517,6 +1594,12 @@ impl From<Matrix> for DesignOps {
 impl From<CenteredSparse> for DesignOps {
     fn from(s: CenteredSparse) -> Self {
         DesignOps::Sparse(s)
+    }
+}
+
+impl From<OocDesign> for DesignOps {
+    fn from(o: OocDesign) -> Self {
+        DesignOps::Ooc(o)
     }
 }
 
@@ -1549,7 +1632,12 @@ pub struct ReducedDesign {
     idx: Vec<usize>,
     mat: Matrix,
     smat: CenteredSparse,
-    key: Option<(bool, usize, usize, u64)>,
+    /// Source identity: variant tag (0 dense, 1 sparse, 2 ooc) + address
+    /// + length + content fingerprint (ooc: the pack file's full hash).
+    key: Option<(u8, usize, usize, u64)>,
+    /// Column staging buffer for the out-of-core gather arm (one
+    /// standardized column read from disk, then pushed into `mat`).
+    colbuf: Vec<f64>,
     /// Group-block offsets of the last [`ReducedDesign::update_grouped`]
     /// gather: start of each maximal run of columns drawn from one
     /// original group, plus the `idx.len()` sentinel.
@@ -1569,6 +1657,7 @@ impl ReducedDesign {
             mat: Matrix::zeros(0, 0),
             smat: CenteredSparse::empty(0),
             key: None,
+            colbuf: Vec::new(),
             gstarts: Vec::new(),
             hits: 0,
             kept_cols: 0,
@@ -1587,7 +1676,7 @@ impl ReducedDesign {
         match src.into() {
             DesignRef::Dense(x) => {
                 let key = (
-                    false,
+                    0u8,
                     x.as_slice().as_ptr() as usize,
                     x.as_slice().len(),
                     fingerprint(x.as_slice()),
@@ -1624,7 +1713,7 @@ impl ReducedDesign {
             }
             DesignRef::Sparse(s) => {
                 let key = (
-                    true,
+                    1u8,
                     s.values.as_ptr() as usize,
                     s.values.len(),
                     fingerprint(&s.values)
@@ -1658,6 +1747,45 @@ impl ReducedDesign {
                 self.kept_cols += keep;
                 self.copied_cols += idx.len() - keep;
                 DesignRef::Sparse(&self.smat)
+            }
+            DesignRef::Ooc(o) => {
+                // The gather IS the out-of-core design's RAM boundary:
+                // active columns are pulled off disk (already
+                // standardized) into the dense grow-only buffer, so the
+                // reduced solve runs on the exact in-memory machinery —
+                // with the same prefix-diff reuse, a persistent active
+                // set costs zero reads per λ step. Identity is the pack
+                // file's full content hash (stable across re-opens of
+                // the same data, O(1) here).
+                let key = (2u8, o.nrows(), o.ncols(), o.content_hash());
+                if self.key != Some(key) {
+                    self.key = Some(key);
+                    self.idx.clear();
+                    self.smat.truncate_cols(0);
+                    if self.mat.nrows() == o.nrows() {
+                        self.mat.truncate_cols(0);
+                    } else {
+                        self.mat = Matrix::zeros(o.nrows(), 0);
+                    }
+                }
+                if self.idx == idx {
+                    self.hits += 1;
+                    return DesignRef::Dense(&self.mat);
+                }
+                let keep =
+                    self.idx.iter().zip(idx.iter()).take_while(|(a, b)| a == b).count();
+                self.mat.truncate_cols(keep);
+                self.idx.truncate(keep);
+                self.mat.reserve_cols(idx.len() - keep);
+                self.colbuf.resize(o.nrows(), 0.0);
+                for &j in &idx[keep..] {
+                    o.read_standardized_col_into(j, &mut self.colbuf);
+                    self.mat.push_col(&self.colbuf);
+                }
+                self.idx.extend_from_slice(&idx[keep..]);
+                self.kept_cols += keep;
+                self.copied_cols += idx.len() - keep;
+                DesignRef::Dense(&self.mat)
             }
         }
     }
@@ -1722,9 +1850,8 @@ impl Default for ReducedDesign {
 }
 
 /// FNV-style fingerprint over up to 64 strided samples — cheap identity
-/// check for "is this the same array as last time". Single source of truth
-/// for both the [`ReducedDesign`] cache and the runtime's device-buffer
-/// cache key.
+/// check for "is this the same array as last time", used by the
+/// [`ReducedDesign`] cache key.
 pub(crate) fn fingerprint(data: &[f64]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     let n = data.len();

@@ -1,0 +1,1012 @@
+//! Out-of-core column-block streaming designs (`.dfrpack` files).
+//!
+//! The whole point of DFR-style screening (PAPER.md) is that the only
+//! pass which ever needs the *full* design is the screening / KKT
+//! gradient scan — a streaming reduction — while the optimization runs
+//! on a tiny gathered subproblem. [`OocDesign`] exploits exactly that:
+//! the design lives on disk in a column-major chunk file, kernels walk
+//! it in fixed column blocks (`DFR_OOC_BLOCK` columns per chunk, default
+//! sized to an L3-ish byte budget), and the implied ℓ₂-standardized
+//! matrix is evaluated with the same rank-one centering trick as
+//! `CenteredSparse`:
+//!
+//! ```text
+//! X̃[:, j] = (X[:, j] − μ_j·1) / s_j
+//! X̃ᵀr     = (Xᵀr − μ · Σᵢ rᵢ) ⊘ s        (one streaming pass)
+//! X̃β      = X(β ⊘ s) − (Σ_j β_j μ_j / s_j)·1   (support blocks only)
+//! ```
+//!
+//! so no standardized (or even raw) copy of the full n×p design ever
+//! exists in memory. Peak design residency is bounded by the block
+//! buffers alone — two blocks on the serial double-buffered prefetch
+//! path, one block per worker on the block-parallel reduction path —
+//! and is *witnessed* at runtime by [`ooc_peak_resident_bytes`], the
+//! out-of-core analog of `dense_materializations()` (pinned by
+//! `rust/tests/ooc_equivalence.rs`).
+//!
+//! ## Pack file format (`DFRPACK1`, little-endian)
+//!
+//! ```text
+//! offset 0   magic  b"DFRPACK1"
+//! offset 8   n      u64  rows
+//! offset 16  p      u64  columns
+//! offset 24  hash   u64  FNV-1a over all f64 bits, column-major order
+//! offset 32  stats  p × (offset f64, scale f64) — ℓ₂-standardization
+//!            pairs computed once at ingest (mean, centered ℓ₂ norm
+//!            with the same `> 1e-12` clamp as `Matrix::standardize_l2`)
+//! offset 32 + 16p   data: column-major f64, column j at 32+16p+8·n·j
+//! ```
+//!
+//! Files are produced by [`pack_matrix`] (in-memory ingest: tests,
+//! benches) or [`pack_csv`] (`dfr pack` — a bounded-memory two-pass
+//! CSV converter that never holds the design either). Ingest validates
+//! entries (non-finite rejection, all-constant rejection) so kernels
+//! can stream without re-checking.
+//!
+//! IO errors during a kernel pass (disk yanked mid-solve) panic with
+//! the file path: the `DesignRef` kernel contract has no error channel,
+//! and [`OocDesign::open`] has already validated shape, stats, and file
+//! length up front.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufRead, BufReader, Write};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, OnceLock};
+
+use crate::error::DfrError;
+use crate::parallel::{for_each_chunk, par_grain};
+
+use super::{kernels, norm2, Matrix};
+
+/// Pack-file magic ("DFRPACK" + format version 1).
+const MAGIC: &[u8; 8] = b"DFRPACK1";
+
+/// Fixed header bytes before the per-column stats block.
+const HEADER_BASE: u64 = 32;
+
+/// Default block-buffer byte budget when `DFR_OOC_BLOCK` is unset: an
+/// L3-cache-ish 8 MiB, so a streamed block's columns are still warm when
+/// the per-column reductions re-walk them.
+pub const DEFAULT_OOC_BLOCK_BYTES: usize = 8 << 20;
+
+// ---------------------------------------------------------------------------
+// Block-size knob (mirrors `parallel::par_grain`)
+// ---------------------------------------------------------------------------
+
+/// Process-wide programmatic block-width override (0 = unset), in
+/// *columns per block*. Wins over `DFR_OOC_BLOCK`.
+static OOC_BLOCK_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the streaming block width (columns per chunk) programmatically —
+/// tests force chunk boundaries through active groups; benches sweep it.
+/// `None` restores `DFR_OOC_BLOCK` / default resolution. Block width only
+/// picks a streaming schedule; every kernel is exact at any width.
+pub fn set_ooc_block_override(n: Option<usize>) {
+    OOC_BLOCK_OVERRIDE.store(n.map_or(0, |v| v.max(1)), Ordering::Relaxed);
+}
+
+/// The `DFR_OOC_BLOCK` choice (columns per block), read once per process.
+fn env_block_cols() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DFR_OOC_BLOCK").ok().and_then(|v| v.parse::<usize>().ok()).map(|n| n.max(1))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Materialization witness
+// ---------------------------------------------------------------------------
+
+/// Block-buffer bytes currently alive across all threads.
+static OOC_RESIDENT_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// High-water mark of [`OOC_RESIDENT_BYTES`] since the last reset.
+static OOC_PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Design bytes currently resident in streaming block buffers. Process-
+/// global (reader threads and block-parallel workers all count).
+pub fn ooc_resident_bytes() -> usize {
+    OOC_RESIDENT_BYTES.load(Ordering::Relaxed)
+}
+
+/// Peak block-buffer residency since the last [`ooc_reset_peak`] — the
+/// materialization witness: a full solve on an [`OocDesign`] must keep
+/// this at ≤ 2 serial blocks (or ≤ `threads` blocks on the parallel
+/// reduction legs), never the full n×p design.
+pub fn ooc_peak_resident_bytes() -> usize {
+    OOC_PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Reset the peak-residency watermark to the current residency.
+pub fn ooc_reset_peak() {
+    OOC_PEAK_BYTES.store(OOC_RESIDENT_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// A witness-tracked streaming buffer: registers its capacity in
+/// [`OOC_RESIDENT_BYTES`] on allocation and unregisters on drop, so the
+/// peak watermark accounts for every byte of design data the kernels
+/// ever hold.
+struct BlockBuf {
+    data: Vec<f64>,
+}
+
+impl BlockBuf {
+    fn new(elems: usize) -> Self {
+        let bytes = elems * 8;
+        let cur = OOC_RESIDENT_BYTES.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        OOC_PEAK_BYTES.fetch_max(cur, Ordering::Relaxed);
+        BlockBuf { data: vec![0.0; elems] }
+    }
+}
+
+impl Drop for BlockBuf {
+    fn drop(&mut self) {
+        OOC_RESIDENT_BYTES.fetch_sub(self.data.capacity() * 8, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Positioned little-endian f64 IO
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+fn pread(file: &File, buf: &mut [u8], off: u64) -> io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, off)
+}
+
+#[cfg(unix)]
+fn pwrite(file: &File, buf: &[u8], off: u64) -> io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.write_all_at(buf, off)
+}
+
+// Non-unix fallback: seek + read through the shared handle. Positioned
+// reads from multiple threads then serialize on the file offset, which
+// only costs throughput — every caller passes an explicit offset.
+#[cfg(not(unix))]
+fn pread(file: &File, buf: &mut [u8], off: u64) -> io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = file;
+    f.seek(SeekFrom::Start(off))?;
+    f.read_exact(buf)
+}
+
+#[cfg(not(unix))]
+fn pwrite(file: &File, buf: &[u8], off: u64) -> io::Result<()> {
+    use std::io::{Seek, SeekFrom};
+    let mut f = file;
+    f.seek(SeekFrom::Start(off))?;
+    f.write_all(buf)
+}
+
+/// Positioned read of `out.len()` little-endian f64 values at byte `off`.
+fn read_f64s_at(file: &File, out: &mut [f64], off: u64) -> io::Result<()> {
+    // SAFETY: f64 is plain-old-data with no invalid bit patterns; the
+    // byte view aliases `out` only for the duration of the read.
+    let bytes =
+        unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr().cast::<u8>(), out.len() * 8) };
+    pread(file, bytes, off)?;
+    if cfg!(target_endian = "big") {
+        for v in out.iter_mut() {
+            *v = f64::from_bits(v.to_bits().swap_bytes());
+        }
+    }
+    Ok(())
+}
+
+/// Positioned write of `vals` as little-endian f64 at byte `off`.
+fn write_f64s_at(file: &File, vals: &[f64], off: u64) -> io::Result<()> {
+    let mut staged = Vec::with_capacity(vals.len().min(8192) * 8);
+    let mut at = off;
+    for chunk in vals.chunks(8192) {
+        staged.clear();
+        for v in chunk {
+            staged.extend_from_slice(&v.to_le_bytes());
+        }
+        pwrite(file, &staged, at)?;
+        at += staged.len() as u64;
+    }
+    Ok(())
+}
+
+/// Incremental FNV-1a over f64 bits — streaming twin of
+/// `linalg::content_hash`, so a packed file's header hash equals
+/// `content_hash` of the same data in column-major order.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn update(&mut self, v: f64) {
+        self.0 ^= v.to_bits();
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+}
+
+fn le_u64(bytes: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(bytes);
+    u64::from_le_bytes(a)
+}
+
+// ---------------------------------------------------------------------------
+// OocDesign
+// ---------------------------------------------------------------------------
+
+/// Shared immutable state behind an [`OocDesign`]: the open pack file and
+/// its decoded header. `Arc`-wrapped so `DesignOps::Ooc` stays cheap to
+/// clone (dataset caches, the serving pool) without duplicating stats.
+#[derive(Debug)]
+struct OocInner {
+    file: File,
+    path: PathBuf,
+    n: usize,
+    p: usize,
+    /// Per-column standardization offsets (raw column means).
+    offsets: Vec<f64>,
+    /// Per-column standardization scales (centered ℓ₂ norms, clamped).
+    scales: Vec<f64>,
+    /// Full-content FNV hash from the header (computed at pack time).
+    content_hash: u64,
+    /// Byte offset of the column-major data section.
+    data_off: u64,
+}
+
+/// A chunk-file-backed design streamed in fixed column blocks — the
+/// third `DesignRef`/`DesignOps` kernel variant. See the module docs for
+/// the format and the streaming/centering contract.
+#[derive(Clone, Debug)]
+pub struct OocDesign {
+    inner: Arc<OocInner>,
+}
+
+impl OocDesign {
+    /// Open and validate a pack file: magic, non-empty shape, exact file
+    /// length, finite stats. O(p) — the data section is never read here.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<OocDesign> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::open(&path)
+            .map_err(|e| anyhow::anyhow!("cannot open pack file {}: {e}", path.display()))?;
+        let mut head = [0u8; HEADER_BASE as usize];
+        pread(&file, &mut head, 0)
+            .map_err(|e| anyhow::anyhow!("{}: cannot read header: {e}", path.display()))?;
+        if &head[0..8] != MAGIC {
+            anyhow::bail!(
+                "{}: not a dfr pack file (bad magic; create one with `dfr pack`)",
+                path.display()
+            );
+        }
+        let n = le_u64(&head[8..16]) as usize;
+        let p = le_u64(&head[16..24]) as usize;
+        let content_hash = le_u64(&head[24..32]);
+        if n == 0 || p == 0 {
+            return Err(DfrError::EmptyDesign { n, p }.into());
+        }
+        let stats_bytes = (p as u64)
+            .checked_mul(16)
+            .ok_or_else(|| anyhow::anyhow!("{}: implausible column count {p}", path.display()))?;
+        let data_off = HEADER_BASE + stats_bytes;
+        let data_bytes = (n as u64)
+            .checked_mul(p as u64)
+            .and_then(|c| c.checked_mul(8))
+            .ok_or_else(|| anyhow::anyhow!("{}: implausible shape {n}×{p}", path.display()))?;
+        let expect = data_off + data_bytes;
+        let actual = file
+            .metadata()
+            .map_err(|e| anyhow::anyhow!("{}: cannot stat: {e}", path.display()))?
+            .len();
+        anyhow::ensure!(
+            actual == expect,
+            "{}: truncated or corrupt pack file ({actual} bytes, header implies {expect})",
+            path.display()
+        );
+        let mut stats = vec![0.0f64; 2 * p];
+        read_f64s_at(&file, &mut stats, HEADER_BASE)
+            .map_err(|e| anyhow::anyhow!("{}: cannot read stats block: {e}", path.display()))?;
+        let mut offsets = Vec::with_capacity(p);
+        let mut scales = Vec::with_capacity(p);
+        for j in 0..p {
+            let (m, s) = (stats[2 * j], stats[2 * j + 1]);
+            anyhow::ensure!(
+                m.is_finite() && s.is_finite() && s > 0.0,
+                "{}: corrupt standardization stats for column {j} (offset {m}, scale {s})",
+                path.display()
+            );
+            offsets.push(m);
+            scales.push(s);
+        }
+        Ok(OocDesign {
+            inner: Arc::new(OocInner { file, path, n, p, offsets, scales, content_hash, data_off }),
+        })
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.inner.n
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.inner.p
+    }
+
+    /// Per-column standardization offsets (raw means) from the header.
+    pub fn offsets(&self) -> &[f64] {
+        &self.inner.offsets
+    }
+
+    /// Per-column standardization scales (centered ℓ₂ norms) from the header.
+    pub fn scales(&self) -> &[f64] {
+        &self.inner.scales
+    }
+
+    /// Full-content FNV hash recorded at pack time — the O(1) identity
+    /// key for the model API's prepared-design cache.
+    pub fn content_hash(&self) -> u64 {
+        self.inner.content_hash
+    }
+
+    /// The backing pack file.
+    pub fn path(&self) -> &Path {
+        &self.inner.path
+    }
+
+    /// Streaming block width in columns: programmatic override, then
+    /// `DFR_OOC_BLOCK`, then [`DEFAULT_OOC_BLOCK_BYTES`] worth of rows —
+    /// always clamped to `[1, p]`.
+    pub fn block_cols(&self) -> usize {
+        let chosen = match OOC_BLOCK_OVERRIDE.load(Ordering::Relaxed) {
+            0 => match env_block_cols() {
+                Some(c) => c,
+                None => DEFAULT_OOC_BLOCK_BYTES / (8 * self.inner.n.max(1)),
+            },
+            o => o,
+        };
+        chosen.clamp(1, self.inner.p)
+    }
+
+    /// Bytes of one streaming block (`block_cols · n · 8`) — the unit the
+    /// peak-residency witness is measured in.
+    pub fn block_bytes(&self) -> usize {
+        self.block_cols() * self.inner.n * 8
+    }
+
+    /// Positioned read of raw columns `first..first+cols` into `out`
+    /// (column-major, `cols·n` values). Panics on IO failure — see the
+    /// module docs for why kernels have no error channel.
+    fn read_cols(&self, first: usize, cols: usize, out: &mut [f64]) {
+        debug_assert!(first + cols <= self.inner.p);
+        let off = self.inner.data_off + 8 * (first as u64) * (self.inner.n as u64);
+        if let Err(e) = read_f64s_at(&self.inner.file, &mut out[..cols * self.inner.n], off) {
+            panic!(
+                "dfr ooc: reading columns {first}..{} of {} failed mid-pass: {e}",
+                first + cols,
+                self.inner.path.display()
+            );
+        }
+    }
+
+    /// Stream the raw columns of `cols` through `f(first_col, ncols,
+    /// data)` block by block. With more than one block, a dedicated
+    /// reader thread prefetches block k+1 while the caller consumes
+    /// block k (two witness-tracked buffers rotating through a rendezvous
+    /// channel — peak residency exactly 2 blocks); a single block is read
+    /// inline with one buffer.
+    fn stream_blocks<F: FnMut(usize, usize, &[f64])>(&self, cols: Range<usize>, mut f: F) {
+        let n = self.inner.n;
+        let total = cols.len();
+        if total == 0 {
+            return;
+        }
+        let bc = self.block_cols().min(total);
+        if bc == total {
+            let mut buf = BlockBuf::new(total * n);
+            self.read_cols(cols.start, total, &mut buf.data);
+            f(cols.start, total, &buf.data);
+            return;
+        }
+        std::thread::scope(|s| {
+            // `full` capacity 1: the reader keeps at most one finished
+            // block queued while the caller consumes the other, so the
+            // two buffers bound residency and the reader never races
+            // ahead of the consumer.
+            let (full_tx, full_rx) = mpsc::sync_channel::<(usize, usize, BlockBuf)>(1);
+            let (free_tx, free_rx) = mpsc::channel::<BlockBuf>();
+            for _ in 0..2 {
+                let _ = free_tx.send(BlockBuf::new(bc * n));
+            }
+            let range = cols.clone();
+            s.spawn(move || {
+                let mut first = range.start;
+                while first < range.end {
+                    let take = bc.min(range.end - first);
+                    let Ok(mut buf) = free_rx.recv() else { return };
+                    self.read_cols(first, take, &mut buf.data[..take * n]);
+                    if full_tx.send((first, take, buf)).is_err() {
+                        return;
+                    }
+                    first += take;
+                }
+            });
+            while let Ok((first, take, buf)) = full_rx.recv() {
+                f(first, take, &buf.data[..take * n]);
+                let _ = free_tx.send(buf);
+            }
+        });
+    }
+
+    /// Single-buffer block walk over `cols` for the block-parallel legs:
+    /// each worker already overlaps another worker's IO, so no per-worker
+    /// prefetch thread (residency: 1 block per worker).
+    fn walk_blocks_noprefetch<F: FnMut(usize, usize, &[f64])>(&self, cols: Range<usize>, mut f: F) {
+        let n = self.inner.n;
+        if cols.is_empty() {
+            return;
+        }
+        let bc = self.block_cols().min(cols.len());
+        let mut buf = BlockBuf::new(bc * n);
+        let mut first = cols.start;
+        while first < cols.end {
+            let take = bc.min(cols.end - first);
+            self.read_cols(first, take, &mut buf.data[..take * n]);
+            f(first, take, &buf.data[..take * n]);
+            first += take;
+        }
+    }
+
+    /// Per-column body shared by every transpose-matvec leg:
+    /// `out[j] = (X[:,j]ᵀ r − μ_j · Σr) / s_j` for each column of a block.
+    #[inline]
+    fn t_matvec_block(&self, first: usize, take: usize, data: &[f64], r: &[f64], sr: f64, out0: usize, out: &mut [f64]) {
+        let n = self.inner.n;
+        for k in 0..take {
+            let j = first + k;
+            let s = kernels::dot(&data[k * n..(k + 1) * n], r);
+            out[j - out0] = (s - self.inner.offsets[j] * sr) / self.inner.scales[j];
+        }
+    }
+
+    /// `out = X̃ᵀ r` in one streaming pass with prefetch.
+    pub fn t_matvec_into(&self, r: &[f64], out: &mut [f64]) {
+        let sr: f64 = r.iter().sum();
+        self.block_t_matvec_with_rsum_into(0..self.inner.p, r, sr, out);
+    }
+
+    pub fn t_matvec(&self, r: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.inner.p];
+        self.t_matvec_into(r, &mut out);
+        out
+    }
+
+    /// Block-parallel `X̃ᵀ r`: above the `DFR_PAR_GRAIN` break-even the
+    /// column range fans out over workers, each streaming its own blocks
+    /// (per-column results are identical to the serial pass — same dot,
+    /// same centering formula — so parallel ≡ serial bitwise on the
+    /// scalar backend).
+    pub fn t_matvec_par_into(&self, r: &[f64], threads: usize, out: &mut [f64]) {
+        let (n, p) = (self.inner.n, self.inner.p);
+        if threads <= 1 || n.saturating_mul(p) < par_grain() {
+            self.t_matvec_into(r, out);
+            return;
+        }
+        let sr: f64 = r.iter().sum();
+        // Each worker owns a disjoint `out` chunk and reads the shared
+        // file through positioned reads, so no synchronization beyond the
+        // chunk split itself.
+        for_each_chunk(out, threads, |start, chunk| {
+            let end = start + chunk.len();
+            self.walk_blocks_noprefetch(start..end, |first, take, data| {
+                self.t_matvec_block(first, take, data, r, sr, start, chunk);
+            });
+        });
+    }
+
+    /// Group-block transpose matvec `out[k] = X̃[:, cols.start+k]ᵀ r`.
+    pub fn block_t_matvec_into(&self, cols: Range<usize>, r: &[f64], out: &mut [f64]) {
+        let sr: f64 = r.iter().sum();
+        self.block_t_matvec_with_rsum_into(cols, r, sr, out);
+    }
+
+    /// Carried-sum variant: the caller already holds `rsum = Σᵢ rᵢ`.
+    pub fn block_t_matvec_with_rsum_into(
+        &self,
+        cols: Range<usize>,
+        r: &[f64],
+        rsum: f64,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(out.len(), cols.len());
+        let start = cols.start;
+        self.stream_blocks(cols, |first, take, data| {
+            self.t_matvec_block(first, take, data, r, rsum, start, out);
+        });
+    }
+
+    /// `out = X̃β`, touching only blocks with nonzero support — after
+    /// screening, β is sparse, so most blocks are never even read.
+    pub fn matvec_into(&self, beta: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(beta.len(), self.inner.p);
+        debug_assert_eq!(out.len(), self.inner.n);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let n = self.inner.n;
+        let bc = self.block_cols();
+        let mut shift = 0.0;
+        let mut buf: Option<BlockBuf> = None;
+        let mut first = 0;
+        while first < self.inner.p {
+            let take = bc.min(self.inner.p - first);
+            let blk = &beta[first..first + take];
+            if blk.iter().any(|&b| b != 0.0) {
+                let buf = buf.get_or_insert_with(|| BlockBuf::new(bc * n));
+                self.read_cols(first, take, &mut buf.data[..take * n]);
+                for (k, &b) in blk.iter().enumerate() {
+                    if b == 0.0 {
+                        continue;
+                    }
+                    let j = first + k;
+                    let bs = b / self.inner.scales[j];
+                    kernels::axpy(bs, &buf.data[k * n..(k + 1) * n], out);
+                    shift += bs * self.inner.offsets[j];
+                }
+            }
+            first += take;
+        }
+        if shift != 0.0 {
+            out.iter_mut().for_each(|v| *v -= shift);
+        }
+    }
+
+    pub fn matvec(&self, beta: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.inner.n];
+        self.matvec_into(beta, &mut out);
+        out
+    }
+
+    /// `X̃β` is IO-bound and support-skipping; row-parallel fan-out would
+    /// multiply the reads, so the parallel entry point delegates to the
+    /// serial streaming pass.
+    pub fn matvec_par_into(&self, beta: &[f64], _threads: usize, out: &mut [f64]) {
+        self.matvec_into(beta, out);
+    }
+
+    /// Group-block matvec `out += Σ_k coeffs[k] · X̃[:, cols.start+k]`.
+    pub fn block_axpy_into(&self, cols: Range<usize>, coeffs: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(coeffs.len(), cols.len());
+        if coeffs.iter().all(|&c| c == 0.0) {
+            return;
+        }
+        let n = self.inner.n;
+        let start = cols.start;
+        let mut shift = 0.0;
+        self.walk_blocks_noprefetch(cols, |first, take, data| {
+            for k in 0..take {
+                let c = coeffs[first + k - start];
+                if c == 0.0 {
+                    continue;
+                }
+                let j = first + k;
+                let cs = c / self.inner.scales[j];
+                kernels::axpy(cs, &data[k * n..(k + 1) * n], out);
+                shift += cs * self.inner.offsets[j];
+            }
+        });
+        if shift != 0.0 {
+            out.iter_mut().for_each(|v| *v -= shift);
+        }
+    }
+
+    /// Squared ℓ₂ norm of each implied standardized column, streaming:
+    /// `‖X̃_j‖² = Σᵢ(xᵢⱼ − μ_j)² / s_j²` via the shifted one-pass form.
+    pub fn col_sq_norms_cols(&self, cols: Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), cols.len());
+        let n = self.inner.n;
+        let start = cols.start;
+        self.stream_blocks(cols, |first, take, data| {
+            for k in 0..take {
+                let j = first + k;
+                let col = &data[k * n..(k + 1) * n];
+                let mu = self.inner.offsets[j];
+                let sum: f64 = col.iter().sum();
+                let sq = kernels::dot(col, col);
+                let centered = (sq - 2.0 * mu * sum + n as f64 * mu * mu).max(0.0);
+                out[j - start] = centered / (self.inner.scales[j] * self.inner.scales[j]);
+            }
+        });
+    }
+
+    /// Parallel per-column squared norms (same break-even gating as the
+    /// transpose matvec).
+    pub fn col_sq_norms_into(&self, out: &mut [f64]) {
+        let (n, p) = (self.inner.n, self.inner.p);
+        let threads = crate::parallel::default_threads();
+        if threads <= 1 || n.saturating_mul(p) < par_grain() {
+            self.col_sq_norms_cols(0..p, out);
+            return;
+        }
+        for_each_chunk(out, threads, |start, chunk| {
+            let end = start + chunk.len();
+            self.walk_blocks_noprefetch(start..end, |first, take, data| {
+                for k in 0..take {
+                    let j = first + k;
+                    let col = &data[k * n..(k + 1) * n];
+                    let mu = self.inner.offsets[j];
+                    let sum: f64 = col.iter().sum();
+                    let sq = kernels::dot(col, col);
+                    let centered = (sq - 2.0 * mu * sum + n as f64 * mu * mu).max(0.0);
+                    chunk[j - start] = centered / (self.inner.scales[j] * self.inner.scales[j]);
+                }
+            });
+        });
+    }
+
+    /// ℓ₂ norm of each implied standardized column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.inner.p];
+        self.col_sq_norms_into(&mut out);
+        out.iter_mut().for_each(|v| *v = v.sqrt());
+        out
+    }
+
+    /// Column means of the implied standardized design:
+    /// `(mean_raw − μ_j) / s_j` (≈ 0 when stats came from this data).
+    pub fn col_means(&self) -> Vec<f64> {
+        let n = self.inner.n;
+        let mut out = vec![0.0; self.inner.p];
+        self.stream_blocks(0..self.inner.p, |first, take, data| {
+            for k in 0..take {
+                let j = first + k;
+                let sum: f64 = data[k * n..(k + 1) * n].iter().sum();
+                out[j] = (sum / n as f64 - self.inner.offsets[j]) / self.inner.scales[j];
+            }
+        });
+        out
+    }
+
+    /// Power-iteration `‖X̃‖₂²` estimate through the shared
+    /// [`super::DesignRef::op_norm_sq_est`] implementation.
+    pub fn op_norm_sq_est(&self, iters: usize, seed: u64) -> f64 {
+        super::DesignRef::Ooc(self).op_norm_sq_est(iters, seed)
+    }
+
+    /// Read one *standardized* column into `out` — the
+    /// `ReducedDesign::gather` primitive that pulls active columns out of
+    /// the store into the dense in-RAM reduced problem.
+    pub fn read_standardized_col_into(&self, j: usize, out: &mut [f64]) {
+        assert!(j < self.inner.p, "column {j} out of range (p = {})", self.inner.p);
+        assert_eq!(out.len(), self.inner.n);
+        self.read_cols(j, 1, out);
+        let mu = self.inner.offsets[j];
+        let s = self.inner.scales[j];
+        // Divide (not multiply by a reciprocal) so a gathered column is
+        // bitwise what `Matrix::standardize_l2` would have produced.
+        out.iter_mut().for_each(|v| *v = (*v - mu) / s);
+    }
+
+    /// `out += X β` on the *raw* (unstandardized) columns — prediction on
+    /// original-scale coefficients, support-skipping like
+    /// [`OocDesign::matvec_into`].
+    pub fn raw_matvec_acc_into(&self, beta: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(beta.len(), self.inner.p);
+        debug_assert_eq!(out.len(), self.inner.n);
+        let n = self.inner.n;
+        let bc = self.block_cols();
+        let mut buf: Option<BlockBuf> = None;
+        let mut first = 0;
+        while first < self.inner.p {
+            let take = bc.min(self.inner.p - first);
+            let blk = &beta[first..first + take];
+            if blk.iter().any(|&b| b != 0.0) {
+                let buf = buf.get_or_insert_with(|| BlockBuf::new(bc * n));
+                self.read_cols(first, take, &mut buf.data[..take * n]);
+                for (k, &b) in blk.iter().enumerate() {
+                    if b != 0.0 {
+                        kernels::axpy(b, &buf.data[k * n..(k + 1) * n], out);
+                    }
+                }
+            }
+            first += take;
+        }
+    }
+
+    /// Scan every entry for non-finite values in one streaming pass
+    /// (the `Design::validate_contents` hook; pack-time ingest already
+    /// rejects them, so this only fires on hand-built files).
+    pub fn validate_finite(&self) -> Result<(), DfrError> {
+        let n = self.inner.n;
+        let mut bad: Option<DfrError> = None;
+        self.stream_blocks(0..self.inner.p, |first, take, data| {
+            if bad.is_some() {
+                return;
+            }
+            for k in 0..take {
+                for (i, &v) in data[k * n..(k + 1) * n].iter().enumerate() {
+                    if !v.is_finite() {
+                        bad = Some(DfrError::NonFiniteDesign { row: i, col: first + k, value: v });
+                        return;
+                    }
+                }
+            }
+        });
+        match bad {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Mean / clamped centered-ℓ₂-norm of one column — the exact
+/// [`Matrix::standardize_l2`] formulas (sequential sum, centered scratch,
+/// dispatched `norm2`, `> 1e-12` clamp) so OOC stats match an in-memory
+/// standardization of the same data. Returns `(mean, scale, is_constant)`.
+fn column_stats(col: &[f64], scratch: &mut [f64]) -> (f64, f64, bool) {
+    let n = col.len();
+    let mean = col.iter().sum::<f64>() / n as f64;
+    for (d, &v) in scratch[..n].iter_mut().zip(col) {
+        *d = v - mean;
+    }
+    let nrm = norm2(&scratch[..n]);
+    if nrm > 1e-12 {
+        (mean, nrm, false)
+    } else {
+        (mean, 1.0, true)
+    }
+}
+
+fn write_header(file: &File, n: usize, p: usize, hash: u64) -> io::Result<()> {
+    let mut head = Vec::with_capacity(HEADER_BASE as usize);
+    head.extend_from_slice(MAGIC);
+    head.extend_from_slice(&(n as u64).to_le_bytes());
+    head.extend_from_slice(&(p as u64).to_le_bytes());
+    head.extend_from_slice(&hash.to_le_bytes());
+    pwrite(file, &head, 0)
+}
+
+fn write_stats(file: &File, stats: &[(f64, f64)]) -> io::Result<()> {
+    let flat: Vec<f64> = stats.iter().flat_map(|&(m, s)| [m, s]).collect();
+    write_f64s_at(file, &flat, HEADER_BASE)
+}
+
+/// Pack an in-memory dense matrix into a `.dfrpack` file (tests, benches,
+/// and programmatic ingest). Validates like the model API (non-finite and
+/// all-constant rejection) and returns the opened design.
+pub fn pack_matrix(x: &Matrix, path: impl AsRef<Path>) -> anyhow::Result<OocDesign> {
+    let path = path.as_ref();
+    let (n, p) = (x.nrows(), x.ncols());
+    if n == 0 || p == 0 {
+        return Err(DfrError::EmptyDesign { n, p }.into());
+    }
+    let mut stats = Vec::with_capacity(p);
+    let mut scratch = vec![0.0; n];
+    let mut constant_cols = 0;
+    for j in 0..p {
+        let col = x.col(j);
+        for (i, &v) in col.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(DfrError::NonFiniteDesign { row: i, col: j, value: v }.into());
+            }
+        }
+        let (mean, scale, is_const) = column_stats(col, &mut scratch);
+        if is_const {
+            constant_cols += 1;
+        }
+        stats.push((mean, scale));
+    }
+    if constant_cols == p {
+        return Err(DfrError::AllColumnsConstant { p }.into());
+    }
+    let file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(path)
+        .map_err(|e| anyhow::anyhow!("cannot create pack file {}: {e}", path.display()))?;
+    write_header(&file, n, p, super::content_hash(x.as_slice()))
+        .and_then(|()| write_stats(&file, &stats))
+        .and_then(|()| write_f64s_at(&file, x.as_slice(), HEADER_BASE + 16 * p as u64))
+        .map_err(|e| anyhow::anyhow!("cannot write pack file {}: {e}", path.display()))?;
+    drop(file);
+    OocDesign::open(path)
+}
+
+/// Transposition staging budget for [`pack_csv`]'s row→column pass.
+const TRANSPOSE_BUF_BYTES: usize = 32 << 20;
+
+/// Parse one CSV record into `out`; returns false if any field fails to
+/// parse (used for header detection on the first line).
+fn parse_csv_row(line: &str, out: &mut Vec<f64>) -> bool {
+    out.clear();
+    for field in line.split(',') {
+        match field.trim().parse::<f64>() {
+            Ok(v) => out.push(v),
+            Err(_) => return false,
+        }
+    }
+    !out.is_empty()
+}
+
+/// Convert a CSV design (rows = observations, comma-separated columns,
+/// optional header line) to the chunked pack format without ever holding
+/// the design in memory — the `dfr pack` core.
+///
+/// Three bounded-memory passes:
+/// 1. parse + validate, accumulate per-column sums (→ means);
+/// 2. re-read, transposing row chunks (≤ 32 MiB) into positioned
+///    column-strided writes of the data section;
+/// 3. stream the written data section sequentially (= column order),
+///    computing each column's centered norm and the full content hash,
+///    then finalize the header.
+pub fn pack_csv(csv: impl AsRef<Path>, out_path: impl AsRef<Path>) -> anyhow::Result<OocDesign> {
+    let (csv, out_path) = (csv.as_ref(), out_path.as_ref());
+    let open_csv = || -> anyhow::Result<BufReader<File>> {
+        File::open(csv)
+            .map(BufReader::new)
+            .map_err(|e| anyhow::anyhow!("cannot open {}: {e}", csv.display()))
+    };
+
+    // Pass 1: shape + finiteness + column sums.
+    let mut reader = open_csv()?;
+    let mut line = String::new();
+    let mut row = Vec::new();
+    let mut sums: Vec<f64> = Vec::new();
+    let mut n = 0usize;
+    let mut header_lines = 0usize;
+    let mut first_data_seen = false;
+    loop {
+        line.clear();
+        if reader
+            .read_line(&mut line)
+            .map_err(|e| anyhow::anyhow!("{}: read error: {e}", csv.display()))?
+            == 0
+        {
+            break;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if !parse_csv_row(trimmed, &mut row) {
+            // Only the leading line may be non-numeric (a header).
+            anyhow::ensure!(
+                !first_data_seen && header_lines == 0,
+                "{}: row {} contains a non-numeric field",
+                csv.display(),
+                n + 1
+            );
+            header_lines = 1;
+            continue;
+        }
+        if !first_data_seen {
+            first_data_seen = true;
+            sums = vec![0.0; row.len()];
+        }
+        if row.len() != sums.len() {
+            return Err(DfrError::DimensionMismatch {
+                what: "csv row width",
+                expected: sums.len(),
+                got: row.len(),
+            }
+            .into());
+        }
+        for (j, &v) in row.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(DfrError::NonFiniteDesign { row: n, col: j, value: v }.into());
+            }
+            sums[j] += v;
+        }
+        n += 1;
+    }
+    let p = sums.len();
+    if n == 0 || p == 0 {
+        return Err(DfrError::EmptyDesign { n, p }.into());
+    }
+    let means: Vec<f64> = sums.iter().map(|s| s / n as f64).collect();
+
+    // Pass 2: transpose row chunks into the data section.
+    let data_off = HEADER_BASE + 16 * p as u64;
+    let file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(out_path)
+        .map_err(|e| anyhow::anyhow!("cannot create pack file {}: {e}", out_path.display()))?;
+    file.set_len(data_off + 8 * (n as u64) * (p as u64))
+        .map_err(|e| anyhow::anyhow!("cannot size pack file {}: {e}", out_path.display()))?;
+    let chunk_rows = (TRANSPOSE_BUF_BYTES / (8 * p)).clamp(1, n);
+    let mut rowbuf: Vec<f64> = Vec::with_capacity(chunk_rows * p);
+    let mut colstage: Vec<f64> = vec![0.0; chunk_rows];
+    let mut reader = open_csv()?;
+    for _ in 0..header_lines {
+        line.clear();
+        let _ = reader.read_line(&mut line);
+    }
+    let mut row0 = 0usize;
+    let mut flush_chunk = |rowbuf: &mut Vec<f64>, row0: usize| -> anyhow::Result<()> {
+        let rc = rowbuf.len() / p;
+        for j in 0..p {
+            for i in 0..rc {
+                colstage[i] = rowbuf[i * p + j];
+            }
+            write_f64s_at(&file, &colstage[..rc], data_off + 8 * ((j * n + row0) as u64))
+                .map_err(|e| anyhow::anyhow!("{}: write error: {e}", out_path.display()))?;
+        }
+        rowbuf.clear();
+        Ok(())
+    };
+    loop {
+        line.clear();
+        if reader
+            .read_line(&mut line)
+            .map_err(|e| anyhow::anyhow!("{}: read error: {e}", csv.display()))?
+            == 0
+        {
+            break;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        anyhow::ensure!(
+            parse_csv_row(trimmed, &mut row) && row.len() == p,
+            "{}: file changed between packing passes",
+            csv.display()
+        );
+        rowbuf.extend_from_slice(&row);
+        if rowbuf.len() == chunk_rows * p {
+            flush_chunk(&mut rowbuf, row0)?;
+            row0 += chunk_rows;
+        }
+    }
+    if !rowbuf.is_empty() {
+        let rc = rowbuf.len() / p;
+        flush_chunk(&mut rowbuf, row0)?;
+        row0 += rc;
+    }
+    anyhow::ensure!(row0 == n, "{}: file changed between packing passes", csv.display());
+
+    // Pass 3: sequential sweep of the data section (column order) —
+    // centered norms + content hash — then finalize header and stats.
+    let mut stats: Vec<(f64, f64)> = Vec::with_capacity(p);
+    let mut hash = Fnv::new();
+    let mut constant_cols = 0usize;
+    let block = (DEFAULT_OOC_BLOCK_BYTES / (8 * n)).clamp(1, p);
+    let mut buf = vec![0.0f64; block * n];
+    let mut scratch = vec![0.0f64; n];
+    let mut j0 = 0usize;
+    while j0 < p {
+        let take = block.min(p - j0);
+        read_f64s_at(&file, &mut buf[..take * n], data_off + 8 * ((j0 * n) as u64))
+            .map_err(|e| anyhow::anyhow!("{}: readback error: {e}", out_path.display()))?;
+        for k in 0..take {
+            let col = &buf[k * n..(k + 1) * n];
+            for &v in col {
+                hash.update(v);
+            }
+            let (mean, scale, is_const) = column_stats(col, &mut scratch);
+            if is_const {
+                constant_cols += 1;
+            }
+            stats.push((mean, scale));
+        }
+        j0 += take;
+    }
+    if constant_cols == p {
+        return Err(DfrError::AllColumnsConstant { p }.into());
+    }
+    write_header(&file, n, p, hash.0)
+        .and_then(|()| write_stats(&file, &stats))
+        .map_err(|e| anyhow::anyhow!("cannot finalize pack file {}: {e}", out_path.display()))?;
+    drop(file);
+    OocDesign::open(out_path)
+}

@@ -8,7 +8,9 @@
 //! * `cv`       — workspace-pooled k-fold cross-validation, optionally
 //!                over a joint `(α, γ)` grid (`--alphas` / `--gammas`),
 //!                with per-cell screening stats and the 1-SE rule.
-//! * `info`     — environment report (threads, artifacts, PJRT platform).
+//! * `pack`     — convert a CSV design into a column-major `.dfrpack`
+//!                file for out-of-core fitting (`fit --ooc`).
+//! * `info`     — environment report (threads, kernel backends).
 
 // Same no-panic discipline as the library (see lib.rs).
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
@@ -19,9 +21,8 @@ use dfr::error::{check_non_negative, check_range, DfrError};
 use dfr::data::{Dataset, Response, SyntheticConfig};
 use dfr::linalg::CscMatrix;
 use dfr::model_api::{sparse_density_threshold, Design, SglFitter, SglModel, SparseMode};
-use dfr::path::{compare_with_no_screen, PathConfig, PathRunner};
+use dfr::path::{compare_with_no_screen, PathConfig};
 use dfr::report;
-use dfr::runtime::XlaEngine;
 use dfr::solver::{SolverConfig, SolverKind};
 
 fn specs() -> Vec<OptSpec> {
@@ -45,7 +46,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "one-se", help: "cv: select λ by the one-standard-error rule", default: None, takes_value: false },
         OptSpec { name: "seed", help: "RNG seed", default: Some("42"), takes_value: true },
         OptSpec { name: "logistic", help: "synthetic: logistic response", default: None, takes_value: false },
-        OptSpec { name: "xla", help: "serve full gradients from PJRT artifacts (artifacts/)", default: None, takes_value: false },
+        OptSpec { name: "ooc", help: "fit: stream the design from a .dfrpack file (see `dfr pack`) instead of building one in RAM", default: None, takes_value: true },
+        OptSpec { name: "y", help: "fit --ooc: response vector CSV (one value per line)", default: None, takes_value: true },
+        OptSpec { name: "group-size", help: "fit --ooc: uniform group size (last group takes the remainder)", default: Some("10"), takes_value: true },
         OptSpec { name: "csv", help: "write per-path-point metrics CSV to this path", default: None, takes_value: true },
         OptSpec { name: "max-entries", help: "serve: LRU entry bound of each shared cache", default: Some("8"), takes_value: true },
         OptSpec { name: "max-bytes-mb", help: "serve: LRU byte bound of each shared cache (MiB)", default: Some("512"), takes_value: true },
@@ -65,7 +68,7 @@ fn main() {
         }
     };
     if args.flag("help") || args.positional.is_empty() {
-        println!("{}", usage("dfr <fit|compare|cv|serve|info>", ABOUT, &specs));
+        println!("{}", usage("dfr <fit|compare|cv|serve|pack|info>", ABOUT, &specs));
         return;
     }
     let cmd = args.positional[0].clone();
@@ -148,6 +151,9 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
     }
     match cmd {
         "fit" => {
+            if args.options.contains_key("ooc") {
+                return fit_ooc(args);
+            }
             let ds = build_dataset(args)?;
             let cfg = build_path_config(args)?;
             let rule = parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?;
@@ -165,52 +171,42 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 if args.options.contains_key("threads") { ", --threads" } else { "" },
                 dfr::linalg::kernels::describe(),
             );
-            if args.flag("xla") {
-                let xla_engine = XlaEngine::new("artifacts")?;
-                let fit = PathRunner::new(&ds, cfg).rule(rule).engine(&xla_engine).run()?;
-                report_fit(&ds, rule.name(), &fit, args)?;
-                let stats = xla_engine.stats();
-                println!(
-                    "[xla] gradient calls: {} (native fallbacks: {}, artifacts compiled: {})",
-                    stats.xla_gradient_calls, stats.native_fallbacks, stats.compiled_artifacts
-                );
-            } else {
-                // Native fits go through the serving API: borrowed
-                // zero-copy design straight into the fitter.
-                let sparse = SparseMode::parse(&args.str_or("sparse", "auto"))
-                    .map_err(anyhow::Error::msg)?;
-                let model = SglModel {
-                    path: cfg,
-                    rule,
-                    seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
-                    sparse,
-                    ..SglModel::default()
-                };
-                let mut fitter = model.fitter();
-                let sizes = ds.groups.sizes();
-                // `--csc` routes the design through the sparse ingest so
-                // `--sparse` / DFR_SPARSE_DENSITY actually pick the solve
-                // kernel; without it dense inputs always solve dense.
-                let csc = args
-                    .flag("csc")
-                    .then(|| CscMatrix::from_dense(ds.x.dense(), 0.0));
-                let fit = match &csc {
-                    Some(c) => fitter.fit_path(&Design::Csc(c), &ds.y, &sizes, ds.response)?,
-                    None => fitter
-                        .fit_path(&Design::Matrix(ds.x.dense()), &ds.y, &sizes, ds.response)?,
-                };
-                report_fit(&ds, rule.name(), fit, args)?;
-                let density = csc
-                    .as_ref()
-                    .map(|c| format!(", csc density {:.4}", c.density()))
-                    .unwrap_or_default();
-                println!(
-                    "[kernel] {} (sparse mode {:?}, density threshold {}{density})",
-                    fitter.kernel_variant().unwrap_or("dense"),
-                    sparse,
-                    sparse_density_threshold(),
-                );
-            }
+            // Native fits go through the serving API: borrowed
+            // zero-copy design straight into the fitter.
+            let sparse =
+                SparseMode::parse(&args.str_or("sparse", "auto")).map_err(anyhow::Error::msg)?;
+            let model = SglModel {
+                path: cfg,
+                rule,
+                seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+                sparse,
+                ..SglModel::default()
+            };
+            let mut fitter = model.fitter();
+            let sizes = ds.groups.sizes();
+            // `--csc` routes the design through the sparse ingest so
+            // `--sparse` / DFR_SPARSE_DENSITY actually pick the solve
+            // kernel; without it dense inputs always solve dense.
+            let csc = args
+                .flag("csc")
+                .then(|| CscMatrix::from_dense(ds.x.dense(), 0.0));
+            let fit = match &csc {
+                Some(c) => fitter.fit_path(&Design::Csc(c), &ds.y, &sizes, ds.response)?,
+                None => {
+                    fitter.fit_path(&Design::Matrix(ds.x.dense()), &ds.y, &sizes, ds.response)?
+                }
+            };
+            report_fit(&ds.name, rule.name(), fit, args)?;
+            let density = csc
+                .as_ref()
+                .map(|c| format!(", csc density {:.4}", c.density()))
+                .unwrap_or_default();
+            println!(
+                "[kernel] {} (sparse mode {:?}, density threshold {}{density})",
+                fitter.kernel_variant().unwrap_or("dense"),
+                sparse,
+                sparse_density_threshold(),
+            );
             Ok(())
         }
         "compare" => {
@@ -380,6 +376,23 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "pack" => {
+            let (src, dst) = match &args.positional[1..] {
+                [src, dst] => (src, dst),
+                _ => anyhow::bail!("usage: dfr pack <design.csv> <out.dfrpack>"),
+            };
+            let o = dfr::linalg::ooc::pack_csv(src, dst)?;
+            println!(
+                "packed {} -> {} (n={}, p={}, {} data bytes, content hash {:016x})",
+                src,
+                dst,
+                o.nrows(),
+                o.ncols(),
+                o.nrows() * o.ncols() * 8,
+                o.content_hash(),
+            );
+            Ok(())
+        }
         "info" => {
             println!("dfr {}", env!("CARGO_PKG_VERSION"));
             println!("threads: {}", dfr::parallel::default_threads());
@@ -392,26 +405,101 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     .collect::<Vec<_>>()
                     .join(", "),
             );
-            if XlaEngine::compiled_with_xla() {
-                match XlaEngine::new("artifacts") {
-                    Ok(_) => println!("pjrt: cpu client OK"),
-                    Err(e) => println!("pjrt: unavailable ({e})"),
-                }
-            } else {
-                println!("pjrt: compiled without the `xla` feature (native engine only)");
-            }
-            let artifacts = std::fs::read_dir("artifacts")
-                .map(|rd| rd.filter_map(|e| e.ok()).count())
-                .unwrap_or(0);
-            println!("artifacts: {artifacts} file(s) in artifacts/");
             Ok(())
         }
         other => anyhow::bail!("unknown command `{other}` (try --help)"),
     }
 }
 
+/// `fit --ooc <pack>`: stream the design from a `.dfrpack` file built by
+/// `dfr pack`. The response comes from `--y` (one value per line); groups
+/// are uniform `--group-size` blocks with the last taking the remainder.
+/// Nothing `n × p`-sized is ever resident — the `[ooc]` line reports the
+/// streaming block geometry and the peak block-buffer residency actually
+/// observed during the fit.
+fn fit_ooc(args: &Args) -> anyhow::Result<()> {
+    let pack = match args.options.get("ooc") {
+        Some(p) => p,
+        None => anyhow::bail!("fit --ooc requires a pack file path"),
+    };
+    let y_path = match args.options.get("y") {
+        Some(p) => p,
+        None => anyhow::bail!("fit --ooc requires --y <csv> (one response value per line)"),
+    };
+    let cfg = build_path_config(args)?;
+    let rule = parse_rule(&args.str_or("rule", "dfr")).map_err(anyhow::Error::msg)?;
+    let design = dfr::linalg::OocDesign::open(pack)?;
+    let y = read_response_csv(y_path)?;
+    anyhow::ensure!(
+        y.len() == design.nrows(),
+        "--y has {} value(s) but the pack holds n={} observations",
+        y.len(),
+        design.nrows(),
+    );
+    let g = args.usize_or("group-size", 10).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(g >= 1, "--group-size: need at least 1");
+    let p = design.ncols();
+    let mut sizes = vec![g; p / g];
+    if p % g != 0 {
+        sizes.push(p % g);
+    }
+    let response = if args.flag("logistic") { Response::Logistic } else { Response::Linear };
+    let threads = dfr::parallel::default_threads();
+    println!(
+        "fitting {pack} out-of-core (p={}, n={}, m={}) with {} [solver {}, {} thread{}, kernels {}] ...",
+        p,
+        design.nrows(),
+        sizes.len(),
+        rule.name(),
+        cfg.solver.kind.name(),
+        threads,
+        if threads == 1 { "" } else { "s" },
+        dfr::linalg::kernels::describe(),
+    );
+    let model = SglModel {
+        path: cfg,
+        rule,
+        seed: args.u64_or("seed", 42).map_err(anyhow::Error::msg)?,
+        ..SglModel::default()
+    };
+    let mut fitter = model.fitter();
+    dfr::linalg::ooc_reset_peak();
+    let fit = fitter.fit_path(&Design::Ooc(&design), &y, &sizes, response)?;
+    report_fit(pack, rule.name(), fit, args)?;
+    println!(
+        "[ooc] kernel {}, block {} cols ({} MiB), peak resident {} MiB vs dense design {} MiB",
+        fitter.kernel_variant().unwrap_or("ooc-stream"),
+        design.block_cols(),
+        design.block_bytes() >> 20,
+        dfr::linalg::ooc_peak_resident_bytes() >> 20,
+        (design.nrows() * p * 8) >> 20,
+    );
+    Ok(())
+}
+
+/// Read a response vector CSV: one numeric value per line, blank lines
+/// ignored, a single non-numeric first line tolerated as a header.
+fn read_response_csv(path: &str) -> anyhow::Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("--y {path}: {e}"))?;
+    let mut y = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        match t.parse::<f64>() {
+            Ok(v) => y.push(v),
+            Err(_) if lineno == 0 => continue, // header line
+            Err(_) => anyhow::bail!("--y {path}: line {} is not a number: `{t}`", lineno + 1),
+        }
+    }
+    anyhow::ensure!(!y.is_empty(), "--y {path}: no numeric values found");
+    Ok(y)
+}
+
 fn report_fit(
-    ds: &Dataset,
+    name: &str,
     rule: &str,
     fit: &dfr::path::PathFit,
     args: &Args,
@@ -434,7 +522,7 @@ fn report_fit(
              response fell back to full candidate sets (safe, but unscreened)"
         );
     }
-    println!("{}", report::run_record(&ds.name, rule, m, None, None).render());
+    println!("{}", report::run_record(name, rule, m, None, None).render());
     if let Some(csv) = args.options.get("csv") {
         report::write_file(csv, &report::path_metrics_csv(m))?;
         println!("[csv] {csv}");

@@ -38,7 +38,7 @@
 use crate::cv::{CvCell, CvConfig, CvEngine};
 use crate::data::{Dataset, Response};
 use crate::error::DfrError;
-use crate::linalg::{self, CenteredSparse, CscMatrix, DesignOps, Matrix};
+use crate::linalg::{self, CenteredSparse, CscMatrix, DesignOps, Matrix, OocDesign};
 use crate::loss::sigmoid;
 use crate::lru::KeyedLru;
 use crate::parallel::WorkspacePool;
@@ -167,6 +167,9 @@ impl SglModel {
 /// * [`Design::Csc`] — sparse genotype-style designs; standardization
 ///   stats come from the nonzeros alone
 ///   ([`CscMatrix::to_standardized_dense`]).
+/// * [`Design::Ooc`] — an opened out-of-core pack file
+///   ([`OocDesign::open`], created by `dfr pack`). The design streams
+///   from disk in column blocks; nothing `n × p`-sized is ever resident.
 #[derive(Clone, Copy, Debug)]
 pub enum Design<'a> {
     /// Borrowed column-major buffer (`data.len() == n * p`).
@@ -193,6 +196,8 @@ pub enum Design<'a> {
     Matrix(&'a Matrix),
     /// Borrowed CSC sparse matrix.
     Csc(&'a CscMatrix),
+    /// Borrowed out-of-core pack-file design (column-block streaming).
+    Ooc(&'a OocDesign),
 }
 
 impl<'a> Design<'a> {
@@ -220,6 +225,7 @@ impl<'a> Design<'a> {
             Design::Rows(rows) => rows.len(),
             Design::Matrix(m) => m.nrows(),
             Design::Csc(s) => s.nrows(),
+            Design::Ooc(o) => o.nrows(),
         }
     }
 
@@ -230,6 +236,7 @@ impl<'a> Design<'a> {
             Design::Rows(rows) => rows.first().map(|r| r.len()).unwrap_or(0),
             Design::Matrix(m) => m.ncols(),
             Design::Csc(s) => s.ncols(),
+            Design::Ooc(o) => o.ncols(),
         }
     }
 
@@ -241,6 +248,7 @@ impl<'a> Design<'a> {
             Design::Rows(_) => "rows",
             Design::Matrix(_) => "matrix",
             Design::Csc(_) => "csc",
+            Design::Ooc(_) => "ooc",
         }
     }
 
@@ -353,6 +361,12 @@ impl<'a> Design<'a> {
                     }
                 }
             }
+            Design::Ooc(_) => {
+                // Pack files are validated entry-by-entry when written
+                // (`dfr pack`) and shape/stat-checked again on open, so
+                // re-streaming the whole file here would only repeat work.
+                return Ok(());
+            }
         }
         if p > 0 && constant_cols == p {
             return Err(DfrError::AllColumnsConstant { p });
@@ -382,6 +396,9 @@ impl<'a> Design<'a> {
             }
             Design::Matrix(m) => linalg::content_hash(m.as_slice()),
             Design::Csc(s) => s.fingerprint(),
+            // The pack header stores the same column-major FNV-1a hash
+            // `dfr pack` computed at write time — O(1) to read back.
+            Design::Ooc(o) => o.content_hash(),
         }
     }
 
@@ -414,6 +431,10 @@ impl<'a> Design<'a> {
                 (m, centers)
             }
             Design::Csc(s) => s.to_standardized_dense(),
+            Design::Ooc(_) => anyhow::bail!(
+                "out-of-core designs cannot materialize a dense standardized matrix; \
+                 use `standardized_ops` (streaming kernels)"
+            ),
         })
     }
 
@@ -433,10 +454,13 @@ impl<'a> Design<'a> {
     }
 
     /// The kernel variant a fit with this design would run under `mode`
-    /// ([`linalg::DENSE_KERNEL`] or [`linalg::SPARSE_KERNEL`]) — cheap
-    /// (no standardization), used for cache keys and fit reports.
+    /// ([`linalg::DENSE_KERNEL`], [`linalg::SPARSE_KERNEL`], or
+    /// [`linalg::OOC_KERNEL`]) — cheap (no standardization), used for
+    /// cache keys and fit reports.
     pub fn resolved_kernel(&self, mode: SparseMode) -> &'static str {
-        if self.resolves_sparse(mode) {
+        if matches!(self, Design::Ooc(_)) {
+            linalg::OOC_KERNEL
+        } else if self.resolves_sparse(mode) {
             linalg::SPARSE_KERNEL
         } else {
             linalg::DENSE_KERNEL
@@ -445,7 +469,9 @@ impl<'a> Design<'a> {
 
     /// Standardize into the kernel representation `mode` resolves to: a
     /// CSC design below the density threshold (or forced `On`) becomes a
-    /// [`CenteredSparse`] — no `n × p` dense allocation anywhere —
+    /// [`CenteredSparse`] — no `n × p` dense allocation anywhere — an
+    /// out-of-core design stays out of core (an Arc-cheap [`OocDesign`]
+    /// clone whose `(mean, scale)` stats were computed at pack time) —
     /// while every other input takes the exact dense path of
     /// [`Design::standardized`]. Returns the per-column `(mean, scale)`
     /// alongside, as that method does.
@@ -453,6 +479,11 @@ impl<'a> Design<'a> {
         &self,
         mode: SparseMode,
     ) -> anyhow::Result<(DesignOps, Vec<(f64, f64)>)> {
+        if let Design::Ooc(o) = self {
+            let centers: Vec<(f64, f64)> =
+                o.offsets().iter().zip(o.scales()).map(|(&m, &s)| (m, s)).collect();
+            return Ok((DesignOps::Ooc((*o).clone()), centers));
+        }
         if let Design::Csc(s) = self {
             if self.resolves_sparse(mode) {
                 anyhow::ensure!(self.n() > 0 && self.p() > 0, "empty design");
@@ -475,6 +506,12 @@ impl<'a> From<&'a Matrix> for Design<'a> {
 impl<'a> From<&'a CscMatrix> for Design<'a> {
     fn from(s: &'a CscMatrix) -> Self {
         Design::Csc(s)
+    }
+}
+
+impl<'a> From<&'a OocDesign> for Design<'a> {
+    fn from(o: &'a OocDesign) -> Self {
+        Design::Ooc(o)
     }
 }
 
@@ -599,6 +636,13 @@ impl FittedSgl {
                     *o = self.intercept + linalg::dot(r, &self.coefficients);
                 }
             }
+            Design::Ooc(o) => {
+                out.fill(self.intercept);
+                // Streams only the column blocks intersecting the support,
+                // accumulating raw (unstandardized) columns — the
+                // coefficients here are already on the original scale.
+                o.raw_matvec_acc_into(&self.coefficients, out);
+            }
         }
     }
 
@@ -620,9 +664,10 @@ impl FittedSgl {
 #[derive(Clone, Debug, PartialEq)]
 pub(crate) struct DesignKey {
     pub(crate) layout: &'static str,
-    /// Resolved kernel variant ("dense" / "centered-sparse"): a changed
-    /// sparse mode or density threshold re-ingests rather than serving a
-    /// dataset prepared for the other kernel.
+    /// Resolved kernel variant ("dense" / "centered-sparse" /
+    /// "ooc-stream"): a changed sparse mode or density threshold
+    /// re-ingests rather than serving a dataset prepared for the other
+    /// kernel.
     pub(crate) kernel: &'static str,
     pub(crate) n: usize,
     pub(crate) p: usize,
@@ -757,6 +802,10 @@ pub(crate) fn prepared_bytes(data: &PreparedData) -> usize {
         crate::linalg::DesignOps::Dense(m) => m.nrows() * m.ncols() * 8,
         // Raw nonzeros (index + value) plus per-column affine terms.
         crate::linalg::DesignOps::Sparse(s) => s.nnz() * 16 + data.ds.p() * 16,
+        // The data lives on disk; only the per-column `(offset, scale)`
+        // stats are resident (streaming block buffers are transient and
+        // bounded separately by `DFR_OOC_BLOCK`).
+        crate::linalg::DesignOps::Ooc(o) => o.ncols() * 16,
     };
     x + data.ds.y.len() * 8 + data.centers.len() * 16
 }
@@ -960,8 +1009,8 @@ impl SglFitter {
     }
 
     /// Kernel variant of the currently prepared dataset ("dense" /
-    /// "centered-sparse"); `None` before the first fit. Fit reports echo
-    /// this so sparse-path routing is observable.
+    /// "centered-sparse" / "ooc-stream"); `None` before the first fit.
+    /// Fit reports echo this so kernel routing is observable.
     pub fn kernel_variant(&self) -> Option<&'static str> {
         self.current.as_ref().map(|k| k.kernel)
     }
@@ -1064,6 +1113,15 @@ impl SglFitter {
         group_sizes: &[usize],
         response: Response,
     ) -> anyhow::Result<FittedSgl> {
+        // Fold extraction gathers row subsets into dense fold designs —
+        // exactly the n × p materialization the out-of-core path exists
+        // to avoid. Fail up front with an actionable message instead of
+        // panicking inside `gather_rows`.
+        anyhow::ensure!(
+            !matches!(design, Design::Ooc(_)),
+            "cross-validation is not supported for out-of-core designs; \
+             fit at a fixed λ (fit_at / fit_path) instead"
+        );
         self.prepare(design, y, group_sizes, response)?;
         let cfg = self.cv_config();
         let Self { prepared, current, cv, stats, .. } = self;
@@ -1103,6 +1161,12 @@ impl SglFitter {
         alphas: &[f64],
         gammas: &[Option<(f64, f64)>],
     ) -> anyhow::Result<(Vec<CvCell>, usize)> {
+        // Same constraint as `fit_cv`: folds materialize dense subsets.
+        anyhow::ensure!(
+            !matches!(design, Design::Ooc(_)),
+            "cross-validation is not supported for out-of-core designs; \
+             fit at a fixed λ (fit_at / fit_path) instead"
+        );
         self.prepare(design, y, group_sizes, response)?;
         let cfg = self.cv_config();
         let prep = match self.current.as_ref().and_then(|k| self.prepared.peek(k)) {

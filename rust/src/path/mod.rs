@@ -11,7 +11,7 @@
 //!
 //! The coordinator owns warm starts, timing, and all Appendix-D metrics.
 //! Dense compute (full gradients, reduced solves) flows through an
-//! exchangeable [`Engine`] so the PJRT/XLA runtime can serve the hot path;
+//! exchangeable [`Engine`] so alternative backends can serve the hot path;
 //! every reduced solve dispatches the configured
 //! [`crate::solver::SolverKind`] (FISTA / ATOS / group-major BCD) through
 //! the [`crate::solver::Solver`] trait, and reduced gathers record their
@@ -49,9 +49,10 @@ use crate::screen::{self, RuleKind, ScreenContext};
 use crate::solver::{SolveResult, SolveStatus, SolverConfig, SolverWorkspace};
 use std::time::Instant;
 
-/// Dense-compute backend. The default native engine runs everything on the
-/// in-crate linear algebra; the XLA engine (in [`crate::runtime`]) serves
-/// the same operations from AOT-compiled JAX/Pallas artifacts.
+/// Dense-compute backend. The default native engine runs everything on
+/// the in-crate linear algebra; an alternative engine can serve the same
+/// operations from external compute (the trait is the seam the engine
+/// ablation benchmarks exercise).
 pub trait Engine {
     /// Full gradient `∇f(β)` over all p columns (screening / KKT checks).
     fn full_gradient(&self, loss: &Loss, beta: &[f64]) -> Vec<f64> {
@@ -63,8 +64,8 @@ pub trait Engine {
     ///
     /// The native engine turns this into a single `Xᵀr` pass with no
     /// allocation and no `Xβ` recomputation; backends that compute from `β`
-    /// directly (e.g. PJRT gradient artifacts) may ignore `xb` — the
-    /// default implementation routes through [`Engine::full_gradient`].
+    /// directly may ignore `xb` — the default implementation routes
+    /// through [`Engine::full_gradient`].
     fn full_gradient_carried(
         &self,
         loss: &Loss,
@@ -342,8 +343,8 @@ impl<'a> PathRunner<'a> {
         self
     }
 
-    /// Route dense compute through a custom [`Engine`] (e.g. the PJRT
-    /// backend) instead of the native one.
+    /// Route dense compute through a custom [`Engine`] instead of the
+    /// native one.
     pub fn engine(mut self, engine: &'a dyn Engine) -> Self {
         self.engine = engine;
         self

@@ -222,7 +222,9 @@ fn unavailable_backend_requests_degrade_to_a_runnable_one() {
         assert_eq!(active, Backend::Scalar, "unavailable pin must clamp to scalar");
     }
     assert_eq!(kernels::parse_choice("scalar"), Ok(Some(Backend::Scalar)));
-    assert!(kernels::parse_choice("neon").is_err());
+    // NEON parses on every arch; the pin clamps to scalar off-aarch64.
+    assert_eq!(kernels::parse_choice("neon"), Ok(Some(Backend::Neon)));
+    assert!(kernels::parse_choice("avx512").is_err());
 }
 
 // --- contract 3: chunking transparency ----------------------------------

@@ -1,0 +1,309 @@
+//! End-to-end equivalence gates for the out-of-core streaming solve
+//! path: a `.dfrpack` design solved through the [`dfr::linalg::OocDesign`]
+//! kernels must match the in-memory dense standardized solve to
+//! ℓ₂ ≤ 1e-10 — for every screening rule and both response families —
+//! while the peak-residency witness proves the design never occupied more
+//! than two streaming blocks of RAM (plus the gathered reduced problem).
+//!
+//! Tests that pin the streaming block width or read the global residency
+//! counters serialize on one mutex: the block override and the witness
+//! watermark are process-wide.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use dfr::data::{Dataset, Response};
+use dfr::linalg::{
+    dense_materializations, ooc_peak_resident_bytes, ooc_reset_peak, set_ooc_block_override,
+    DesignOps, Matrix, OocDesign,
+};
+use dfr::model_api::{Design, SglModel, SparseMode};
+use dfr::path::{PathConfig, PathRunner};
+use dfr::prelude::Groups;
+use dfr::rng::Rng;
+use dfr::screen::RuleKind;
+use dfr::solver::SolverConfig;
+
+/// One process-wide lock: `set_ooc_block_override` and the residency
+/// watermark are global, so these tests must not interleave.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Unique scratch path for one test's pack file.
+fn pack_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dfr-ooc-test-{}-{tag}.dfrpack", std::process::id()))
+}
+
+/// Raw (unstandardized) Gaussian design with per-column offsets and
+/// scales, so pack-time standardization stats are nontrivial.
+fn raw_design(seed: u64, n: usize, p: usize) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(n, p, |_, j| 2.0 * rng.gauss() + (j % 5) as f64 - 1.0)
+}
+
+/// Response from a sparse causal signal on the raw design.
+fn response(raw: &Matrix, seed: u64, kind: Response) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x00C);
+    let p = raw.ncols();
+    let beta_true: Vec<f64> =
+        (0..p).map(|j| if j % 7 == 0 { rng.normal(0.0, 1.5) } else { 0.0 }).collect();
+    let xb = raw.matvec(&beta_true);
+    match kind {
+        Response::Linear => xb.iter().map(|v| v + rng.normal(0.0, 0.3)).collect(),
+        Response::Logistic => {
+            let mean = xb.iter().sum::<f64>() / xb.len() as f64;
+            xb.iter()
+                .map(|v| if v - mean + rng.normal(0.0, 0.3) > 0.0 { 1.0 } else { 0.0 })
+                .collect()
+        }
+    }
+}
+
+/// The same problem as two [`Dataset`]s: one on the in-memory dense
+/// standardized matrix, one streaming from a freshly packed `.dfrpack`.
+/// p = 40 in groups of 5 with a 7-column streaming block, so every block
+/// boundary except the last straddles a group.
+fn paired_datasets(seed: u64, kind: Response, tag: &str) -> (Dataset, Dataset, PathBuf) {
+    let (n, p, gsize) = (60usize, 40usize, 5usize);
+    let raw = raw_design(seed, n, p);
+    let mut y = response(&raw, seed, kind);
+    if kind == Response::Linear {
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        y.iter_mut().for_each(|v| *v -= mean);
+    }
+    let group_sizes = vec![gsize; p / gsize];
+    let groups = Groups::from_sizes(&group_sizes);
+    let mut dense_std = raw.clone();
+    dense_std.standardize_l2();
+    let path = pack_path(tag);
+    let ooc = dfr::linalg::ooc::pack_matrix(&raw, &path).unwrap();
+    let dense_ds = Dataset {
+        x: dense_std.into(),
+        y: y.clone(),
+        groups: groups.clone(),
+        response: kind,
+        name: "ooc-dense".into(),
+    };
+    let ooc_ds = Dataset {
+        x: DesignOps::Ooc(ooc),
+        y,
+        groups,
+        response: kind,
+        name: "ooc-stream".into(),
+    };
+    (dense_ds, ooc_ds, path)
+}
+
+/// Solver settings tight enough that the comparison measures the
+/// streaming kernels' floating-point perturbation, not optimizer slack.
+fn cfg() -> PathConfig {
+    PathConfig {
+        path_len: 8,
+        solver: SolverConfig { tol: 1e-12, max_iters: 200_000, ..Default::default() },
+        ..PathConfig::default()
+    }
+}
+
+const RULES: [RuleKind; 5] = [
+    RuleKind::DfrSgl,
+    RuleKind::Sparsegl,
+    RuleKind::GapSafeSeq,
+    RuleKind::GapSafeDyn,
+    RuleKind::Tlfre,
+];
+
+#[test]
+fn pathwise_ooc_matches_dense_linear_all_rules() {
+    let _g = serial();
+    set_ooc_block_override(Some(7));
+    let (dense_ds, ooc_ds, path) = paired_datasets(3, Response::Linear, "linear");
+    for rule in RULES {
+        let dense_fit = PathRunner::new(&dense_ds, cfg()).rule(rule).run().unwrap();
+        let ooc_fit = PathRunner::new(&ooc_ds, cfg())
+            .rule(rule)
+            .fixed_path(dense_fit.lambdas.clone())
+            .run()
+            .unwrap();
+        let d = ooc_fit.l2_distance_to(&dense_fit);
+        assert!(d <= 1e-10, "{}: ooc vs dense drift ℓ₂ = {d}", rule.name());
+    }
+    set_ooc_block_override(None);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn pathwise_ooc_matches_dense_logistic_all_rules() {
+    let _g = serial();
+    set_ooc_block_override(Some(7));
+    let (dense_ds, ooc_ds, path) = paired_datasets(4, Response::Logistic, "logistic");
+    for rule in RULES {
+        let dense_fit = PathRunner::new(&dense_ds, cfg()).rule(rule).run().unwrap();
+        let ooc_fit = PathRunner::new(&ooc_ds, cfg())
+            .rule(rule)
+            .fixed_path(dense_fit.lambdas.clone())
+            .run()
+            .unwrap();
+        let d = ooc_fit.l2_distance_to(&dense_fit);
+        assert!(d <= 1e-10, "{} logistic: drift ℓ₂ = {d}", rule.name());
+    }
+    set_ooc_block_override(None);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn asgl_ooc_matches_dense() {
+    // Adaptive weights flow through the streaming col_means / PCA leg.
+    let _g = serial();
+    set_ooc_block_override(Some(7));
+    let (dense_ds, ooc_ds, path) = paired_datasets(5, Response::Linear, "asgl");
+    let c = PathConfig { adaptive: Some((0.1, 0.1)), ..cfg() };
+    let dense_fit = PathRunner::new(&dense_ds, c.clone()).rule(RuleKind::DfrAsgl).run().unwrap();
+    let ooc_fit = PathRunner::new(&ooc_ds, c)
+        .rule(RuleKind::DfrAsgl)
+        .fixed_path(dense_fit.lambdas.clone())
+        .run()
+        .unwrap();
+    let d = ooc_fit.l2_distance_to(&dense_fit);
+    assert!(d <= 1e-10, "aSGL ooc vs dense drift ℓ₂ = {d}");
+    set_ooc_block_override(None);
+    let _ = std::fs::remove_file(path);
+}
+
+/// The acceptance witness: a full pathwise fit on an [`OocDesign`] keeps
+/// peak streaming-buffer residency at ≤ 2 blocks — strictly smaller than
+/// the n×p design it replaces — and never densifies through the sparse
+/// materialization counter either. Serial kernels are guaranteed here:
+/// n·p = 2400 is far below the parallel grain, so no per-worker buffers
+/// inflate the bound.
+#[test]
+fn ooc_fit_streams_within_two_blocks() {
+    let _g = serial();
+    set_ooc_block_override(Some(7));
+    let (_, ooc_ds, path) = paired_datasets(6, Response::Linear, "witness");
+    let (n, p) = (ooc_ds.n(), ooc_ds.p());
+    let block_bytes = match &ooc_ds.x {
+        DesignOps::Ooc(o) => {
+            assert_eq!(o.block_cols(), 7, "override must pin the block width");
+            o.block_bytes()
+        }
+        _ => unreachable!("fixture builds an ooc dataset"),
+    };
+    assert!(
+        2 * block_bytes < n * p * 8,
+        "witness is vacuous: two blocks ({}) do not undercut the dense design ({})",
+        2 * block_bytes,
+        n * p * 8,
+    );
+    let dense_before = dense_materializations();
+    ooc_reset_peak();
+    let fit = PathRunner::new(&ooc_ds, cfg()).rule(RuleKind::DfrSgl).run().unwrap();
+    let peak = ooc_peak_resident_bytes();
+    assert!(peak > 0, "fit never streamed a block — witness not exercised");
+    assert!(
+        peak <= 2 * block_bytes,
+        "peak design residency {peak} exceeds two streaming blocks ({})",
+        2 * block_bytes,
+    );
+    assert_eq!(
+        dense_materializations(),
+        dense_before,
+        "ooc solve path materialized a dense design"
+    );
+    assert!(fit.active_vars_last() > 0, "fixture fit selected nothing");
+    set_ooc_block_override(None);
+    let _ = std::fs::remove_file(path);
+}
+
+/// `dfr pack` CSV ingest and in-memory packing agree bit for bit: same
+/// header hash, same stats, same streamed standardized columns.
+#[test]
+fn pack_csv_roundtrip_matches_pack_matrix() {
+    let _g = serial();
+    let (n, p) = (23usize, 9usize);
+    let raw = raw_design(11, n, p);
+    let csv_path = pack_path("csv-src").with_extension("csv");
+    let mut csv = String::from("h0,h1,h2,h3,h4,h5,h6,h7,h8\n");
+    for i in 0..n {
+        let row: Vec<String> = (0..p).map(|j| format!("{:.17e}", raw.col(j)[i])).collect();
+        csv.push_str(&row.join(","));
+        csv.push('\n');
+    }
+    std::fs::write(&csv_path, csv).unwrap();
+    let a_path = pack_path("via-csv");
+    let b_path = pack_path("via-matrix");
+    let a = dfr::linalg::ooc::pack_csv(&csv_path, &a_path).unwrap();
+    let b = dfr::linalg::ooc::pack_matrix(&raw, &b_path).unwrap();
+    assert_eq!(a.nrows(), n);
+    assert_eq!(a.ncols(), p);
+    assert_eq!(a.content_hash(), b.content_hash(), "csv and matrix packs hash differently");
+    assert_eq!(a.offsets(), b.offsets());
+    assert_eq!(a.scales(), b.scales());
+    let (mut ca, mut cb) = (vec![0.0; n], vec![0.0; n]);
+    for j in 0..p {
+        a.read_standardized_col_into(j, &mut ca);
+        b.read_standardized_col_into(j, &mut cb);
+        assert_eq!(ca, cb, "standardized column {j} differs between pack routes");
+    }
+    // Reopening sees the identical design.
+    let reopened = OocDesign::open(&a_path).unwrap();
+    assert_eq!(reopened.content_hash(), a.content_hash());
+    for f in [csv_path, a_path, b_path] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+/// Fitter-level contract: an `--ooc` design reports the streaming kernel,
+/// predicts through the raw streaming matvec, and refuses CV with an
+/// actionable error instead of panicking inside a fold gather.
+#[test]
+fn fitter_reports_ooc_kernel_and_rejects_cv() {
+    let _g = serial();
+    set_ooc_block_override(Some(7));
+    let (n, p, gsize) = (60usize, 40usize, 5usize);
+    let raw = raw_design(13, n, p);
+    let mut y = response(&raw, 13, Response::Linear);
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    y.iter_mut().for_each(|v| *v -= mean);
+    let sizes = vec![gsize; p / gsize];
+    let path = pack_path("fitter");
+    let ooc = dfr::linalg::ooc::pack_matrix(&raw, &path).unwrap();
+    let model = SglModel { path: cfg(), ..SglModel::default() };
+    assert_eq!(Design::Ooc(&ooc).resolved_kernel(SparseMode::Auto), "ooc-stream");
+
+    let mut fitter = model.clone().fitter();
+    let fit = fitter.fit_at(&Design::Ooc(&ooc), &y, &sizes, Response::Linear, 7).unwrap();
+    assert_eq!(fitter.kernel_variant(), Some("ooc-stream"));
+
+    // Raw-scale batch prediction: the ooc streaming matvec must agree
+    // with per-row dot products over the same raw design.
+    let mut preds = vec![0.0; n];
+    fit.decision_function_into(&Design::Ooc(&ooc), &mut preds);
+    let mut expect = vec![0.0; n];
+    fit.decision_function_into(&Design::Matrix(&raw), &mut expect);
+    for (i, (a, b)) in preds.iter().zip(&expect).enumerate() {
+        assert!((a - b).abs() <= 1e-10, "row {i}: ooc prediction {a} vs dense {b}");
+    }
+
+    // Same fixed λ through the dense route lands on the same raw-scale
+    // coefficients.
+    let mut dense_fitter = model.clone().fitter();
+    let dense_fit =
+        dense_fitter.fit_at(&Design::Matrix(&raw), &y, &sizes, Response::Linear, 7).unwrap();
+    let d = dfr::linalg::l2_distance(&fit.coefficients, &dense_fit.coefficients);
+    assert!(d <= 1e-8, "raw-scale coefficient drift ℓ₂ = {d}");
+
+    // CV must bail with the documented message, not panic in gather_rows.
+    let err = model
+        .clone()
+        .fitter()
+        .fit_cv(&Design::Ooc(&ooc), &y, &sizes, Response::Linear)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("cross-validation is not supported for out-of-core"),
+        "unexpected CV error: {err}"
+    );
+    set_ooc_block_override(None);
+    let _ = std::fs::remove_file(path);
+}

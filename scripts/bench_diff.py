@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_<name>.json snapshots row by row.
+
+Joins the two files on (metric, setting, method) and reports the relative
+change of each row's comparison statistic (median by default — robust to
+a slow outlier repeat; --stat mean switches). Rows present in only one
+file are listed separately, so a bench that silently dropped a cell shows
+up in the diff instead of vanishing.
+
+Exit code is 0 when no timing row regresses beyond --threshold (default
+10%), 1 otherwise — so CI can gate on it:
+
+    python3 scripts/bench_diff.py BENCH_ooc_path.baseline.json \
+        rust/target/bench_results/BENCH_ooc_path.json --threshold 0.10
+
+Only rows whose metric mentions seconds (case-insensitive "seconds",
+"time (s)") count as timing rows for the gate; proportions, cardinalities
+and ℓ₂ distances are reported but never fail the gate (they are
+correctness tripwires for the test suite, not perf gates). Higher-is-
+better rows ("speedup", "improvement factor", "GB/s", "GFLOP/s",
+"rows/sec") regress when they *fall* by more than the threshold.
+
+Stdlib only; schema documented in docs/BENCHMARKS.md.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+TIMING_MARKERS = ("seconds", "time (s)")
+HIGHER_IS_BETTER = ("speedup", "improvement factor", "gb/s", "gflop/s", "rows/sec")
+
+
+def load_rows(path):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"error: cannot read {path}: {e}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        sys.exit(f"error: {path}: no 'rows' array (not a BENCH_<name>.json?)")
+    out = {}
+    for row in rows:
+        key = (row.get("metric"), row.get("setting"), row.get("method"))
+        if None in key:
+            sys.exit(f"error: {path}: row missing metric/setting/method: {row}")
+        out[key] = row
+    return doc.get("title", "<untitled>"), out
+
+
+def is_timing(metric):
+    m = metric.lower()
+    return any(t in m for t in TIMING_MARKERS)
+
+
+def higher_is_better(metric):
+    m = metric.lower()
+    return any(t in m for t in HIGHER_IS_BETTER)
+
+
+def fmt(v):
+    if v is None or (isinstance(v, float) and not math.isfinite(v)):
+        return "null"
+    return f"{v:.4g}"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="baseline BENCH_<name>.json")
+    ap.add_argument("candidate", help="candidate BENCH_<name>.json")
+    ap.add_argument(
+        "--stat",
+        choices=("median", "mean"),
+        default="median",
+        help="statistic to compare (default: median)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="relative regression that fails the gate (default: 0.10 = 10%%)",
+    )
+    args = ap.parse_args()
+
+    base_title, base = load_rows(args.baseline)
+    cand_title, cand = load_rows(args.candidate)
+    print(f"baseline : {args.baseline}  ({base_title})")
+    print(f"candidate: {args.candidate}  ({cand_title})")
+    print(f"stat={args.stat}  gate=timing rows worse by >{args.threshold:.0%}\n")
+
+    shared = sorted(set(base) & set(cand))
+    only_base = sorted(set(base) - set(cand))
+    only_cand = sorted(set(cand) - set(base))
+
+    header = f"{'metric':<38} {'setting':<22} {'method':<16} {'base':>10} {'cand':>10} {'delta':>8}"
+    print(header)
+    print("-" * len(header))
+    regressions = []
+    for key in shared:
+        metric, setting, method = key
+        b, c = base[key].get(args.stat), cand[key].get(args.stat)
+        if b is None or c is None or not (math.isfinite(b) and math.isfinite(c)):
+            delta_s = "n/a"
+        elif b == 0.0:
+            delta_s = "new" if c != 0.0 else "0%"
+        else:
+            rel = (c - b) / abs(b)
+            delta_s = f"{rel:+.1%}"
+            gated = is_timing(metric) or higher_is_better(metric)
+            worse = -rel if higher_is_better(metric) else rel
+            if gated and worse > args.threshold:
+                regressions.append((key, rel))
+                delta_s += " !"
+        print(f"{metric:<38.38} {setting:<22.22} {method:<16.16} {fmt(b):>10} {fmt(c):>10} {delta_s:>8}")
+
+    for label, keys in (("only in baseline", only_base), ("only in candidate", only_cand)):
+        if keys:
+            print(f"\n{label} ({len(keys)} rows):")
+            for metric, setting, method in keys:
+                print(f"  {metric} | {setting} | {method}")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} gated row(s) regressed beyond {args.threshold:.0%}:")
+        for (metric, setting, method), rel in regressions:
+            print(f"  {metric} | {setting} | {method}: {rel:+.1%}")
+        sys.exit(1)
+    print(f"\nOK: no gated row regressed beyond {args.threshold:.0%} ({len(shared)} rows compared)")
+
+
+if __name__ == "__main__":
+    main()
